@@ -1,0 +1,64 @@
+//! LSTM language-model driver (paper section IV-C): train the 2-layer LSTM
+//! on the synthetic corpus with conventional vs approximate dropout and
+//! report perplexity + speedup. Uses the reduced-scale (H=256) model so a
+//! laptop-class CPU converges in minutes; pass `--full` for the paper-scale
+//! H=1536 timing configuration.
+//!
+//! ```sh
+//! cargo run --release --example lstm_ptb -- [steps] [rate] [--full]
+//! ```
+
+use approx_dropout::coordinator::{speedup, LstmTrainer, Schedule, Variant};
+use approx_dropout::data::Corpus;
+use approx_dropout::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok())
+        .unwrap_or(120);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let full = args.iter().any(|a| a == "--full");
+    let (tag, vocab) = if full {
+        ("lstm2x1536v8800b20", 8800)
+    } else {
+        ("lstm2x256v2048b20", 2048)
+    };
+
+    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    println!("== LSTM LM: {tag}, {steps} steps, rate {rate} ==");
+    let corpus = Corpus::generate(vocab, 300_000, 30_000, 30_000, 11);
+    println!("unigram baseline perplexity: {:.1}",
+             corpus.unigram_xent(&corpus.valid).exp());
+
+    let mut rows = Vec::new();
+    for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+        let schedule = Schedule::new(variant, &[rate, rate], &[1, 2, 4, 8],
+                                     variant != Variant::Conv)?;
+        let mut tr = LstmTrainer::new(&engine, &manifest, tag, schedule,
+                                      &corpus.train, 0.1, 3)?;
+        tr.warmup()?;
+        let log_every = (steps / 8).max(1);
+        for s in 0..steps {
+            let (loss, _) = tr.step()?;
+            if (s + 1) % log_every == 0 {
+                println!("[{}] step {:>4}  train ppl {:.1}",
+                         variant.as_str(), s + 1, loss.exp());
+            }
+        }
+        let (_, ppl, acc) = tr.evaluate(&corpus.valid)?;
+        let t = tr.metrics.steady_mean_step_s(2);
+        println!("[{}] -> valid ppl {ppl:.1}, token-acc {:.2}%, step \
+                  {:.0} ms", variant.as_str(), acc * 100.0, t * 1e3);
+        rows.push((variant, t, ppl, acc));
+    }
+
+    let conv = rows[0].1;
+    println!("\n== summary (rate {rate}) ==");
+    for (v, t, ppl, acc) in &rows {
+        println!("{:<6} step {:.0} ms  speedup {:.2}x  ppl {:.1}  acc \
+                  {:.2}%", v.as_str(), t * 1e3, speedup(conv, *t), ppl,
+                 acc * 100.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! End-to-end driver (DESIGN.md deliverable (b)/E2E): train the paper's
+//! 4-layer MLP (784-2048-2048-10, ~5.8M params) on the synthetic MNIST
+//! task for several hundred steps with all three dropout variants, logging
+//! the loss curve and reporting accuracy + per-step wall-clock + speedup.
+//!
+//! ```sh
+//! cargo run --release --example mlp_mnist -- [steps] [rate]
+//! ```
+//!
+//! Results land in EXPERIMENTS.md section "E2E".
+
+use approx_dropout::coordinator::{speedup, MlpTrainer, Schedule, Variant};
+use approx_dropout::data::MnistSyn;
+use approx_dropout::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(0.5);
+    let tag = "mlp2048x2048";
+    let (n_train, n_test) = (20_000, 2_048);
+
+    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    println!("== E2E: {tag} on MNIST-syn ({n_train} train / {n_test} \
+              test), {steps} steps, rate {rate} ==");
+    let (train, test) = MnistSyn::train_test(n_train, n_test, 7);
+
+    let mut step_times = Vec::new();
+    for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+        let schedule = Schedule::new(variant, &[rate, rate], &[1, 2, 4, 8],
+                                     false)?;
+        let mut tr = MlpTrainer::new(&engine, &manifest, tag, schedule,
+                                     n_train, 0.01, 42)?;
+        eprintln!("[{}] compiling {} executables...",
+                  variant.as_str(), tr.executable_names().len());
+        tr.warmup()?;
+        let log_every = (steps / 15).max(1);
+        for s in 0..steps {
+            let (loss, acc) = tr.step(&train)?;
+            if (s + 1) % log_every == 0 {
+                println!("[{}] step {:>4}  loss {loss:.4}  batch-acc \
+                          {acc:.3}", variant.as_str(), s + 1);
+            }
+        }
+        let (eval_loss, eval_acc) = tr.evaluate(&test)?;
+        let t = tr.metrics.steady_mean_step_s(2);
+        step_times.push((variant, t, eval_acc));
+        println!("[{}] -> test loss {eval_loss:.4}, accuracy {:.2}%, \
+                  step {:.1} ms", variant.as_str(), eval_acc * 100.0,
+                 t * 1e3);
+    }
+
+    let conv = step_times[0].1;
+    println!("\n== summary (rate {rate}) ==");
+    for (v, t, acc) in &step_times {
+        println!("{:<6} step {:.1} ms  speedup {:.2}x  test-acc {:.2}%",
+                 v.as_str(), t * 1e3, speedup(conv, *t), acc * 100.0);
+    }
+    Ok(())
+}

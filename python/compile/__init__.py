@@ -1,0 +1,5 @@
+"""Build-time Python package: L1 Pallas kernels + L2 JAX model graphs + AOT.
+
+Never imported at runtime — ``make artifacts`` runs :mod:`compile.aot` once,
+after which the Rust binary is self-contained (see DESIGN.md section 3).
+"""

@@ -1,0 +1,297 @@
+"""AOT export: lower every (model, variant, dp) training graph to HLO text.
+
+Run once via ``make artifacts``. Interchange is HLO *text*, not serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids that the
+xla crate's xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Output layout:
+
+    artifacts/<name>.hlo.txt      one per executable
+    artifacts/manifest.json       machine-readable index driving rust/runtime
+
+The manifest records, per artifact, the exact input/output tensor order,
+shapes, dtypes and semantic kinds (param / momentum / data / mask / scale /
+bias-scalar / lr), so the Rust coordinator is completely generic over
+variants and architectures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+DP_SUPPORT = [1, 2, 4, 8]  # divisor support set; see DESIGN.md section 9
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TensorSpec:
+    name: str
+    shape: tuple
+    dtype: str   # "f32" | "i32"
+    kind: str    # param|momentum|x|y|mask|scale|bias|lr|loss|correct
+
+    def sds(self):
+        dt = {"f32": jnp.float32, "i32": jnp.int32}[self.dtype]
+        return jax.ShapeDtypeStruct(tuple(self.shape), dt)
+
+    def js(self):
+        return {"name": self.name, "shape": list(self.shape),
+                "dtype": self.dtype, "kind": self.kind}
+
+
+@dataclass
+class ArtifactSpec:
+    name: str
+    fn: object
+    inputs: list
+    outputs: list
+    meta: dict = field(default_factory=dict)
+
+    def js(self):
+        return {
+            "name": self.name,
+            "file": f"{self.name}.hlo.txt",
+            "inputs": [t.js() for t in self.inputs],
+            "outputs": [t.js() for t in self.outputs],
+            **self.meta,
+        }
+
+
+def _train_io(param_specs, extras, x_spec, y_spec):
+    """Standard train-step input/output TensorSpec lists."""
+    params = [TensorSpec(n, s, "f32", "param") for n, s in param_specs]
+    moms = [TensorSpec(f"m_{n}", s, "f32", "momentum") for n, s in param_specs]
+    ins = (params + moms + [x_spec, y_spec] + extras
+           + [TensorSpec("lr", (), "f32", "lr")])
+    outs = ([TensorSpec(n, s, "f32", "param") for n, s in param_specs]
+            + [TensorSpec(f"m_{n}", s, "f32", "momentum")
+               for n, s in param_specs]
+            + [TensorSpec("loss", (), "f32", "loss"),
+               TensorSpec("correct", (), "f32", "correct")])
+    return ins, outs
+
+
+def _eval_io(param_specs, x_spec, y_spec):
+    params = [TensorSpec(n, s, "f32", "param") for n, s in param_specs]
+    ins = params + [x_spec, y_spec]
+    outs = [TensorSpec("loss", (), "f32", "loss"),
+            TensorSpec("correct", (), "f32", "correct")]
+    return ins, outs
+
+
+def _b0(i):
+    return TensorSpec(f"b0_{i}", (), "i32", "bias")
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry
+# ---------------------------------------------------------------------------
+
+def mlp_artifacts(arch: model.MlpArch, dp_pairs, tag=None) -> list:
+    tag = tag or arch.name
+    ps = model.mlp_param_specs(arch)
+    xs = TensorSpec("x", (arch.batch, arch.n_in), "f32", "x")
+    ys = TensorSpec("y", (arch.batch,), "i32", "y")
+    h1, h2 = arch.hidden
+    meta = {"model": "mlp",
+            "arch": {"n_in": arch.n_in, "hidden": list(arch.hidden),
+                     "n_out": arch.n_out, "batch": arch.batch},
+            "sites": 2}
+    out = []
+
+    ins, outs = _train_io(
+        ps,
+        [TensorSpec("mask0", (arch.batch, h1), "f32", "mask"),
+         TensorSpec("mask1", (arch.batch, h2), "f32", "mask"),
+         TensorSpec("scale0", (), "f32", "scale"),
+         TensorSpec("scale1", (), "f32", "scale")],
+        xs, ys)
+    out.append(ArtifactSpec(f"{tag}_conv", model.mlp_train_step_conv(arch),
+                            ins, outs, {**meta, "variant": "conv", "dp": []}))
+
+    ins, outs = _eval_io(ps, xs, ys)
+    out.append(ArtifactSpec(f"{tag}_eval", model.mlp_eval(arch), ins, outs,
+                            {**meta, "variant": "eval", "dp": []}))
+
+    pattern_extras = [_b0(0), _b0(1),
+                      TensorSpec("scale0", (), "f32", "scale"),
+                      TensorSpec("scale1", (), "f32", "scale")]
+    for dp1, dp2 in dp_pairs:
+        ins, outs = _train_io(ps, pattern_extras, xs, ys)
+        out.append(ArtifactSpec(
+            f"{tag}_rdp_{dp1}_{dp2}",
+            model.mlp_train_step_rdp(arch, dp1, dp2), ins, outs,
+            {**meta, "variant": "rdp", "dp": [dp1, dp2]}))
+        out.append(ArtifactSpec(
+            f"{tag}_tdp_{dp1}_{dp2}",
+            model.mlp_train_step_tdp(arch, dp1, dp2), ins, outs,
+            {**meta, "variant": "tdp", "dp": [dp1, dp2]}))
+    return out
+
+
+def lstm_artifacts(arch: model.LstmArch, dps, variants=("conv", "eval",
+                                                        "rdp", "tdp"),
+                   tag=None) -> list:
+    tag = tag or f"{arch.name}b{arch.batch}"
+    ps = model.lstm_param_specs(arch)
+    xs = TensorSpec("x", (arch.batch, arch.seq), "i32", "x")
+    ys = TensorSpec("y", (arch.batch, arch.seq), "i32", "y")
+    L, H = arch.layers, arch.hidden
+    meta = {"model": "lstm",
+            "arch": {"vocab": arch.vocab, "hidden": H, "layers": L,
+                     "seq": arch.seq, "batch": arch.batch},
+            "sites": L}
+    out = []
+
+    if "conv" in variants:
+        extras = ([TensorSpec(f"mask{i}", (arch.batch, H), "f32", "mask")
+                   for i in range(L)]
+                  + [TensorSpec(f"scale{i}", (), "f32", "scale")
+                     for i in range(L)])
+        ins, outs = _train_io(ps, extras, xs, ys)
+        out.append(ArtifactSpec(f"{tag}_conv",
+                                model.lstm_train_step_conv(arch), ins, outs,
+                                {**meta, "variant": "conv", "dp": []}))
+    if "eval" in variants:
+        ins, outs = _eval_io(ps, xs, ys)
+        out.append(ArtifactSpec(f"{tag}_eval", model.lstm_eval(arch), ins,
+                                outs, {**meta, "variant": "eval", "dp": []}))
+    for dp in dps:
+        extras = ([_b0(i) for i in range(L)]
+                  + [TensorSpec(f"scale{i}", (), "f32", "scale")
+                     for i in range(L)])
+        if "rdp" in variants:
+            ins, outs = _train_io(ps, extras, xs, ys)
+            out.append(ArtifactSpec(
+                f"{tag}_rdp_{dp}", model.lstm_train_step_rdp(arch, dp),
+                ins, outs, {**meta, "variant": "rdp", "dp": [dp] * L}))
+        if "tdp" in variants:
+            ins, outs = _train_io(ps, extras, xs, ys)
+            out.append(ArtifactSpec(
+                f"{tag}_tdp_{dp}", model.lstm_train_step_tdp(arch, dp),
+                ins, outs, {**meta, "variant": "tdp", "dp": [dp] * L}))
+    return out
+
+
+def build_registry(which: str) -> list:
+    D = DP_SUPPORT
+    diag = [(d, d) for d in D]
+    full = [(a, b) for a in D for b in D]
+    arts = []
+
+    # Tiny arch: fast CI / rust integration tests.
+    tiny = model.MlpArch(hidden=(64, 64), n_in=32, n_out=10, batch=8,
+                         tile=16)
+    arts += mlp_artifacts(tiny, [(2, 2)], tag="mlptest")
+    tiny_l = model.LstmArch(vocab=64, hidden=32, layers=2, seq=5,
+                            batch=4, tile=16)
+    arts += lstm_artifacts(tiny_l, [2], tag="lstmtest")
+
+    if which in ("mlp", "all"):
+        # Fig 4 arch: full dp-pair grid (asymmetric per-layer rates).
+        arts += mlp_artifacts(model.MlpArch(hidden=(2048, 2048)), full)
+        # Table I archs: shared-dp sampling (diagonal pairs).
+        for hidden in [(1024, 64), (1024, 1024), (4096, 4096)]:
+            arts += mlp_artifacts(model.MlpArch(hidden=hidden), diag)
+
+    if which in ("lstm", "all"):
+        # Table II timing at paper scale (H=1536~1500 — tile-aligned; see
+        # DESIGN.md section 5) and convergence at reduced scale (Fig 5).
+        arts += lstm_artifacts(
+            model.LstmArch(vocab=8800, hidden=1536, layers=2), D)
+        arts += lstm_artifacts(
+            model.LstmArch(vocab=2048, hidden=256, layers=2), D)
+        # Fig 6a: 3-layer PTB-like LSTM. Fig 6b: batch-size sweep (RDP only,
+        # as in the paper's figure).
+        arts += lstm_artifacts(
+            model.LstmArch(vocab=10240, hidden=512, layers=3), D)
+        for b in [25, 30, 35, 40]:
+            arts += lstm_artifacts(
+                model.LstmArch(vocab=10240, hidden=512, layers=3, batch=b),
+                [1, 2, 4], variants=("conv", "rdp"))
+
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, arg_sds) -> str:
+    lowered = jax.jit(fn).lower(*arg_sds)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--set", default="all", choices=["all", "mlp", "lstm",
+                                                     "test"],
+                    help="artifact subset to build")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the .hlo.txt already exists")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+    registry = build_registry("all" if args.set == "test" else args.set)
+    if args.set == "test":
+        registry = [a for a in registry
+                    if a.name.startswith(("mlptest", "lstmtest"))]
+    # --only filters what gets LOWERED; the manifest always covers the full
+    # registry so a partial rebuild never clobbers the index.
+    arts = registry
+    if args.only:
+        arts = [a for a in arts if args.only in a.name]
+
+    t_start = time.time()
+    n_built = n_skipped = 0
+    for a in arts:
+        path = os.path.join(args.out, f"{a.name}.hlo.txt")
+        if os.path.exists(path) and not args.force:
+            n_skipped += 1
+            continue
+        t0 = time.time()
+        text = to_hlo_text(a.fn, [t.sds() for t in a.inputs])
+        with open(path, "w") as f:
+            f.write(text)
+        n_built += 1
+        print(f"  [{n_built}] {a.name}: {len(text)} chars "
+              f"({time.time() - t0:.1f}s)", flush=True)
+
+    manifest = {
+        "version": 1,
+        "dp_support": DP_SUPPORT,
+        "momentum": model.MOMENTUM,
+        "tile": model.TILE,
+        "artifacts": [a.js() for a in registry],
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"aot: {n_built} built, {n_skipped} cached, "
+          f"{len(arts)} in manifest ({time.time() - t_start:.0f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,14 @@
+"""L1 Pallas kernels (interpret mode) + pure-jnp reference oracles."""
+
+from .matmul import matmul, pick_block
+from .masked_matmul import masked_matmul
+from .tile_sparse import tile_sparse_matmul
+from . import ref
+
+__all__ = [
+    "matmul",
+    "pick_block",
+    "masked_matmul",
+    "tile_sparse_matmul",
+    "ref",
+]

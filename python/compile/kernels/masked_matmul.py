@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: matmul with the dropout mask fused on the input side.
+
+This is the *baseline* the paper compares against (Fig. 1a): conventional
+random dropout zeroes activations with a Bernoulli 0/1 mask and the next
+layer then consumes the masked matrix — the full-size matmul still runs,
+which is exactly the inefficiency Approximate Random Dropout removes. Fusing
+``(a * mask * scale) @ b`` into one kernel (mask applied tile-by-tile in
+VMEM as the operand streams in) is the strongest fair baseline: it saves the
+materialization of the masked activation but cannot shrink the matmul.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul, pick_block
+
+
+def _masked_mm_kernel(a_ref, m_ref, b_ref, s_ref, o_ref):
+    h = pl.program_id(2)
+
+    @pl.when(h == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...] * m_ref[...] * s_ref[0]
+    o_ref[...] += jnp.dot(a, b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _masked_matmul_impl(a, mask, b, scale):
+    m, k = a.shape
+    _, n = b.shape
+    assert mask.shape == (m, k), f"mask {mask.shape} != lhs ({m},{k})"
+    bm, bn, bk = pick_block(m), pick_block(n), pick_block(k)
+    grid = (m // bm, n // bn, k // bk)
+    scale_arr = jnp.reshape(jnp.asarray(scale, a.dtype), (1,))
+    return pl.pallas_call(
+        _masked_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+            pl.BlockSpec((1,), lambda i, j, h: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, mask, b, scale_arr)
+
+
+@jax.custom_vjp
+def masked_matmul(a: jax.Array, mask: jax.Array, b: jax.Array,
+                  scale: jax.Array) -> jax.Array:
+    """``(a * mask * scale) @ b`` — dropout fused into the consuming matmul.
+
+    ``mask`` is a 0/1 float matrix of ``a``'s shape; ``scale`` the
+    inverted-dropout correction (1/keep_prob) as a float scalar.
+    """
+    return _masked_matmul_impl(a, mask, b, scale)
+
+
+def _fwd(a, mask, b, scale):
+    return _masked_matmul_impl(a, mask, b, scale), (a, mask, b, scale)
+
+
+def _bwd(res, g):
+    a, mask, b, scale = res
+    # d/da [(a*m*s) @ b] = (g @ b^T) * m * s; d/db = (a*m*s)^T @ g.
+    da = matmul(g, b.T) * mask * scale
+    db = matmul((a * mask * scale).T, g)
+    return da, None, db, None
+
+
+masked_matmul.defvjp(_fwd, _bwd)

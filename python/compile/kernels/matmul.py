@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: tiled dense matmul.
+
+This is the compute hot-spot of the whole stack: every dropout variant
+ultimately funnels into a dense matmul over *compacted* operands (the paper's
+"compact matrices" built in GPU shared memory; here the HBM->VMEM tiling is
+expressed with BlockSpec). The kernel is differentiable via a custom VJP that
+reuses itself for both operand gradients, so the exported train-step graphs
+contain only this kernel plus cheap gather/scatter glue.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is traced to plain HLO (see DESIGN.md
+section "Hardware-Adaptation").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Largest block edge we allow. 256 keeps the VMEM footprint of one grid step
+# at (256*256*3)*4B = 768 KiB << 16 MiB while giving the MXU large tiles.
+_BLOCK_CAP = 256
+
+
+def pick_block(dim: int, cap: int = _BLOCK_CAP) -> int:
+    """Largest divisor of ``dim`` that is <= cap.
+
+    Shapes in this project are chosen so this is large (powers of two, or
+    1500-style composites); the worst case degrades to small blocks but stays
+    correct.
+    """
+    if dim <= cap:
+        return dim
+    for b in range(cap, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+def _mm_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, h) grid step: accumulate a (bm x bk) @ (bk x bn) product."""
+    h = pl.program_id(2)
+
+    @pl.when(h == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _matmul_fwd_impl(a: jax.Array, b: jax.Array) -> jax.Array:
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {a.shape} @ {b.shape}"
+    bm, bn, bk = pick_block(m), pick_block(n), pick_block(k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, h: (i, h)),
+            pl.BlockSpec((bk, bn), lambda i, j, h: (h, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, h: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """``a @ b`` through the Pallas tiled kernel (differentiable)."""
+    return _matmul_fwd_impl(a, b)
+
+
+def _matmul_fwd(a, b):
+    return _matmul_fwd_impl(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # dA = g @ B^T, dB = A^T @ g — both through the same Pallas kernel so the
+    # backward pass exercises the identical HBM->VMEM schedule.
+    da = _matmul_fwd_impl(g, b.T)
+    db = _matmul_fwd_impl(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every L1 kernel — the correctness ground truth.
+
+Nothing here uses Pallas; pytest (python/tests/) asserts the kernels match
+these to float tolerance across hypothesis-driven shape/pattern sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b)
+
+
+def masked_matmul_ref(a: jax.Array, b: jax.Array, mask: jax.Array,
+                      scale) -> jax.Array:
+    return jnp.dot(a, b) * mask * scale
+
+
+def tile_sparse_matmul_ref(x: jax.Array, wt: jax.Array, rows: jax.Array,
+                           cols: jax.Array, n_out: int) -> jax.Array:
+    """Dense reconstruction: scatter kept tiles into a zero weight matrix,
+    then one dense matmul."""
+    j, t_r, t_c = wt.shape
+    k = x.shape[1]
+    tk, tn = k // t_r, n_out // t_c
+    dense4 = jnp.zeros((tk, tn, t_r, t_c), wt.dtype)
+    dense4 = dense4.at[rows, cols].set(wt)
+    dense = dense4.transpose(0, 2, 1, 3).reshape(k, n_out)
+    return jnp.dot(x, dense)
+
+
+def row_dropout_ref(h: jax.Array, dp: int, b0, scale=None) -> jax.Array:
+    """Conventional-style emulation of RDP on activations ``h`` [batch, M]:
+    zero the dropped columns, scale the kept ones by dp (inverted dropout)."""
+    from .. import patterns
+
+    m = h.shape[-1]
+    mask = patterns.row_mask(m, dp, b0)
+    s = dp if scale is None else scale
+    return h * mask * s

@@ -1,0 +1,140 @@
+"""L1 Pallas kernel: tile-sparse (block-sparse) matmul for TDP.
+
+The Tile-based Dropout Pattern keeps 1 in every ``dp`` 32x32 tiles of the
+weight matrix. Because the kept set is *regular and known before launch*, the
+kernel receives the kept tile coordinates as scalar-prefetch operands and its
+BlockSpec index_maps fetch **only kept tiles** from HBM — the TPU analog of
+the paper's "fetch non-dropped tiles into shared memory and build compact
+matrices" (Fig. 3b). Nothing else of the weight matrix is ever touched by
+the accumulation phase.
+
+Grid layout: the first ``n_dst`` steps zero-initialise every output block
+(cheap: no HBM reads), the remaining ``J`` steps each accumulate one kept
+tile into its destination block. Interpret-mode grids execute sequentially
+so the read-modify-write accumulation is well-defined; on a real TPU the
+kept list would additionally be sorted by destination so output-window
+revisits are consecutive (Mosaic's requirement) — noted in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _accum_kernel(src_ref, dst_ref, x_ref, wt_ref, o_ref, *, n_dst: int):
+    j = pl.program_id(0)
+
+    @pl.when(j < n_dst)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(j >= n_dst)
+    def _accum():
+        o_ref[...] += jnp.dot(
+            x_ref[...], wt_ref[0], preferred_element_type=o_ref.dtype
+        )
+
+
+def _tile_accum(x: jax.Array, wt: jax.Array, src: jax.Array, dst: jax.Array,
+                n_out: int) -> jax.Array:
+    """out[:, dst[j]*t_dst :+t_dst] += x[:, src[j]*t_src :+t_src] @ wt[j].
+
+    x   [m, K] dense activations, K = (K // t_src) * t_src
+    wt  [J, t_src, t_dst] kept tiles
+    src/dst [J] int32 block coordinates (any order, duplicates in dst fine)
+    returns [m, n_out] with unreferenced destination blocks zeroed.
+    """
+    m, _ = x.shape
+    j_count, t_src, t_dst = wt.shape
+    n_dst = n_out // t_dst
+    # Phase 1 (j < n_dst): write zeros to block j. Phase 2: accumulate tile
+    # j - n_dst. The extended coordinate vectors make one index_map serve
+    # both phases.
+    zeros_i = jnp.zeros((n_dst,), jnp.int32)
+    src_ext = jnp.concatenate([zeros_i, src.astype(jnp.int32)])
+    dst_ext = jnp.concatenate(
+        [jnp.arange(n_dst, dtype=jnp.int32), dst.astype(jnp.int32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_dst + j_count,),
+        in_specs=[
+            pl.BlockSpec((m, t_src), lambda j, src, dst: (0, src[j])),
+            pl.BlockSpec(
+                (1, t_src, t_dst),
+                lambda j, src, dst: (jnp.maximum(j - n_dst, 0), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, t_dst), lambda j, src, dst: (0, dst[j])),
+    )
+    return pl.pallas_call(
+        functools.partial(_accum_kernel, n_dst=n_dst),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n_out), x.dtype),
+        interpret=True,
+    )(src_ext, dst_ext, x, wt)
+
+
+def _per_tile_grad_kernel(src_ref, dst_ref, x_ref, g_ref, o_ref):
+    """dwt[j] = x[:, src[j]]^T @ g[:, dst[j]] — one output tile per step,
+    no accumulation conflicts."""
+    o_ref[0] = jnp.dot(
+        x_ref[...].T, g_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _tile_grads(x: jax.Array, g: jax.Array, src: jax.Array, dst: jax.Array,
+                t_src: int, t_dst: int) -> jax.Array:
+    m, _ = x.shape
+    j_count = src.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(j_count,),
+        in_specs=[
+            pl.BlockSpec((m, t_src), lambda j, src, dst: (0, src[j])),
+            pl.BlockSpec((m, t_dst), lambda j, src, dst: (0, dst[j])),
+        ],
+        out_specs=pl.BlockSpec((1, t_src, t_dst), lambda j, src, dst: (j, 0, 0)),
+    )
+    return pl.pallas_call(
+        _per_tile_grad_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((j_count, t_src, t_dst), x.dtype),
+        interpret=True,
+    )(src.astype(jnp.int32), dst.astype(jnp.int32), x, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def tile_sparse_matmul(x: jax.Array, wt: jax.Array, rows: jax.Array,
+                       cols: jax.Array, n_out: int) -> jax.Array:
+    """``x @ W_sparse`` where W [K, n_out] is given only by its kept tiles.
+
+    x    [m, K]
+    wt   [J, t_r, t_c] kept tiles (``patterns.gather_tiles``)
+    rows/cols [J] kept tile coordinates (``patterns.tile_kept_rc``)
+
+    Differentiable: dx reuses the same sparse accumulation with tiles
+    transposed, dwt is a per-kept-tile outer-product kernel — the backward
+    pass also never touches dropped tiles (the paper's compute saving holds
+    for fwd *and* bwd).
+    """
+    return _tile_accum(x, wt, rows, cols, n_out)
+
+
+def _ts_fwd(x, wt, rows, cols, n_out):
+    return _tile_accum(x, wt, rows, cols, n_out), (x, wt, rows, cols)
+
+
+def _ts_bwd(n_out, res, g):
+    x, wt, rows, cols = res
+    k = x.shape[1]
+    dx = _tile_accum(g, jnp.transpose(wt, (0, 2, 1)), cols, rows, k)
+    dwt = _tile_grads(x, g, rows, cols, wt.shape[1], wt.shape[2])
+    return dx, dwt, None, None
+
+
+tile_sparse_matmul.defvjp(_ts_fwd, _ts_bwd)

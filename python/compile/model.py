@@ -1,0 +1,405 @@
+"""L2: JAX training-step graphs for the paper's two workloads (MLP, LSTM).
+
+Every function here is lowered ONCE by :mod:`compile.aot` into an HLO-text
+artifact that the Rust coordinator loads and drives; nothing in this module
+runs on the request path.
+
+Graph conventions (mirrored by ``rust/src/runtime/`` via manifest.json):
+
+* inputs  = [*params, *momenta, x, y, *variant_extras, lr]
+* outputs = (*new_params, *new_momenta, loss, correct)
+* the SGD-with-momentum update (Caffe semantics: ``m' = mu*m + g``,
+  ``p' = p - lr*m'``) is *inside* the graph, so one PJRT call performs the
+  full training iteration and params stay device-resident.
+
+Variant extras:
+
+* ``conv`` — per-dropout-site Bernoulli 0/1 masks (generated host-side by
+  the Rust coordinator, exactly like Caffe's cuRAND masks) followed by
+  their 1/keep scales (f32 scalars).
+* ``rdp``  — one int32 bias scalar ``b0`` per dropout site; the divisor
+  ``dp`` is baked into the graph (it determines the compact shapes, which
+  is the whole point: a *regular* pattern makes the smaller static graph
+  legal — see DESIGN.md section 2).
+* ``tdp``  — one int32 bias scalar per dropped weight matrix.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import patterns
+from .kernels import masked_matmul, matmul, tile_sparse_matmul
+
+MOMENTUM = 0.9
+FORGET_BIAS = 1.0
+# Default tile edge for the Tile-based Dropout Pattern. The paper uses
+# 32x32 (matching the GPU's 32 shared-memory banks); on this backend the
+# analogous hardware unit is the 128-lane MXU tile, and 128x128 tiles also
+# keep the AOT'd sparse-accumulation grid short (DESIGN.md section
+# Hardware-Adaptation). Architectures can override (tiny test archs use 16).
+TILE = 128
+
+
+# ---------------------------------------------------------------------------
+# Shared pieces
+# ---------------------------------------------------------------------------
+
+def softmax_xent(logits: jax.Array, y: jax.Array):
+    """Mean cross-entropy + correct-prediction count (y: int32 labels)."""
+    ls = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(ls, y[:, None], axis=-1).mean()
+    correct = jnp.sum(
+        (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return nll, correct
+
+
+def sgd_momentum(params, momenta, grads, lr):
+    new_m = [MOMENTUM * m + g for m, g in zip(momenta, grads)]
+    new_p = [p - lr * m for p, m in zip(params, new_m)]
+    return new_p, new_m
+
+
+def row_scale(h: int, dp: int) -> float:
+    """Inverted-dropout correction for the row pattern: 1 / keep-ratio."""
+    return float(h) / float(h // dp)
+
+
+def tile_scale(k: int, n: int, dp: int, tile: int = TILE) -> float:
+    tr, tc = patterns.tile_dims(k, n, tile)
+    total = (k // tr) * (n // tc)
+    return float(total) / float(
+        patterns.tile_kept_count(k, n, dp, tile))
+
+
+def _train_step(logits_or_loss_fn, n_params, is_loss=False):
+    """Wrap a logits/loss function into the full (loss, grads, update) step.
+
+    Argument layout matches the module docstring. ``logits_or_loss_fn``
+    receives ``(params, x, y, *extras)`` and returns either logits (the
+    softmax CE is added here) or ``(loss, correct)`` when ``is_loss``.
+    """
+
+    def step(*args):
+        params = list(args[:n_params])
+        momenta = list(args[n_params:2 * n_params])
+        x, y = args[2 * n_params], args[2 * n_params + 1]
+        extras = args[2 * n_params + 2:-1]
+        lr = args[-1]
+
+        def loss_fn(ps):
+            if is_loss:
+                return logits_or_loss_fn(ps, x, y, *extras)
+            logits = logits_or_loss_fn(ps, x, *extras)
+            return softmax_xent(logits, y)
+
+        (loss, correct), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_m = sgd_momentum(params, momenta, grads, lr)
+        return (*new_p, *new_m, loss, correct)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# MLP (paper sections IV-A/B): 784 -> H1 -> H2 -> 10, ReLU, softmax CE.
+# Dropout sites: the two hidden layers, rates (r1, r2).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MlpArch:
+    hidden: tuple[int, int]
+    n_in: int = 784
+    n_out: int = 10
+    batch: int = 128
+    tile: int = TILE
+
+    @property
+    def name(self) -> str:
+        return f"mlp{self.hidden[0]}x{self.hidden[1]}"
+
+
+def mlp_param_specs(arch: MlpArch):
+    h1, h2 = arch.hidden
+    return [
+        ("w1", (arch.n_in, h1)),
+        ("b1", (h1,)),
+        ("w2", (h1, h2)),
+        ("b2", (h2,)),
+        ("w3", (h2, arch.n_out)),
+        ("b3", (arch.n_out,)),
+    ]
+
+
+def _mlp_logits_dense(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(matmul(x, w1) + b1)
+    h2 = jax.nn.relu(matmul(h1, w2) + b2)
+    return matmul(h2, w3) + b3
+
+
+def _mlp_logits_conv(params, x, m1, m2, s1, s2):
+    """Conventional dropout (paper Fig. 1a): the full-size matmuls always
+    run; the Bernoulli mask is fused into the *consuming* matmul (the
+    strongest fair baseline — saves the masked-copy materialization but
+    cannot shrink the computation)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1 = jax.nn.relu(matmul(x, w1) + b1)
+    h2 = jax.nn.relu(masked_matmul(h1, m1, w2, s1) + b2)
+    return masked_matmul(h2, m2, w3, s2) + b3
+
+
+def _mlp_logits_rdp(params, x, b01, b02, s1, s2, *, dp1: int, dp2: int,
+                    h1: int, h2: int):
+    """Row-based pattern: compact every matmul (paper Fig. 3a).
+
+    Kept neuron sets: hidden1 {b01 + dp1*j}, hidden2 {b02 + dp2*j}. All
+    three weight matrices are sliced to kept rows/cols *before* the matmul —
+    dropped data is never fetched — and activations stay compact end-to-end.
+
+    ``s1``/``s2`` are the inverted-dropout corrections. They are runtime
+    inputs holding 1/(1-p) of the site's long-run target rate (Caffe
+    semantics, which the paper inherits) — NOT the per-iteration 1/dp
+    ratio: a constant scale keeps the estimator unbiased across the
+    sampled patterns with far lower gradient variance than per-pattern
+    scaling (dp=8 would otherwise amplify that iteration's gradients 8x).
+    """
+    w1, b1, w2, b2, w3, b3 = params
+    w1c = patterns.gather_cols(w1, dp1, b01)           # [784, h1/dp1]
+    b1c = patterns.gather_vec(b1, dp1, b01)
+    h1c = jax.nn.relu(matmul(x, w1c) + b1c) * s1       # [B, h1/dp1]
+    w2c = patterns.gather_cols(
+        patterns.gather_rows(w2, dp1, b01), dp2, b02)  # [h1/dp1, h2/dp2]
+    b2c = patterns.gather_vec(b2, dp2, b02)
+    h2c = jax.nn.relu(matmul(h1c, w2c) + b2c) * s2     # [B, h2/dp2]
+    w3c = patterns.gather_rows(w3, dp2, b02)           # [h2/dp2, 10]
+    return matmul(h2c, w3c) + b3
+
+
+def _mlp_logits_tdp(params, x, b01, b02, s1, s2, *, dp1: int, dp2: int,
+                    n_in: int, h1: int, h2: int, tile: int = TILE):
+    """Tile-based pattern (paper Fig. 3b): DropConnect at tile
+    granularity on W1 and W2; only kept tiles are fetched/multiplied.
+    ``s1``/``s2``: runtime 1/(1-p) scales (see _mlp_logits_rdp)."""
+    w1, b1, w2, b2, w3, b3 = params
+    h1a = jax.nn.relu(patterns.tdp_matmul(x, w1, dp1, b01, tile) * s1 + b1)
+    h2a = jax.nn.relu(patterns.tdp_matmul(h1a, w2, dp2, b02, tile) * s2
+                      + b2)
+    return matmul(h2a, w3) + b3
+
+
+def mlp_train_step_conv(arch: MlpArch):
+    return _train_step(_mlp_logits_conv, 6)
+
+
+def mlp_train_step_rdp(arch: MlpArch, dp1: int, dp2: int):
+    h1, h2 = arch.hidden
+    fn = functools.partial(_mlp_logits_rdp, dp1=dp1, dp2=dp2, h1=h1, h2=h2)
+    return _train_step(fn, 6)
+
+
+def mlp_train_step_tdp(arch: MlpArch, dp1: int, dp2: int):
+    h1, h2 = arch.hidden
+    fn = functools.partial(_mlp_logits_tdp, dp1=dp1, dp2=dp2,
+                           n_in=arch.n_in, h1=h1, h2=h2, tile=arch.tile)
+    return _train_step(fn, 6)
+
+
+def mlp_eval(arch: MlpArch):
+    """Inference graph: no dropout (inverted scaling keeps weights as-is)."""
+
+    def fn(*args):
+        params = list(args[:6])
+        x, y = args[6], args[7]
+        return softmax_xent(_mlp_logits_dense(params, x), y)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# LSTM (paper section IV-C): word-level LM. Dropout on the non-recurrent
+# connections — layer_l -> layer_{l+1} and top layer -> softmax (Zaremba
+# style), one site per layer, rates (r_1..r_L). One dropout pattern per
+# training iteration, shared across timesteps (the paper applies a single
+# pattern per iteration to the whole batch).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LstmArch:
+    vocab: int
+    hidden: int
+    layers: int = 2
+    seq: int = 35
+    batch: int = 20
+    tile: int = TILE
+
+    @property
+    def name(self) -> str:
+        return f"lstm{self.layers}x{self.hidden}v{self.vocab}"
+
+
+def lstm_param_specs(arch: LstmArch):
+    specs = [("emb", (arch.vocab, arch.hidden))]
+    for l in range(arch.layers):
+        specs += [
+            (f"wx{l}", (arch.hidden, 4 * arch.hidden)),
+            (f"wh{l}", (arch.hidden, 4 * arch.hidden)),
+            (f"bg{l}", (4 * arch.hidden,)),
+        ]
+    specs += [("wsoft", (arch.hidden, arch.vocab)), ("bsoft", (arch.vocab,))]
+    return specs
+
+
+def _unpack_lstm(params, layers):
+    emb = params[0]
+    cells = [tuple(params[1 + 3 * l: 4 + 3 * l]) for l in range(layers)]
+    wsoft, bsoft = params[-2], params[-1]
+    return emb, cells, wsoft, bsoft
+
+
+def _lstm_loss(arch: LstmArch, params, x, y, input_mms, soft_fn):
+    """Shared scan skeleton.
+
+    input_mms[l](inp) -> [B, 4H]: the layer-l *input* contribution to the
+    gates (this is where each dropout variant plugs in its transform of the
+    previous layer's output — masked, row-compacted, or tile-sparse).
+    soft_fn(flat, wsoft) -> logits for the top-layer outputs.
+    """
+    emb, cells, wsoft, bsoft = _unpack_lstm(params, arch.layers)
+    b, t = x.shape
+    e = jnp.transpose(jnp.take(emb, x, axis=0), (1, 0, 2))  # [T, B, H]
+
+    h0 = jnp.zeros((arch.layers, b, arch.hidden), e.dtype)
+    c0 = jnp.zeros((arch.layers, b, arch.hidden), e.dtype)
+
+    def step(carry, x_t):
+        hs, cs = carry
+        new_h, new_c = [], []
+        inp = x_t
+        for l, (wx, wh, bg) in enumerate(cells):
+            gates = input_mms[l](inp) + matmul(hs[l], wh) + bg
+            i, f, g, o = jnp.split(gates, 4, axis=-1)
+            c2 = (jax.nn.sigmoid(f + FORGET_BIAS) * cs[l]
+                  + jax.nn.sigmoid(i) * jnp.tanh(g))
+            h2 = jax.nn.sigmoid(o) * jnp.tanh(c2)
+            new_h.append(h2)
+            new_c.append(c2)
+            inp = h2
+        return (jnp.stack(new_h), jnp.stack(new_c)), new_h[-1]
+
+    (_, _), tops = lax.scan(step, (h0, c0), e)   # [T, B, H]
+    flat = tops.reshape(t * b, arch.hidden)
+    logits = soft_fn(flat, wsoft) + bsoft        # [T*B, V]
+    targets = jnp.transpose(y, (1, 0)).reshape(t * b)
+    return softmax_xent(logits, targets)
+
+
+def _lstm_step_factory(arch: LstmArch, build_fns):
+    """Common train-step wrapper: ``build_fns(params, extras)`` returns
+    (input_mms, soft_fn) for this variant."""
+    n_params = len(lstm_param_specs(arch))
+
+    def step(*args):
+        params = list(args[:n_params])
+        momenta = list(args[n_params:2 * n_params])
+        x, y = args[2 * n_params], args[2 * n_params + 1]
+        extras = list(args[2 * n_params + 2:-1])
+        lr = args[-1]
+
+        def loss_fn(ps):
+            input_mms, soft_fn = build_fns(ps, extras)
+            return _lstm_loss(arch, ps, x, y, input_mms, soft_fn)
+
+        (loss, correct), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        new_p, new_m = sgd_momentum(params, momenta, grads, lr)
+        return (*new_p, *new_m, loss, correct)
+
+    return step
+
+
+def lstm_train_step_conv(arch: LstmArch):
+    L = arch.layers
+
+    def build(ps, extras):
+        _, cells, _, _ = _unpack_lstm(ps, L)
+        masks, scales = extras[:L], extras[L:2 * L]
+        mms = [lambda inp, wx=cells[0][0]: matmul(inp, wx)]
+        for l in range(1, L):
+            mms.append(
+                lambda inp, wx=cells[l][0], m=masks[l - 1], s=scales[l - 1]:
+                masked_matmul(inp, m, wx, s))
+
+        def soft(f, w, m=masks[L - 1], s=scales[L - 1]):
+            mm = jnp.tile(m, (f.shape[0] // m.shape[0], 1))
+            return masked_matmul(f, mm, w, s)
+
+        return mms, soft
+
+    return _lstm_step_factory(arch, build)
+
+
+def lstm_train_step_rdp(arch: LstmArch, dp: int):
+    L, H = arch.layers, arch.hidden
+
+    def build(ps, extras):
+        _, cells, _, _ = _unpack_lstm(ps, L)
+        b0s = extras[:L]        # one int32 scalar per site
+        scales = extras[L:2 * L]  # runtime 1/(1-p) per site
+        mms = [lambda inp, wx=cells[0][0]: matmul(inp, wx)]
+        for l in range(1, L):
+            # Pre-gather kept rows of wx once per iteration (outside scan):
+            # the compacted input then multiplies a compacted weight.
+            wxc = patterns.gather_rows(cells[l][0], dp, b0s[l - 1])
+            mms.append(
+                lambda inp, wxc=wxc, b0=b0s[l - 1], s=scales[l - 1]:
+                matmul(patterns.gather_cols(inp, dp, b0) * s, wxc))
+
+        def soft(f, w, b0=b0s[L - 1], s=scales[L - 1]):
+            fc = patterns.gather_cols(f, dp, b0) * s
+            return matmul(fc, patterns.gather_rows(w, dp, b0))
+
+        return mms, soft
+
+    return _lstm_step_factory(arch, build)
+
+
+def lstm_train_step_tdp(arch: LstmArch, dp: int):
+    L, H, V = arch.layers, arch.hidden, arch.vocab
+    tile = arch.tile
+
+    def build(ps, extras):
+        _, cells, wsoft, _ = _unpack_lstm(ps, L)
+        b0s = extras[:L]
+        scales = extras[L:2 * L]  # runtime 1/(1-p) per site
+        mms = [lambda inp, wx=cells[0][0]: matmul(inp, wx)]
+        for l in range(1, L):
+            mms.append(
+                lambda inp, wx=cells[l][0], b0=b0s[l - 1], s=scales[l - 1]:
+                patterns.tdp_matmul(inp, wx, dp, b0, tile) * s)
+
+        def soft(f, w, b0=b0s[L - 1], s=scales[L - 1]):
+            return patterns.tdp_matmul(f, w, dp, b0, tile) * s
+
+        return mms, soft
+
+    return _lstm_step_factory(arch, build)
+
+
+def lstm_eval(arch: LstmArch):
+    n_params = len(lstm_param_specs(arch))
+    L = arch.layers
+
+    def fn(*args):
+        params = list(args[:n_params])
+        x, y = args[n_params], args[n_params + 1]
+        _, cells, _, _ = _unpack_lstm(params, L)
+        mms = [lambda inp, wx=cells[l][0]: matmul(inp, wx) for l in range(L)]
+        return _lstm_loss(arch, params, x, y, mms, matmul)
+
+    return fn

@@ -1,0 +1,223 @@
+"""Dropout-pattern index math shared by the L2 model graphs.
+
+Mirrors ``rust/src/patterns/`` (the Rust side owns sampling and host-side
+mask generation; this module owns the in-graph gather/compaction). All
+functions take the divisor ``dp`` as a *static* Python int (it determines
+shapes, hence which AOT executable this graph becomes) and the bias ``b0``
+as a *dynamic* int32 scalar (``b0 = b - 1`` in the paper's 1-based notation,
+uniform over {0..dp-1}), so one executable per ``dp`` serves all biases.
+
+Row-based pattern (RDP, paper section III-A), 0-based:
+    kept neuron indices  = { b0 + dp*j : j in [0, M // dp) }
+so exactly ``M // dp`` of ``M`` neurons are kept and the kept sets across the
+``dp`` biases partition {0..dp*(M//dp)}.
+
+Tile-based pattern (TDP, paper section III-B): the weight matrix is split in
+``t_r x t_c`` tiles (32x32 when the dims allow, the paper's choice for the
+32 shared-memory banks; adapted down for non-divisible dims). The paper
+keeps one tile in every ``dp`` successive tiles in row-major order; when
+``dp`` divides the tile-column count that degenerates into keeping entire
+tile-columns, so we skew the stripe by the tile-row index (kept tile at
+(r, c) iff ``(c - b0 - r) mod dp == 0``) — same keep ratio 1/dp, same
+bias-partition property, but every output tile-column receives
+contributions. See DESIGN.md section 9.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Row-based (RDP)
+# ---------------------------------------------------------------------------
+
+def row_kept_count(m: int, dp: int) -> int:
+    """Number of kept neurons out of ``m`` for divisor ``dp`` (any bias)."""
+    return m // dp
+
+
+def row_kept_indices(dp: int, b0, count: int):
+    """Kept indices b0 + dp*j as an int32 vector (b0 may be traced)."""
+    return (jnp.asarray(b0, jnp.int32) + dp * jnp.arange(count, dtype=jnp.int32))
+
+
+def gather_cols(w: jax.Array, dp: int, b0) -> jax.Array:
+    """Keep columns {b0 + dp*j} of ``w`` [K, M] -> [K, M//dp].
+
+    Implemented as a reshape + dynamic index so the transpose (gradient) is a
+    cheap pad/scatter rather than a general gather.
+    """
+    k, m = w.shape
+    cnt = m // dp
+    w3 = w[:, : cnt * dp].reshape(k, cnt, dp)
+    return lax.dynamic_index_in_dim(w3, b0, axis=2, keepdims=False)
+
+
+def gather_rows(w: jax.Array, dp: int, b0) -> jax.Array:
+    """Keep rows {b0 + dp*j} of ``w`` [M, N] -> [M//dp, N]."""
+    m, n = w.shape
+    cnt = m // dp
+    w3 = w[: cnt * dp].reshape(cnt, dp, n)
+    return lax.dynamic_index_in_dim(w3, b0, axis=1, keepdims=False)
+
+
+def gather_vec(v: jax.Array, dp: int, b0) -> jax.Array:
+    """Keep elements {b0 + dp*j} of a vector (e.g. a bias) [M] -> [M//dp]."""
+    (m,) = v.shape
+    cnt = m // dp
+    return lax.dynamic_index_in_dim(v[: cnt * dp].reshape(cnt, dp), b0, axis=1,
+                                    keepdims=False)
+
+
+def scatter_rows(rows: jax.Array, m: int, dp: int, b0) -> jax.Array:
+    """Inverse of :func:`gather_rows`: place compact rows back at stride dp,
+    zeros elsewhere. Output [m, N]. Used to re-expand compact activations
+    when a dense view is needed (e.g. the paper's Fig 3 output matrix whose
+    other rows "are set to zero by default")."""
+    cnt, n = rows.shape
+    buf = jnp.zeros((cnt, dp, n), rows.dtype)
+    buf = lax.dynamic_update_index_in_dim(buf, rows[:, None, :], b0, axis=1)
+    out = buf.reshape(cnt * dp, n)
+    if cnt * dp < m:
+        out = jnp.concatenate([out, jnp.zeros((m - cnt * dp, n), rows.dtype)], 0)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Tile-based (TDP)
+# ---------------------------------------------------------------------------
+
+def tile_dims(k: int, n: int, t: int = 32) -> tuple[int, int]:
+    """Tile edge sizes (t_r, t_c) for a [k, n] weight matrix: the largest
+    divisors <= t (paper uses 32x32; 784 -> 28, 10 -> 10, ...)."""
+    from .kernels.matmul import pick_block
+
+    return pick_block(k, t), pick_block(n, t)
+
+
+def tile_kept_count(k: int, n: int, dp: int, t: int = 32) -> int:
+    """Kept-tile count — static (identical for every bias b0).
+
+    Requires dp | tn or dp | tk so the count does not depend on b0 (this is
+    what makes one AOT executable serve all biases).
+    """
+    tr, tc = tile_dims(k, n, t)
+    tk, tn = k // tr, n // tc
+    if tn % dp == 0:
+        return tk * (tn // dp)
+    if tk % dp == 0:
+        return (tk // dp) * tn
+    raise ValueError(
+        f"dp={dp} must divide one tile-grid edge of {tk}x{tn} "
+        f"(weight {k}x{n}, tile {tr}x{tc})")
+
+
+def tile_kept_rc(k: int, n: int, dp: int, b0, t: int = 32):
+    """(rows, cols) int32 vectors of kept tiles in row-major ("successive
+    tiles") order.
+
+    Kept tile (r, c) iff (c - b0 - r) mod dp == 0 — diagonal stripes: same
+    1/dp keep ratio as the paper's row-major stride, same bias-partition
+    property, but every output tile-column receives contributions even when
+    dp divides the tile-column count (see module docstring).
+    """
+    tr, tc = tile_dims(k, n, t)
+    tk, tn = k // tr, n // tc
+    cnt = tile_kept_count(k, n, dp, t)
+    r = jnp.arange(tk, dtype=jnp.int32)[:, None]
+    c = jnp.arange(tn, dtype=jnp.int32)[None, :]
+    keep = ((c - jnp.asarray(b0, jnp.int32) - r) % dp) == 0
+    rows, cols = jnp.nonzero(keep, size=cnt)
+    return rows.astype(jnp.int32), cols.astype(jnp.int32)
+
+
+def gather_tiles(w: jax.Array, rows: jax.Array, cols: jax.Array,
+                 t: int = 32) -> jax.Array:
+    """Gather kept tiles of ``w`` [K, N] -> [J, t_r, t_c]."""
+    k, n = w.shape
+    tr, tc = tile_dims(k, n, t)
+    tk, tn = k // tr, n // tc
+    w4 = w.reshape(tk, tr, tn, tc).transpose(0, 2, 1, 3).reshape(tk * tn, tr, tc)
+    return jnp.take(w4, rows * tn + cols, axis=0)
+
+
+def tile_mask(k: int, n: int, dp: int, b0, t: int = 32) -> jax.Array:
+    """Dense 0/1 mask equivalent of the tile pattern (oracle/testing only —
+    using this in training would be the conventional-dropout slow path)."""
+    tr, tc = tile_dims(k, n, t)
+    tk, tn = k // tr, n // tc
+    r = jnp.arange(tk, dtype=jnp.int32)[:, None]
+    c = jnp.arange(tn, dtype=jnp.int32)[None, :]
+    keep = ((c - jnp.asarray(b0, jnp.int32) - r) % dp) == 0
+    return jnp.repeat(jnp.repeat(keep.astype(jnp.float32), tr, 0), tc, 1)
+
+
+def row_mask(m: int, dp: int, b0) -> jax.Array:
+    """Dense 0/1 keep-mask vector for the row pattern (oracle/testing)."""
+    i = jnp.arange(m, dtype=jnp.int32)
+    cnt = m // dp
+    keep = ((i % dp) == jnp.asarray(b0, jnp.int32)) & (i < cnt * dp)
+    return keep.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# TDP matmul dispatcher
+# ---------------------------------------------------------------------------
+
+def _tdp_matmul_grouped(x, w, dp: int, b0, tile: int):
+    """Exact dense reformulation of the diagonal-stripe tile pattern.
+
+    Rows in tile-row residue class rho (r = rho mod dp) keep exactly the
+    tile-columns with c = (b0 + rho) mod dp, so the sparse matmul
+    decomposes into ``dp`` independent dense compact matmuls of 1/dp^2 the
+    size (total work 1/dp), stitched back by column class. Requires
+    dp | tk and dp | tn. This is the fast path: it uses only the dense
+    Pallas matmul plus reshape/slice glue that XLA fuses away.
+    """
+    from .kernels.matmul import matmul
+
+    m = x.shape[0]
+    k, n = w.shape
+    tr, tc = tile_dims(k, n, tile)
+    tk, tn = k // tr, n // tc
+    q_r, q_c = tk // dp, tn // dp
+
+    # x grouped by tile-row residue: [m, q_r, dp, tr]
+    x4 = x.reshape(m, q_r, dp, tr)
+    # w as tile grid split both ways: [q_r, dp, tr, q_c, dp, tc]
+    w6 = w.reshape(q_r, dp, tr, tn, tc).reshape(q_r, dp, tr, q_c, dp, tc)
+
+    y = jnp.zeros((m, q_c, dp, tc), x.dtype)
+    b0 = jnp.asarray(b0, jnp.int32)
+    for rho in range(dp):
+        s = (b0 + rho) % dp  # column class owned by this row class
+        x_rho = x4[:, :, rho, :].reshape(m, q_r * tr)
+        w_rho = lax.dynamic_index_in_dim(
+            w6[:, rho], s, axis=3, keepdims=False)       # [q_r, tr, q_c, tc]
+        w_rho = w_rho.reshape(q_r * tr, q_c * tc)
+        y_rho = matmul(x_rho, w_rho).reshape(m, q_c, tc)
+        y = lax.dynamic_update_index_in_dim(
+            y, y_rho[:, :, None, :], s, axis=2)
+    return y.reshape(m, n)
+
+
+def tdp_matmul(x, w, dp: int, b0, tile: int):
+    """Tile-pattern matmul ``x @ (w * tile_mask)`` (no scale), dispatching
+    to the grouped-dense reformulation when the tile grid allows, else the
+    scalar-prefetch sparse kernel."""
+    from .kernels.tile_sparse import tile_sparse_matmul
+
+    k, n = w.shape
+    # NOTE: no dp == 1 shortcut — the grouped path handles it as one dense
+    # matmul while still consuming ``b0``, keeping the AOT input signature
+    # identical across dp (XLA would otherwise DCE the unused parameter).
+    tr, tc = tile_dims(k, n, tile)
+    tk, tn = k // tr, n // tc
+    if tk % dp == 0 and tn % dp == 0:
+        return _tdp_matmul_grouped(x, w, dp, b0, tile)
+    rows, cols = tile_kept_rc(k, n, dp, b0, tile)
+    wt = gather_tiles(w, rows, cols, tile)
+    return tile_sparse_matmul(x, wt, rows, cols, n)

@@ -1,0 +1,82 @@
+"""AOT export: registry consistency and HLO-text round-trip."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+
+def test_registry_names_unique_and_well_formed():
+    arts = aot.build_registry("all")
+    names = [a.name for a in arts]
+    assert len(names) == len(set(names)), "duplicate artifact names"
+    for a in arts:
+        assert a.meta["variant"] in ("conv", "eval", "rdp", "tdp")
+        kinds = [t.kind for t in a.inputs]
+        if a.meta["variant"] != "eval":
+            # params, momenta ... then lr last
+            assert kinds[-1] == "lr"
+            n_p = kinds.count("param")
+            assert kinds.count("momentum") == n_p
+            out_kinds = [t.kind for t in a.outputs]
+            assert out_kinds[-2:] == ["loss", "correct"]
+        assert any(t.kind == "x" for t in a.inputs)
+        assert any(t.kind == "y" for t in a.inputs)
+
+
+def test_variant_extras_match_convention():
+    arts = {a.name: a for a in aot.build_registry("all")}
+    conv = arts["mlptest_conv"]
+    kinds = [t.kind for t in conv.inputs]
+    assert kinds.count("mask") == 2 and kinds.count("scale") == 2
+    rdp = arts["mlptest_rdp_2_2"]
+    kinds = [t.kind for t in rdp.inputs]
+    assert kinds.count("bias") == 2 and kinds.count("scale") == 2
+    assert all(t.dtype == "i32" for t in rdp.inputs if t.kind == "bias")
+
+
+def test_hlo_text_roundtrip(tmp_path):
+    # Lower the tiny eval graph and verify the text is XLA-parseable HLO
+    # (ENTRY + parameters) of the expected arity.
+    arts = {a.name: a for a in aot.build_registry("all")}
+    a = arts["mlptest_eval"]
+    text = aot.to_hlo_text(a.fn, [t.sds() for t in a.inputs])
+    assert "ENTRY" in text and "parameter(0)" in text
+    assert f"parameter({len(a.inputs) - 1})" in text
+    assert f"parameter({len(a.inputs)})" not in text
+
+
+def test_manifest_write(tmp_path, monkeypatch):
+    monkeypatch.chdir(os.path.dirname(os.path.dirname(__file__)))
+    out = tmp_path / "arts"
+    rc = aot.main(["--set", "test", "--out", str(out), "--only",
+                   "mlptest_eval"])
+    assert rc == 0
+    manifest = json.loads((out / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert manifest["dp_support"] == aot.DP_SUPPORT
+    entry = [x for x in manifest["artifacts"]
+             if x["name"] == "mlptest_eval"][0]
+    assert (out / entry["file"]).exists()
+    assert entry["arch"]["hidden"] == [64, 64]
+
+
+def test_skip_cache_behaviour(tmp_path, monkeypatch):
+    monkeypatch.chdir(os.path.dirname(os.path.dirname(__file__)))
+    out = tmp_path / "arts"
+    aot.main(["--set", "test", "--out", str(out), "--only", "mlptest_eval"])
+    f = out / "mlptest_eval.hlo.txt"
+    mtime = f.stat().st_mtime_ns
+    aot.main(["--set", "test", "--out", str(out), "--only", "mlptest_eval"])
+    assert f.stat().st_mtime_ns == mtime, "cached artifact was rebuilt"
+
+
+def test_scales_exact_for_supported_dps():
+    # Inverted-dropout scales baked into graphs must be exact ratios.
+    assert model.row_scale(2048, 4) == 4.0
+    assert model.tile_scale(2048, 2048, 8) == 8.0
+    assert model.tile_scale(784, 2048, 4) == 4.0

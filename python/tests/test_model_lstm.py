@@ -1,0 +1,162 @@
+"""LSTM train-step graphs vs pure-jnp mask-based references."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, patterns
+
+ARCH = model.LstmArch(vocab=64, hidden=32, layers=2, seq=5, batch=4,
+                      tile=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    specs = model.lstm_param_specs(ARCH)
+    params = [jax.random.normal(jax.random.PRNGKey(i), s) * 0.1
+              for i, (n, s) in enumerate(specs)]
+    moms = [jnp.zeros(s) for _, s in specs]
+    x = jax.random.randint(jax.random.PRNGKey(50), (4, 5), 0, 64, jnp.int32)
+    y = jax.random.randint(jax.random.PRNGKey(51), (4, 5), 0, 64, jnp.int32)
+    return params, moms, x, y
+
+
+def ref_loss(ps, x, y, variant, dp=2, b0s=None, masks=None, scales=None):
+    emb, cells, wsoft, bsoft = model._unpack_lstm(ps, 2)
+    H = ARCH.hidden
+    e = jnp.transpose(jnp.take(emb, x, axis=0), (1, 0, 2))
+    hs = [jnp.zeros((4, H))] * 2
+    cs = [jnp.zeros((4, H))] * 2
+    tops = []
+    if variant == "rdp":
+        rm = [patterns.row_mask(H, dp, b0s[i]) * 2.0 for i in range(2)]
+    for t in range(ARCH.seq):
+        inp = e[t]
+        for l, (wx, wh, bg) in enumerate(cells):
+            win = inp
+            wx_eff = wx
+            s_extra = 1.0
+            if l > 0:
+                if variant == "rdp":
+                    win = inp * rm[0]
+                elif variant == "conv":
+                    win = inp * masks[0] * scales[0]
+                elif variant == "tdp":
+                    wx_eff = wx * patterns.tile_mask(H, 4 * H, dp, b0s[0],
+                                                     ARCH.tile)
+                    s_extra = 2.0
+            gates = (win @ wx_eff) * s_extra + hs[l] @ wh + bg
+            i_, f_, g_, o_ = jnp.split(gates, 4, -1)
+            c2 = (jax.nn.sigmoid(f_ + 1.0) * cs[l]
+                  + jax.nn.sigmoid(i_) * jnp.tanh(g_))
+            h2 = jax.nn.sigmoid(o_) * jnp.tanh(c2)
+            hs[l], cs[l] = h2, c2
+            inp = h2
+        tops.append(hs[1])
+    flat = jnp.stack(tops).reshape(ARCH.seq * 4, H)
+    if variant == "rdp":
+        logits = (flat * rm[1]) @ wsoft + bsoft
+    elif variant == "conv":
+        mm = jnp.tile(masks[1], (ARCH.seq, 1))
+        logits = (flat * mm * scales[1]) @ wsoft + bsoft
+    elif variant == "tdp":
+        tms = patterns.tile_mask(H, ARCH.vocab, dp, b0s[1], ARCH.tile)
+        ss = 2.0
+        logits = (flat @ (wsoft * tms)) * ss + bsoft
+    else:
+        logits = flat @ wsoft + bsoft
+    targets = jnp.transpose(y, (1, 0)).reshape(ARCH.seq * 4)
+    return model.softmax_xent(logits, targets)
+
+
+@pytest.mark.parametrize("b0s", [(0, 1), (1, 0)])
+def test_rdp_matches_masked_reference(setup, b0s):
+    params, moms, x, y = setup
+    n = len(params)
+    lr = jnp.float32(0.1)
+    b0s_j = [jnp.int32(b) for b in b0s]
+    sc = [jnp.float32(2.0)] * 2
+    out = model.lstm_train_step_rdp(ARCH, 2)(*params, *moms, x, y, *b0s_j,
+                                             *sc, lr)
+    (loss_r, corr_r), grads = jax.value_and_grad(
+        lambda ps: ref_loss(ps, x, y, "rdp", 2, b0s_j), has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[2 * n], loss_r, rtol=1e-5, atol=1e-6)
+    assert float(out[2 * n + 1]) == float(corr_r)
+    for a, b in zip(out[:n], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_tdp_matches_masked_reference(setup):
+    params, moms, x, y = setup
+    n = len(params)
+    lr = jnp.float32(0.1)
+    b0s = [jnp.int32(1), jnp.int32(0)]
+    sc = [jnp.float32(2.0)] * 2
+    out = model.lstm_train_step_tdp(ARCH, 2)(*params, *moms, x, y, *b0s,
+                                             *sc, lr)
+    (loss_r, _), grads = jax.value_and_grad(
+        lambda ps: ref_loss(ps, x, y, "tdp", 2, b0s), has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[2 * n], loss_r, rtol=1e-5, atol=1e-6)
+    for a, b in zip(out[:n], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_conv_matches_reference(setup):
+    params, moms, x, y = setup
+    n = len(params)
+    lr = jnp.float32(0.1)
+    masks = [(jax.random.uniform(jax.random.PRNGKey(7 + i), (4, 32))
+              > 0.5).astype(jnp.float32) for i in range(2)]
+    scales = [jnp.float32(2.0)] * 2
+    out = model.lstm_train_step_conv(ARCH)(*params, *moms, x, y, *masks,
+                                           *scales, lr)
+    (loss_r, _), grads = jax.value_and_grad(
+        lambda ps: ref_loss(ps, x, y, "conv", masks=masks, scales=scales),
+        has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[2 * n], loss_r, rtol=1e-5, atol=1e-6)
+    for a, b in zip(out[:n], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_eval_matches_reference(setup):
+    params, _, x, y = setup
+    n = len(params)
+    loss_e, corr_e = model.lstm_eval(ARCH)(*params, x, y)
+    loss_r, corr_r = ref_loss(params, x, y, "eval")
+    np.testing.assert_allclose(loss_e, loss_r, rtol=1e-5)
+    assert float(corr_e) == float(corr_r)
+
+
+def test_recurrent_weights_fully_trained_under_rdp(setup):
+    # RDP drops only non-recurrent connections: the recurrent kernels wh
+    # must receive gradient through every unit.
+    params, moms, x, y = setup
+    n = len(params)
+    out = model.lstm_train_step_rdp(ARCH, 2)(
+        *params, *moms, x, y, jnp.int32(0), jnp.int32(0), jnp.float32(2.0),
+        jnp.float32(2.0), jnp.float32(0.1))
+    wh0_before = params[2]  # wx0, wh0 order: emb, wx0, wh0, bg0, ...
+    wh0_after = out[2]
+    changed = np.mean(np.asarray(wh0_before) != np.asarray(wh0_after))
+    assert changed > 0.95, f"only {changed:.0%} of wh0 updated"
+
+
+def test_three_layer_arch_builds_and_steps():
+    arch3 = model.LstmArch(vocab=64, hidden=32, layers=3, seq=4, batch=2,
+                           tile=16)
+    specs = model.lstm_param_specs(arch3)
+    assert len(specs) == 1 + 3 * 3 + 2
+    params = [jax.random.normal(jax.random.PRNGKey(i), s) * 0.1
+              for i, (_, s) in enumerate(specs)]
+    moms = [jnp.zeros(s) for _, s in specs]
+    x = jnp.zeros((2, 4), jnp.int32)
+    y = jnp.ones((2, 4), jnp.int32)
+    out = model.lstm_train_step_rdp(arch3, 2)(
+        *params, *moms, x, y, jnp.int32(0), jnp.int32(1), jnp.int32(0),
+        jnp.float32(2.0), jnp.float32(2.0), jnp.float32(2.0),
+        jnp.float32(0.1))
+    assert np.isfinite(float(out[2 * len(params)]))

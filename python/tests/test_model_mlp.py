@@ -1,0 +1,159 @@
+"""MLP train-step graphs vs pure-jnp mask-based references: each pattern
+variant must be numerically identical to conventional dropout with the
+equivalent dense 0/1 mask (the paper's core equivalence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, patterns
+
+ARCH = model.MlpArch(hidden=(64, 64), n_in=32, n_out=10, batch=8,
+                     tile=16)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    specs = model.mlp_param_specs(ARCH)
+    params = [jax.random.normal(jax.random.PRNGKey(i), s) * 0.1
+              for i, (n, s) in enumerate(specs)]
+    moms = [jnp.zeros(s) for _, s in specs]
+    x = jax.random.normal(jax.random.PRNGKey(99), (8, 32))
+    y = jnp.arange(8, dtype=jnp.int32) % 10
+    return params, moms, x, y
+
+
+S1, S2 = 2.0, 2.0  # runtime inverted-dropout scales (1/(1-p))
+
+
+def ref_rdp_loss(params, x, y, dp1, b01, dp2, b02):
+    w1, b1, w2, b2, w3, b3 = params
+    m1 = patterns.row_mask(64, dp1, b01) * S1
+    m2 = patterns.row_mask(64, dp2, b02) * S2
+    h1 = jax.nn.relu(x @ w1 + b1) * m1
+    h2 = jax.nn.relu(h1 @ w2 + b2) * m2
+    return model.softmax_xent(h2 @ w3 + b3, y)
+
+
+def ref_tdp_loss(params, x, y, dp1, b01, dp2, b02):
+    w1, b1, w2, b2, w3, b3 = params
+    tm1 = patterns.tile_mask(32, 64, dp1, b01, ARCH.tile)
+    tm2 = patterns.tile_mask(64, 64, dp2, b02, ARCH.tile)
+    s1, s2 = S1, S2
+    h1 = jax.nn.relu((x @ (w1 * tm1)) * s1 + b1)
+    h2 = jax.nn.relu((h1 @ (w2 * tm2)) * s2 + b2)
+    return model.softmax_xent(h2 @ w3 + b3, y)
+
+
+@pytest.mark.parametrize("dp1,dp2,b01,b02", [
+    (2, 2, 0, 1), (2, 4, 1, 3), (4, 2, 2, 0), (1, 1, 0, 0),
+])
+def test_rdp_step_equals_masked_reference(setup, dp1, dp2, b01, b02):
+    params, moms, x, y = setup
+    lr = jnp.float32(0.05)
+    step = model.mlp_train_step_rdp(ARCH, dp1, dp2)
+    out = step(*params, *moms, x, y, jnp.int32(b01), jnp.int32(b02),
+               jnp.float32(S1), jnp.float32(S2), lr)
+
+    (loss_r, corr_r), grads = jax.value_and_grad(
+        lambda ps: ref_rdp_loss(ps, x, y, dp1, jnp.int32(b01), dp2,
+                                jnp.int32(b02)),
+        has_aux=True)(params)
+    new_p, new_m = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[12], loss_r, rtol=1e-5, atol=1e-6)
+    assert float(out[13]) == float(corr_r)
+    for a, b in zip(out[:6], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    for a, b in zip(out[6:12], new_m):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dp,b01,b02", [(2, 0, 1), (2, 1, 0)])
+def test_tdp_step_equals_masked_reference(setup, dp, b01, b02):
+    params, moms, x, y = setup
+    lr = jnp.float32(0.05)
+    step = model.mlp_train_step_tdp(ARCH, dp, dp)
+    out = step(*params, *moms, x, y, jnp.int32(b01), jnp.int32(b02),
+               jnp.float32(S1), jnp.float32(S2), lr)
+    (loss_r, _), grads = jax.value_and_grad(
+        lambda ps: ref_tdp_loss(ps, x, y, dp, jnp.int32(b01), dp,
+                                jnp.int32(b02)),
+        has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[12], loss_r, rtol=1e-5, atol=1e-6)
+    for a, b in zip(out[:6], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_conv_step_equals_plain_dropout(setup):
+    params, moms, x, y = setup
+    lr = jnp.float32(0.05)
+    m1 = (jax.random.uniform(jax.random.PRNGKey(5), (8, 64))
+          > 0.5).astype(jnp.float32)
+    m2 = (jax.random.uniform(jax.random.PRNGKey(6), (8, 64))
+          > 0.5).astype(jnp.float32)
+    step = model.mlp_train_step_conv(ARCH)
+    out = step(*params, *moms, x, y, m1, m2, jnp.float32(2.0),
+               jnp.float32(2.0), lr)
+
+    def ref(ps):
+        w1, b1, w2, b2, w3, b3 = ps
+        h1 = jax.nn.relu(x @ w1 + b1)
+        h2 = jax.nn.relu((h1 * m1 * 2.0) @ w2 + b2)
+        return model.softmax_xent((h2 * m2 * 2.0) @ w3 + b3, y)
+
+    (loss_r, _), grads = jax.value_and_grad(ref, has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[12], loss_r, rtol=1e-5, atol=1e-6)
+    for a, b in zip(out[:6], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_rdp_dp1_equals_no_dropout_eval(setup):
+    # dp = (1,1) keeps everything with scale 1 — the train forward must
+    # match the eval graph's forward exactly.
+    params, moms, x, y = setup
+    step = model.mlp_train_step_rdp(ARCH, 1, 1)
+    out = step(*params, *moms, x, y, jnp.int32(0), jnp.int32(0),
+               jnp.float32(1.0), jnp.float32(1.0),
+               jnp.float32(0.0))  # scale 1, lr=0: params unchanged
+    ev = model.mlp_eval(ARCH)
+    loss_e, corr_e = ev(*params, x, y)
+    np.testing.assert_allclose(out[12], loss_e, rtol=1e-5)
+    assert float(out[13]) == float(corr_e)
+    for a, b in zip(out[:6], params):
+        np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+def test_momentum_accumulates_across_steps(setup):
+    params, moms, x, y = setup
+    lr = jnp.float32(0.01)
+    step = model.mlp_train_step_rdp(ARCH, 2, 2)
+    s_ = jnp.float32(2.0)
+    out1 = step(*params, *moms, x, y, jnp.int32(0), jnp.int32(0), s_, s_,
+                lr)
+    p1, m1_ = list(out1[:6]), list(out1[6:12])
+    out2 = step(*p1, *m1_, x, y, jnp.int32(0), jnp.int32(0), s_, s_, lr)
+    m2_ = out2[6:12]
+    # Momentum after step2 = mu * m1 + g2; with identical data g2 != 0 so
+    # |m2| should generally exceed |mu * m1| in early training.
+    n1 = sum(float(jnp.sum(jnp.abs(m))) for m in m1_)
+    n2 = sum(float(jnp.sum(jnp.abs(m))) for m in m2_)
+    assert n2 > 0.9 * n1
+
+
+def test_loss_decreases_under_training(setup):
+    params, moms, x, y = setup
+    lr = jnp.float32(0.1)
+    step = jax.jit(model.mlp_train_step_rdp(ARCH, 2, 2))
+    ps, ms = list(params), list(moms)
+    first = None
+    for i in range(25):
+        out = step(*ps, *ms, x, y, jnp.int32(i % 2), jnp.int32((i + 1) % 2),
+                   jnp.float32(2.0), jnp.float32(2.0), lr)
+        ps, ms = list(out[:6]), list(out[6:12])
+        if first is None:
+            first = float(out[12])
+    last = float(out[12])
+    assert last < first, f"loss did not decrease: {first} -> {last}"

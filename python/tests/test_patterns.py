@@ -1,0 +1,96 @@
+"""Pattern index math: static shapes across biases, partition properties,
+gather/mask consistency — must mirror rust/src/patterns exactly."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import patterns
+
+
+@given(m=st.sampled_from([16, 64, 100, 2048]),
+       dp=st.sampled_from([1, 2, 3, 4, 8]))
+@settings(max_examples=30, deadline=None)
+def test_row_kept_count_static_across_bias(m, dp):
+    if dp > m:
+        return
+    counts = set()
+    for b0 in range(dp):
+        idx = patterns.row_kept_indices(dp, jnp.int32(b0),
+                                        patterns.row_kept_count(m, dp))
+        counts.add(int(idx.shape[0]))
+        assert int(idx.max()) < m
+    assert len(counts) == 1
+
+
+def test_row_biases_partition():
+    m, dp = 64, 4
+    covered = np.zeros(m, np.int32)
+    for b0 in range(dp):
+        mask = np.asarray(patterns.row_mask(m, dp, jnp.int32(b0)))
+        covered += mask.astype(np.int32)
+    np.testing.assert_array_equal(covered, np.ones(m, np.int32))
+
+
+def test_gather_matches_mask_semantics():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(32, 64)).astype(np.float32))
+    dp, b0 = 4, jnp.int32(2)
+    wc = patterns.gather_cols(w, dp, b0)
+    np.testing.assert_array_equal(np.asarray(wc), np.asarray(w)[:, 2::4])
+    wr = patterns.gather_rows(w, 2, jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(wr), np.asarray(w)[1::2])
+    v = jnp.arange(12.0)
+    np.testing.assert_array_equal(
+        np.asarray(patterns.gather_vec(v, 3, jnp.int32(0))),
+        np.arange(12.0)[0::3])
+
+
+def test_scatter_rows_inverse_of_gather():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(24, 8)).astype(np.float32))
+    dp, b0 = 3, jnp.int32(1)
+    rowsc = patterns.gather_rows(w, dp, b0)
+    back = patterns.scatter_rows(rowsc, 24, dp, b0)
+    mask = np.asarray(patterns.row_mask(24, dp, b0))[:, None]
+    np.testing.assert_allclose(np.asarray(back), np.asarray(w) * mask)
+
+
+@pytest.mark.parametrize("k,n,dp", [(128, 128, 2), (128, 128, 4),
+                                    (1024, 64, 8), (784, 2048, 4)])
+def test_tile_kept_static_and_partition(k, n, dp):
+    cnt = patterns.tile_kept_count(k, n, dp)
+    tr, tc = patterns.tile_dims(k, n)
+    tk, tn = k // tr, n // tc
+    seen = np.zeros((tk, tn), np.int32)
+    for b0 in range(dp):
+        rows, cols = patterns.tile_kept_rc(k, n, dp, jnp.int32(b0))
+        assert rows.shape[0] == cnt
+        seen[np.asarray(rows), np.asarray(cols)] += 1
+    np.testing.assert_array_equal(seen, np.ones((tk, tn), np.int32))
+
+
+def test_tile_mask_density():
+    k, n, dp = 128, 128, 4
+    m = np.asarray(patterns.tile_mask(k, n, dp, jnp.int32(1)))
+    assert abs(m.mean() - 1.0 / dp) < 1e-6
+
+
+def test_tile_dims_adapts():
+    assert patterns.tile_dims(784, 2048) == (28, 32)
+    assert patterns.tile_dims(64, 10) == (32, 10)
+    assert patterns.tile_dims(2048, 2048) == (32, 32)
+
+
+def test_rust_python_convention_pin():
+    # Golden values shared with rust/src/patterns tests: if either side
+    # changes its index math, this cross-language pin must be updated in
+    # BOTH places (see rust/src/patterns/row.rs example_from_paper).
+    idx = patterns.row_kept_indices(3, jnp.int32(0), 3)
+    np.testing.assert_array_equal(np.asarray(idx), [0, 3, 6])
+    rows, cols = patterns.tile_kept_rc(96, 64, 2, jnp.int32(0))
+    kept = sorted(zip(np.asarray(rows).tolist(),
+                      np.asarray(cols).tolist()))
+    # grid 3x2, keep (r, c) with (c - r) % 2 == 0
+    assert kept == [(0, 0), (1, 1), (2, 0)]

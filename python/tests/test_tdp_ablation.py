@@ -1,0 +1,98 @@
+"""Ablation: the two TDP execution strategies must agree exactly.
+
+`patterns.tdp_matmul` dispatches between (a) the grouped-dense
+reformulation (dp | both tile-grid edges) and (b) the scalar-prefetch
+sparse kernel. Both must match the dense tile-mask model on every shape
+the artifact registry uses — this pins the §Perf optimization against the
+reference semantics (DESIGN.md §8b item 2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import patterns
+from compile.kernels import tile_sparse_matmul
+
+# (K, N, dp, tile) drawn from the real artifact shapes.
+REGISTRY_SHAPES = [
+    (784, 2048, 2, 128),    # mlp2048 W1: grouped unavailable (tk=7)
+    (784, 2048, 4, 128),
+    (2048, 2048, 4, 128),   # mlp2048 W2: grouped
+    (2048, 2048, 8, 128),
+    (1024, 64, 8, 128),     # mlp1024x64 W2: tn=1, dp | tk
+    (256, 1024, 4, 128),    # lstm2x256 wx
+    (512, 2048, 8, 128),    # lstm3 wx
+    (64, 64, 2, 16),        # tiny test arch
+]
+
+
+def _dense_ref(x, w, dp, b0, tile):
+    return x @ (w * patterns.tile_mask(w.shape[0], w.shape[1], dp, b0,
+                                       tile))
+
+
+@pytest.mark.parametrize("k,n,dp,tile", REGISTRY_SHAPES)
+def test_dispatcher_matches_dense_reference(k, n, dp, tile):
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, k)) * 0.2
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.2
+    for b0v in {0, dp - 1}:
+        b0 = jnp.int32(b0v)
+        out = patterns.tdp_matmul(x, w, dp, b0, tile)
+        np.testing.assert_allclose(out, _dense_ref(x, w, dp, b0, tile),
+                                   rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("k,n,dp,tile", [(2048, 2048, 4, 128),
+                                         (512, 2048, 4, 128)])
+def test_grouped_equals_sparse_kernel(k, n, dp, tile):
+    """Where both strategies apply, they must agree bitwise-closely."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, k)) * 0.2
+    w = jax.random.normal(jax.random.PRNGKey(3), (k, n)) * 0.2
+    b0 = jnp.int32(1)
+    grouped = patterns._tdp_matmul_grouped(x, w, dp, b0, tile)
+    rows, cols = patterns.tile_kept_rc(k, n, dp, b0, tile)
+    wt = patterns.gather_tiles(w, rows, cols, tile)
+    sparse = tile_sparse_matmul(x, wt, rows, cols, n)
+    np.testing.assert_allclose(grouped, sparse, rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_grads_match_sparse_grads():
+    k, n, dp, tile = 256, 256, 2, 128
+    x = jax.random.normal(jax.random.PRNGKey(4), (4, k)) * 0.2
+    w = jax.random.normal(jax.random.PRNGKey(5), (k, n)) * 0.2
+    b0 = jnp.int32(0)
+
+    def f_grouped(x, w):
+        return jnp.sum(patterns._tdp_matmul_grouped(x, w, dp, b0, tile)**2)
+
+    def f_dense(x, w):
+        return jnp.sum(_dense_ref(x, w, dp, b0, tile) ** 2)
+
+    ga = jax.grad(f_grouped, (0, 1))(x, w)
+    gb = jax.grad(f_dense, (0, 1))(x, w)
+    for a, b in zip(ga, gb):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_dispatcher_consumes_bias_even_for_dp1():
+    """dp=1 must keep b0 in the graph (AOT input-signature stability —
+    XLA DCEs unused parameters; see DESIGN.md §8b)."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 64))
+    w = jax.random.normal(jax.random.PRNGKey(7), (64, 64))
+
+    def fn(b0):
+        return patterns.tdp_matmul(x, w, 1, b0, 32)
+
+    jaxpr = jax.make_jaxpr(fn)(jnp.int32(0))
+    # b0 must appear as a used invar, not be dropped.
+    assert len(jaxpr.jaxpr.invars) == 1
+    used = any(
+        v is jaxpr.jaxpr.invars[0]
+        for eqn in jaxpr.jaxpr.eqns for v in eqn.invars
+        if isinstance(v, type(jaxpr.jaxpr.invars[0]))
+    )
+    assert used, "b0 dropped from the dp=1 graph"
+    np.testing.assert_allclose(fn(jnp.int32(0)), x @ w, rtol=1e-4,
+                               atol=1e-4)

@@ -1,0 +1,94 @@
+"""Tile-sparse (TDP) kernel vs oracle and vs the dense tile-mask model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import patterns
+from compile.kernels import ref, tile_sparse_matmul
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+CASES = [
+    # (K, N, dp) — covers dp | tn, dp | tk, and adapted tile edges (784).
+    (128, 64, 2),
+    (128, 64, 4),
+    (256, 64, 8),
+    (96, 128, 4),
+    (784, 64, 4),
+]
+
+
+@pytest.mark.parametrize("k,n,dp", CASES)
+def test_forward_matches_oracle_and_dense_mask(k, n, dp):
+    x = rand(0, (8, k))
+    w = rand(1, (k, n))
+    for b0v in range(dp):
+        b0 = jnp.int32(b0v)
+        rows, cols = patterns.tile_kept_rc(k, n, dp, b0)
+        wt = patterns.gather_tiles(w, rows, cols)
+        out = tile_sparse_matmul(x, wt, rows, cols, n)
+        np.testing.assert_allclose(
+            out, ref.tile_sparse_matmul_ref(x, wt, rows, cols, n),
+            rtol=1e-4, atol=1e-4)
+        dense = w * patterns.tile_mask(k, n, dp, b0)
+        np.testing.assert_allclose(out, x @ dense, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("k,n,dp", [(128, 64, 2), (256, 64, 8),
+                                    (784, 64, 4)])
+def test_gradients_match_oracle(k, n, dp):
+    x = rand(2, (4, k))
+    w = rand(3, (k, n))
+    b0 = jnp.int32(dp - 1)
+    rows, cols = patterns.tile_kept_rc(k, n, dp, b0)
+    wt = patterns.gather_tiles(w, rows, cols)
+
+    def f_k(x, wt):
+        return jnp.sum(jnp.tanh(tile_sparse_matmul(x, wt, rows, cols, n)))
+
+    def f_r(x, wt):
+        return jnp.sum(jnp.tanh(
+            ref.tile_sparse_matmul_ref(x, wt, rows, cols, n)))
+
+    gk = jax.grad(f_k, argnums=(0, 1))(x, wt)
+    gr = jax.grad(f_r, argnums=(0, 1))(x, wt)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+def test_dp1_is_full_matmul():
+    x = rand(4, (8, 64))
+    w = rand(5, (64, 64))
+    rows, cols = patterns.tile_kept_rc(64, 64, 1, jnp.int32(0))
+    wt = patterns.gather_tiles(w, rows, cols)
+    out = tile_sparse_matmul(x, wt, rows, cols, 64)
+    np.testing.assert_allclose(out, x @ w, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(dp=st.sampled_from([2, 4]), b0v=st.integers(0, 3),
+       seed=st.integers(0, 2**12))
+def test_property_output_energy_scales_down(dp, b0v, seed):
+    # Dropping (dp-1)/dp of tiles must cut output Frobenius mass vs the
+    # full matmul (statistically; random gaussian weights).
+    if b0v >= dp:
+        b0v %= dp
+    k = n = 128
+    x = rand(seed, (8, k))
+    w = rand(seed + 1, (k, n))
+    rows, cols = patterns.tile_kept_rc(k, n, dp, jnp.int32(b0v))
+    wt = patterns.gather_tiles(w, rows, cols)
+    out = tile_sparse_matmul(x, wt, rows, cols, n)
+    full = x @ w
+    assert jnp.linalg.norm(out) < jnp.linalg.norm(full) * 1.05
+
+
+def test_unsupported_dp_raises():
+    with pytest.raises(ValueError):
+        patterns.tile_kept_count(96, 64, 8)  # grid 3x2, 8 divides neither

@@ -1,0 +1,56 @@
+//! Fig. 4 — "Comparing different dropout rate combinations on specific
+//! network": MLP 2048x2048, dropout rates (0.3,0.3)..(0.7,0.7), speedup
+//! and accuracy for RDP and TDP vs the conventional baseline.
+//!
+//! Paper shape to reproduce: RDP speedup 1.2->1.8 as the rate grows,
+//! TDP 1.18->1.6 (slightly below RDP), accuracy loss < 0.47%.
+//!
+//! Timing-only by default; set AD_BENCH_TRAIN_STEPS (e.g. 400) to add the
+//! accuracy columns.
+
+use approx_dropout::bench::drivers::{fmt_opt_pct, run_mlp, BenchCtx};
+use approx_dropout::bench::{fmt_time, Table};
+use approx_dropout::coordinator::{speedup, Variant};
+use approx_dropout::data::MnistSyn;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new()?;
+    let tag = "mlp2048x2048";
+    let (train, test) = MnistSyn::train_test(8_192, 2_048, 7);
+    println!("== Fig 4: {tag}, rate sweep, {} timed steps/config ==",
+             ctx.timed_steps);
+
+    let rates = [0.3, 0.4, 0.5, 0.6, 0.7];
+    let mut table = Table::new(&["rates", "conv step", "RDP step",
+                                 "RDP speedup", "TDP step", "TDP speedup",
+                                 "conv acc", "RDP acc", "TDP acc"]);
+    for &r in &rates {
+        let rr = [r, r];
+        let (t_conv, a_conv) = run_mlp(&ctx, tag, Variant::Conv, &rr, false,
+                                       &train, &test, 42)?;
+        let (t_rdp, a_rdp) = run_mlp(&ctx, tag, Variant::Rdp, &rr, false,
+                                     &train, &test, 42)?;
+        let (t_tdp, a_tdp) = run_mlp(&ctx, tag, Variant::Tdp, &rr, false,
+                                     &train, &test, 42)?;
+        table.row(&[
+            format!("({r},{r})"),
+            fmt_time(t_conv),
+            fmt_time(t_rdp),
+            format!("{:.2}x", speedup(t_conv, t_rdp)),
+            fmt_time(t_tdp),
+            format!("{:.2}x", speedup(t_conv, t_tdp)),
+            fmt_opt_pct(a_conv),
+            fmt_opt_pct(a_rdp),
+            fmt_opt_pct(a_tdp),
+        ]);
+        println!("  rate {r}: conv {} | rdp {:.2}x | tdp {:.2}x",
+                 fmt_time(t_conv), speedup(t_conv, t_rdp),
+                 speedup(t_conv, t_tdp));
+    }
+    println!();
+    table.print();
+    println!("\npaper: RDP 1.2-1.8x, TDP 1.18-1.6x over the same sweep; \
+              accuracy loss < 0.47% (set AD_BENCH_TRAIN_STEPS=400 for \
+              accuracy columns)");
+    Ok(())
+}

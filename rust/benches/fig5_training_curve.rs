@@ -1,0 +1,49 @@
+//! Fig. 5 — "The training process of RDP and traditional dropout": fix the
+//! dropout rate at 0.5 and trace the accuracy/loss of RDP vs the
+//! conventional baseline over training iterations.
+//!
+//! Paper shape to reproduce: RDP converges at least as early and as
+//! smoothly as the baseline (the regular patterns do not hurt training
+//! dynamics).
+//!
+//! Uses the reduced-scale LSTM (H=256) so the curve is traced in minutes;
+//! AD_BENCH_TRAIN_STEPS scales the curve length (default 120).
+
+use approx_dropout::bench::drivers::{env_usize, trace_lstm_curve, BenchCtx};
+use approx_dropout::bench::Table;
+use approx_dropout::coordinator::Variant;
+use approx_dropout::data::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new()?;
+    let steps = env_usize("AD_BENCH_TRAIN_STEPS", 0).max(120);
+    let every = (steps / 12).max(1);
+    let tag = "lstm2x256v2048b20";
+    println!("== Fig 5: training curve, {tag}, rate 0.5, {steps} steps ==");
+    let corpus = Corpus::generate(2048, 150_000, 15_000, 15_000, 11);
+
+    let conv = trace_lstm_curve(&ctx, tag, Variant::Conv, 0.5, 2, &corpus,
+                                steps, every, 42)?;
+    let rdp = trace_lstm_curve(&ctx, tag, Variant::Rdp, 0.5, 2, &corpus,
+                               steps, every, 42)?;
+
+    let mut table = Table::new(&["iteration", "conv loss", "conv acc",
+                                 "RDP loss", "RDP acc"]);
+    for (c, r) in conv.iter().zip(&rdp) {
+        table.row(&[format!("{}", c.0), format!("{:.4}", c.1),
+                    format!("{:.3}", c.2), format!("{:.4}", r.1),
+                    format!("{:.3}", r.2)]);
+    }
+    table.print();
+
+    // Smoothness proxy: mean |delta loss| between consecutive trace points.
+    let rough = |pts: &[(u64, f64, f64)]| -> f64 {
+        pts.windows(2).map(|w| (w[1].1 - w[0].1).abs()).sum::<f64>()
+            / (pts.len() - 1).max(1) as f64
+    };
+    println!("\nmean |delta loss| — conv {:.4}, RDP {:.4} (paper: RDP \
+              curve is smoother)", rough(&conv), rough(&rdp));
+    println!("final loss — conv {:.4}, RDP {:.4} (paper: RDP converges \
+              no slower)", conv.last().unwrap().1, rdp.last().unwrap().1);
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Fig. 6(b) — batch-size sweep on the 3-layer LSTM @ rate 0.5 (RDP):
+//! speedup and perplexity as the batch grows 20 -> 40.
+//!
+//! Paper shape to reproduce: speedup INCREASES with batch size (matrix
+//! work grows while the pattern bookkeeping is constant), while quality
+//! degrades slightly (one pattern per iteration covers more samples, so
+//! fewer distinct sub-models are visited per epoch).
+
+use approx_dropout::bench::drivers::{fmt_opt_ppl, run_lstm_support,
+                                     BenchCtx};
+use approx_dropout::bench::{fmt_time, Table};
+use approx_dropout::coordinator::{speedup, Variant};
+use approx_dropout::data::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new()?;
+    println!("== Fig 6b: lstm3x512v10240, batch sweep @ rate 0.5, {} \
+              timed steps/config ==", ctx.timed_steps);
+    let corpus = Corpus::generate(10_240, 200_000, 20_000, 20_000, 13);
+
+    let mut table = Table::new(&["batch", "conv step", "RDP step",
+                                 "speedup", "RDP ppl"]);
+    for &b in &[20usize, 25, 30, 35, 40] {
+        let tag = format!("lstm3x512v10240b{b}");
+        let (t_conv, _) = run_lstm_support(&ctx, &tag, Variant::Conv, 0.5,
+                                           3, &corpus, 0.1, 42, &[1, 2, 4])?;
+        let (t_rdp, q_rdp) = run_lstm_support(&ctx, &tag, Variant::Rdp, 0.5,
+                                              3, &corpus, 0.1, 42,
+                                              &[1, 2, 4])?;
+        table.row(&[format!("{b}"), fmt_time(t_conv), fmt_time(t_rdp),
+                    format!("{:.2}x", speedup(t_conv, t_rdp)),
+                    fmt_opt_ppl(q_rdp)]);
+        println!("  batch {b}: {:.2}x", speedup(t_conv, t_rdp));
+    }
+    println!();
+    table.print();
+    println!("\npaper: speedup rises with batch size; perplexity rises \
+              slightly (sub-model dilution)");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Table II — LSTM (2x1500-per-paper; 2x1536 tile-aligned here, or 2x256
+//! reduced unless AD_BENCH_FULL=1) on the 8800-word corpus, rates
+//! (0.3,0.3)/(0.5,0.5)/(0.7,0.7).
+//!
+//! Paper shape to reproduce: ROW speedup 1.18 -> 1.53, TILE 1.18 -> 1.49
+//! as the rate grows; accuracy within ~1% of the baseline.
+
+use approx_dropout::bench::drivers::{env_usize, run_lstm, BenchCtx};
+use approx_dropout::bench::{fmt_time, Table};
+use approx_dropout::coordinator::{speedup, Variant};
+use approx_dropout::data::Corpus;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = BenchCtx::new()?;
+    let full = env_usize("AD_BENCH_FULL", 0) == 1;
+    let (tag, vocab) = if full {
+        ("lstm2x1536v8800b20", 8800)
+    } else {
+        ("lstm2x256v2048b20", 2048)
+    };
+    println!("== Table II: {tag}, rate sweep, {} timed steps/config ==",
+             ctx.timed_steps);
+    let corpus = Corpus::generate(vocab, 120_000, 12_000, 12_000, 11);
+
+    let mut table = Table::new(&["rate", "pattern", "step", "speedup",
+                                 "valid ppl", "token acc"]);
+    for &r in &[0.3, 0.5, 0.7] {
+        let (t_conv, q_conv) = run_lstm(&ctx, tag, Variant::Conv, r, 2,
+                                        &corpus, 0.1, 42)?;
+        table.row(&[format!("({r},{r})"), "original".into(),
+                    fmt_time(t_conv), "1.00x".into(),
+                    q_conv.map(|(p, _)| format!("{p:.1}"))
+                        .unwrap_or("-".into()),
+                    q_conv.map(|(_, a)| format!("{:.2}%", a * 100.0))
+                        .unwrap_or("-".into())]);
+        for (label, variant) in [("ROW", Variant::Rdp),
+                                 ("TILE", Variant::Tdp)] {
+            let (t, q) = run_lstm(&ctx, tag, variant, r, 2, &corpus, 0.1,
+                                  42)?;
+            table.row(&[format!("({r},{r})"), label.into(), fmt_time(t),
+                        format!("{:.2}x", speedup(t_conv, t)),
+                        q.map(|(p, _)| format!("{p:.1}"))
+                            .unwrap_or("-".into()),
+                        q.map(|(_, a)| format!("{:.2}%", a * 100.0))
+                            .unwrap_or("-".into())]);
+            println!("  rate {r} {label}: {:.2}x", speedup(t_conv, t));
+        }
+    }
+    println!();
+    table.print();
+    println!("\npaper: ROW 1.18/1.47/1.53, TILE 1.18/1.43/1.49; accuracy \
+              drop < 1.5% (AD_BENCH_TRAIN_STEPS>0 adds quality columns; \
+              AD_BENCH_FULL=1 uses the paper-scale model for timing)");
+    Ok(())
+}

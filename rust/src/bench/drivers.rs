@@ -1,0 +1,138 @@
+//! Shared experiment drivers used by `rust/benches/*` — each paper
+//! table/figure bench composes these.
+//!
+//! Environment knobs (all benches):
+//! * `AD_BENCH_STEPS`       timed steps per configuration (default 6)
+//! * `AD_BENCH_TRAIN_STEPS` convergence steps for accuracy/perplexity
+//!                          columns (default 0 = timing-only; the paper's
+//!                          accuracy deltas need hundreds of steps)
+//! * `AD_BENCH_FULL`        set to 1 to use paper-scale LSTM (H=1536)
+
+use anyhow::Result;
+
+use crate::coordinator::{LstmTrainer, MlpTrainer, Schedule, Variant};
+use crate::data::{Corpus, MnistSyn};
+use crate::runtime::{Engine, Manifest};
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+pub struct BenchCtx {
+    pub engine: Engine,
+    pub manifest: Manifest,
+    pub timed_steps: usize,
+    pub train_steps: usize,
+}
+
+impl BenchCtx {
+    pub fn new() -> Result<BenchCtx> {
+        Ok(BenchCtx {
+            engine: Engine::cpu()?,
+            manifest: Manifest::load(&crate::artifacts_dir())?,
+            timed_steps: env_usize("AD_BENCH_STEPS", 6),
+            train_steps: env_usize("AD_BENCH_TRAIN_STEPS", 0),
+        })
+    }
+}
+
+/// Timing + (optional) accuracy for one MLP configuration.
+/// Returns (steady secs/step, Option<test accuracy>).
+pub fn run_mlp(ctx: &BenchCtx, tag: &str, variant: Variant, rates: &[f64],
+               shared_dp: bool, data: &MnistSyn, test: &MnistSyn,
+               seed: u64) -> Result<(f64, Option<f64>)> {
+    let schedule = Schedule::new(variant, rates, &[1, 2, 4, 8], shared_dp)?;
+    let mut tr = MlpTrainer::new(&ctx.engine, &ctx.manifest, tag, schedule,
+                                 data.n, 0.01, seed)?;
+    tr.warmup()?;
+    // Warmup steps (cache effects) then timed steps.
+    for _ in 0..2 {
+        tr.step(data)?;
+    }
+    for _ in 0..ctx.timed_steps {
+        tr.step(data)?;
+    }
+    let per_step = tr.metrics.steady_mean_step_s(2);
+    let acc = if ctx.train_steps > 0 {
+        for _ in 0..ctx.train_steps {
+            tr.step(data)?;
+        }
+        Some(tr.evaluate(test)?.1)
+    } else {
+        None
+    };
+    Ok((per_step, acc))
+}
+
+/// Timing + (optional) perplexity/accuracy for one LSTM configuration.
+/// Returns (steady secs/step, Option<(ppl, token accuracy)>).
+pub fn run_lstm(ctx: &BenchCtx, tag: &str, variant: Variant, rate: f64,
+                sites: usize, corpus: &Corpus, lr: f32, seed: u64)
+                -> Result<(f64, Option<(f64, f64)>)> {
+    run_lstm_support(ctx, tag, variant, rate, sites, corpus, lr, seed,
+                     &[1, 2, 4, 8])
+}
+
+/// Like `run_lstm` with an explicit divisor support set (the fig6b batch
+/// sweep's artifact set only covers dp in {1, 2, 4}).
+#[allow(clippy::too_many_arguments)]
+pub fn run_lstm_support(ctx: &BenchCtx, tag: &str, variant: Variant,
+                        rate: f64, sites: usize, corpus: &Corpus, lr: f32,
+                        seed: u64, support: &[usize])
+                        -> Result<(f64, Option<(f64, f64)>)> {
+    let rates = vec![rate; sites];
+    let schedule = Schedule::new(variant, &rates, support,
+                                 variant != Variant::Conv)?;
+    let mut tr = LstmTrainer::new(&ctx.engine, &ctx.manifest, tag, schedule,
+                                  &corpus.train, lr, seed)?;
+    tr.warmup()?;
+    for _ in 0..2 {
+        tr.step()?;
+    }
+    for _ in 0..ctx.timed_steps {
+        tr.step()?;
+    }
+    let per_step = tr.metrics.steady_mean_step_s(2);
+    let quality = if ctx.train_steps > 0 {
+        for _ in 0..ctx.train_steps {
+            tr.step()?;
+        }
+        let (_, ppl, acc) = tr.evaluate(&corpus.valid)?;
+        Some((ppl, acc))
+    } else {
+        None
+    };
+    Ok((per_step, quality))
+}
+
+/// Trace a training curve: (step, train loss) points every `every` steps.
+pub fn trace_lstm_curve(ctx: &BenchCtx, tag: &str, variant: Variant,
+                        rate: f64, sites: usize, corpus: &Corpus,
+                        steps: usize, every: usize, seed: u64)
+                        -> Result<Vec<(u64, f64, f64)>> {
+    let rates = vec![rate; sites];
+    let schedule = Schedule::new(variant, &rates, &[1, 2, 4, 8],
+                                 variant != Variant::Conv)?;
+    // lr note: the paper's Caffe "base lr 1" is plain-SGD convention; with
+    // momentum 0.9 the equivalent stable setting is ~0.1 (RDP's shared
+    // per-batch pattern raises gradient variance, so lr 1.0 diverges).
+    let mut tr = LstmTrainer::new(&ctx.engine, &ctx.manifest, tag, schedule,
+                                  &corpus.train, 0.1, seed)?;
+    tr.warmup()?;
+    let mut out = Vec::new();
+    for s in 0..steps {
+        let (loss, acc) = tr.step()?;
+        if (s + 1) % every == 0 {
+            out.push(((s + 1) as u64, loss, acc));
+        }
+    }
+    Ok(out)
+}
+
+pub fn fmt_opt_pct(v: Option<f64>) -> String {
+    v.map(|a| format!("{:.2}%", a * 100.0)).unwrap_or_else(|| "-".into())
+}
+
+pub fn fmt_opt_ppl(v: Option<(f64, f64)>) -> String {
+    v.map(|(p, _)| format!("{p:.1}")).unwrap_or_else(|| "-".into())
+}

@@ -1,0 +1,148 @@
+//! Bench harness (criterion is unavailable offline): warmup + N timed
+//! repetitions, median +- MAD reporting, and paper-style table printing.
+//! Every `rust/benches/*.rs` binary builds on this.
+
+pub mod drivers;
+
+use crate::util::stats;
+use crate::util::Timer;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub reps: usize,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.median_s > 0.0 {
+            1.0 / self.median_s
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Time `f` for `reps` repetitions after `warmup` unrecorded calls.
+/// The closure result is returned through a black-box sink so the work is
+/// not optimized away.
+pub fn bench<F: FnMut() -> R, R>(name: &str, warmup: usize, reps: usize,
+                                 mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        sink(f());
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Timer::start();
+        sink(f());
+        times.push(t.elapsed_s());
+    }
+    BenchResult {
+        name: name.to_string(),
+        reps,
+        median_s: stats::median(&times),
+        mad_s: stats::mad(&times),
+        mean_s: stats::mean(&times),
+    }
+}
+
+#[inline]
+fn sink<R>(r: R) {
+    // Opaque drop; prevents the optimizer from deleting the benched call.
+    let _keep = std::hint::black_box(r);
+}
+
+/// Fixed-width table printer for paper-style result tables.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let padded: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+                .collect();
+            println!("| {} |", padded.join(" | "));
+        };
+        line(&self.headers);
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Format seconds as adaptive ms/s string.
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_work() {
+        let r = bench("spin", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..200_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(r.reps, 5);
+        assert!(r.median_s > 0.0);
+        assert!(r.mean_s > 0.0);
+        assert!(r.per_sec().is_finite());
+    }
+
+    #[test]
+    fn table_prints_aligned() {
+        let mut t = Table::new(&["config", "speedup"]);
+        t.row(&["rdp 0.7".to_string(), "1.77".to_string()]);
+        t.row(&["tile 0.5".to_string(), "1.41".to_string()]);
+        t.print(); // smoke: no panic
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-5).ends_with("us"));
+        assert!(fmt_time(5e-2).ends_with("ms"));
+        assert!(fmt_time(2.0).ends_with('s'));
+    }
+}

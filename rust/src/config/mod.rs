@@ -1,0 +1,143 @@
+//! Typed experiment configuration loaded from `configs/*.toml` (or built
+//! from CLI flags). One config fully determines an experiment: model tag,
+//! dropout variant + rates, data sizes, optimization hyper-parameters.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::schedule::Variant;
+use crate::util::toml::{self, TomlDoc};
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Artifact tag, e.g. "mlp2048x2048" or "lstm2x256v2048b20".
+    pub tag: String,
+    pub variant: Variant,
+    /// Target dropout rate per site.
+    pub rates: Vec<f64>,
+    /// Divisor support set for the pattern search.
+    pub support: Vec<usize>,
+    pub shared_dp: bool,
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    /// Dataset sizes (images or tokens).
+    pub n_train: usize,
+    pub n_test: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            tag: "mlp2048x2048".into(),
+            variant: Variant::Rdp,
+            rates: vec![0.5, 0.5],
+            support: vec![1, 2, 4, 8],
+            shared_dp: false,
+            steps: 200,
+            lr: 0.01,
+            seed: 42,
+            n_train: 10_000,
+            n_test: 2_000,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.rates.is_empty() {
+            bail!("config: rates must be non-empty");
+        }
+        if self.rates.iter().any(|&r| !(0.0..1.0).contains(&r)) {
+            bail!("config: rates must be in [0, 1), got {:?}", self.rates);
+        }
+        if self.support.is_empty() || self.support[0] == 0 {
+            bail!("config: bad divisor support {:?}", self.support);
+        }
+        if self.lr <= 0.0 {
+            bail!("config: lr must be positive");
+        }
+        if self.steps == 0 {
+            bail!("config: steps must be positive");
+        }
+        Ok(())
+    }
+
+    /// Load from a TOML file; missing keys fall back to defaults.
+    pub fn from_toml(path: &Path) -> Result<TrainConfig> {
+        let doc = toml::parse_file(path)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let cfg = TrainConfig {
+            tag: doc.str_or("model.tag", &d.tag).to_string(),
+            variant: Variant::parse(
+                doc.str_or("dropout.variant", "rdp"))?,
+            rates: doc
+                .get("dropout.rates")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or(d.rates),
+            support: doc
+                .get("dropout.support")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_i64().map(|i| i as usize))
+                        .collect()
+                })
+                .unwrap_or(d.support),
+            shared_dp: doc.bool_or("dropout.shared_dp", d.shared_dp),
+            steps: doc.i64_or("train.steps", d.steps as i64) as usize,
+            lr: doc.f64_or("train.lr", d.lr),
+            seed: doc.i64_or("train.seed", d.seed as i64) as u64,
+            n_train: doc.i64_or("data.n_train", d.n_train as i64) as usize,
+            n_test: doc.i64_or("data.n_test", d.n_test as i64) as usize,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_doc() {
+        let doc = toml::parse(
+            "[model]\ntag = \"mlp1024x1024\"\n[dropout]\n\
+             variant = \"tile\"\nrates = [0.7, 0.7]\nshared_dp = true\n\
+             support = [1, 2, 4, 8]\n[train]\nsteps = 500\nlr = 0.05\n\
+             seed = 7\n[data]\nn_train = 60000\nn_test = 10000\n",
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.tag, "mlp1024x1024");
+        assert_eq!(cfg.variant, Variant::Tdp);
+        assert_eq!(cfg.rates, vec![0.7, 0.7]);
+        assert!(cfg.shared_dp);
+        assert_eq!(cfg.steps, 500);
+        assert_eq!(cfg.n_train, 60_000);
+    }
+
+    #[test]
+    fn rejects_bad_rates() {
+        let doc = toml::parse("[dropout]\nrates = [1.5]\n").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_variant() {
+        let doc = toml::parse("[dropout]\nvariant = \"nope\"\n").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! Training metrics: loss/accuracy curves, step timing, and the
+//! speedup-rate computation reported by every experiment table.
+
+use crate::util::stats;
+
+/// One recorded training point.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    pub step: u64,
+    pub loss: f64,
+    /// Batch train accuracy in [0,1].
+    pub acc: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainMetrics {
+    pub curve: Vec<CurvePoint>,
+    /// Per-iteration wall-clock seconds (full step: pattern sampling, mask
+    /// or index generation, data marshalling, PJRT execute, state update).
+    pub step_times_s: Vec<f64>,
+    pub total_correct: f64,
+    pub total_examples: f64,
+}
+
+impl TrainMetrics {
+    pub fn record(&mut self, step: u64, loss: f64, correct: f64,
+                  batch: usize, dt_s: f64) {
+        self.curve.push(CurvePoint { step, loss,
+                                     acc: correct / batch as f64 });
+        self.step_times_s.push(dt_s);
+        self.total_correct += correct;
+        self.total_examples += batch as f64;
+    }
+
+    pub fn steps(&self) -> usize {
+        self.step_times_s.len()
+    }
+
+    /// Median step time — robust against compile/warmup outliers.
+    pub fn median_step_s(&self) -> f64 {
+        stats::median(&self.step_times_s)
+    }
+
+    /// Mean step time excluding the first `skip` (warmup) iterations.
+    pub fn steady_mean_step_s(&self, skip: usize) -> f64 {
+        if self.step_times_s.len() <= skip {
+            return stats::mean(&self.step_times_s);
+        }
+        stats::mean(&self.step_times_s[skip..])
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.step_times_s.iter().sum()
+    }
+
+    pub fn running_train_acc(&self) -> f64 {
+        if self.total_examples == 0.0 {
+            return 0.0;
+        }
+        self.total_correct / self.total_examples
+    }
+
+    pub fn last_loss(&self) -> f64 {
+        self.curve.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+}
+
+/// Speedup of `ours` over `baseline` given per-step times (paper's
+/// definition: t_conventional / t_ours).
+pub fn speedup(baseline_step_s: f64, ours_step_s: f64) -> f64 {
+    if ours_step_s <= 0.0 {
+        return f64::NAN;
+    }
+    baseline_step_s / ours_step_s
+}
+
+/// Perplexity from mean token cross-entropy (nats).
+pub fn perplexity(xent_nats: f64) -> f64 {
+    xent_nats.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_aggregate() {
+        let mut m = TrainMetrics::default();
+        m.record(1, 2.0, 64.0, 128, 0.10);
+        m.record(2, 1.5, 96.0, 128, 0.12);
+        m.record(3, 1.0, 120.0, 128, 0.11);
+        assert_eq!(m.steps(), 3);
+        assert!((m.median_step_s() - 0.11).abs() < 1e-12);
+        assert!((m.running_train_acc() - (280.0 / 384.0)).abs() < 1e-12);
+        assert_eq!(m.last_loss(), 1.0);
+        assert!((m.total_time_s() - 0.33).abs() < 1e-12);
+    }
+
+    #[test]
+    fn steady_mean_skips_warmup() {
+        let mut m = TrainMetrics::default();
+        m.record(1, 0.0, 0.0, 1, 10.0); // compile spike
+        m.record(2, 0.0, 0.0, 1, 0.1);
+        m.record(3, 0.0, 0.0, 1, 0.1);
+        assert!((m.steady_mean_step_s(1) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_definition() {
+        assert!((speedup(2.0, 1.0) - 2.0).abs() < 1e-12);
+        assert!((speedup(1.0, 2.0) - 0.5).abs() < 1e-12);
+        assert!(speedup(1.0, 0.0).is_nan());
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 100.0f64;
+        assert!((perplexity(v.ln()) - 100.0).abs() < 1e-9);
+    }
+}

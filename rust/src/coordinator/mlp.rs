@@ -1,0 +1,187 @@
+//! MLP training coordinator (paper sections IV-A/B).
+//!
+//! Per iteration: sample the dropout pattern for each hidden layer from the
+//! schedule, pick the matching AOT executable (`<tag>_rdp_<dp1>_<dp2>` ...),
+//! assemble the input list per the manifest calling convention, execute,
+//! and absorb the updated state. The conventional baseline follows the
+//! identical loop but generates Bernoulli masks instead of bias scalars —
+//! wall-clock comparisons therefore measure exactly the paper's quantity.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::TrainMetrics;
+use crate::coordinator::pool::ExecutorPool;
+use crate::coordinator::schedule::{Schedule, Variant};
+use crate::data::{MnistBatcher, MnistSyn};
+use crate::patterns::MaskGen;
+use crate::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
+                            lit_scalar_i32};
+use crate::runtime::{ArchMeta, Engine, Manifest, TrainState};
+use crate::util::rng::Rng;
+use crate::util::Timer;
+
+pub struct MlpTrainer<'e> {
+    pool: ExecutorPool<'e>,
+    pub tag: String,
+    pub schedule: Schedule,
+    pub state: TrainState,
+    pub metrics: TrainMetrics,
+    pub lr: f32,
+    batcher: MnistBatcher,
+    hidden: Vec<usize>,
+    batch: usize,
+    rng: Rng,
+    maskgen: Vec<MaskGen>,
+}
+
+impl<'e> MlpTrainer<'e> {
+    pub fn new(engine: &'e Engine, manifest: &'e Manifest, tag: &str,
+               schedule: Schedule, n_train: usize, lr: f32, seed: u64)
+               -> Result<MlpTrainer<'e>> {
+        let conv = manifest.get(&format!("{tag}_conv"))?;
+        let (hidden, batch) = match &conv.arch {
+            ArchMeta::Mlp { hidden, batch, .. } =>
+                (hidden.clone(), *batch),
+            _ => bail!("artifact {tag} is not an MLP"),
+        };
+        if schedule.sites() != hidden.len() {
+            bail!("schedule has {} sites, MLP has {} hidden layers",
+                  schedule.sites(), hidden.len());
+        }
+        let mut rng = Rng::new(seed);
+        let state = TrainState::init(conv, &mut rng);
+        let maskgen = (0..hidden.len()).map(|_| MaskGen::new()).collect();
+        Ok(MlpTrainer {
+            pool: ExecutorPool::new(engine, manifest),
+            tag: tag.to_string(),
+            schedule,
+            state,
+            metrics: TrainMetrics::default(),
+            lr,
+            batcher: MnistBatcher::new(n_train, batch),
+            hidden,
+            batch,
+            rng,
+            maskgen,
+        })
+    }
+
+    /// Pre-compile every executable the schedule can dispatch to, so the
+    /// timed loop measures steady-state iteration cost only.
+    pub fn warmup(&mut self) -> Result<()> {
+        let names = self.executable_names();
+        self.pool.warm(&names)
+    }
+
+    pub fn executable_names(&self) -> Vec<String> {
+        match self.schedule.variant {
+            Variant::Conv => vec![format!("{}_conv", self.tag)],
+            v => self
+                .schedule
+                .dp_combos()
+                .iter()
+                .map(|dp| Manifest::artifact_name(&self.tag, v.as_str(), dp))
+                .collect(),
+        }
+    }
+
+    /// One full training iteration; returns (loss, batch accuracy).
+    /// Hot path: all inputs are assembled as XLA literals directly and the
+    /// parameter state stays literal-resident (see runtime::state).
+    pub fn step(&mut self, data: &MnistSyn) -> Result<(f64, f64)> {
+        let t = Timer::start();
+        let choices = self.schedule.sample(&mut self.rng);
+        let (x, y) = self.batcher.next_batch(data, &mut self.rng);
+
+        let mut tail: Vec<xla::Literal> = Vec::with_capacity(8);
+        tail.push(lit_f32(&[self.batch, x.len() / self.batch], x)?);
+        tail.push(lit_i32(&[self.batch], y)?);
+
+        let name = match self.schedule.variant {
+            Variant::Conv => {
+                // Bernoulli masks + inverted-dropout scales per site.
+                for (site, rate) in
+                    self.schedule.rates.clone().iter().enumerate()
+                {
+                    let keep = 1.0 - rate;
+                    let w = self.hidden[site];
+                    let m = self.maskgen[site]
+                        .fill(&mut self.rng, keep, self.batch * w);
+                    tail.push(lit_f32(&[self.batch, w], m)?);
+                }
+                for rate in &self.schedule.rates {
+                    tail.push(lit_scalar_f32((1.0 / (1.0 - rate)) as f32));
+                }
+                format!("{}_conv", self.tag)
+            }
+            v => {
+                for c in &choices {
+                    tail.push(lit_scalar_i32(c.b0 as i32));
+                }
+                // Inverted-dropout correction: constant 1/(1-p) of the
+                // site's long-run rate (Caffe semantics), NOT the
+                // per-iteration 1/dp — see model.py _mlp_logits_rdp.
+                for rate in &self.schedule.rates {
+                    tail.push(lit_scalar_f32((1.0 / (1.0 - rate)) as f32));
+                }
+                let dp: Vec<usize> = choices.iter().map(|c| c.dp).collect();
+                Manifest::artifact_name(&self.tag, v.as_str(), &dp)
+            }
+        };
+        tail.push(lit_scalar_f32(self.lr));
+
+        let exe = self.pool.get(&name)?;
+        let (loss, correct) = self.state.step(exe, &tail)?;
+        self.metrics.record(self.state.step, loss, correct, self.batch,
+                            t.elapsed_s());
+        Ok((loss, correct / self.batch as f64))
+    }
+
+    /// Run `n` steps; returns mean loss over the window.
+    pub fn train(&mut self, data: &MnistSyn, n: usize) -> Result<f64> {
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += self.step(data)?.0;
+        }
+        Ok(sum / n.max(1) as f64)
+    }
+
+    /// Evaluate on a test set through the dropout-free eval graph; returns
+    /// (mean loss, accuracy).
+    pub fn evaluate(&mut self, test: &MnistSyn) -> Result<(f64, f64)> {
+        let name = format!("{}_eval", self.tag);
+        let n_in: usize = {
+            let exe = self.pool.get(&name)?;
+            match &exe.meta.arch {
+                ArchMeta::Mlp { n_in, .. } => *n_in,
+                _ => bail!("not an mlp eval graph"),
+            }
+        };
+        let mut total_loss = 0.0;
+        let mut total_correct = 0.0;
+        let mut batches = 0.0;
+        let full = test.n / self.batch;
+        for bi in 0..full {
+            let mut x = Vec::with_capacity(self.batch * n_in);
+            let mut y = Vec::with_capacity(self.batch);
+            for i in bi * self.batch..(bi + 1) * self.batch {
+                x.extend_from_slice(test.image(i));
+                y.push(test.labels[i] as i32);
+            }
+            let x_l = lit_f32(&[self.batch, n_in], &x)?;
+            let y_l = lit_i32(&[self.batch], &y)?;
+            let mut refs = self.state.param_refs();
+            refs.push(&x_l);
+            refs.push(&y_l);
+            let exe = self.pool.get(&name)?;
+            let out = exe.run_raw(&refs)?;
+            total_loss += out[0].get_first_element::<f32>()
+                .map_err(|e| anyhow::anyhow!("loss: {e:?}"))? as f64;
+            total_correct += out[1].get_first_element::<f32>()
+                .map_err(|e| anyhow::anyhow!("correct: {e:?}"))? as f64;
+            batches += 1.0;
+        }
+        Ok((total_loss / batches,
+            total_correct / (batches * self.batch as f64)))
+    }
+}

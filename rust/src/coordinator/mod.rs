@@ -1,0 +1,23 @@
+//! L3 coordinator — the paper's system layer in Rust.
+//!
+//! Responsibilities per training iteration (paper Fig. 2):
+//! 1. sample a dropout pattern `(dp, b0)` per site from the searched
+//!    distribution K ([`schedule`]),
+//! 2. dispatch to the AOT executable whose static shapes match the sampled
+//!    divisors ([`pool`]; the regularity -> static-shape mapping is the
+//!    core hardware adaptation, DESIGN.md section 2),
+//! 3. assemble inputs (params, momenta, batch, masks or bias scalars) and
+//!    execute through PJRT ([`crate::runtime`]),
+//! 4. absorb updated state and record metrics ([`metrics`]).
+
+pub mod lstm;
+pub mod metrics;
+pub mod mlp;
+pub mod pool;
+pub mod schedule;
+
+pub use lstm::LstmTrainer;
+pub use metrics::{perplexity, speedup, TrainMetrics};
+pub use mlp::MlpTrainer;
+pub use pool::ExecutorPool;
+pub use schedule::{Schedule, Variant};

@@ -1,0 +1,60 @@
+//! Executor pool: one compiled PJRT executable per (model, variant, dp)
+//! artifact, compiled lazily on first use and cached for the rest of the
+//! run. This mirrors the paper's setup where the pattern distribution (and
+//! hence the set of matrix shapes) is fixed before training starts —
+//! compilation is a one-time cost off the steady-state hot path.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, Executable, Manifest};
+
+pub struct ExecutorPool<'e> {
+    engine: &'e Engine,
+    manifest: &'e Manifest,
+    cache: HashMap<String, Executable>,
+    /// Compile wall-clock per artifact (diagnostics / EXPERIMENTS Perf).
+    pub compile_times_s: Vec<(String, f64)>,
+}
+
+impl<'e> ExecutorPool<'e> {
+    pub fn new(engine: &'e Engine, manifest: &'e Manifest) -> Self {
+        ExecutorPool {
+            engine,
+            manifest,
+            cache: HashMap::new(),
+            compile_times_s: Vec::new(),
+        }
+    }
+
+    /// Fetch (compiling if needed) the executable for `name`.
+    pub fn get(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let t = crate::util::Timer::start();
+            let exe = self.engine.load(self.manifest, name)?;
+            self.compile_times_s.push((name.to_string(), t.elapsed_s()));
+            crate::debug!("compiled {name} in {:.2}s",
+                          self.compile_times_s.last().unwrap().1);
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Pre-compile a list of artifacts (e.g. every dp combo the schedule
+    /// can sample) so the training loop never stalls on compilation.
+    pub fn warm(&mut self, names: &[String]) -> Result<()> {
+        for n in names {
+            self.get(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+}

@@ -1,0 +1,209 @@
+//! Per-iteration pattern scheduling (paper section III-D).
+//!
+//! A `Schedule` owns one pattern distribution per dropout site (produced by
+//! the SGD-based search for that site's target rate) and samples the
+//! iteration's `(dp, b0)` choices. In `shared_dp` mode one divisor is
+//! drawn for all sites (biases stay independent) — used for architectures
+//! whose artifact set only covers equal-dp combinations; per-unit drop
+//! statistics are unchanged (the bias, not the divisor, carries the
+//! per-unit uniformity).
+
+use anyhow::{bail, Result};
+
+use crate::patterns::{Choice, PatternDistribution};
+use crate::search::{self, SearchConfig};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Conv,
+    Rdp,
+    Tdp,
+}
+
+impl Variant {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Conv => "conv",
+            Variant::Rdp => "rdp",
+            Variant::Tdp => "tdp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "conv" | "conventional" => Variant::Conv,
+            "rdp" | "row" => Variant::Rdp,
+            "tdp" | "tile" => Variant::Tdp,
+            other => bail!("unknown dropout variant '{other}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub variant: Variant,
+    /// Target dropout rate per site.
+    pub rates: Vec<f64>,
+    /// Distribution K per site (empty for the conventional baseline).
+    pub dists: Vec<PatternDistribution>,
+    pub shared_dp: bool,
+}
+
+impl Schedule {
+    /// Build a schedule, running Algorithm 1 once per distinct rate.
+    pub fn new(variant: Variant, rates: &[f64], support: &[usize],
+               shared_dp: bool) -> Result<Schedule> {
+        if shared_dp && rates.windows(2).any(|w| (w[0] - w[1]).abs() > 1e-9) {
+            bail!("shared_dp requires equal per-site rates, got {rates:?}");
+        }
+        let dists = match variant {
+            Variant::Conv => vec![],
+            _ => {
+                let cfg = SearchConfig::default();
+                rates
+                    .iter()
+                    .map(|&p| search::search(p, support, &cfg).distribution)
+                    .collect()
+            }
+        };
+        Ok(Schedule { variant, rates: rates.to_vec(), dists, shared_dp })
+    }
+
+    pub fn sites(&self) -> usize {
+        self.rates.len()
+    }
+
+    /// Sample the iteration's choices, one per site.
+    pub fn sample(&self, rng: &mut Rng) -> Vec<Choice> {
+        match self.variant {
+            Variant::Conv => vec![Choice::none(); self.sites()],
+            _ if self.shared_dp => {
+                let dp = self.dists[0].sample(rng).dp;
+                (0..self.sites())
+                    .map(|_| Choice { dp, b0: rng.next_usize(dp) })
+                    .collect()
+            }
+            _ => self.dists.iter().map(|d| d.sample(rng)).collect(),
+        }
+    }
+
+    /// Every dp combination this schedule can sample — the artifact names
+    /// the executor pool should pre-compile.
+    pub fn dp_combos(&self) -> Vec<Vec<usize>> {
+        match self.variant {
+            Variant::Conv => vec![],
+            _ if self.shared_dp => self.dists[0]
+                .support
+                .iter()
+                .filter(|&&dp| {
+                    let i = self.dists[0].support.iter()
+                        .position(|&s| s == dp).unwrap();
+                    self.dists[0].probs[i] > 1e-4
+                })
+                .map(|&dp| vec![dp; self.sites()])
+                .collect(),
+            _ => {
+                // Cartesian product of per-site live supports.
+                let live: Vec<Vec<usize>> = self
+                    .dists
+                    .iter()
+                    .map(|d| {
+                        d.support
+                            .iter()
+                            .zip(&d.probs)
+                            .filter(|(_, &p)| p > 1e-4)
+                            .map(|(&s, _)| s)
+                            .collect()
+                    })
+                    .collect();
+                let mut combos: Vec<Vec<usize>> = vec![vec![]];
+                for site in &live {
+                    let mut next = Vec::new();
+                    for c in &combos {
+                        for &dp in site {
+                            let mut c2 = c.clone();
+                            c2.push(dp);
+                            next.push(c2);
+                        }
+                    }
+                    combos = next;
+                }
+                combos
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_schedule_has_no_dists() {
+        let s = Schedule::new(Variant::Conv, &[0.5, 0.5], &[1, 2, 4],
+                              false).unwrap();
+        assert!(s.dists.is_empty());
+        let mut rng = Rng::new(0);
+        assert_eq!(s.sample(&mut rng), vec![Choice::none(); 2]);
+        assert!(s.dp_combos().is_empty());
+    }
+
+    #[test]
+    fn rdp_schedule_hits_rates() {
+        let s = Schedule::new(Variant::Rdp, &[0.3, 0.7], &[1, 2, 4, 8],
+                              false).unwrap();
+        assert!((s.dists[0].expected_rate() - 0.3).abs() < 5e-3);
+        assert!((s.dists[1].expected_rate() - 0.7).abs() < 5e-3);
+    }
+
+    #[test]
+    fn shared_dp_requires_equal_rates() {
+        assert!(Schedule::new(Variant::Rdp, &[0.3, 0.7], &[1, 2], true)
+            .is_err());
+        let s = Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2, 4], true)
+            .unwrap();
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let cs = s.sample(&mut rng);
+            assert_eq!(cs[0].dp, cs[1].dp, "shared dp");
+        }
+    }
+
+    #[test]
+    fn biases_independent_even_when_shared() {
+        let s = Schedule::new(Variant::Rdp, &[0.7, 0.7], &[8], true)
+            .unwrap();
+        let mut rng = Rng::new(2);
+        let mut differ = 0;
+        for _ in 0..200 {
+            let cs = s.sample(&mut rng);
+            if cs[0].b0 != cs[1].b0 {
+                differ += 1;
+            }
+        }
+        assert!(differ > 100, "biases should differ most of the time");
+    }
+
+    #[test]
+    fn dp_combos_cover_sampling() {
+        let s = Schedule::new(Variant::Tdp, &[0.5, 0.5], &[1, 2, 4],
+                              false).unwrap();
+        let combos = s.dp_combos();
+        let mut rng = Rng::new(3);
+        for _ in 0..500 {
+            let cs = s.sample(&mut rng);
+            let dp: Vec<usize> = cs.iter().map(|c| c.dp).collect();
+            assert!(combos.contains(&dp), "sampled {dp:?} not in combos");
+        }
+    }
+
+    #[test]
+    fn shared_combos_are_diagonal() {
+        let s = Schedule::new(Variant::Rdp, &[0.7, 0.7], &[1, 2, 4, 8],
+                              true).unwrap();
+        for combo in s.dp_combos() {
+            assert_eq!(combo[0], combo[1]);
+        }
+    }
+}

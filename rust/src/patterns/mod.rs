@@ -1,0 +1,63 @@
+//! Dropout patterns (the paper's section III): row-based (RDP) and
+//! tile-based (TDP) regular patterns, the Bernoulli mask generator used by
+//! the conventional-dropout baseline, and the sampled pattern distribution
+//! K produced by the SGD-based search (section III-C).
+//!
+//! Index math here MUST mirror `python/compile/patterns.py` — the Rust side
+//! samples `(dp, b0)` and passes `b0` into the AOT graph, so both sides
+//! must agree on what "kept" means. The cross-language agreement is pinned
+//! by integration tests (`rust/tests/`) that run the AOT graphs against
+//! host-side reconstructions.
+
+pub mod distribution;
+pub mod mask;
+pub mod row;
+pub mod tile;
+
+pub use distribution::PatternDistribution;
+pub use mask::MaskGen;
+pub use row::RowPattern;
+pub use tile::TilePattern;
+
+/// Largest divisor of `dim` that is <= cap (mirrors python `pick_block`).
+pub fn pick_block(dim: usize, cap: usize) -> usize {
+    if dim <= cap {
+        return dim;
+    }
+    for b in (1..=cap).rev() {
+        if dim % b == 0 {
+            return b;
+        }
+    }
+    1
+}
+
+/// A sampled per-iteration pattern choice for one dropout site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Choice {
+    /// Divisor: 1 of every `dp` units is kept (dp = 1 means no dropout).
+    pub dp: usize,
+    /// Bias in [0, dp): which residue class is kept.
+    pub b0: usize,
+}
+
+impl Choice {
+    pub fn none() -> Self {
+        Choice { dp: 1, b0: 0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_block_matches_python() {
+        assert_eq!(pick_block(2048, 256), 256);
+        assert_eq!(pick_block(784, 32), 28);
+        assert_eq!(pick_block(10, 32), 10);
+        assert_eq!(pick_block(1500, 256), 250);
+        assert_eq!(pick_block(64, 256), 64);
+        assert_eq!(pick_block(8800, 256), 220);
+    }
+}

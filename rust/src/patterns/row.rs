@@ -1,0 +1,144 @@
+//! Row-based Dropout Pattern (paper section III-A).
+//!
+//! For a layer of `m` neurons and divisor `dp`, bias `b0 in [0, dp)`:
+//! kept neuron indices are `{b0 + dp*j : j in [0, m/dp)}` — exactly
+//! `m / dp` neurons (floor), so the kept count (and hence the AOT graph
+//! shape) is identical for every bias. Dropping a neuron == dropping the
+//! corresponding row of the next layer's weight matrix (Fig. 3a).
+
+use crate::patterns::Choice;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RowPattern {
+    /// Layer width (number of neurons at this dropout site).
+    pub m: usize,
+    pub choice: Choice,
+}
+
+impl RowPattern {
+    pub fn new(m: usize, dp: usize, b0: usize) -> Self {
+        assert!(dp >= 1 && dp <= m, "dp={dp} out of range for m={m}");
+        assert!(b0 < dp, "b0={b0} must be < dp={dp}");
+        RowPattern { m, choice: Choice { dp, b0 } }
+    }
+
+    /// Number of kept neurons — static per dp, independent of bias.
+    pub fn kept_count(&self) -> usize {
+        self.m / self.choice.dp
+    }
+
+    pub fn kept_indices(&self) -> Vec<usize> {
+        let Choice { dp, b0 } = self.choice;
+        (0..self.kept_count()).map(|j| b0 + dp * j).collect()
+    }
+
+    /// True iff neuron `i` is kept under this pattern.
+    pub fn keeps(&self, i: usize) -> bool {
+        let Choice { dp, b0 } = self.choice;
+        i < self.kept_count() * dp && i % dp == b0
+    }
+
+    /// Fraction of neurons dropped ("global dropout rate" of this pattern).
+    pub fn global_rate(&self) -> f64 {
+        1.0 - self.kept_count() as f64 / self.m as f64
+    }
+
+    /// Inverted-dropout scale = 1 / keep-ratio (mirrors model.row_scale).
+    pub fn scale(&self) -> f32 {
+        self.m as f32 / self.kept_count() as f32
+    }
+
+    /// Dense 0/1 keep mask (testing / host-side reconstructions).
+    pub fn mask(&self) -> Vec<f32> {
+        (0..self.m).map(|i| if self.keeps(i) { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{self, gen_choice, gen_range};
+
+    #[test]
+    fn example_from_paper() {
+        // dp=3, b=1 (1-based) == b0=0: keep rows 0,3,6,... drop 2 of 3.
+        let p = RowPattern::new(9, 3, 0);
+        assert_eq!(p.kept_indices(), vec![0, 3, 6]);
+        assert!((p.global_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp1_keeps_everything() {
+        let p = RowPattern::new(64, 1, 0);
+        assert_eq!(p.kept_count(), 64);
+        assert_eq!(p.global_rate(), 0.0);
+        assert_eq!(p.scale(), 1.0);
+        assert!(p.mask().iter().all(|&v| v == 1.0));
+    }
+
+    #[test]
+    fn kept_count_static_across_bias() {
+        for dp in [2, 3, 4, 8] {
+            let counts: Vec<usize> = (0..dp)
+                .map(|b0| RowPattern::new(2048, dp, b0).kept_count())
+                .collect();
+            assert!(counts.windows(2).all(|w| w[0] == w[1]), "dp={dp}");
+        }
+    }
+
+    #[test]
+    fn biases_partition_neurons() {
+        // Every neuron in [0, dp * (m/dp)) is kept by exactly one bias —
+        // the uniformity premise of the paper's Eq. 2.
+        testkit::quickcheck("row partition", |rng| {
+            let m = gen_range(rng, 8, 300);
+            let dp = *gen_choice(rng, &[1usize, 2, 3, 4, 5, 8]);
+            if dp > m {
+                return;
+            }
+            let covered = m / dp * dp;
+            let mut count = vec![0usize; m];
+            for b0 in 0..dp {
+                for i in RowPattern::new(m, dp, b0).kept_indices() {
+                    count[i] += 1;
+                }
+            }
+            for (i, &c) in count.iter().enumerate() {
+                let expect = if i < covered { 1 } else { 0 };
+                assert_eq!(c, expect, "neuron {i} kept {c}x (m={m} dp={dp})");
+            }
+        });
+    }
+
+    #[test]
+    fn indices_strictly_increasing_with_stride_dp() {
+        testkit::quickcheck("row stride", |rng| {
+            let m = gen_range(rng, 16, 4096);
+            let dp = *gen_choice(rng, &[2usize, 3, 4, 8]);
+            let b0 = gen_range(rng, 0, dp);
+            let idx = RowPattern::new(m, dp, b0).kept_indices();
+            assert_eq!(idx.len(), m / dp);
+            assert!(idx.iter().all(|&i| i < m));
+            assert!(idx.windows(2).all(|w| w[1] - w[0] == dp));
+            assert_eq!(idx[0], b0);
+        });
+    }
+
+    #[test]
+    fn global_rate_close_to_nominal() {
+        // When dp | m the rate is exactly (dp-1)/dp; otherwise within 1/m.
+        let p = RowPattern::new(2048, 4, 1);
+        assert!((p.global_rate() - 0.75).abs() < 1e-12);
+        let q = RowPattern::new(100, 3, 2);
+        assert!((q.global_rate() - 2.0 / 3.0).abs() < 1.0 / 100.0 + 1e-12);
+    }
+
+    #[test]
+    fn mask_agrees_with_indices() {
+        let p = RowPattern::new(37, 5, 3);
+        let mask = p.mask();
+        for (i, &v) in mask.iter().enumerate() {
+            assert_eq!(v == 1.0, p.kept_indices().contains(&i));
+        }
+    }
+}

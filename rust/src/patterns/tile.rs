@@ -1,0 +1,190 @@
+//! Tile-based Dropout Pattern (paper section III-B).
+//!
+//! The `[k, n]` weight matrix is split into tiles (32x32 where the dims
+//! allow; adapted down via `pick_block` otherwise, e.g. 784 -> 28-row
+//! tiles). Kept tile at grid position `(r, c)` iff
+//! `(c - b0 - r) mod dp == 0` — diagonal stripes; see
+//! `python/compile/patterns.py` for why the paper's row-major stride is
+//! skewed by `r`. The kept count is static across biases whenever `dp`
+//! divides one tile-grid edge (enforced — it determines the AOT shape).
+
+use crate::patterns::{pick_block, Choice};
+
+#[derive(Clone, Copy, Debug)]
+pub struct TilePattern {
+    /// Weight matrix dims.
+    pub k: usize,
+    pub n: usize,
+    /// Tile edge sizes (t_r, t_c).
+    pub tr: usize,
+    pub tc: usize,
+    pub choice: Choice,
+}
+
+impl TilePattern {
+    pub fn new(k: usize, n: usize, dp: usize, b0: usize, tile: usize) -> Self {
+        let tr = pick_block(k, tile);
+        let tc = pick_block(n, tile);
+        let (tk, tn) = (k / tr, n / tc);
+        assert!(
+            tn % dp == 0 || tk % dp == 0,
+            "dp={dp} must divide one tile-grid edge of {tk}x{tn} \
+             (weight {k}x{n}, tile {tr}x{tc})"
+        );
+        assert!(b0 < dp);
+        TilePattern { k, n, tr, tc, choice: Choice { dp, b0 } }
+    }
+
+    pub fn grid(&self) -> (usize, usize) {
+        (self.k / self.tr, self.n / self.tc)
+    }
+
+    /// Number of kept tiles — static across biases.
+    pub fn kept_count(&self) -> usize {
+        let (tk, tn) = self.grid();
+        let dp = self.choice.dp;
+        if tn % dp == 0 {
+            tk * (tn / dp)
+        } else {
+            (tk / dp) * tn
+        }
+    }
+
+    pub fn keeps_tile(&self, r: usize, c: usize) -> bool {
+        let Choice { dp, b0 } = self.choice;
+        (c % dp + dp - (b0 + r) % dp) % dp == 0
+    }
+
+    /// Kept tile coordinates in row-major order (mirrors the python
+    /// `jnp.nonzero` enumeration order).
+    pub fn kept_tiles(&self) -> Vec<(usize, usize)> {
+        let (tk, tn) = self.grid();
+        let mut out = Vec::with_capacity(self.kept_count());
+        for r in 0..tk {
+            for c in 0..tn {
+                if self.keeps_tile(r, c) {
+                    out.push((r, c));
+                }
+            }
+        }
+        out
+    }
+
+    /// Fraction of synapses dropped.
+    pub fn global_rate(&self) -> f64 {
+        let (tk, tn) = self.grid();
+        1.0 - self.kept_count() as f64 / (tk * tn) as f64
+    }
+
+    /// Inverted-dropout scale (mirrors model.tile_scale).
+    pub fn scale(&self) -> f32 {
+        let (tk, tn) = self.grid();
+        (tk * tn) as f32 / self.kept_count() as f32
+    }
+
+    /// Dense 0/1 keep mask of the full weight matrix (tests only).
+    pub fn mask(&self) -> Vec<f32> {
+        let mut m = vec![0f32; self.k * self.n];
+        for (r, c) in self.kept_tiles() {
+            for i in 0..self.tr {
+                for j in 0..self.tc {
+                    m[(r * self.tr + i) * self.n + (c * self.tc + j)] = 1.0;
+                }
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{self, gen_choice};
+
+    #[test]
+    fn paper_tile_size_32() {
+        let p = TilePattern::new(2048, 2048, 4, 1, 32);
+        assert_eq!((p.tr, p.tc), (32, 32));
+        assert_eq!(p.grid(), (64, 64));
+        assert_eq!(p.kept_count(), 64 * 16);
+        assert!((p.global_rate() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adapts_tile_to_non_divisible_dims() {
+        let p = TilePattern::new(784, 2048, 2, 0, 32);
+        assert_eq!(p.tr, 28); // 784 = 28 * 28
+        assert_eq!(p.tc, 32);
+    }
+
+    #[test]
+    fn kept_count_static_across_bias() {
+        for dp in [2usize, 4, 8] {
+            for (k, n) in [(2048, 2048), (1024, 64), (1536, 8800)] {
+                let counts: Vec<usize> = (0..dp)
+                    .map(|b0| TilePattern::new(k, n, dp, b0, 32).kept_count())
+                    .collect();
+                assert!(counts.windows(2).all(|w| w[0] == w[1]),
+                        "k={k} n={n} dp={dp}: {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn biases_partition_tiles() {
+        testkit::quickcheck("tile partition", |rng| {
+            let dims = [(256usize, 128usize), (128, 256)];
+            let (k, n) = *gen_choice(rng, &dims);
+            let dp = *gen_choice(rng, &[2usize, 4]);
+            let mut count = std::collections::BTreeMap::new();
+            for b0 in 0..dp {
+                for rc in TilePattern::new(k, n, dp, b0, 32).kept_tiles() {
+                    *count.entry(rc).or_insert(0usize) += 1;
+                }
+            }
+            let p = TilePattern::new(k, n, dp, 0, 32);
+            let (tk, tn) = p.grid();
+            assert_eq!(count.len(), tk * tn, "every tile kept by some bias");
+            assert!(count.values().all(|&c| c == 1),
+                    "each tile kept by exactly one bias");
+        });
+    }
+
+    #[test]
+    fn every_output_column_covered() {
+        // Needed so the sparse kernel writes every output block: for each
+        // tile-column c there is at least one kept tile.
+        testkit::quickcheck("tile column cover", |rng| {
+            let (k, n) = (256usize, 256usize);
+            let dp = *gen_choice(rng, &[2usize, 4, 8]);
+            let b0 = rng.next_usize(dp);
+            let p = TilePattern::new(k, n, dp, b0, 32);
+            let (_, tn) = p.grid();
+            let mut cols = vec![false; tn];
+            for (_, c) in p.kept_tiles() {
+                cols[c] = true;
+            }
+            assert!(cols.iter().all(|&x| x), "dp={dp} b0={b0}");
+        });
+    }
+
+    #[test]
+    fn mask_density_matches_rate() {
+        let p = TilePattern::new(256, 128, 4, 2, 32);
+        let m = p.mask();
+        let ones = m.iter().filter(|&&v| v == 1.0).count();
+        let density = ones as f64 / m.len() as f64;
+        assert!((density - (1.0 - p.global_rate())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dp_divides_tk_case() {
+        // 1024x64: tile grid 32x2; dp=8 divides tk=32 but not tn=2.
+        let p = TilePattern::new(1024, 64, 8, 3, 32);
+        assert_eq!(p.kept_count(), (32 / 8) * 2);
+        let (tk, tn) = p.grid();
+        let kept = p.kept_tiles();
+        assert_eq!(kept.len(), p.kept_count());
+        assert!(kept.iter().all(|&(r, c)| r < tk && c < tn));
+    }
+}

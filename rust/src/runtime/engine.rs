@@ -1,0 +1,227 @@
+//! PJRT engine: load HLO-text artifacts, compile them on the CPU client,
+//! and execute train/eval steps with host-side tensor state.
+//!
+//! Design notes:
+//! * Interchange is HLO text (`HloModuleProto::from_text_file`) — see
+//!   /opt/xla-example/README.md for why serialized protos are rejected.
+//! * Train-step graphs return a single tuple; the `xla` crate's execute
+//!   does not set `untuple_result`, so the result comes back as one tuple
+//!   buffer which we convert to host literals and decompose. Params
+//!   therefore live host-side between steps; upload cost is identical for
+//!   the baseline and the pattern variants, so speedup ratios are
+//!   unaffected (EXPERIMENTS.md section Perf quantifies this).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::manifest::{ArtifactMeta, Dtype, Manifest,
+                               TensorMeta};
+
+/// Owns the PJRT client. One per process.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, manifest: &Manifest, name: &str) -> Result<Executable> {
+        let meta = manifest.get(name)?.clone();
+        let path = manifest.hlo_path(&meta);
+        self.load_from(&path, meta)
+    }
+
+    pub fn load_from(&self, path: &Path, meta: ArtifactMeta)
+                     -> Result<Executable> {
+        if !path.exists() {
+            bail!("artifact file missing: {} (run `make artifacts`)",
+                  path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Executable { exe, meta })
+    }
+}
+
+/// Host-side tensor: shape + dtype-tagged storage. The unit of state the
+/// coordinator moves in and out of executables.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } =>
+                shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 =>
+                Ok(data[0] as f64),
+            HostTensor::I32 { data, .. } if data.len() == 1 =>
+                Ok(data[0] as f64),
+            _ => bail!("tensor is not a scalar"),
+        }
+    }
+
+    /// Single-copy conversion to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostTensor::F32 { shape, data } =>
+                crate::runtime::state::lit_f32(shape, data),
+            HostTensor::I32 { shape, data } =>
+                crate::runtime::state::lit_i32(shape, data),
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, meta: &TensorMeta)
+                    -> Result<HostTensor> {
+        match meta.dtype {
+            Dtype::F32 => Ok(HostTensor::F32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<f32>()
+                    .map_err(|e| anyhow!("to_vec f32 {}: {e:?}", meta.name))?,
+            }),
+            Dtype::I32 => Ok(HostTensor::I32 {
+                shape: meta.shape.clone(),
+                data: lit.to_vec::<i32>()
+                    .map_err(|e| anyhow!("to_vec i32 {}: {e:?}", meta.name))?,
+            }),
+        }
+    }
+
+    /// Validate against a manifest tensor description.
+    pub fn check(&self, meta: &TensorMeta) -> Result<()> {
+        if self.shape() != meta.shape.as_slice() {
+            bail!("tensor {}: shape {:?} != manifest {:?}", meta.name,
+                  self.shape(), meta.shape);
+        }
+        let ok = matches!(
+            (self, meta.dtype),
+            (HostTensor::F32 { .. }, Dtype::F32)
+                | (HostTensor::I32 { .. }, Dtype::I32)
+        );
+        if !ok {
+            bail!("tensor {}: dtype mismatch", meta.name);
+        }
+        Ok(())
+    }
+}
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+impl Executable {
+    /// Execute with pre-built literals (manifest input order) and return
+    /// the decomposed output literals. This is the hot path: no per-tensor
+    /// host copies beyond PJRT's own transfers (`decompose_tuple` is
+    /// zero-copy).
+    pub fn run_raw(&self, inputs: &[&xla::Literal])
+                   -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("{}: {} inputs given, manifest says {}", self.meta.name,
+                  inputs.len(), self.meta.inputs.len());
+        }
+        let result = self.exe.execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple.to_tuple()
+            .map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if parts.len() != self.meta.outputs.len() {
+            bail!("{}: {} outputs returned, manifest says {}",
+                  self.meta.name, parts.len(), self.meta.outputs.len());
+        }
+        Ok(parts)
+    }
+
+    /// Execute with the full input list (manifest order), with shape/dtype
+    /// validation. Returns host tensors in manifest output order.
+    /// Convenience path for tests/examples; trainers use `run_raw`.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("{}: {} inputs given, manifest says {}", self.meta.name,
+                  inputs.len(), self.meta.inputs.len());
+        }
+        for (t, m) in inputs.iter().zip(&self.meta.inputs) {
+            t.check(m).with_context(|| format!("artifact {}",
+                                               self.meta.name))?;
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        let parts = self.run_raw(&refs)?;
+        parts
+            .iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, m)| HostTensor::from_literal(lit, m))
+            .collect()
+    }
+}

@@ -1,0 +1,297 @@
+//! `artifacts/manifest.json` loader — the contract between the AOT python
+//! side and the Rust runtime. Every executable's exact input/output tensor
+//! order, shapes, dtypes and semantic kinds live here; the coordinator is
+//! generic over variants and architectures because of it.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unknown dtype {other}"),
+        }
+    }
+}
+
+/// Semantic role of a tensor in the train-step calling convention.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Param,
+    Momentum,
+    X,
+    Y,
+    Mask,
+    Scale,
+    Bias, // pattern bias scalar b0
+    Lr,
+    Loss,
+    Correct,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "param" => Kind::Param,
+            "momentum" => Kind::Momentum,
+            "x" => Kind::X,
+            "y" => Kind::Y,
+            "mask" => Kind::Mask,
+            "scale" => Kind::Scale,
+            "bias" => Kind::Bias,
+            "lr" => Kind::Lr,
+            "loss" => Kind::Loss,
+            "correct" => Kind::Correct,
+            other => bail!("unknown tensor kind {other}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+    pub kind: Kind,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum ArchMeta {
+    Mlp { n_in: usize, hidden: Vec<usize>, n_out: usize, batch: usize },
+    Lstm { vocab: usize, hidden: usize, layers: usize, seq: usize,
+           batch: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub model: String,   // "mlp" | "lstm"
+    pub variant: String, // "conv" | "eval" | "rdp" | "tdp"
+    pub dp: Vec<usize>,
+    pub sites: usize,
+    pub arch: ArchMeta,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn n_params(&self) -> usize {
+        self.inputs.iter().filter(|t| t.kind == Kind::Param).count()
+    }
+
+    pub fn param_metas(&self) -> Vec<&TensorMeta> {
+        self.inputs.iter().filter(|t| t.kind == Kind::Param).collect()
+    }
+
+    pub fn batch(&self) -> usize {
+        match &self.arch {
+            ArchMeta::Mlp { batch, .. } => *batch,
+            ArchMeta::Lstm { batch, .. } => *batch,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dp_support: Vec<usize>,
+    pub momentum: f64,
+    pub tile: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn tensor_meta(j: &Json) -> Result<TensorMeta> {
+    let name = j.get("name").and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("tensor missing name"))?.to_string();
+    let shape = j.get("shape").and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor {name} missing shape"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(
+        j.get("dtype").and_then(Json::as_str).unwrap_or("f32"))?;
+    let kind = Kind::parse(
+        j.get("kind").and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor {name} missing kind"))?)?;
+    Ok(TensorMeta { name, shape, dtype, kind })
+}
+
+fn arch_meta(model: &str, j: &Json) -> Result<ArchMeta> {
+    let u = |key: &str| -> Result<usize> {
+        j.get(key).and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("arch missing {key}"))
+    };
+    Ok(match model {
+        "mlp" => ArchMeta::Mlp {
+            n_in: u("n_in")?,
+            hidden: j.get("hidden").and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("mlp arch missing hidden"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            n_out: u("n_out")?,
+            batch: u("batch")?,
+        },
+        "lstm" => ArchMeta::Lstm {
+            vocab: u("vocab")?,
+            hidden: u("hidden")?,
+            layers: u("layers")?,
+            seq: u("seq")?,
+            batch: u("batch")?,
+        },
+        other => bail!("unknown model {other}"),
+    })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let root = json::parse(&text)
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.get("artifacts").and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+        {
+            let name = a.get("name").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let model = a.get("model").and_then(Json::as_str)
+                .unwrap_or("mlp").to_string();
+            let meta = ArtifactMeta {
+                file: a.get("file").and_then(Json::as_str)
+                    .unwrap_or(&format!("{name}.hlo.txt")).to_string(),
+                model: model.clone(),
+                variant: a.get("variant").and_then(Json::as_str)
+                    .unwrap_or("conv").to_string(),
+                dp: a.get("dp").and_then(Json::as_arr).unwrap_or(&[])
+                    .iter().filter_map(Json::as_usize).collect(),
+                sites: a.get("sites").and_then(Json::as_usize).unwrap_or(0),
+                arch: arch_meta(&model,
+                                a.get("arch")
+                                    .ok_or_else(|| anyhow!("missing arch"))?)?,
+                inputs: a.get("inputs").and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing inputs"))?
+                    .iter().map(tensor_meta).collect::<Result<_>>()?,
+                outputs: a.get("outputs").and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("missing outputs"))?
+                    .iter().map(tensor_meta).collect::<Result<_>>()?,
+                name: name.clone(),
+            };
+            artifacts.insert(name, meta);
+        }
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            dp_support: root.get("dp_support").and_then(Json::as_arr)
+                .unwrap_or(&[]).iter().filter_map(Json::as_usize).collect(),
+            momentum: root.get("momentum").and_then(Json::as_f64)
+                .unwrap_or(0.9),
+            tile: root.get("tile").and_then(Json::as_usize).unwrap_or(32),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!("artifact '{name}' not in manifest \
+                     ({} known)", self.artifacts.len())
+        })
+    }
+
+    /// Path of an artifact's HLO text file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// Artifact naming convention (mirrors aot.py): `<tag>_<variant>` or
+    /// `<tag>_<variant>_<dp1>[_<dp2>...]`.
+    pub fn artifact_name(tag: &str, variant: &str, dp: &[usize]) -> String {
+        if dp.is_empty() {
+            format!("{tag}_{variant}")
+        } else {
+            let dps: Vec<String> = dp.iter().map(|d| d.to_string()).collect();
+            format!("{tag}_{variant}_{}", dps.join("_"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect("manifest");
+        assert!(!m.artifacts.is_empty());
+        assert_eq!(m.tile, 128);
+        assert!((m.momentum - 0.9).abs() < 1e-9);
+        assert!(m.dp_support.contains(&2));
+    }
+
+    #[test]
+    fn tiny_mlp_entry_shape() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.get("mlptest_conv").unwrap();
+        assert_eq!(a.model, "mlp");
+        assert_eq!(a.variant, "conv");
+        assert_eq!(a.n_params(), 6);
+        // inputs: 6 params + 6 momenta + x + y + 2 masks + 2 scales + lr
+        assert_eq!(a.inputs.len(), 19);
+        // outputs: 6 + 6 + loss + correct
+        assert_eq!(a.outputs.len(), 14);
+        let w1 = &a.inputs[0];
+        assert_eq!(w1.name, "w1");
+        assert_eq!(w1.shape, vec![32, 64]);
+        assert_eq!(w1.kind, Kind::Param);
+    }
+
+    #[test]
+    fn rdp_entry_has_bias_inputs() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let a = m.get("mlptest_rdp_2_2").unwrap();
+        assert_eq!(a.dp, vec![2, 2]);
+        let biases: Vec<_> =
+            a.inputs.iter().filter(|t| t.kind == Kind::Bias).collect();
+        assert_eq!(biases.len(), 2);
+        assert_eq!(biases[0].dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn naming_convention() {
+        assert_eq!(Manifest::artifact_name("mlp2048x2048", "rdp", &[2, 4]),
+                   "mlp2048x2048_rdp_2_4");
+        assert_eq!(Manifest::artifact_name("x", "eval", &[]), "x_eval");
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.get("nonexistent").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Runtime layer: PJRT client wrapper (engine), the artifact manifest
+//! contract, and host-side training state.
+//!
+//! Flow: `Manifest::load` -> `Engine::load(name)` -> `Executable::run` with
+//! `HostTensor`s assembled by the coordinator. One compiled executable per
+//! (model, variant, dp) — compiled lazily by `coordinator::ExecutorPool`.
+
+pub mod engine;
+pub mod manifest;
+pub mod state;
+
+pub use engine::{Engine, Executable, HostTensor};
+pub use manifest::{ArchMeta, ArtifactMeta, Dtype, Kind, Manifest,
+                   TensorMeta};
+pub use state::TrainState;

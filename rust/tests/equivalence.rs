@@ -1,0 +1,110 @@
+//! Statistical-equivalence tests (the paper's section III-D claim): over
+//! many training iterations, the per-neuron/per-synapse drop frequency of
+//! the approximate patterns converges to the target Bernoulli rate, and the
+//! number of distinct sub-models matches the theory.
+
+use std::collections::BTreeSet;
+
+use approx_dropout::patterns::{PatternDistribution, RowPattern, TilePattern};
+use approx_dropout::search::{self, SearchConfig};
+use approx_dropout::util::rng::Rng;
+
+#[test]
+fn searched_distribution_drop_rate_matches_bernoulli_target() {
+    // End-to-end: run Algorithm 1 for each paper rate, sample patterns,
+    // measure empirical per-neuron drop frequency on a realistic layer.
+    let cfg = SearchConfig::default();
+    let m = 128;
+    let iters = 30_000;
+    for &p in &[0.3, 0.5, 0.7] {
+        let dist = search::search(p, &[1, 2, 4, 8], &cfg).distribution;
+        let mut rng = Rng::new(p.to_bits());
+        let mut dropped = vec![0u32; m];
+        for _ in 0..iters {
+            let c = dist.sample(&mut rng);
+            let pat = RowPattern::new(m, c.dp, c.b0);
+            for (i, d) in dropped.iter_mut().enumerate() {
+                if !pat.keeps(i) {
+                    *d += 1;
+                }
+            }
+        }
+        for (i, &cnt) in dropped.iter().enumerate() {
+            let f = cnt as f64 / iters as f64;
+            assert!((f - p).abs() < 0.02,
+                    "rate {p}, neuron {i}: empirical {f}");
+        }
+    }
+}
+
+#[test]
+fn tile_pattern_synapse_drop_rate_matches_target() {
+    let cfg = SearchConfig::default();
+    let (k, n) = (128, 128);
+    let iters = 4_000;
+    let p = 0.5;
+    let dist = search::search(p, &[1, 2, 4], &cfg).distribution;
+    let mut rng = Rng::new(4242);
+    let mut dropped = vec![0u32; 16]; // sample 16 probe synapses
+    let probes: Vec<(usize, usize)> =
+        (0..16).map(|i| (i * 7 % k, i * 13 % n)).collect();
+    for _ in 0..iters {
+        let c = dist.sample(&mut rng);
+        let pat = TilePattern::new(k, n, c.dp, c.b0, 32);
+        for (pi, &(r, cc)) in probes.iter().enumerate() {
+            if !pat.keeps_tile(r / pat.tr, cc / pat.tc) {
+                dropped[pi] += 1;
+            }
+        }
+    }
+    for (pi, &cnt) in dropped.iter().enumerate() {
+        let f = cnt as f64 / iters as f64;
+        assert!((f - p).abs() < 0.04, "probe {pi}: empirical {f} vs {p}");
+    }
+}
+
+#[test]
+fn submodel_count_row_pattern() {
+    // Paper: number of sub-models for RDP with dp up to N is sum_i i.
+    // Enumerate distinct kept-sets across (dp, b0) for a small layer.
+    let m = 24;
+    let mut seen = BTreeSet::new();
+    let support = [1usize, 2, 3, 4];
+    for &dp in &support {
+        for b0 in 0..dp {
+            seen.insert(RowPattern::new(m, dp, b0).kept_indices());
+        }
+    }
+    let expected: usize = support.iter().sum();
+    assert_eq!(seen.len(), expected,
+               "each (dp, b0) must induce a distinct sub-model");
+}
+
+#[test]
+fn expected_rate_equals_per_unit_probability_identity() {
+    // Eq. 2 == Eq. 3 algebraically for any distribution.
+    let mut rng = Rng::new(7);
+    for _ in 0..100 {
+        let raw: Vec<f64> = (0..4).map(|_| rng.uniform(0.01, 1.0)).collect();
+        let s: f64 = raw.iter().sum();
+        let probs: Vec<f64> = raw.iter().map(|x| x / s).collect();
+        let d = PatternDistribution::new(vec![1, 2, 4, 8], probs);
+        assert!((d.expected_rate() - d.per_unit_drop_probability()).abs()
+                < 1e-12);
+    }
+}
+
+#[test]
+fn search_matches_paper_rate_grid() {
+    // Reproduce the paper's target grid 0.3..0.7 on the paper's {1..N}
+    // support and our artifact support; both must hit within 1%.
+    let cfg = SearchConfig::default();
+    for &p in &[0.3, 0.4, 0.5, 0.6, 0.7] {
+        let a = search::search_paper(p, 10, &cfg);
+        assert!((a.achieved_rate - p).abs() < 1e-2,
+                "paper support target {p}: {}", a.achieved_rate);
+        let b = search::search(p, &[1, 2, 4, 8], &cfg);
+        assert!((b.achieved_rate - p).abs() < 1e-2,
+                "artifact support target {p}: {}", b.achieved_rate);
+    }
+}

@@ -1,0 +1,264 @@
+//! Integration tests over the full stack: manifest -> PJRT compile ->
+//! train/eval execution -> state update. Uses the tiny `mlptest`/`lstmtest`
+//! artifacts built by `make artifacts` (aot.py --set test is a subset of
+//! the default set).
+
+use approx_dropout::coordinator::{LstmTrainer, MlpTrainer, Schedule,
+                                  Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
+                                     lit_scalar_i32};
+use approx_dropout::runtime::{Engine, Manifest, TrainState};
+use approx_dropout::util::rng::Rng;
+
+fn setup() -> (Engine, Manifest) {
+    let dir = approx_dropout::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest (run make artifacts)");
+    let engine = Engine::cpu().expect("pjrt cpu");
+    (engine, manifest)
+}
+
+/// Host-side forward pass of the tiny MLP (32 -> 64 -> 64 -> 10) used to
+/// cross-check the eval graph's numerics end-to-end.
+fn host_mlp_eval(params: &[Vec<f32>], x: &[f32], y: &[i32], batch: usize)
+                 -> (f64, f64) {
+    let dims = [(32usize, 64usize), (64, 64), (64, 10)];
+    let mut act: Vec<f32> = x.to_vec();
+    let mut width = 32;
+    for (li, &(k, n)) in dims.iter().enumerate() {
+        let w = &params[2 * li];
+        let b = &params[2 * li + 1];
+        let mut next = vec![0f32; batch * n];
+        for bi in 0..batch {
+            for j in 0..n {
+                let mut acc = b[j];
+                for i in 0..k {
+                    acc += act[bi * width + i] * w[i * n + j];
+                }
+                // ReLU on hidden layers only.
+                next[bi * n + j] = if li < 2 { acc.max(0.0) } else { acc };
+            }
+        }
+        act = next;
+        width = n;
+    }
+    // Softmax CE + correct count.
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    for bi in 0..batch {
+        let logits = &act[bi * 10..(bi + 1) * 10];
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 =
+            logits.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        loss -= (logits[y[bi] as usize] - lse) as f64;
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == y[bi] as usize {
+            correct += 1.0;
+        }
+    }
+    (loss / batch as f64, correct)
+}
+
+#[test]
+fn eval_graph_matches_host_forward() {
+    let (engine, manifest) = setup();
+    let exe = engine.load(&manifest, "mlptest_eval").unwrap();
+    let mut rng = Rng::new(7);
+    let meta = manifest.get("mlptest_conv").unwrap();
+    let state = TrainState::init(meta, &mut rng);
+
+    let batch = 8;
+    let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.next_usize(10) as i32).collect();
+
+    let x_l = lit_f32(&[batch, 32], &x).unwrap();
+    let y_l = lit_i32(&[batch], &y).unwrap();
+    let mut refs = state.param_refs();
+    refs.push(&x_l);
+    refs.push(&y_l);
+    let out = exe.run_raw(&refs).unwrap();
+    let loss_dev = out[0].get_first_element::<f32>().unwrap() as f64;
+    let correct_dev = out[1].get_first_element::<f32>().unwrap() as f64;
+
+    let host_params: Vec<Vec<f32>> =
+        (0..6).map(|i| state.param_f32(i).unwrap()).collect();
+    let (loss_host, correct_host) = host_mlp_eval(&host_params, &x, &y,
+                                                  batch);
+    assert!((loss_dev - loss_host).abs() < 1e-4,
+            "device {loss_dev} vs host {loss_host}");
+    assert_eq!(correct_dev, correct_host);
+}
+
+#[test]
+fn trainer_constructs_and_names_executables() {
+    let (engine, manifest) = setup();
+    let schedule =
+        Schedule::new(Variant::Conv, &[0.5, 0.5], &[1, 2], false).unwrap();
+    let tr = MlpTrainer::new(&engine, &manifest, "mlptest", schedule, 64,
+                             0.05, 11).unwrap();
+    assert_eq!(tr.executable_names(), vec!["mlptest_conv".to_string()]);
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+    let tr = MlpTrainer::new(&engine, &manifest, "mlptest", schedule, 64,
+                             0.05, 11).unwrap();
+    assert_eq!(tr.executable_names(), vec!["mlptest_rdp_2_2".to_string()]);
+}
+
+fn run_step(state: &mut TrainState,
+            exe: &approx_dropout::runtime::Executable, rng: &mut Rng,
+            b0: (i32, i32), lr: f32) -> (f64, f64) {
+    let batch = 8;
+    let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.next_usize(10) as i32).collect();
+    let tail = vec![
+        lit_f32(&[batch, 32], &x).unwrap(),
+        lit_i32(&[batch], &y).unwrap(),
+        lit_scalar_i32(b0.0),
+        lit_scalar_i32(b0.1),
+        lit_scalar_f32(2.0), // inverted-dropout scale, site 1
+        lit_scalar_f32(2.0), // inverted-dropout scale, site 2
+        lit_scalar_f32(lr),
+    ];
+    state.step(exe, &tail).unwrap()
+}
+
+#[test]
+fn rdp_step_loss_finite_and_state_changes() {
+    let (engine, manifest) = setup();
+    let exe = engine.load(&manifest, "mlptest_rdp_2_2").unwrap();
+    let mut rng = Rng::new(21);
+    let meta = manifest.get("mlptest_rdp_2_2").unwrap();
+    let mut state = TrainState::init(meta, &mut rng);
+    let before = state.param_f32(0).unwrap();
+    let (loss, correct) = run_step(&mut state, &exe, &mut rng, (1, 0), 0.1);
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    assert!((0.0..=8.0).contains(&correct));
+    let after = state.param_f32(0).unwrap();
+    assert_ne!(before, after, "params must change after one step");
+    assert_eq!(state.step, 1);
+}
+
+#[test]
+fn rdp_only_kept_rows_update_in_w3() {
+    // RDP drops entire rows of the next layer's weight matrix: the
+    // gradient (hence the update) of dropped rows of w3 must be zero.
+    let (engine, manifest) = setup();
+    let exe = engine.load(&manifest, "mlptest_rdp_2_2").unwrap();
+    let mut rng = Rng::new(33);
+    let meta = manifest.get("mlptest_rdp_2_2").unwrap();
+    let mut state = TrainState::init(meta, &mut rng);
+    let w3_before = state.param_f32(4).unwrap();
+
+    let b0_1 = 1; // site-2 pattern: keep rows {1, 3, 5, ...}
+    run_step(&mut state, &exe, &mut rng, (0, b0_1), 0.1);
+    let w3_after = state.param_f32(4).unwrap();
+
+    // w3 shape [64, 10]; rows with i % 2 == b0_1 kept, others frozen.
+    let mut kept_changed = 0;
+    for i in 0..64 {
+        let row_changed = (0..10)
+            .any(|j| w3_before[i * 10 + j] != w3_after[i * 10 + j]);
+        if i % 2 == b0_1 as usize {
+            kept_changed += usize::from(row_changed);
+        } else {
+            // The exact claim of the pattern: dropped rows receive NO
+            // gradient and are bit-identical after the step.
+            assert!(!row_changed, "dropped row {i} must be frozen");
+        }
+    }
+    // Kept rows update unless their ReLU unit is dead for the whole batch;
+    // with random init most must move.
+    assert!(kept_changed >= 16,
+            "only {kept_changed}/32 kept rows updated");
+}
+
+#[test]
+fn tdp_step_runs() {
+    let (engine, manifest) = setup();
+    let exe = engine.load(&manifest, "mlptest_tdp_2_2").unwrap();
+    let mut rng = Rng::new(5);
+    let meta = manifest.get("mlptest_tdp_2_2").unwrap();
+    let mut state = TrainState::init(meta, &mut rng);
+    let (loss, _) = run_step(&mut state, &exe, &mut rng, (1, 0), 0.1);
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn lstm_trainer_end_to_end_tiny() {
+    let (engine, manifest) = setup();
+    let corpus = Corpus::generate(64, 4000, 400, 400, 9);
+    for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+        let shared = variant != Variant::Conv;
+        let schedule =
+            Schedule::new(variant, &[0.5, 0.5], &[2], shared).unwrap();
+        let mut tr = LstmTrainer::new(&engine, &manifest, "lstmtest",
+                                      schedule, &corpus.train, 0.5, 13)
+            .unwrap();
+        tr.warmup().unwrap();
+        let first = tr.step().unwrap().0;
+        for _ in 0..10 {
+            tr.step().unwrap();
+        }
+        let last = tr.metrics.last_loss();
+        assert!(first.is_finite() && last.is_finite());
+        assert!(last < first + 0.5,
+                "{variant:?}: loss diverged {first} -> {last}");
+        let (xent, ppl, acc) = tr.evaluate(&corpus.valid).unwrap();
+        assert!(xent.is_finite() && ppl > 1.0 && (0.0..=1.0).contains(&acc));
+    }
+}
+
+#[test]
+fn mlp_trainer_learns_real_digits() {
+    // Short but real training on the synthetic MNIST through the tiny
+    // arch... mlptest takes 32-dim inputs, so use the real 784-dim arch
+    // only if present; otherwise validate the loss trend on random data
+    // via the tiny RDP artifact (covered above). Here: LSTM-free check
+    // that a conv schedule trainer improves batch accuracy on digits with
+    // the 2048 arch when available.
+    let (engine, manifest) = setup();
+    if manifest.get("mlp1024x64_conv").is_err() {
+        return; // artifact subset build; skip
+    }
+    let data = MnistSyn::generate(512, 3);
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], true).unwrap();
+    let mut tr = MlpTrainer::new(&engine, &manifest, "mlp1024x64", schedule,
+                                 data.n, 0.01, 7).unwrap();
+    tr.warmup().unwrap();
+    let mut first_loss = 0.0;
+    let mut last_loss = 0.0;
+    let steps = 60;
+    for s in 0..steps {
+        let (loss, _) = tr.step(&data).unwrap();
+        if s < 10 {
+            first_loss += loss / 10.0;
+        }
+        if s >= steps - 10 {
+            last_loss += loss / 10.0;
+        }
+    }
+    assert!(last_loss < first_loss,
+            "no learning: loss {first_loss:.3} -> {last_loss:.3}");
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let (engine, manifest) = setup();
+    let corpus = Corpus::generate(64, 3000, 300, 300, 17);
+    let run = |seed: u64| -> Vec<f64> {
+        let schedule =
+            Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+        let mut tr = LstmTrainer::new(&engine, &manifest, "lstmtest",
+                                      schedule, &corpus.train, 0.5, seed)
+            .unwrap();
+        (0..5).map(|_| tr.step().unwrap().0).collect()
+    };
+    assert_eq!(run(99), run(99));
+    assert_ne!(run(99), run(100));
+}
