@@ -8,7 +8,8 @@
 //! cargo run --release --example lstm_ptb -- [steps] [rate] [--full]
 //! ```
 
-use approx_dropout::coordinator::{speedup, LstmTrainer, Schedule, Variant};
+use approx_dropout::coordinator::{speedup, ExecutorCache, LstmTrainer,
+                                  Schedule, Variant};
 use approx_dropout::data::Corpus;
 use approx_dropout::runtime::{Engine, Manifest};
 
@@ -25,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let engine = Engine::cpu()?;
+    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
     println!("== LSTM LM: {tag}, {steps} steps, rate {rate} ==");
     let corpus = Corpus::generate(vocab, 300_000, 30_000, 30_000, 11);
     println!("unigram baseline perplexity: {:.1}",
@@ -35,8 +36,8 @@ fn main() -> anyhow::Result<()> {
     for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
         let schedule = Schedule::new(variant, &[rate, rate], &[1, 2, 4, 8],
                                      variant != Variant::Conv)?;
-        let mut tr = LstmTrainer::new(&engine, &manifest, tag, schedule,
-                                      &corpus.train, 0.1, 3)?;
+        let mut tr = LstmTrainer::new(&cache, tag, schedule, &corpus.train,
+                                      0.1, 3)?;
         tr.warmup()?;
         let log_every = (steps / 8).max(1);
         for s in 0..steps {

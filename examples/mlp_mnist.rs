@@ -9,7 +9,8 @@
 //!
 //! Results land in EXPERIMENTS.md section "E2E".
 
-use approx_dropout::coordinator::{speedup, MlpTrainer, Schedule, Variant};
+use approx_dropout::coordinator::{speedup, ExecutorCache, MlpTrainer,
+                                  Schedule, Variant};
 use approx_dropout::data::MnistSyn;
 use approx_dropout::runtime::{Engine, Manifest};
 
@@ -22,7 +23,9 @@ fn main() -> anyhow::Result<()> {
     let (n_train, n_test) = (20_000, 2_048);
 
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let engine = Engine::cpu()?;
+    // One shared cache across all three variants: the eval graph (and any
+    // overlapping train artifacts) compile exactly once for the whole run.
+    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
     println!("== E2E: {tag} on MNIST-syn ({n_train} train / {n_test} \
               test), {steps} steps, rate {rate} ==");
     let (train, test) = MnistSyn::train_test(n_train, n_test, 7);
@@ -31,8 +34,8 @@ fn main() -> anyhow::Result<()> {
     for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
         let schedule = Schedule::new(variant, &[rate, rate], &[1, 2, 4, 8],
                                      false)?;
-        let mut tr = MlpTrainer::new(&engine, &manifest, tag, schedule,
-                                     n_train, 0.01, 42)?;
+        let mut tr = MlpTrainer::new(&cache, tag, schedule, n_train, 0.01,
+                                     42)?;
         eprintln!("[{}] compiling {} executables...",
                   variant.as_str(), tr.executable_names().len());
         tr.warmup()?;

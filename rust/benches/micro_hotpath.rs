@@ -4,7 +4,9 @@
 //! e2e benches.
 
 use approx_dropout::bench::{bench, fmt_time, Table};
-use approx_dropout::coordinator::{Schedule, Variant};
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, Schedule,
+                                  Variant};
+use approx_dropout::data::Corpus;
 use approx_dropout::patterns::MaskGen;
 use approx_dropout::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
                                      lit_scalar_i32};
@@ -44,10 +46,10 @@ fn main() -> anyhow::Result<()> {
     // 4. HostTensor -> literal marshalling (per-step upload prep) via a
     //    full tiny-artifact execute, isolating coordinator overhead.
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let engine = Engine::cpu()?;
-    let exe = engine.load(&manifest, "mlptest_rdp_2_2")?;
+    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
+    let exe = cache.get("mlptest_rdp_2_2")?;
     let mut rng3 = Rng::new(3);
-    let meta = manifest.get("mlptest_rdp_2_2")?;
+    let meta = cache.manifest().get("mlptest_rdp_2_2")?;
     let mut state = TrainState::init(meta, &mut rng3);
     let x: Vec<f32> = (0..8 * 32).map(|_| rng3.next_f32()).collect();
     let y: Vec<i32> = (0..8).map(|_| rng3.next_usize(10) as i32).collect();
@@ -68,7 +70,7 @@ fn main() -> anyhow::Result<()> {
                 "PJRT floor: marshal+exec+absorb".into()]);
 
     // 5. Eval-graph execute (params only, no state absorb).
-    let ev = engine.load(&manifest, "mlptest_eval")?;
+    let ev = cache.get("mlptest_eval")?;
     let r = bench("tiny_eval", 3, 30, || {
         let x_l = lit_f32(&[8, 32], &x).unwrap();
         let y_l = lit_i32(&[8], &y).unwrap();
@@ -79,6 +81,32 @@ fn main() -> anyhow::Result<()> {
     });
     table.row(&["tiny mlp eval".into(), fmt_time(r.median_s),
                 format!("{:.0}/s", r.per_sec()), "".into()]);
+
+    // 6. Sequential vs double-buffered step assembly on the tiny LSTM:
+    //    same RNG stream, identical trajectories; the pipelined path hides
+    //    host-side assembly behind the PJRT execute.
+    let corpus = Corpus::generate(64, 4000, 400, 400, 9);
+    let window = 20;
+    let mk = |seed: u64| -> anyhow::Result<LstmTrainer> {
+        let schedule = Schedule::new(Variant::Conv, &[0.5, 0.5], &[2],
+                                     false)?;
+        LstmTrainer::new(&cache, "lstmtest", schedule, &corpus.train, 0.5,
+                         seed)
+    };
+    let mut seq = mk(7)?;
+    seq.warmup()?;
+    let r = bench("lstm_steps_sequential", 1, 5,
+                  || seq.train(window).unwrap());
+    table.row(&[format!("lstm {window}-step loop (seq)"),
+                fmt_time(r.median_s), format!("{:.1}/s", r.per_sec()),
+                "assemble then execute".into()]);
+    let mut pipe = mk(7)?;
+    pipe.warmup()?;
+    let r = bench("lstm_steps_pipelined", 1, 5,
+                  || pipe.train_pipelined(&(), window).unwrap());
+    table.row(&[format!("lstm {window}-step loop (pipe)"),
+                fmt_time(r.median_s), format!("{:.1}/s", r.per_sec()),
+                "assembly overlapped".into()]);
 
     println!("== micro hot-path ==");
     table.print();

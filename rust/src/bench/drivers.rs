@@ -1,16 +1,26 @@
 //! Shared experiment drivers used by `rust/benches/*` — each paper
 //! table/figure bench composes these.
 //!
+//! All trainers in one `BenchCtx` dispatch through a single shared
+//! [`ExecutorCache`], so a baseline-vs-variant sweep (the paper's headline
+//! measurement) compiles each artifact — including the shared `_conv` and
+//! `_eval` graphs — exactly once across every configuration.
+//!
 //! Environment knobs (all benches):
 //! * `AD_BENCH_STEPS`       timed steps per configuration (default 6)
 //! * `AD_BENCH_TRAIN_STEPS` convergence steps for accuracy/perplexity
 //!                          columns (default 0 = timing-only; the paper's
 //!                          accuracy deltas need hundreds of steps)
+//! * `AD_BENCH_PIPELINE`    set to 1 to run the convergence steps through
+//!                          the double-buffered assembly path (timed steps
+//!                          stay sequential so per-step numbers remain
+//!                          comparable to older runs)
 //! * `AD_BENCH_FULL`        set to 1 to use paper-scale LSTM (H=1536)
 
 use anyhow::Result;
 
-use crate::coordinator::{LstmTrainer, MlpTrainer, Schedule, Variant};
+use crate::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer, Schedule,
+                         Variant};
 use crate::data::{Corpus, MnistSyn};
 use crate::runtime::{Engine, Manifest};
 
@@ -19,19 +29,20 @@ pub fn env_usize(name: &str, default: usize) -> usize {
 }
 
 pub struct BenchCtx {
-    pub engine: Engine,
-    pub manifest: Manifest,
+    pub cache: ExecutorCache,
     pub timed_steps: usize,
     pub train_steps: usize,
+    pub pipeline: bool,
 }
 
 impl BenchCtx {
     pub fn new() -> Result<BenchCtx> {
+        let manifest = Manifest::load(&crate::artifacts_dir())?;
         Ok(BenchCtx {
-            engine: Engine::cpu()?,
-            manifest: Manifest::load(&crate::artifacts_dir())?,
+            cache: ExecutorCache::new(Engine::cpu()?, manifest),
             timed_steps: env_usize("AD_BENCH_STEPS", 6),
             train_steps: env_usize("AD_BENCH_TRAIN_STEPS", 0),
+            pipeline: env_usize("AD_BENCH_PIPELINE", 0) == 1,
         })
     }
 }
@@ -42,8 +53,8 @@ pub fn run_mlp(ctx: &BenchCtx, tag: &str, variant: Variant, rates: &[f64],
                shared_dp: bool, data: &MnistSyn, test: &MnistSyn,
                seed: u64) -> Result<(f64, Option<f64>)> {
     let schedule = Schedule::new(variant, rates, &[1, 2, 4, 8], shared_dp)?;
-    let mut tr = MlpTrainer::new(&ctx.engine, &ctx.manifest, tag, schedule,
-                                 data.n, 0.01, seed)?;
+    let mut tr = MlpTrainer::new(&ctx.cache, tag, schedule, data.n, 0.01,
+                                 seed)?;
     tr.warmup()?;
     // Warmup steps (cache effects) then timed steps.
     for _ in 0..2 {
@@ -54,8 +65,10 @@ pub fn run_mlp(ctx: &BenchCtx, tag: &str, variant: Variant, rates: &[f64],
     }
     let per_step = tr.metrics.steady_mean_step_s(2);
     let acc = if ctx.train_steps > 0 {
-        for _ in 0..ctx.train_steps {
-            tr.step(data)?;
+        if ctx.pipeline {
+            tr.train_pipelined(data, ctx.train_steps)?;
+        } else {
+            tr.train(data, ctx.train_steps)?;
         }
         Some(tr.evaluate(test)?.1)
     } else {
@@ -83,8 +96,8 @@ pub fn run_lstm_support(ctx: &BenchCtx, tag: &str, variant: Variant,
     let rates = vec![rate; sites];
     let schedule = Schedule::new(variant, &rates, support,
                                  variant != Variant::Conv)?;
-    let mut tr = LstmTrainer::new(&ctx.engine, &ctx.manifest, tag, schedule,
-                                  &corpus.train, lr, seed)?;
+    let mut tr = LstmTrainer::new(&ctx.cache, tag, schedule, &corpus.train,
+                                  lr, seed)?;
     tr.warmup()?;
     for _ in 0..2 {
         tr.step()?;
@@ -94,8 +107,10 @@ pub fn run_lstm_support(ctx: &BenchCtx, tag: &str, variant: Variant,
     }
     let per_step = tr.metrics.steady_mean_step_s(2);
     let quality = if ctx.train_steps > 0 {
-        for _ in 0..ctx.train_steps {
-            tr.step()?;
+        if ctx.pipeline {
+            tr.train_pipelined(&(), ctx.train_steps)?;
+        } else {
+            tr.train(ctx.train_steps)?;
         }
         let (_, ppl, acc) = tr.evaluate(&corpus.valid)?;
         Some((ppl, acc))
@@ -116,8 +131,8 @@ pub fn trace_lstm_curve(ctx: &BenchCtx, tag: &str, variant: Variant,
     // lr note: the paper's Caffe "base lr 1" is plain-SGD convention; with
     // momentum 0.9 the equivalent stable setting is ~0.1 (RDP's shared
     // per-batch pattern raises gradient variance, so lr 1.0 diverges).
-    let mut tr = LstmTrainer::new(&ctx.engine, &ctx.manifest, tag, schedule,
-                                  &corpus.train, 0.1, seed)?;
+    let mut tr = LstmTrainer::new(&ctx.cache, tag, schedule, &corpus.train,
+                                  0.1, seed)?;
     tr.warmup()?;
     let mut out = Vec::new();
     for s in 0..steps {

@@ -1,0 +1,328 @@
+//! Generic training driver — the shared per-iteration structure that used
+//! to be copy-pasted between the MLP and LSTM coordinators.
+//!
+//! Split of responsibilities:
+//! * [`ModelFront`] is the architecture-specific half: it owns the
+//!   schedule, the RNG, the batcher and the mask generation, and knows how
+//!   to turn one sampled pattern + one batch into the executable's tail
+//!   inputs (and how to lay out eval batches). A new architecture is one
+//!   `ModelFront` impl (~100 LoC), not a third copied trainer.
+//! * [`Trainer`] is the generic half: warmup, the train/evaluate loops,
+//!   the lr-decay policy (promoted here from the old LSTM-only trainer),
+//!   metric recording, and dispatch through the process-wide
+//!   [`ExecutorCache`].
+//!
+//! Per iteration (paper Fig. 2): sample `(dp, b0)` per site from the
+//! searched distribution K, assemble the literal tail, resolve the
+//! `(tag, variant, dp)` artifact name, `TrainState::step`, record metrics.
+//!
+//! The driver also offers a **double-buffered** step path
+//! ([`Trainer::train_pipelined`]): a scoped worker thread runs the front's
+//! assembly (pattern sampling, batch marshalling, Bernoulli mask fills —
+//! plain `Send` host buffers only) one iteration ahead while the main
+//! thread converts to XLA literals and executes. The worker draws from the
+//! front's RNG in exactly the sequential order, so the pipelined path is
+//! bit-for-bit identical to [`Trainer::step_with`] loops — only wall-clock
+//! changes. XLA literals are never created off the main thread.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::metrics::TrainMetrics;
+use crate::coordinator::pool::ExecutorCache;
+use crate::coordinator::schedule::{Schedule, Variant};
+use crate::patterns::Choice;
+use crate::runtime::state::lit_scalar_f32;
+use crate::runtime::{HostTensor, TrainState};
+use crate::util::Timer;
+
+/// One fully assembled training step, host-side: everything except the
+/// trailing lr scalar, which the driver appends at dispatch time so staged
+/// steps observe lr-decay updates exactly like sequential ones.
+#[derive(Debug)]
+pub struct StepInput {
+    /// Artifact to dispatch to (resolved from the sampled dp combination).
+    pub name: String,
+    /// Tail tensors in manifest order: x, y, masks-or-biases, scales.
+    pub tail: Vec<HostTensor>,
+    /// Examples covered by this step (batch, or batch*seq tokens).
+    pub examples: usize,
+    /// Whether drawing this step's batch completed a data epoch (drives
+    /// the generic lr-decay policy).
+    pub epoch_boundary: bool,
+}
+
+/// Architecture-specific input assembly. Implementations own every
+/// RNG-consuming resource (schedule sampling, batching, mask generation)
+/// so that assembly — and therefore the random stream — is a single
+/// sequential process whether it runs inline or on the pipeline thread.
+pub trait ModelFront {
+    /// Training data passed to each step (`()` when the front owns its
+    /// token stream, as the LSTM batcher does).
+    type Data: ?Sized + Sync;
+    /// Evaluation data for the dropout-free eval graph.
+    type EvalData: ?Sized + Sync;
+
+    /// Artifact tag, e.g. `mlp2048x2048`.
+    fn tag(&self) -> &str;
+
+    fn schedule(&self) -> &Schedule;
+
+    /// Artifact name for one sampled dp combination (architectures with
+    /// equal-dp artifact sets truncate, see the LSTM front).
+    fn artifact_for(&self, dp: &[usize]) -> String;
+
+    /// Assemble one training step: sample pattern choices, draw the batch,
+    /// and build the host-side tail. Must not create XLA literals — this
+    /// runs off the main thread on the pipelined path.
+    fn assemble(&mut self, data: &Self::Data) -> Result<StepInput>;
+
+    /// Number of full eval batches `data` yields.
+    fn eval_num_batches(&self, data: &Self::EvalData) -> usize;
+
+    /// One eval batch's inputs (x, y) in manifest order, `bi` in
+    /// `0..eval_num_batches(data)`. Batches are built on demand so the
+    /// eval loop holds one batch in host memory at a time.
+    fn eval_batch(&self, data: &Self::EvalData, bi: usize)
+                  -> Result<Vec<HostTensor>>;
+
+    /// Examples per eval batch (batch, or batch*seq tokens).
+    fn eval_examples_per_batch(&self) -> usize;
+}
+
+/// Push one `b0` bias scalar per site (approximate-dropout variants).
+pub fn push_bias_scalars(tail: &mut Vec<HostTensor>, choices: &[Choice]) {
+    for c in choices {
+        tail.push(HostTensor::scalar_i32(c.b0 as i32));
+    }
+}
+
+/// Push the inverted-dropout correction scalars: constant 1/(1-p) of each
+/// site's long-run rate (Caffe semantics), NOT the per-iteration 1/dp —
+/// see model.py `_mlp_logits_rdp`.
+pub fn push_scale_scalars(tail: &mut Vec<HostTensor>, rates: &[f64]) {
+    for rate in rates {
+        tail.push(HostTensor::scalar_f32((1.0 / (1.0 - rate)) as f32));
+    }
+}
+
+/// The dispatch half of one iteration, borrowed apart from the front so
+/// the pipelined path can run assembly and dispatch concurrently.
+struct LoopCtx<'a> {
+    cache: &'a ExecutorCache,
+    state: &'a mut TrainState,
+    metrics: &'a mut TrainMetrics,
+    lr: &'a mut f32,
+    lr_decay: f32,
+    decay_after: usize,
+    epochs_done: &'a mut usize,
+}
+
+impl LoopCtx<'_> {
+    /// Convert the staged host tensors to literals, append lr, execute,
+    /// absorb state, record metrics, and apply the epoch lr-decay policy.
+    /// Returns (loss, accuracy-in-[0,1]).
+    fn dispatch(&mut self, input: StepInput, timer: Timer) -> Result<(f64, f64)> {
+        let mut tail = Vec::with_capacity(input.tail.len() + 1);
+        for t in &input.tail {
+            tail.push(t.to_literal()?);
+        }
+        tail.push(lit_scalar_f32(*self.lr));
+        let exe = self.cache.get(&input.name)?;
+        let (loss, correct) = self.state.step(&exe, &tail)?;
+        self.metrics.record(self.state.step, loss, correct, input.examples,
+                            timer.elapsed_s());
+        if input.epoch_boundary {
+            *self.epochs_done += 1;
+            if *self.epochs_done > self.decay_after {
+                *self.lr *= self.lr_decay;
+            }
+        }
+        Ok((loss, correct / input.examples as f64))
+    }
+}
+
+/// Generic trainer: one loop, any [`ModelFront`].
+pub struct Trainer<F: ModelFront> {
+    pub front: F,
+    cache: ExecutorCache,
+    pub state: TrainState,
+    pub metrics: TrainMetrics,
+    pub lr: f32,
+    /// Multiplied into lr after each completed data epoch beyond
+    /// `decay_after` (generic; formerly LSTM-only).
+    pub lr_decay: f32,
+    pub decay_after: usize,
+    epochs_done: usize,
+}
+
+impl<F: ModelFront> Trainer<F> {
+    /// Assemble a trainer from an already-initialized front and state.
+    /// Architecture-specific constructors (`Trainer::<MlpFront>::new`,
+    /// `Trainer::<LstmFront>::new`) wrap this.
+    pub fn from_parts(cache: &ExecutorCache, front: F, state: TrainState,
+                      lr: f32) -> Self {
+        Trainer {
+            front,
+            cache: cache.clone(),
+            state,
+            metrics: TrainMetrics::default(),
+            lr,
+            lr_decay: 1.0,
+            decay_after: usize::MAX,
+            epochs_done: 0,
+        }
+    }
+
+    /// Shared-cache handle this trainer dispatches through.
+    pub fn cache(&self) -> &ExecutorCache {
+        &self.cache
+    }
+
+    /// Completed data epochs observed so far.
+    pub fn epochs_done(&self) -> usize {
+        self.epochs_done
+    }
+
+    /// Every executable this trainer's schedule can dispatch to — exactly
+    /// `schedule.dp_combos()` mapped through the front's naming (or the
+    /// single conventional graph).
+    pub fn executable_names(&self) -> Vec<String> {
+        match self.front.schedule().variant {
+            Variant::Conv => vec![format!("{}_conv", self.front.tag())],
+            _ => self
+                .front
+                .schedule()
+                .dp_combos()
+                .iter()
+                .map(|dp| self.front.artifact_for(dp))
+                .collect(),
+        }
+    }
+
+    /// Pre-compile every executable the schedule can dispatch to, so the
+    /// timed loop measures steady-state iteration cost only. Artifacts
+    /// already compiled by another trainer sharing the cache are skipped.
+    pub fn warmup(&mut self) -> Result<()> {
+        let names = self.executable_names();
+        self.cache.warm(&names)
+    }
+
+    fn loop_ctx(&mut self) -> LoopCtx<'_> {
+        LoopCtx {
+            cache: &self.cache,
+            state: &mut self.state,
+            metrics: &mut self.metrics,
+            lr: &mut self.lr,
+            lr_decay: self.lr_decay,
+            decay_after: self.decay_after,
+            epochs_done: &mut self.epochs_done,
+        }
+    }
+
+    /// One full training iteration; returns (loss, accuracy in [0,1]).
+    /// Hot path: host buffers are converted to XLA literals once and the
+    /// parameter state stays literal-resident (see runtime::state).
+    pub fn step_with(&mut self, data: &F::Data) -> Result<(f64, f64)> {
+        let timer = Timer::start();
+        let input = self.front.assemble(data)?;
+        self.loop_ctx().dispatch(input, timer)
+    }
+
+    /// Run `n` sequential steps; returns mean loss over the window.
+    pub fn train_with(&mut self, data: &F::Data, n: usize) -> Result<f64> {
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += self.step_with(data)?.0;
+        }
+        Ok(sum / n.max(1) as f64)
+    }
+
+    /// Run `n` steps with double-buffered assembly: a scoped worker thread
+    /// assembles iteration k+1's host inputs (pattern sampling, batch
+    /// copy, Bernoulli mask fills) while the main thread executes
+    /// iteration k. Bit-for-bit identical trajectories to `train_with` —
+    /// the worker consumes the front's RNG in the same sequential order —
+    /// with assembly cost hidden behind the PJRT execute.
+    ///
+    /// Returns mean loss over the window. The recorded per-step times
+    /// cover literal conversion + execute + absorb only (assembly is off
+    /// the measured path by construction).
+    pub fn train_pipelined(&mut self, data: &F::Data, n: usize) -> Result<f64>
+    where
+        F: Send,
+    {
+        if n == 0 {
+            return Ok(0.0);
+        }
+        let Trainer { front, cache, state, metrics, lr, lr_decay,
+                      decay_after, epochs_done } = self;
+        let mut ctx = LoopCtx {
+            cache,
+            state,
+            metrics,
+            lr,
+            lr_decay: *lr_decay,
+            decay_after: *decay_after,
+            epochs_done,
+        };
+        std::thread::scope(|scope| -> Result<f64> {
+            // Capacity 1 = one staged step beyond the one being assembled.
+            let (tx, rx) =
+                std::sync::mpsc::sync_channel::<Result<StepInput>>(1);
+            scope.spawn(move || {
+                for _ in 0..n {
+                    let input = front.assemble(data);
+                    let stop = input.is_err();
+                    // Receiver gone (dispatch error) or assembly error:
+                    // stop producing; the scope joins us either way.
+                    if tx.send(input).is_err() || stop {
+                        break;
+                    }
+                }
+            });
+            let mut sum = 0.0;
+            for _ in 0..n {
+                let input = rx
+                    .recv()
+                    .map_err(|_| anyhow!("assembly thread exited early"))??;
+                // Timer starts after recv: recorded step time covers
+                // literal conversion + execute + absorb, keeping assembly
+                // (and any wait for it) off the measured path.
+                let timer = Timer::start();
+                sum += ctx.dispatch(input, timer)?.0;
+            }
+            Ok(sum / n as f64)
+        })
+    }
+
+    /// Evaluate through the dropout-free `<tag>_eval` graph; returns
+    /// (mean per-batch loss, accuracy in [0,1]).
+    pub fn evaluate_with(&mut self, data: &F::EvalData) -> Result<(f64, f64)> {
+        let name = format!("{}_eval", self.front.tag());
+        let exe = self.cache.get(&name)?;
+        let per_batch = self.front.eval_examples_per_batch() as f64;
+        let num_batches = self.front.eval_num_batches(data);
+        if num_batches == 0 {
+            // A silent (0, 0) here would read as a perfect model
+            // (perplexity 1.0); make an undersized eval set loud instead.
+            bail!("{}: eval data yields no full batch (need at least {} \
+                   examples)", self.front.tag(),
+                  self.front.eval_examples_per_batch());
+        }
+        let mut total_loss = 0.0;
+        let mut total_correct = 0.0;
+        let mut n = 0.0f64;
+        for bi in 0..num_batches {
+            let b = self.front.eval_batch(data, bi)?;
+            let lits: Vec<xla::Literal> = b
+                .iter()
+                .map(HostTensor::to_literal)
+                .collect::<Result<_>>()?;
+            let (loss, correct) = self.state.eval_step(&exe, &lits)?;
+            total_loss += loss;
+            total_correct += correct;
+            n += 1.0;
+        }
+        Ok((total_loss / n, total_correct / (n * per_batch)))
+    }
+}

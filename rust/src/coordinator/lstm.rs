@@ -1,49 +1,131 @@
-//! LSTM training coordinator (paper section IV-C): word-level language
-//! modeling with per-iteration dropout patterns on the non-recurrent
-//! connections. Same dispatch structure as the MLP trainer; LSTM schedules
-//! use a single shared dp per iteration (the artifact set covers equal-dp
-//! combinations; see aot.py).
+//! LSTM front (paper section IV-C): word-level language modeling with
+//! per-iteration dropout patterns on the non-recurrent connections. Same
+//! dispatch structure as the MLP — that structure lives once, in the
+//! generic [`Trainer`] driver; this front only assembles inputs. LSTM
+//! schedules use a single shared dp per iteration (the artifact set covers
+//! equal-dp combinations; see aot.py), so artifact names truncate the dp
+//! combination to its first element.
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::metrics::{perplexity, TrainMetrics};
-use crate::coordinator::pool::ExecutorPool;
+use crate::coordinator::driver::{push_bias_scalars, push_scale_scalars,
+                                 ModelFront, StepInput, Trainer};
+use crate::coordinator::metrics::perplexity;
+use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::data::BpttBatcher;
-use crate::patterns::MaskGen;
-use crate::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
-                            lit_scalar_i32};
-use crate::runtime::{ArchMeta, Engine, Manifest, TrainState};
+use crate::runtime::{ArchMeta, HostTensor, Manifest, TrainState};
 use crate::util::rng::Rng;
-use crate::util::Timer;
 
-pub struct LstmTrainer<'e> {
-    pool: ExecutorPool<'e>,
+/// The LSTM trainer is the generic driver over [`LstmFront`].
+pub type LstmTrainer = Trainer<LstmFront>;
+
+pub struct LstmFront {
     pub tag: String,
     pub schedule: Schedule,
-    pub state: TrainState,
-    pub metrics: TrainMetrics,
-    pub lr: f32,
-    /// Multiplied into lr after each `train` epoch beyond `decay_after`.
-    pub lr_decay: f32,
-    pub decay_after: usize,
     batcher: BpttBatcher,
     hidden: usize,
-    /// Layer count (== dropout sites); kept for diagnostics.
-    #[allow(dead_code)]
-    layers: usize,
     batch: usize,
     seq: usize,
     rng: Rng,
-    maskgen: Vec<MaskGen>,
-    epochs_done: usize,
 }
 
-impl<'e> LstmTrainer<'e> {
-    pub fn new(engine: &'e Engine, manifest: &'e Manifest, tag: &str,
-               schedule: Schedule, train_tokens: &[i32], lr: f32,
-               seed: u64) -> Result<LstmTrainer<'e>> {
-        let conv = manifest.get(&format!("{tag}_conv"))?;
+impl ModelFront for LstmFront {
+    /// The token stream lives in the front's BPTT batcher, so steps take
+    /// no per-call data.
+    type Data = ();
+    type EvalData = [i32];
+
+    fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    fn artifact_for(&self, dp: &[usize]) -> String {
+        // LSTM artifacts are named by the single shared dp.
+        Manifest::artifact_name(&self.tag, self.schedule.variant.as_str(),
+                                &dp[..1])
+    }
+
+    fn assemble(&mut self, _data: &()) -> Result<StepInput> {
+        let choices = self.schedule.sample(&mut self.rng);
+        let prev_epoch = self.batcher.epoch;
+        // Owned buffers (the pipelined path ships them across a thread);
+        // same copy count as building literals from borrowed slices.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.batcher.next_window_into(&mut x, &mut y);
+
+        let mut tail = Vec::with_capacity(2 + 2 * self.schedule.sites());
+        tail.push(HostTensor::i32(&[self.batch, self.seq], x));
+        tail.push(HostTensor::i32(&[self.batch, self.seq], y));
+
+        let name = match self.schedule.variant {
+            Variant::Conv => {
+                for site in 0..self.schedule.sites() {
+                    let keep = 1.0 - self.schedule.rates[site];
+                    let m = self.rng
+                        .mask_vec(keep, self.batch * self.hidden);
+                    tail.push(HostTensor::f32(&[self.batch, self.hidden],
+                                              m));
+                }
+                push_scale_scalars(&mut tail, &self.schedule.rates);
+                format!("{}_conv", self.tag)
+            }
+            _ => {
+                push_bias_scalars(&mut tail, &choices);
+                push_scale_scalars(&mut tail, &self.schedule.rates);
+                self.artifact_for(&[choices[0].dp])
+            }
+        };
+
+        Ok(StepInput {
+            name,
+            tail,
+            examples: self.batch * self.seq,
+            // BpttBatcher bumps `epoch` only when a pass over the tracks
+            // completes — every bump is a finished epoch.
+            epoch_boundary: self.batcher.epoch != prev_epoch,
+        })
+    }
+
+    fn eval_num_batches(&self, tokens: &[i32]) -> usize {
+        // windows_per_epoch over `batch` contiguous tracks, without
+        // materializing a batcher: track b is tokens[b*track_len..].
+        let track_len = tokens.len() / self.batch;
+        track_len.saturating_sub(1) / self.seq
+    }
+
+    fn eval_batch(&self, tokens: &[i32], bi: usize)
+                  -> Result<Vec<HostTensor>> {
+        let track_len = tokens.len() / self.batch;
+        let pos = bi * self.seq;
+        let mut x = Vec::with_capacity(self.batch * self.seq);
+        let mut y = Vec::with_capacity(self.batch * self.seq);
+        for b in 0..self.batch {
+            let base = b * track_len + pos;
+            x.extend_from_slice(&tokens[base..base + self.seq]);
+            y.extend_from_slice(&tokens[base + 1..base + self.seq + 1]);
+        }
+        Ok(vec![
+            HostTensor::i32(&[self.batch, self.seq], x),
+            HostTensor::i32(&[self.batch, self.seq], y),
+        ])
+    }
+
+    fn eval_examples_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+impl Trainer<LstmFront> {
+    pub fn new(cache: &ExecutorCache, tag: &str, schedule: Schedule,
+               train_tokens: &[i32], lr: f32, seed: u64)
+               -> Result<LstmTrainer> {
+        let conv = cache.manifest().get(&format!("{tag}_conv"))?;
         let (hidden, layers, batch, seq) = match &conv.arch {
             ArchMeta::Lstm { hidden, layers, batch, seq, .. } =>
                 (*hidden, *layers, *batch, *seq),
@@ -55,137 +137,33 @@ impl<'e> LstmTrainer<'e> {
         }
         let mut rng = Rng::new(seed);
         let state = TrainState::init(conv, &mut rng);
-        Ok(LstmTrainer {
-            pool: ExecutorPool::new(engine, manifest),
+        let front = LstmFront {
             tag: tag.to_string(),
             schedule,
-            state,
-            metrics: TrainMetrics::default(),
-            lr,
-            lr_decay: 1.0,
-            decay_after: usize::MAX,
             batcher: BpttBatcher::new(train_tokens, batch, seq),
             hidden,
-            layers,
             batch,
             seq,
             rng,
-            maskgen: (0..layers).map(|_| MaskGen::new()).collect(),
-            epochs_done: 0,
-        })
-    }
-
-    pub fn executable_names(&self) -> Vec<String> {
-        match self.schedule.variant {
-            Variant::Conv => vec![format!("{}_conv", self.tag)],
-            v => self
-                .schedule
-                .dp_combos()
-                .iter()
-                .map(|dp| {
-                    // LSTM artifacts are named by the single shared dp.
-                    Manifest::artifact_name(&self.tag, v.as_str(), &dp[..1])
-                })
-                .collect(),
-        }
-    }
-
-    pub fn warmup(&mut self) -> Result<()> {
-        let names = self.executable_names();
-        self.pool.warm(&names)
+        };
+        Ok(Trainer::from_parts(cache, front, state, lr))
     }
 
     /// One training iteration over a [batch, seq] BPTT window.
     /// Returns (loss nats/token, token accuracy).
     pub fn step(&mut self) -> Result<(f64, f64)> {
-        let t = Timer::start();
-        let choices = self.schedule.sample(&mut self.rng);
-        let prev_epoch = self.batcher.epoch;
-        let (x, y) = self.batcher.next_batch();
-
-        let mut tail: Vec<xla::Literal> = Vec::with_capacity(8);
-        tail.push(lit_i32(&[self.batch, self.seq], x)?);
-        tail.push(lit_i32(&[self.batch, self.seq], y)?);
-
-        let name = match self.schedule.variant {
-            Variant::Conv => {
-                for (site, rate) in
-                    self.schedule.rates.clone().iter().enumerate()
-                {
-                    let keep = 1.0 - rate;
-                    let m = self.maskgen[site]
-                        .fill(&mut self.rng, keep, self.batch * self.hidden);
-                    tail.push(lit_f32(&[self.batch, self.hidden], m)?);
-                }
-                for rate in &self.schedule.rates {
-                    tail.push(lit_scalar_f32((1.0 / (1.0 - rate)) as f32));
-                }
-                format!("{}_conv", self.tag)
-            }
-            v => {
-                for c in &choices {
-                    tail.push(lit_scalar_i32(c.b0 as i32));
-                }
-                // Inverted-dropout correction: constant 1/(1-p) of the
-                // site's long-run rate (Caffe semantics), NOT the
-                // per-iteration 1/dp — see model.py _mlp_logits_rdp.
-                for rate in &self.schedule.rates {
-                    tail.push(lit_scalar_f32((1.0 / (1.0 - rate)) as f32));
-                }
-                Manifest::artifact_name(&self.tag, v.as_str(),
-                                        &[choices[0].dp])
-            }
-        };
-        tail.push(lit_scalar_f32(self.lr));
-
-        let exe = self.pool.get(&name)?;
-        let (loss, correct) = self.state.step(exe, &tail)?;
-        let tokens = (self.batch * self.seq) as f64;
-        self.metrics.record(self.state.step, loss, correct,
-                            self.batch * self.seq, t.elapsed_s());
-        if self.batcher.epoch != prev_epoch {
-            self.epochs_done += 1;
-            if self.epochs_done > self.decay_after {
-                self.lr *= self.lr_decay;
-            }
-        }
-        Ok((loss, correct / tokens))
+        self.step_with(&())
     }
 
+    /// Run `n` steps; returns mean loss over the window.
     pub fn train(&mut self, n: usize) -> Result<f64> {
-        let mut sum = 0.0;
-        for _ in 0..n {
-            sum += self.step()?.0;
-        }
-        Ok(sum / n.max(1) as f64)
+        self.train_with(&(), n)
     }
 
     /// Evaluate on a token stream through the eval graph. Returns
     /// (mean loss nats/token, perplexity, token accuracy).
     pub fn evaluate(&mut self, tokens: &[i32]) -> Result<(f64, f64, f64)> {
-        let name = format!("{}_eval", self.tag);
-        let mut b = BpttBatcher::new(tokens, self.batch, self.seq);
-        let windows = b.windows_per_epoch();
-        let mut total_loss = 0.0;
-        let mut total_correct = 0.0;
-        let mut n = 0.0f64;
-        for _ in 0..windows {
-            let (x, y) = b.next_batch();
-            let x_l = lit_i32(&[self.batch, self.seq], x)?;
-            let y_l = lit_i32(&[self.batch, self.seq], y)?;
-            let mut refs = self.state.param_refs();
-            refs.push(&x_l);
-            refs.push(&y_l);
-            let exe = self.pool.get(&name)?;
-            let out = exe.run_raw(&refs)?;
-            total_loss += out[0].get_first_element::<f32>()
-                .map_err(|e| anyhow::anyhow!("loss: {e:?}"))? as f64;
-            total_correct += out[1].get_first_element::<f32>()
-                .map_err(|e| anyhow::anyhow!("correct: {e:?}"))? as f64;
-            n += 1.0;
-        }
-        let xent = total_loss / n.max(1.0);
-        let acc = total_correct / (n.max(1.0) * (self.batch * self.seq) as f64);
+        let (xent, acc) = self.evaluate_with(tokens)?;
         Ok((xent, perplexity(xent), acc))
     }
 }

@@ -63,6 +63,20 @@ impl TrainMetrics {
     pub fn last_loss(&self) -> f64 {
         self.curve.last().map(|p| p.loss).unwrap_or(f64::NAN)
     }
+
+    /// Mean loss over the last `n` recorded steps (pipelined chunk
+    /// reporting).
+    pub fn window_mean_loss(&self, n: usize) -> f64 {
+        if self.curve.is_empty() {
+            return f64::NAN;
+        }
+        let k = n.min(self.curve.len()).max(1);
+        self.curve[self.curve.len() - k..]
+            .iter()
+            .map(|p| p.loss)
+            .sum::<f64>()
+            / k as f64
+    }
 }
 
 /// Speedup of `ours` over `baseline` given per-step times (paper's
@@ -103,6 +117,17 @@ mod tests {
         m.record(2, 0.0, 0.0, 1, 0.1);
         m.record(3, 0.0, 0.0, 1, 0.1);
         assert!((m.steady_mean_step_s(1) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_mean_loss_over_tail() {
+        let mut m = TrainMetrics::default();
+        assert!(m.window_mean_loss(3).is_nan());
+        m.record(1, 4.0, 0.0, 1, 0.1);
+        m.record(2, 2.0, 0.0, 1, 0.1);
+        m.record(3, 1.0, 0.0, 1, 0.1);
+        assert!((m.window_mean_loss(2) - 1.5).abs() < 1e-12);
+        assert!((m.window_mean_loss(10) - (7.0 / 3.0)).abs() < 1e-12);
     }
 
     #[test]

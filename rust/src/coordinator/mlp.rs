@@ -1,47 +1,124 @@
-//! MLP training coordinator (paper sections IV-A/B).
+//! MLP front (paper sections IV-A/B): arch-specific input assembly for
+//! the generic [`Trainer`] driver.
 //!
-//! Per iteration: sample the dropout pattern for each hidden layer from the
-//! schedule, pick the matching AOT executable (`<tag>_rdp_<dp1>_<dp2>` ...),
-//! assemble the input list per the manifest calling convention, execute,
-//! and absorb the updated state. The conventional baseline follows the
-//! identical loop but generates Bernoulli masks instead of bias scalars —
+//! Per iteration the front samples the dropout pattern for each hidden
+//! layer from the schedule, resolves the matching AOT executable
+//! (`<tag>_rdp_<dp1>_<dp2>` ...), and lays out the input tail per the
+//! manifest calling convention. The conventional baseline follows the
+//! identical path but generates Bernoulli masks instead of bias scalars —
 //! wall-clock comparisons therefore measure exactly the paper's quantity.
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::metrics::TrainMetrics;
-use crate::coordinator::pool::ExecutorPool;
+use crate::coordinator::driver::{push_bias_scalars, push_scale_scalars,
+                                 ModelFront, StepInput, Trainer};
+use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::data::{MnistBatcher, MnistSyn};
-use crate::patterns::MaskGen;
-use crate::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
-                            lit_scalar_i32};
-use crate::runtime::{ArchMeta, Engine, Manifest, TrainState};
+use crate::runtime::{ArchMeta, HostTensor, Manifest, TrainState};
 use crate::util::rng::Rng;
-use crate::util::Timer;
 
-pub struct MlpTrainer<'e> {
-    pool: ExecutorPool<'e>,
+/// The MLP trainer is the generic driver over [`MlpFront`].
+pub type MlpTrainer = Trainer<MlpFront>;
+
+pub struct MlpFront {
     pub tag: String,
     pub schedule: Schedule,
-    pub state: TrainState,
-    pub metrics: TrainMetrics,
-    pub lr: f32,
     batcher: MnistBatcher,
     hidden: Vec<usize>,
     batch: usize,
+    n_in: usize,
     rng: Rng,
-    maskgen: Vec<MaskGen>,
 }
 
-impl<'e> MlpTrainer<'e> {
-    pub fn new(engine: &'e Engine, manifest: &'e Manifest, tag: &str,
-               schedule: Schedule, n_train: usize, lr: f32, seed: u64)
-               -> Result<MlpTrainer<'e>> {
-        let conv = manifest.get(&format!("{tag}_conv"))?;
-        let (hidden, batch) = match &conv.arch {
-            ArchMeta::Mlp { hidden, batch, .. } =>
-                (hidden.clone(), *batch),
+impl ModelFront for MlpFront {
+    type Data = MnistSyn;
+    type EvalData = MnistSyn;
+
+    fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn schedule(&self) -> &Schedule {
+        &self.schedule
+    }
+
+    fn artifact_for(&self, dp: &[usize]) -> String {
+        Manifest::artifact_name(&self.tag, self.schedule.variant.as_str(), dp)
+    }
+
+    fn assemble(&mut self, data: &MnistSyn) -> Result<StepInput> {
+        let choices = self.schedule.sample(&mut self.rng);
+        let prev_epoch = self.batcher.epoch;
+        // Tail tensors own their buffers (the pipelined path ships them
+        // across a thread), so the batcher/masks fill owned Vecs directly
+        // — same copy count as building literals from borrowed slices.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        self.batcher.next_batch_into(data, &mut self.rng, &mut x, &mut y);
+
+        let mut tail = Vec::with_capacity(2 + 2 * self.schedule.sites());
+        let n_in = x.len() / self.batch;
+        tail.push(HostTensor::f32(&[self.batch, n_in], x));
+        tail.push(HostTensor::i32(&[self.batch], y));
+
+        let name = match self.schedule.variant {
+            Variant::Conv => {
+                // Bernoulli masks + inverted-dropout scales per site.
+                for site in 0..self.schedule.sites() {
+                    let keep = 1.0 - self.schedule.rates[site];
+                    let w = self.hidden[site];
+                    let m = self.rng.mask_vec(keep, self.batch * w);
+                    tail.push(HostTensor::f32(&[self.batch, w], m));
+                }
+                push_scale_scalars(&mut tail, &self.schedule.rates);
+                format!("{}_conv", self.tag)
+            }
+            _ => {
+                push_bias_scalars(&mut tail, &choices);
+                push_scale_scalars(&mut tail, &self.schedule.rates);
+                let dp: Vec<usize> = choices.iter().map(|c| c.dp).collect();
+                self.artifact_for(&dp)
+            }
+        };
+
+        // MnistBatcher counts the epoch it is starting (the first batch
+        // reports epoch 1); a *completed* epoch is any later bump.
+        let epoch_boundary =
+            self.batcher.epoch != prev_epoch && self.batcher.epoch > 1;
+        Ok(StepInput { name, tail, examples: self.batch, epoch_boundary })
+    }
+
+    fn eval_num_batches(&self, test: &MnistSyn) -> usize {
+        test.n / self.batch
+    }
+
+    fn eval_batch(&self, test: &MnistSyn, bi: usize)
+                  -> Result<Vec<HostTensor>> {
+        let mut x = Vec::with_capacity(self.batch * self.n_in);
+        let mut y = Vec::with_capacity(self.batch);
+        for i in bi * self.batch..(bi + 1) * self.batch {
+            x.extend_from_slice(test.image(i));
+            y.push(test.labels[i] as i32);
+        }
+        Ok(vec![
+            HostTensor::f32(&[self.batch, self.n_in], x),
+            HostTensor::i32(&[self.batch], y),
+        ])
+    }
+
+    fn eval_examples_per_batch(&self) -> usize {
+        self.batch
+    }
+}
+
+impl Trainer<MlpFront> {
+    pub fn new(cache: &ExecutorCache, tag: &str, schedule: Schedule,
+               n_train: usize, lr: f32, seed: u64) -> Result<MlpTrainer> {
+        let conv = cache.manifest().get(&format!("{tag}_conv"))?;
+        let (n_in, hidden, batch) = match &conv.arch {
+            ArchMeta::Mlp { n_in, hidden, batch, .. } =>
+                (*n_in, hidden.clone(), *batch),
             _ => bail!("artifact {tag} is not an MLP"),
         };
         if schedule.sites() != hidden.len() {
@@ -50,138 +127,31 @@ impl<'e> MlpTrainer<'e> {
         }
         let mut rng = Rng::new(seed);
         let state = TrainState::init(conv, &mut rng);
-        let maskgen = (0..hidden.len()).map(|_| MaskGen::new()).collect();
-        Ok(MlpTrainer {
-            pool: ExecutorPool::new(engine, manifest),
+        let front = MlpFront {
             tag: tag.to_string(),
             schedule,
-            state,
-            metrics: TrainMetrics::default(),
-            lr,
             batcher: MnistBatcher::new(n_train, batch),
             hidden,
             batch,
+            n_in,
             rng,
-            maskgen,
-        })
-    }
-
-    /// Pre-compile every executable the schedule can dispatch to, so the
-    /// timed loop measures steady-state iteration cost only.
-    pub fn warmup(&mut self) -> Result<()> {
-        let names = self.executable_names();
-        self.pool.warm(&names)
-    }
-
-    pub fn executable_names(&self) -> Vec<String> {
-        match self.schedule.variant {
-            Variant::Conv => vec![format!("{}_conv", self.tag)],
-            v => self
-                .schedule
-                .dp_combos()
-                .iter()
-                .map(|dp| Manifest::artifact_name(&self.tag, v.as_str(), dp))
-                .collect(),
-        }
+        };
+        Ok(Trainer::from_parts(cache, front, state, lr))
     }
 
     /// One full training iteration; returns (loss, batch accuracy).
-    /// Hot path: all inputs are assembled as XLA literals directly and the
-    /// parameter state stays literal-resident (see runtime::state).
     pub fn step(&mut self, data: &MnistSyn) -> Result<(f64, f64)> {
-        let t = Timer::start();
-        let choices = self.schedule.sample(&mut self.rng);
-        let (x, y) = self.batcher.next_batch(data, &mut self.rng);
-
-        let mut tail: Vec<xla::Literal> = Vec::with_capacity(8);
-        tail.push(lit_f32(&[self.batch, x.len() / self.batch], x)?);
-        tail.push(lit_i32(&[self.batch], y)?);
-
-        let name = match self.schedule.variant {
-            Variant::Conv => {
-                // Bernoulli masks + inverted-dropout scales per site.
-                for (site, rate) in
-                    self.schedule.rates.clone().iter().enumerate()
-                {
-                    let keep = 1.0 - rate;
-                    let w = self.hidden[site];
-                    let m = self.maskgen[site]
-                        .fill(&mut self.rng, keep, self.batch * w);
-                    tail.push(lit_f32(&[self.batch, w], m)?);
-                }
-                for rate in &self.schedule.rates {
-                    tail.push(lit_scalar_f32((1.0 / (1.0 - rate)) as f32));
-                }
-                format!("{}_conv", self.tag)
-            }
-            v => {
-                for c in &choices {
-                    tail.push(lit_scalar_i32(c.b0 as i32));
-                }
-                // Inverted-dropout correction: constant 1/(1-p) of the
-                // site's long-run rate (Caffe semantics), NOT the
-                // per-iteration 1/dp — see model.py _mlp_logits_rdp.
-                for rate in &self.schedule.rates {
-                    tail.push(lit_scalar_f32((1.0 / (1.0 - rate)) as f32));
-                }
-                let dp: Vec<usize> = choices.iter().map(|c| c.dp).collect();
-                Manifest::artifact_name(&self.tag, v.as_str(), &dp)
-            }
-        };
-        tail.push(lit_scalar_f32(self.lr));
-
-        let exe = self.pool.get(&name)?;
-        let (loss, correct) = self.state.step(exe, &tail)?;
-        self.metrics.record(self.state.step, loss, correct, self.batch,
-                            t.elapsed_s());
-        Ok((loss, correct / self.batch as f64))
+        self.step_with(data)
     }
 
     /// Run `n` steps; returns mean loss over the window.
     pub fn train(&mut self, data: &MnistSyn, n: usize) -> Result<f64> {
-        let mut sum = 0.0;
-        for _ in 0..n {
-            sum += self.step(data)?.0;
-        }
-        Ok(sum / n.max(1) as f64)
+        self.train_with(data, n)
     }
 
     /// Evaluate on a test set through the dropout-free eval graph; returns
     /// (mean loss, accuracy).
     pub fn evaluate(&mut self, test: &MnistSyn) -> Result<(f64, f64)> {
-        let name = format!("{}_eval", self.tag);
-        let n_in: usize = {
-            let exe = self.pool.get(&name)?;
-            match &exe.meta.arch {
-                ArchMeta::Mlp { n_in, .. } => *n_in,
-                _ => bail!("not an mlp eval graph"),
-            }
-        };
-        let mut total_loss = 0.0;
-        let mut total_correct = 0.0;
-        let mut batches = 0.0;
-        let full = test.n / self.batch;
-        for bi in 0..full {
-            let mut x = Vec::with_capacity(self.batch * n_in);
-            let mut y = Vec::with_capacity(self.batch);
-            for i in bi * self.batch..(bi + 1) * self.batch {
-                x.extend_from_slice(test.image(i));
-                y.push(test.labels[i] as i32);
-            }
-            let x_l = lit_f32(&[self.batch, n_in], &x)?;
-            let y_l = lit_i32(&[self.batch], &y)?;
-            let mut refs = self.state.param_refs();
-            refs.push(&x_l);
-            refs.push(&y_l);
-            let exe = self.pool.get(&name)?;
-            let out = exe.run_raw(&refs)?;
-            total_loss += out[0].get_first_element::<f32>()
-                .map_err(|e| anyhow::anyhow!("loss: {e:?}"))? as f64;
-            total_correct += out[1].get_first_element::<f32>()
-                .map_err(|e| anyhow::anyhow!("correct: {e:?}"))? as f64;
-            batches += 1.0;
-        }
-        Ok((total_loss / batches,
-            total_correct / (batches * self.batch as f64)))
+        self.evaluate_with(test)
     }
 }

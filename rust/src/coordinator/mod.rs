@@ -9,15 +9,24 @@
 //! 3. assemble inputs (params, momenta, batch, masks or bias scalars) and
 //!    execute through PJRT ([`crate::runtime`]),
 //! 4. absorb updated state and record metrics ([`metrics`]).
+//!
+//! The iteration loop itself lives once, in the generic [`driver`]
+//! (DESIGN.md section 4): each architecture contributes a
+//! [`driver::ModelFront`] that assembles its inputs ([`mlp`], [`lstm`]),
+//! and every trainer dispatches through the process-wide shared
+//! [`pool::ExecutorCache`] so concurrent baseline/variant runs compile
+//! each artifact exactly once.
 
+pub mod driver;
 pub mod lstm;
 pub mod metrics;
 pub mod mlp;
 pub mod pool;
 pub mod schedule;
 
-pub use lstm::LstmTrainer;
+pub use driver::{ModelFront, StepInput, Trainer};
+pub use lstm::{LstmFront, LstmTrainer};
 pub use metrics::{perplexity, speedup, TrainMetrics};
-pub use mlp::MlpTrainer;
-pub use pool::ExecutorPool;
+pub use mlp::{MlpFront, MlpTrainer};
+pub use pool::ExecutorCache;
 pub use schedule::{Schedule, Variant};

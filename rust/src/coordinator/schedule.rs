@@ -89,39 +89,23 @@ impl Schedule {
     }
 
     /// Every dp combination this schedule can sample — the artifact names
-    /// the executor pool should pre-compile.
+    /// the executor cache should pre-compile.
     pub fn dp_combos(&self) -> Vec<Vec<usize>> {
         match self.variant {
             Variant::Conv => vec![],
-            _ if self.shared_dp => self.dists[0]
-                .support
-                .iter()
-                .filter(|&&dp| {
-                    let i = self.dists[0].support.iter()
-                        .position(|&s| s == dp).unwrap();
-                    self.dists[0].probs[i] > 1e-4
-                })
-                .map(|&dp| vec![dp; self.sites()])
+            _ if self.shared_dp => live_support(&self.dists[0])
+                .into_iter()
+                .map(|dp| vec![dp; self.sites()])
                 .collect(),
             _ => {
                 // Cartesian product of per-site live supports.
-                let live: Vec<Vec<usize>> = self
-                    .dists
-                    .iter()
-                    .map(|d| {
-                        d.support
-                            .iter()
-                            .zip(&d.probs)
-                            .filter(|(_, &p)| p > 1e-4)
-                            .map(|(&s, _)| s)
-                            .collect()
-                    })
-                    .collect();
                 let mut combos: Vec<Vec<usize>> = vec![vec![]];
-                for site in &live {
-                    let mut next = Vec::new();
+                for dist in &self.dists {
+                    let live = live_support(dist);
+                    let mut next =
+                        Vec::with_capacity(combos.len() * live.len());
                     for c in &combos {
-                        for &dp in site {
+                        for &dp in &live {
                             let mut c2 = c.clone();
                             c2.push(dp);
                             next.push(c2);
@@ -133,6 +117,16 @@ impl Schedule {
             }
         }
     }
+}
+
+/// Divisors carrying non-negligible probability mass in `d`.
+fn live_support(d: &PatternDistribution) -> Vec<usize> {
+    d.support
+        .iter()
+        .zip(&d.probs)
+        .filter(|(_, &p)| p > 1e-4)
+        .map(|(&s, _)| s)
+        .collect()
 }
 
 #[cfg(test)]

@@ -5,8 +5,8 @@
 use anyhow::{bail, Result};
 
 use approx_dropout::config::TrainConfig;
-use approx_dropout::coordinator::{LstmTrainer, MlpTrainer, Schedule,
-                                  Variant};
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::info;
 use approx_dropout::runtime::{Engine, Manifest};
@@ -23,10 +23,13 @@ COMMANDS:
   train-mlp    Train an MLP on synthetic MNIST
                --tag mlp2048x2048 --variant conv|rdp|tdp --rates 0.5,0.5
                --steps 200 --lr 0.01 --seed 42 --n-train 10000
-               --n-test 2000 [--shared-dp] [--config file.toml]
+               --n-test 2000 [--shared-dp] [--pipeline] [--config file.toml]
   train-lstm   Train an LSTM LM on the synthetic corpus
                --tag lstm2x256v2048b20 --variant rdp --rate 0.5
                --steps 100 --lr 0.5 --seed 42 [--tokens 200000]
+               [--pipeline]
+               (--pipeline: double-buffered step assembly; identical
+                trajectories, assembly overlapped with execution)
   search       Run the SGD-based pattern search (Algorithm 1)
                --rate 0.7 [--support 1,2,4,8 | --n 10 (paper {1..N})]
   info         List artifacts in the manifest [--filter substr]
@@ -82,7 +85,7 @@ fn train_mlp(args: &Args) -> Result<()> {
     let cfg = config_from_args(args, &[0.5, 0.5])?;
     info!("config: {cfg:?}");
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let engine = Engine::cpu()?;
+    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
     let schedule = Schedule::new(cfg.variant, &cfg.rates, &cfg.support,
                                  cfg.shared_dp)?;
     if cfg.variant != Variant::Conv {
@@ -95,17 +98,30 @@ fn train_mlp(args: &Args) -> Result<()> {
     }
     let (train, test) = MnistSyn::train_test(cfg.n_train, cfg.n_test,
                                              cfg.seed);
-    let mut tr = MlpTrainer::new(&engine, &manifest, &cfg.tag, schedule,
-                                 cfg.n_train, cfg.lr as f32, cfg.seed)?;
+    let mut tr = MlpTrainer::new(&cache, &cfg.tag, schedule, cfg.n_train,
+                                 cfg.lr as f32, cfg.seed)?;
     info!("compiling {} executable(s)...", tr.executable_names().len());
     tr.warmup()?;
     let report_every = (cfg.steps / 10).max(1);
-    for s in 0..cfg.steps {
-        let (loss, acc) = tr.step(&train)?;
-        if (s + 1) % report_every == 0 {
-            info!("step {:>5}: loss {loss:.4} acc {acc:.3} \
-                   ({:.1} ms/step)", s + 1,
+    if args.has_flag("pipeline") {
+        let mut done = 0;
+        while done < cfg.steps {
+            let n = report_every.min(cfg.steps - done);
+            tr.train_pipelined(&train, n)?;
+            done += n;
+            info!("step {:>5}: loss {:.4} acc {:.3} ({:.1} ms/step)", done,
+                  tr.metrics.window_mean_loss(n),
+                  tr.metrics.running_train_acc(),
                   tr.metrics.steady_mean_step_s(1) * 1e3);
+        }
+    } else {
+        for s in 0..cfg.steps {
+            let (loss, acc) = tr.step(&train)?;
+            if (s + 1) % report_every == 0 {
+                info!("step {:>5}: loss {loss:.4} acc {acc:.3} \
+                       ({:.1} ms/step)", s + 1,
+                      tr.metrics.steady_mean_step_s(1) * 1e3);
+            }
         }
     }
     let (eval_loss, eval_acc) = tr.evaluate(&test)?;
@@ -123,33 +139,48 @@ fn train_lstm(args: &Args) -> Result<()> {
     let n_tokens = args.usize_or("tokens", 200_000);
     info!("config: {cfg:?}");
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    // Infer layer count (sites) from the conv artifact.
-    let sites = manifest.get(&format!("{}_conv", cfg.tag))?.sites;
+    // Infer layer count (sites) and vocab from the conv artifact.
+    let conv = manifest.get(&format!("{}_conv", cfg.tag))?;
+    let sites = conv.sites;
+    let vocab = match &conv.arch {
+        approx_dropout::runtime::ArchMeta::Lstm { vocab, .. } => *vocab,
+        _ => bail!("not an lstm tag"),
+    };
     if cfg.rates.len() != sites {
         let r = cfg.rates[0];
         cfg.rates = vec![r; sites];
     }
-    let engine = Engine::cpu()?;
+    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
     // LSTM artifacts cover equal-dp combos only -> shared dp sampling.
     let schedule = Schedule::new(cfg.variant, &cfg.rates, &cfg.support,
                                  cfg.variant != Variant::Conv)?;
-    let vocab = match manifest.get(&format!("{}_conv", cfg.tag))?.arch {
-        approx_dropout::runtime::ArchMeta::Lstm { vocab, .. } => vocab,
-        _ => bail!("not an lstm tag"),
-    };
     let corpus = Corpus::generate(vocab, n_tokens, n_tokens / 10,
                                   n_tokens / 10, cfg.seed);
-    let mut tr = LstmTrainer::new(&engine, &manifest, &cfg.tag, schedule,
-                                  &corpus.train, cfg.lr as f32, cfg.seed)?;
+    let mut tr = LstmTrainer::new(&cache, &cfg.tag, schedule, &corpus.train,
+                                  cfg.lr as f32, cfg.seed)?;
     info!("compiling {} executable(s)...", tr.executable_names().len());
     tr.warmup()?;
     let report_every = (cfg.steps / 10).max(1);
-    for s in 0..cfg.steps {
-        let (loss, acc) = tr.step()?;
-        if (s + 1) % report_every == 0 {
-            info!("step {:>5}: loss {loss:.4} ppl {:.1} acc {acc:.3} \
-                   ({:.0} ms/step)", s + 1, loss.exp(),
+    if args.has_flag("pipeline") {
+        let mut done = 0;
+        while done < cfg.steps {
+            let n = report_every.min(cfg.steps - done);
+            tr.train_pipelined(&(), n)?;
+            done += n;
+            let loss = tr.metrics.window_mean_loss(n);
+            info!("step {:>5}: loss {loss:.4} ppl {:.1} acc {:.3} \
+                   ({:.0} ms/step)", done, loss.exp(),
+                  tr.metrics.running_train_acc(),
                   tr.metrics.steady_mean_step_s(1) * 1e3);
+        }
+    } else {
+        for s in 0..cfg.steps {
+            let (loss, acc) = tr.step()?;
+            if (s + 1) % report_every == 0 {
+                info!("step {:>5}: loss {loss:.4} ppl {:.1} acc {acc:.3} \
+                       ({:.0} ms/step)", s + 1, loss.exp(),
+                      tr.metrics.steady_mean_step_s(1) * 1e3);
+            }
         }
     }
     let (xent, ppl, acc) = tr.evaluate(&corpus.valid)?;

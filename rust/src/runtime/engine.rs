@@ -125,9 +125,15 @@ impl HostTensor {
         }
     }
 
-    /// Single-copy conversion to an XLA literal.
+    /// Single-copy conversion to an XLA literal. Rank-0 tensors take the
+    /// dedicated scalar constructor so coordinator-assembled host steps
+    /// produce literals identical to the direct `lit_scalar_*` path.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
+            HostTensor::F32 { shape, data } if shape.is_empty() =>
+                Ok(crate::runtime::state::lit_scalar_f32(data[0])),
+            HostTensor::I32 { shape, data } if shape.is_empty() =>
+                Ok(crate::runtime::state::lit_scalar_i32(data[0])),
             HostTensor::F32 { shape, data } =>
                 crate::runtime::state::lit_f32(shape, data),
             HostTensor::I32 { shape, data } =>

@@ -3,7 +3,8 @@
 //!
 //! Flow: `Manifest::load` -> `Engine::load(name)` -> `Executable::run` with
 //! `HostTensor`s assembled by the coordinator. One compiled executable per
-//! (model, variant, dp) — compiled lazily by `coordinator::ExecutorPool`.
+//! (model, variant, dp) — compiled lazily, once per process, by the shared
+//! `coordinator::ExecutorCache`.
 
 pub mod engine;
 pub mod manifest;

@@ -119,6 +119,24 @@ impl TrainState {
         Ok((loss, correct))
     }
 
+    /// Run one eval-graph batch against a borrowed executable: inputs are
+    /// `params ++ extra` (extra = x, y in manifest order), outputs are the
+    /// (loss, correct) scalars. State is untouched — eval graphs are
+    /// dropout-free forward passes.
+    pub fn eval_step(&self, exe: &Executable, extra: &[xla::Literal])
+                     -> Result<(f64, f64)> {
+        let mut refs = self.param_refs();
+        for l in extra {
+            refs.push(l);
+        }
+        let out = exe.run_raw(&refs)?;
+        let loss = out[0].get_first_element::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))? as f64;
+        let correct = out[1].get_first_element::<f32>()
+            .map_err(|e| anyhow!("correct: {e:?}"))? as f64;
+        Ok((loss, correct))
+    }
+
     /// References to the parameter literals (eval-graph inputs).
     pub fn param_refs(&self) -> Vec<&xla::Literal> {
         self.params.iter().collect()

@@ -127,6 +127,19 @@ impl Rng {
         }
     }
 
+    /// Owned-buffer variant of [`Rng::fill_mask`]: allocate exactly `len`
+    /// entries and fill them without an intermediate zero-fill pass. MUST
+    /// consume the RNG stream identically to `fill_mask` (one `next_u64`
+    /// per entry) — the coordinator's seed-parity guarantees depend on it.
+    pub fn mask_vec(&mut self, keep: f64, len: usize) -> Vec<f32> {
+        let thresh = (keep * (1u64 << 24) as f64) as u64;
+        (0..len)
+            .map(|_| {
+                if (self.next_u64() >> 40) < thresh { 1.0 } else { 0.0 }
+            })
+            .collect()
+    }
+
     /// Fill a 0/1 f32 Bernoulli(keep) mask. This is the conventional-dropout
     /// hot path (one mask per layer per iteration, like Caffe's cuRAND
     /// fill); it consumes one u64 per 64 mask entries.
@@ -175,6 +188,20 @@ mod tests {
         let mut b = Rng::new(2);
         let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
         assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn mask_vec_matches_fill_mask_stream() {
+        // The owned-buffer variant must be draw-for-draw identical to
+        // fill_mask — trainer seed parity depends on it.
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        let mut filled = vec![0.0f32; 999];
+        a.fill_mask(0.3, &mut filled);
+        let owned = b.mask_vec(0.3, 999);
+        assert_eq!(filled, owned);
+        // Both generators end in the same state.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]

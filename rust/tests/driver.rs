@@ -1,0 +1,204 @@
+//! Generic-driver tests: the refactored `Trainer` must reproduce the
+//! sequential trainers' trajectories bit-for-bit on its double-buffered
+//! path, `warmup` must cover exactly `schedule.dp_combos()`, trainers
+//! sharing one `ExecutorCache` must compile each artifact once, and the
+//! lr-decay policy promoted from the LSTM trainer must fire generically.
+
+use std::collections::BTreeSet;
+
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::{ArchMeta, Engine, Manifest};
+
+fn setup() -> ExecutorCache {
+    let dir = approx_dropout::artifacts_dir();
+    let manifest = Manifest::load(&dir).expect("manifest (run make artifacts)");
+    let engine = Engine::cpu().expect("pjrt cpu");
+    ExecutorCache::new(engine, manifest)
+}
+
+fn lstm_trainer(cache: &ExecutorCache, variant: Variant, tokens: &[i32],
+                seed: u64) -> LstmTrainer {
+    let shared = variant != Variant::Conv;
+    let schedule =
+        Schedule::new(variant, &[0.5, 0.5], &[2], shared).unwrap();
+    LstmTrainer::new(cache, "lstmtest", schedule, tokens, 0.5, seed)
+        .unwrap()
+}
+
+/// Fixed-seed parity: the pipelined path consumes the front's RNG in the
+/// same sequential order as step-by-step training, so the loss/accuracy
+/// trajectories must match bit-for-bit — for both the pattern variant and
+/// the mask-generating conventional baseline.
+#[test]
+fn pipelined_matches_sequential_bit_for_bit() {
+    let cache = setup();
+    let corpus = Corpus::generate(64, 4000, 400, 400, 9);
+    for variant in [Variant::Conv, Variant::Rdp] {
+        let mut seq = lstm_trainer(&cache, variant, &corpus.train, 77);
+        seq.warmup().unwrap();
+        for _ in 0..12 {
+            seq.step().unwrap();
+        }
+        let mut pipe = lstm_trainer(&cache, variant, &corpus.train, 77);
+        pipe.warmup().unwrap();
+        pipe.train_pipelined(&(), 12).unwrap();
+        let a: Vec<(f64, f64)> =
+            seq.metrics.curve.iter().map(|p| (p.loss, p.acc)).collect();
+        let b: Vec<(f64, f64)> =
+            pipe.metrics.curve.iter().map(|p| (p.loss, p.acc)).collect();
+        assert_eq!(a.len(), 12);
+        assert_eq!(a, b,
+                   "{variant:?}: pipelined trajectory must be identical");
+    }
+}
+
+/// Mixing the two paths mid-run stays on the same trajectory: the staged
+/// assembly only moves work in time, never reorders RNG draws.
+#[test]
+fn mixed_sequential_and_pipelined_chunks_agree() {
+    let cache = setup();
+    let corpus = Corpus::generate(64, 4000, 400, 400, 10);
+    let mut seq = lstm_trainer(&cache, Variant::Rdp, &corpus.train, 5);
+    seq.warmup().unwrap();
+    for _ in 0..9 {
+        seq.step().unwrap();
+    }
+    let mut mixed = lstm_trainer(&cache, Variant::Rdp, &corpus.train, 5);
+    mixed.warmup().unwrap();
+    mixed.train_pipelined(&(), 4).unwrap();
+    for _ in 0..2 {
+        mixed.step().unwrap();
+    }
+    mixed.train_pipelined(&(), 3).unwrap();
+    let a: Vec<f64> = seq.metrics.curve.iter().map(|p| p.loss).collect();
+    let b: Vec<f64> = mixed.metrics.curve.iter().map(|p| p.loss).collect();
+    assert_eq!(a, b);
+}
+
+/// `warmup` pre-compiles one executable per `schedule.dp_combos()` entry,
+/// nothing more (the eval graph stays lazy).
+#[test]
+fn warmup_covers_exactly_dp_combos() {
+    let cache = setup();
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+    let combos = schedule.dp_combos();
+    assert!(!combos.is_empty());
+    let corpus = Corpus::generate(64, 3000, 300, 300, 1);
+    let mut tr = LstmTrainer::new(&cache, "lstmtest", schedule,
+                                  &corpus.train, 0.5, 1)
+        .unwrap();
+    assert_eq!(tr.executable_names().len(), combos.len());
+    tr.warmup().unwrap();
+    assert_eq!(cache.len(), combos.len(),
+               "warmup must compile exactly the dp combos");
+    assert_eq!(cache.compile_times_s().len(), combos.len());
+
+    // MLP warmup through the same shared cache: its (distinct) artifact
+    // names are added on top, and nothing recompiles.
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+    let mlp_combos = schedule.dp_combos().len();
+    let mut mlp = MlpTrainer::new(&cache, "mlptest", schedule, 64, 0.05, 2)
+        .unwrap();
+    mlp.warmup().unwrap();
+    assert_eq!(cache.len(), combos.len() + mlp_combos);
+}
+
+/// The acceptance scenario: a Conv baseline and an RDP variant running in
+/// one process through the shared cache compile each artifact exactly
+/// once, even across repeated trainer construction and live stepping.
+#[test]
+fn shared_cache_compiles_each_artifact_once() {
+    let cache = setup();
+    let corpus = Corpus::generate(64, 3000, 300, 300, 2);
+    let mut conv = lstm_trainer(&cache, Variant::Conv, &corpus.train, 3);
+    let mut rdp = lstm_trainer(&cache, Variant::Rdp, &corpus.train, 3);
+    conv.warmup().unwrap();
+    rdp.warmup().unwrap();
+    let compiled = cache.compile_times_s().len();
+    assert_eq!(compiled, cache.len());
+
+    // A second baseline/variant pair over the same artifacts, plus live
+    // steps on all four trainers: no recompilation.
+    let mut conv2 = lstm_trainer(&cache, Variant::Conv, &corpus.train, 4);
+    let mut rdp2 = lstm_trainer(&cache, Variant::Rdp, &corpus.train, 4);
+    conv2.warmup().unwrap();
+    rdp2.warmup().unwrap();
+    for _ in 0..3 {
+        conv.step().unwrap();
+        rdp.step().unwrap();
+        conv2.step().unwrap();
+        rdp2.step().unwrap();
+    }
+    assert_eq!(cache.compile_times_s().len(), compiled,
+               "warm artifacts must never recompile");
+    let unique: BTreeSet<String> = cache
+        .compile_times_s()
+        .into_iter()
+        .map(|(name, _)| name)
+        .collect();
+    assert_eq!(unique.len(), compiled, "each compile entry is distinct");
+}
+
+/// The lr-decay policy formerly hard-wired into the LSTM trainer now
+/// lives in the generic driver: after `decay_after` completed data
+/// epochs, lr shrinks by `lr_decay` per epoch.
+#[test]
+fn lr_decay_fires_on_epoch_boundaries() {
+    let cache = setup();
+    let (batch, seq) = match &cache.manifest().get("lstmtest_conv")
+        .unwrap().arch
+    {
+        ArchMeta::Lstm { batch, seq, .. } => (*batch, *seq),
+        _ => panic!("lstmtest is not an LSTM"),
+    };
+    // track_len = seq + 2 -> one BPTT window per epoch, so every couple
+    // of steps crosses an epoch boundary.
+    let corpus = Corpus::generate(64, batch * (seq + 2), 64, 64, 5);
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+    let mut tr = LstmTrainer::new(&cache, "lstmtest", schedule,
+                                  &corpus.train, 1.0, 6)
+        .unwrap();
+    tr.lr_decay = 0.5;
+    tr.decay_after = 0;
+    tr.warmup().unwrap();
+    let lr0 = tr.lr;
+    for _ in 0..4 {
+        tr.step().unwrap();
+    }
+    assert!(tr.epochs_done() > 0, "tiny corpus must wrap an epoch");
+    assert!(tr.lr < lr0, "lr must decay: {lr0} -> {}", tr.lr);
+}
+
+/// MLP parity run on the full-size artifact set when present (mirrors the
+/// integration test's skip condition for subset builds).
+#[test]
+fn mlp_pipelined_matches_sequential_when_artifacts_present() {
+    let cache = setup();
+    if cache.manifest().get("mlp1024x64_conv").is_err() {
+        return; // artifact subset build; skip
+    }
+    let data = MnistSyn::generate(256, 3);
+    let mk = |seed: u64| {
+        let schedule =
+            Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], true)
+                .unwrap();
+        MlpTrainer::new(&cache, "mlp1024x64", schedule, data.n, 0.01, seed)
+            .unwrap()
+    };
+    let mut seq = mk(11);
+    seq.warmup().unwrap();
+    for _ in 0..6 {
+        seq.step(&data).unwrap();
+    }
+    let mut pipe = mk(11);
+    pipe.warmup().unwrap();
+    pipe.train_pipelined(&data, 6).unwrap();
+    let a: Vec<f64> = seq.metrics.curve.iter().map(|p| p.loss).collect();
+    let b: Vec<f64> = pipe.metrics.curve.iter().map(|p| p.loss).collect();
+    assert_eq!(a, b);
+}

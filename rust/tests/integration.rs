@@ -3,19 +3,19 @@
 //! artifacts built by `make artifacts` (aot.py --set test is a subset of
 //! the default set).
 
-use approx_dropout::coordinator::{LstmTrainer, MlpTrainer, Schedule,
-                                  Variant};
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
                                      lit_scalar_i32};
 use approx_dropout::runtime::{Engine, Manifest, TrainState};
 use approx_dropout::util::rng::Rng;
 
-fn setup() -> (Engine, Manifest) {
+fn setup() -> ExecutorCache {
     let dir = approx_dropout::artifacts_dir();
     let manifest = Manifest::load(&dir).expect("manifest (run make artifacts)");
     let engine = Engine::cpu().expect("pjrt cpu");
-    (engine, manifest)
+    ExecutorCache::new(engine, manifest)
 }
 
 /// Host-side forward pass of the tiny MLP (32 -> 64 -> 64 -> 10) used to
@@ -66,10 +66,10 @@ fn host_mlp_eval(params: &[Vec<f32>], x: &[f32], y: &[i32], batch: usize)
 
 #[test]
 fn eval_graph_matches_host_forward() {
-    let (engine, manifest) = setup();
-    let exe = engine.load(&manifest, "mlptest_eval").unwrap();
+    let cache = setup();
+    let exe = cache.get("mlptest_eval").unwrap();
     let mut rng = Rng::new(7);
-    let meta = manifest.get("mlptest_conv").unwrap();
+    let meta = cache.manifest().get("mlptest_conv").unwrap();
     let state = TrainState::init(meta, &mut rng);
 
     let batch = 8;
@@ -96,16 +96,16 @@ fn eval_graph_matches_host_forward() {
 
 #[test]
 fn trainer_constructs_and_names_executables() {
-    let (engine, manifest) = setup();
+    let cache = setup();
     let schedule =
         Schedule::new(Variant::Conv, &[0.5, 0.5], &[1, 2], false).unwrap();
-    let tr = MlpTrainer::new(&engine, &manifest, "mlptest", schedule, 64,
-                             0.05, 11).unwrap();
+    let tr = MlpTrainer::new(&cache, "mlptest", schedule, 64, 0.05, 11)
+        .unwrap();
     assert_eq!(tr.executable_names(), vec!["mlptest_conv".to_string()]);
     let schedule =
         Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
-    let tr = MlpTrainer::new(&engine, &manifest, "mlptest", schedule, 64,
-                             0.05, 11).unwrap();
+    let tr = MlpTrainer::new(&cache, "mlptest", schedule, 64, 0.05, 11)
+        .unwrap();
     assert_eq!(tr.executable_names(), vec!["mlptest_rdp_2_2".to_string()]);
 }
 
@@ -129,10 +129,10 @@ fn run_step(state: &mut TrainState,
 
 #[test]
 fn rdp_step_loss_finite_and_state_changes() {
-    let (engine, manifest) = setup();
-    let exe = engine.load(&manifest, "mlptest_rdp_2_2").unwrap();
+    let cache = setup();
+    let exe = cache.get("mlptest_rdp_2_2").unwrap();
     let mut rng = Rng::new(21);
-    let meta = manifest.get("mlptest_rdp_2_2").unwrap();
+    let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
     let mut state = TrainState::init(meta, &mut rng);
     let before = state.param_f32(0).unwrap();
     let (loss, correct) = run_step(&mut state, &exe, &mut rng, (1, 0), 0.1);
@@ -147,10 +147,10 @@ fn rdp_step_loss_finite_and_state_changes() {
 fn rdp_only_kept_rows_update_in_w3() {
     // RDP drops entire rows of the next layer's weight matrix: the
     // gradient (hence the update) of dropped rows of w3 must be zero.
-    let (engine, manifest) = setup();
-    let exe = engine.load(&manifest, "mlptest_rdp_2_2").unwrap();
+    let cache = setup();
+    let exe = cache.get("mlptest_rdp_2_2").unwrap();
     let mut rng = Rng::new(33);
-    let meta = manifest.get("mlptest_rdp_2_2").unwrap();
+    let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
     let mut state = TrainState::init(meta, &mut rng);
     let w3_before = state.param_f32(4).unwrap();
 
@@ -179,10 +179,10 @@ fn rdp_only_kept_rows_update_in_w3() {
 
 #[test]
 fn tdp_step_runs() {
-    let (engine, manifest) = setup();
-    let exe = engine.load(&manifest, "mlptest_tdp_2_2").unwrap();
+    let cache = setup();
+    let exe = cache.get("mlptest_tdp_2_2").unwrap();
     let mut rng = Rng::new(5);
-    let meta = manifest.get("mlptest_tdp_2_2").unwrap();
+    let meta = cache.manifest().get("mlptest_tdp_2_2").unwrap();
     let mut state = TrainState::init(meta, &mut rng);
     let (loss, _) = run_step(&mut state, &exe, &mut rng, (1, 0), 0.1);
     assert!(loss.is_finite());
@@ -190,14 +190,14 @@ fn tdp_step_runs() {
 
 #[test]
 fn lstm_trainer_end_to_end_tiny() {
-    let (engine, manifest) = setup();
+    let cache = setup();
     let corpus = Corpus::generate(64, 4000, 400, 400, 9);
     for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
         let shared = variant != Variant::Conv;
         let schedule =
             Schedule::new(variant, &[0.5, 0.5], &[2], shared).unwrap();
-        let mut tr = LstmTrainer::new(&engine, &manifest, "lstmtest",
-                                      schedule, &corpus.train, 0.5, 13)
+        let mut tr = LstmTrainer::new(&cache, "lstmtest", schedule,
+                                      &corpus.train, 0.5, 13)
             .unwrap();
         tr.warmup().unwrap();
         let first = tr.step().unwrap().0;
@@ -221,15 +221,15 @@ fn mlp_trainer_learns_real_digits() {
     // via the tiny RDP artifact (covered above). Here: LSTM-free check
     // that a conv schedule trainer improves batch accuracy on digits with
     // the 2048 arch when available.
-    let (engine, manifest) = setup();
-    if manifest.get("mlp1024x64_conv").is_err() {
+    let cache = setup();
+    if cache.manifest().get("mlp1024x64_conv").is_err() {
         return; // artifact subset build; skip
     }
     let data = MnistSyn::generate(512, 3);
     let schedule =
         Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], true).unwrap();
-    let mut tr = MlpTrainer::new(&engine, &manifest, "mlp1024x64", schedule,
-                                 data.n, 0.01, 7).unwrap();
+    let mut tr = MlpTrainer::new(&cache, "mlp1024x64", schedule, data.n,
+                                 0.01, 7).unwrap();
     tr.warmup().unwrap();
     let mut first_loss = 0.0;
     let mut last_loss = 0.0;
@@ -249,13 +249,13 @@ fn mlp_trainer_learns_real_digits() {
 
 #[test]
 fn deterministic_given_seed() {
-    let (engine, manifest) = setup();
+    let cache = setup();
     let corpus = Corpus::generate(64, 3000, 300, 300, 17);
     let run = |seed: u64| -> Vec<f64> {
         let schedule =
             Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
-        let mut tr = LstmTrainer::new(&engine, &manifest, "lstmtest",
-                                      schedule, &corpus.train, 0.5, seed)
+        let mut tr = LstmTrainer::new(&cache, "lstmtest", schedule,
+                                      &corpus.train, 0.5, seed)
             .unwrap();
         (0..5).map(|_| tr.step().unwrap().0).collect()
     };
