@@ -11,7 +11,7 @@
 use approx_dropout::coordinator::{speedup, ExecutorCache, LstmTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::Corpus;
-use approx_dropout::runtime::{Engine, Manifest};
+use approx_dropout::runtime::Manifest;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
+    let cache = ExecutorCache::from_env(manifest)?;
     println!("== LSTM LM: {tag}, {steps} steps, rate {rate} ==");
     let corpus = Corpus::generate(vocab, 300_000, 30_000, 30_000, 11);
     println!("unigram baseline perplexity: {:.1}",

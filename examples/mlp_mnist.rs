@@ -12,7 +12,7 @@
 use approx_dropout::coordinator::{speedup, ExecutorCache, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::MnistSyn;
-use approx_dropout::runtime::{Engine, Manifest};
+use approx_dropout::runtime::Manifest;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
     // One shared cache across all three variants: the eval graph (and any
     // overlapping train artifacts) compile exactly once for the whole run.
-    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
+    let cache = ExecutorCache::from_env(manifest)?;
     println!("== E2E: {tag} on MNIST-syn ({n_train} train / {n_test} \
               test), {steps} steps, rate {rate} ==");
     let (train, test) = MnistSyn::train_test(n_train, n_test, 7);

@@ -1,25 +1,27 @@
 //! Quickstart: the whole stack in ~60 lines.
 //!
-//! Loads the tiny `mlptest` artifacts, runs Algorithm 1 for a 0.5 target
-//! rate, trains a few dozen iterations with the Row-based Dropout Pattern,
-//! and evaluates. Run with:
+//! Runs Algorithm 1 for a 0.5 target rate, trains a few dozen iterations
+//! with the Row-based Dropout Pattern through the backend abstraction,
+//! and evaluates. With no artifacts directory this runs hermetically on
+//! the pure-Rust reference backend; after `make artifacts` (and a
+//! `--features pjrt` build) the same code drives PJRT:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart            # reference
+//! AD_BACKEND=pjrt cargo run --release --features pjrt --example quickstart
 //! ```
 
-use approx_dropout::coordinator::{Schedule, Variant};
-use approx_dropout::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
-                                     lit_scalar_i32};
-use approx_dropout::runtime::{Engine, Manifest, TrainState};
+use approx_dropout::coordinator::{ExecutorCache, Schedule, Variant};
+use approx_dropout::runtime::{HostTensor, TrainState, Value};
 use approx_dropout::search::{self, SearchConfig};
 use approx_dropout::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the artifact manifest and bring up the PJRT CPU client.
-    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let engine = Engine::cpu()?;
-    println!("platform: {}", engine.platform());
+    // 1. Load the artifact manifest (or the built-in synthetic registry)
+    //    and pick the execution backend from AD_BACKEND.
+    let manifest = approx_dropout::manifest_or_builtin()?;
+    let cache = ExecutorCache::from_env(manifest)?;
+    println!("backend: {}", cache.backend().name());
 
     // 2. Algorithm 1: distribution K over divisors for target rate 0.5.
     let result = search::search(0.5, &[1, 2], &SearchConfig::default());
@@ -27,10 +29,11 @@ fn main() -> anyhow::Result<()> {
              result.distribution.probs, result.achieved_rate);
 
     // 3. Compile the RDP executable for dp = (2, 2) and init state.
-    let exe = engine.load(&manifest, "mlptest_rdp_2_2")?;
+    let exe = cache.get("mlptest_rdp_2_2")?;
+    let backend = cache.backend().clone();
     let mut rng = Rng::new(42);
-    let mut state = TrainState::init(manifest.get("mlptest_rdp_2_2")?,
-                                     &mut rng);
+    let mut state = TrainState::init(cache.manifest().get("mlptest_rdp_2_2")?,
+                                     &mut rng, backend.as_ref())?;
 
     // 4. Train 50 iterations on random data, sampling a bias per step.
     let schedule = Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true)?;
@@ -40,16 +43,16 @@ fn main() -> anyhow::Result<()> {
         let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
         let y: Vec<i32> =
             (0..batch).map(|i| ((i + step) % 10) as i32).collect();
-        let tail = vec![
-            lit_f32(&[batch, 32], &x)?,
-            lit_i32(&[batch], &y)?,
-            lit_scalar_i32(choices[0].b0 as i32),
-            lit_scalar_i32(choices[1].b0 as i32),
-            lit_scalar_f32(2.0), // 1/(1-p) for p = 0.5
-            lit_scalar_f32(2.0),
-            lit_scalar_f32(0.05),
+        let tail: Vec<Value> = vec![
+            backend.ingest(HostTensor::f32(&[batch, 32], x))?,
+            backend.ingest(HostTensor::i32(&[batch], y))?,
+            backend.ingest(HostTensor::scalar_i32(choices[0].b0 as i32))?,
+            backend.ingest(HostTensor::scalar_i32(choices[1].b0 as i32))?,
+            backend.ingest(HostTensor::scalar_f32(2.0))?, // 1/(1-p), p=0.5
+            backend.ingest(HostTensor::scalar_f32(2.0))?,
+            backend.ingest(HostTensor::scalar_f32(0.05))?, // lr
         ];
-        let (loss, _) = state.step(&exe, &tail)?;
+        let (loss, _) = state.step(exe.as_ref(), &tail)?;
         if step % 10 == 0 {
             println!("step {step:>3}: loss {loss:.4} \
                       (pattern b0 = {}, {})",

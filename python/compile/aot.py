@@ -111,7 +111,11 @@ def mlp_artifacts(arch: model.MlpArch, dp_pairs, tag=None) -> list:
     meta = {"model": "mlp",
             "arch": {"n_in": arch.n_in, "hidden": list(arch.hidden),
                      "n_out": arch.n_out, "batch": arch.batch},
-            "sites": 2}
+            "sites": 2,
+            # Per-arch tile edge: the TDP semantics (and the reference
+            # backend's interpretation of them) depend on it; tiny test
+            # archs override the global model.TILE.
+            "tile": arch.tile}
     out = []
 
     ins, outs = _train_io(
@@ -155,7 +159,8 @@ def lstm_artifacts(arch: model.LstmArch, dps, variants=("conv", "eval",
     meta = {"model": "lstm",
             "arch": {"vocab": arch.vocab, "hidden": H, "layers": L,
                      "seq": arch.seq, "batch": arch.batch},
-            "sites": L}
+            "sites": L,
+            "tile": arch.tile}
     out = []
 
     if "conv" in variants:

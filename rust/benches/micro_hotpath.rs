@@ -8,9 +8,7 @@ use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, Schedule,
                                   Variant};
 use approx_dropout::data::Corpus;
 use approx_dropout::patterns::MaskGen;
-use approx_dropout::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
-                                     lit_scalar_i32};
-use approx_dropout::runtime::{Engine, Manifest, TrainState};
+use approx_dropout::runtime::{HostTensor, TrainState, Value};
 use approx_dropout::search::{self, SearchConfig};
 use approx_dropout::util::rng::Rng;
 
@@ -43,40 +41,45 @@ fn main() -> anyhow::Result<()> {
     table.row(&["Algorithm 1 search".into(), fmt_time(r.median_s),
                 format!("{:.1}/s", r.per_sec()), "one-time, init".into()]);
 
-    // 4. HostTensor -> literal marshalling (per-step upload prep) via a
-    //    full tiny-artifact execute, isolating coordinator overhead.
-    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
+    // 4. HostTensor -> backend-value marshalling (per-step upload prep)
+    //    via a full tiny-artifact execute, isolating coordinator overhead.
+    let cache = ExecutorCache::from_env(approx_dropout::manifest_or_builtin()?)?;
+    let backend = cache.backend().clone();
     let exe = cache.get("mlptest_rdp_2_2")?;
     let mut rng3 = Rng::new(3);
     let meta = cache.manifest().get("mlptest_rdp_2_2")?;
-    let mut state = TrainState::init(meta, &mut rng3);
+    let mut state = TrainState::init(meta, &mut rng3, backend.as_ref())?;
     let x: Vec<f32> = (0..8 * 32).map(|_| rng3.next_f32()).collect();
     let y: Vec<i32> = (0..8).map(|_| rng3.next_usize(10) as i32).collect();
+    // ingest (owned-buffer upload) mirrors the coordinator's dispatch
+    // path: the one clone per tensor below is the same copy the fronts'
+    // batchers perform per step.
     let r = bench("tiny_train_step", 3, 30, || {
-        let tail = vec![
-            lit_f32(&[8, 32], &x).unwrap(),
-            lit_i32(&[8], &y).unwrap(),
-            lit_scalar_i32(0),
-            lit_scalar_i32(1),
-            lit_scalar_f32(2.0),
-            lit_scalar_f32(2.0),
-            lit_scalar_f32(0.05),
+        let tail: Vec<Value> = vec![
+            backend.ingest(HostTensor::f32(&[8, 32], x.clone())).unwrap(),
+            backend.ingest(HostTensor::i32(&[8], y.clone())).unwrap(),
+            backend.ingest(HostTensor::scalar_i32(0)).unwrap(),
+            backend.ingest(HostTensor::scalar_i32(1)).unwrap(),
+            backend.ingest(HostTensor::scalar_f32(2.0)).unwrap(),
+            backend.ingest(HostTensor::scalar_f32(2.0)).unwrap(),
+            backend.ingest(HostTensor::scalar_f32(0.05)).unwrap(),
         ];
-        state.step(&exe, &tail).unwrap()
+        state.step(exe.as_ref(), &tail).unwrap()
     });
     table.row(&["tiny mlp train step e2e".into(), fmt_time(r.median_s),
                 format!("{:.0}/s", r.per_sec()),
-                "PJRT floor: marshal+exec+absorb".into()]);
+                format!("{} floor: marshal+exec+absorb", backend.name())]);
 
     // 5. Eval-graph execute (params only, no state absorb).
     let ev = cache.get("mlptest_eval")?;
     let r = bench("tiny_eval", 3, 30, || {
-        let x_l = lit_f32(&[8, 32], &x).unwrap();
-        let y_l = lit_i32(&[8], &y).unwrap();
+        let x_v = backend
+            .ingest(HostTensor::f32(&[8, 32], x.clone()))
+            .unwrap();
+        let y_v = backend.ingest(HostTensor::i32(&[8], y.clone())).unwrap();
         let mut refs = state.param_refs();
-        refs.push(&x_l);
-        refs.push(&y_l);
+        refs.push(&x_v);
+        refs.push(&y_v);
         ev.run_raw(&refs).unwrap().len()
     });
     table.row(&["tiny mlp eval".into(), fmt_time(r.median_s),

@@ -16,13 +16,15 @@
 //!                          stay sequential so per-step numbers remain
 //!                          comparable to older runs)
 //! * `AD_BENCH_FULL`        set to 1 to use paper-scale LSTM (H=1536)
+//! * `AD_BACKEND`           pjrt|reference (reference interprets on host
+//!                          — timing columns then measure the
+//!                          interpreter, not the paper's hardware claim)
 
 use anyhow::Result;
 
 use crate::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer, Schedule,
                          Variant};
 use crate::data::{Corpus, MnistSyn};
-use crate::runtime::{Engine, Manifest};
 
 pub fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
@@ -37,9 +39,9 @@ pub struct BenchCtx {
 
 impl BenchCtx {
     pub fn new() -> Result<BenchCtx> {
-        let manifest = Manifest::load(&crate::artifacts_dir())?;
+        let manifest = crate::manifest_or_builtin()?;
         Ok(BenchCtx {
-            cache: ExecutorCache::new(Engine::cpu()?, manifest),
+            cache: ExecutorCache::from_env(manifest)?,
             timed_steps: env_usize("AD_BENCH_STEPS", 6),
             train_steps: env_usize("AD_BENCH_TRAIN_STEPS", 0),
             pipeline: env_usize("AD_BENCH_PIPELINE", 0) == 1,

@@ -20,10 +20,11 @@
 //! ([`Trainer::train_pipelined`]): a scoped worker thread runs the front's
 //! assembly (pattern sampling, batch marshalling, Bernoulli mask fills —
 //! plain `Send` host buffers only) one iteration ahead while the main
-//! thread converts to XLA literals and executes. The worker draws from the
-//! front's RNG in exactly the sequential order, so the pipelined path is
-//! bit-for-bit identical to [`Trainer::step_with`] loops — only wall-clock
-//! changes. XLA literals are never created off the main thread.
+//! thread uploads through the backend and executes. The worker draws from
+//! the front's RNG in exactly the sequential order, so the pipelined path
+//! is bit-for-bit identical to [`Trainer::step_with`] loops — only
+//! wall-clock changes. Backend values (e.g. XLA literals) are never
+//! created off the main thread.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,8 +32,7 @@ use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::patterns::Choice;
-use crate::runtime::state::lit_scalar_f32;
-use crate::runtime::{HostTensor, TrainState};
+use crate::runtime::{HostTensor, TrainState, Value};
 use crate::util::Timer;
 
 /// One fully assembled training step, host-side: everything except the
@@ -118,26 +118,30 @@ struct LoopCtx<'a> {
 }
 
 impl LoopCtx<'_> {
-    /// Convert the staged host tensors to literals, append lr, execute,
-    /// absorb state, record metrics, and apply the epoch lr-decay policy.
+    /// Upload the staged host tensors through the backend, append lr,
+    /// execute, absorb state, record metrics (including the dispatched
+    /// artifact name), and apply the epoch lr-decay policy.
     /// Returns (loss, accuracy-in-[0,1]).
     fn dispatch(&mut self, input: StepInput, timer: Timer) -> Result<(f64, f64)> {
-        let mut tail = Vec::with_capacity(input.tail.len() + 1);
-        for t in &input.tail {
-            tail.push(t.to_literal()?);
+        let StepInput { name, tail, examples, epoch_boundary } = input;
+        let backend = self.cache.backend();
+        let mut vals: Vec<Value> = Vec::with_capacity(tail.len() + 1);
+        for t in tail {
+            vals.push(backend.ingest(t)?);
         }
-        tail.push(lit_scalar_f32(*self.lr));
-        let exe = self.cache.get(&input.name)?;
-        let (loss, correct) = self.state.step(&exe, &tail)?;
-        self.metrics.record(self.state.step, loss, correct, input.examples,
+        vals.push(backend.ingest(HostTensor::scalar_f32(*self.lr))?);
+        let exe = self.cache.get(&name)?;
+        let (loss, correct) = self.state.step(exe.as_ref(), &vals)?;
+        self.metrics.record(self.state.step, loss, correct, examples,
                             timer.elapsed_s());
-        if input.epoch_boundary {
+        self.metrics.dispatched.push(name);
+        if epoch_boundary {
             *self.epochs_done += 1;
             if *self.epochs_done > self.decay_after {
                 *self.lr *= self.lr_decay;
             }
         }
-        Ok((loss, correct / input.examples as f64))
+        Ok((loss, correct / examples as f64))
     }
 }
 
@@ -220,8 +224,8 @@ impl<F: ModelFront> Trainer<F> {
     }
 
     /// One full training iteration; returns (loss, accuracy in [0,1]).
-    /// Hot path: host buffers are converted to XLA literals once and the
-    /// parameter state stays literal-resident (see runtime::state).
+    /// Hot path: host buffers are uploaded through the backend once and
+    /// the parameter state stays backend-resident (see runtime::state).
     pub fn step_with(&mut self, data: &F::Data) -> Result<(f64, f64)> {
         let timer = Timer::start();
         let input = self.front.assemble(data)?;
@@ -314,11 +318,12 @@ impl<F: ModelFront> Trainer<F> {
         let mut n = 0.0f64;
         for bi in 0..num_batches {
             let b = self.front.eval_batch(data, bi)?;
-            let lits: Vec<xla::Literal> = b
-                .iter()
-                .map(HostTensor::to_literal)
+            let vals: Vec<Value> = b
+                .into_iter()
+                .map(|t| self.cache.backend().ingest(t))
                 .collect::<Result<_>>()?;
-            let (loss, correct) = self.state.eval_step(&exe, &lits)?;
+            let (loss, correct) = self.state.eval_step(exe.as_ref(),
+                                                       &vals)?;
             total_loss += loss;
             total_correct += correct;
             n += 1.0;

@@ -136,7 +136,8 @@ impl Trainer<LstmFront> {
                   schedule.sites(), layers);
         }
         let mut rng = Rng::new(seed);
-        let state = TrainState::init(conv, &mut rng);
+        let state = TrainState::init(conv, &mut rng,
+                                     cache.backend().as_ref())?;
         let front = LstmFront {
             tag: tag.to_string(),
             schedule,

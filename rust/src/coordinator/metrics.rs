@@ -16,8 +16,14 @@ pub struct CurvePoint {
 pub struct TrainMetrics {
     pub curve: Vec<CurvePoint>,
     /// Per-iteration wall-clock seconds (full step: pattern sampling, mask
-    /// or index generation, data marshalling, PJRT execute, state update).
+    /// or index generation, data marshalling, backend execute, state
+    /// update).
     pub step_times_s: Vec<f64>,
+    /// Artifact name dispatched at each recorded step, in order — the
+    /// observable the paper's pattern->executable mapping produces. Tests
+    /// pin that this sequence is seed-deterministic and identical across
+    /// backends.
+    pub dispatched: Vec<String>,
     pub total_correct: f64,
     pub total_examples: f64,
 }

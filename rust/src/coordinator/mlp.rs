@@ -126,7 +126,8 @@ impl Trainer<MlpFront> {
                   schedule.sites(), hidden.len());
         }
         let mut rng = Rng::new(seed);
-        let state = TrainState::init(conv, &mut rng);
+        let state = TrainState::init(conv, &mut rng,
+                                     cache.backend().as_ref())?;
         let front = MlpFront {
             tag: tag.to_string(),
             schedule,

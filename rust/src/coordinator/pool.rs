@@ -1,4 +1,4 @@
-//! Process-wide executor cache: one compiled PJRT executable per
+//! Process-wide executor cache: one compiled executor per
 //! (model, variant, dp) artifact, compiled lazily on first use and shared
 //! by every trainer in the process. This mirrors the paper's setup where
 //! the pattern distribution (and hence the set of matrix shapes) is fixed
@@ -7,10 +7,12 @@
 //! paper's headline measurement) compiles each artifact exactly once no
 //! matter how many trainers run.
 //!
-//! The handle is cheap to clone (`Arc` all the way down); clones share the
-//! underlying map. Lookups take a read lock on the hit path and upgrade to
-//! a write lock only to compile, using the `HashMap` entry API so a miss
-//! costs a single hash probe under the write lock.
+//! The cache is generic over the execution [`Backend`]: PJRT compiles HLO
+//! artifacts, the reference backend builds interpreters from the manifest
+//! alone. The handle is cheap to clone (`Arc` all the way down); clones
+//! share the underlying map. Lookups take a read lock on the hit path and
+//! upgrade to a write lock only to compile, using the `HashMap` entry API
+//! so a miss costs a single hash probe under the write lock.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -18,44 +20,60 @@ use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::Result;
 
-use crate::runtime::{Engine, Executable, Manifest};
+use crate::runtime::{backend_from_env, Backend, Executor, Manifest,
+                     ReferenceBackend};
 use crate::util::Timer;
 
 #[derive(Clone)]
 pub struct ExecutorCache {
-    engine: Arc<Engine>,
+    backend: Arc<dyn Backend>,
     manifest: Arc<Manifest>,
-    exes: Arc<RwLock<HashMap<String, Arc<Executable>>>>,
+    exes: Arc<RwLock<HashMap<String, Arc<dyn Executor>>>>,
     /// Compile wall-clock per artifact (diagnostics / EXPERIMENTS Perf).
     compile_log: Arc<Mutex<Vec<(String, f64)>>>,
 }
 
 impl ExecutorCache {
-    pub fn new(engine: Engine, manifest: Manifest) -> Self {
-        Self::from_arcs(Arc::new(engine), Arc::new(manifest))
-    }
-
-    pub fn from_arcs(engine: Arc<Engine>, manifest: Arc<Manifest>) -> Self {
+    pub fn new(backend: Arc<dyn Backend>, manifest: Manifest) -> Self {
         ExecutorCache {
-            engine,
-            manifest,
+            backend,
+            manifest: Arc::new(manifest),
             exes: Arc::new(RwLock::new(HashMap::new())),
             compile_log: Arc::new(Mutex::new(Vec::new())),
         }
     }
 
-    pub fn engine(&self) -> &Engine {
-        &self.engine
+    /// Cache over the pure-Rust reference backend (hermetic: no
+    /// artifacts, no PJRT).
+    pub fn reference(manifest: Manifest) -> Self {
+        Self::new(Arc::new(ReferenceBackend::new()), manifest)
+    }
+
+    /// Cache over the PJRT CPU client.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt_cpu(manifest: Manifest) -> Result<Self> {
+        Ok(Self::new(Arc::new(crate::runtime::PjrtBackend::cpu()?),
+                     manifest))
+    }
+
+    /// Backend selected by `AD_BACKEND` (reference|pjrt); defaults to
+    /// PJRT when compiled in, reference otherwise.
+    pub fn from_env(manifest: Manifest) -> Result<Self> {
+        Ok(Self::new(backend_from_env()?, manifest))
+    }
+
+    pub fn backend(&self) -> &Arc<dyn Backend> {
+        &self.backend
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Fetch (compiling if needed) the executable for `name`. The returned
+    /// Fetch (compiling if needed) the executor for `name`. The returned
     /// `Arc` is independent of the cache's locks, so callers hold no borrow
     /// across the subsequent execute.
-    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Executor>> {
         if let Some(exe) = self.exes.read().expect("cache lock").get(name) {
             return Ok(Arc::clone(exe));
         }
@@ -70,9 +88,10 @@ impl ExecutorCache {
             Entry::Occupied(e) => Ok(Arc::clone(e.get())),
             Entry::Vacant(slot) => {
                 let t = Timer::start();
-                let exe = Arc::new(self.engine.load(&self.manifest, name)?);
+                let exe = self.backend.compile(&self.manifest, name)?;
                 let dt = t.elapsed_s();
-                crate::debug!("compiled {name} in {dt:.2}s");
+                crate::debug!("compiled {name} in {dt:.2}s \
+                               ({})", self.backend.name());
                 self.compile_log
                     .lock()
                     .expect("compile log lock")
@@ -91,7 +110,7 @@ impl ExecutorCache {
         Ok(())
     }
 
-    /// Number of compiled executables currently cached.
+    /// Number of compiled executors currently cached.
     pub fn len(&self) -> usize {
         self.exes.read().expect("cache lock").len()
     }
@@ -115,5 +134,27 @@ impl ExecutorCache {
             .iter()
             .map(|(_, s)| s)
             .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_cache_compiles_once_and_counts() {
+        let cache = ExecutorCache::reference(Manifest::builtin_test());
+        assert!(cache.is_empty());
+        let a = cache.get("mlptest_rdp_2_2").unwrap();
+        let b = cache.get("mlptest_rdp_2_2").unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the same executor");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.compile_times_s().len(), 1);
+        assert!(cache.total_compile_s() >= 0.0);
+        assert!(cache.get("nonexistent").is_err());
+        // Clones share the map.
+        let clone = cache.clone();
+        clone.get("mlptest_eval").unwrap();
+        assert_eq!(cache.len(), 2);
     }
 }

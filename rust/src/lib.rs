@@ -37,3 +37,30 @@ pub fn artifacts_dir() -> std::path::PathBuf {
                 .join("artifacts")
         })
 }
+
+/// The artifacts manifest when one exists, else the built-in synthetic
+/// registry ([`runtime::Manifest::builtin_test`]) — which only the
+/// reference backend can execute. When the effective backend is PJRT
+/// (per `AD_BACKEND` / the `pjrt` feature default) a missing manifest
+/// stays a loud fail-fast error: falling back would only defer it to an
+/// opaque HLO-file-not-found at first compile.
+pub fn manifest_or_builtin() -> anyhow::Result<runtime::Manifest> {
+    let dir = artifacts_dir();
+    match runtime::Manifest::load(&dir) {
+        Ok(m) => Ok(m),
+        Err(e) => {
+            // Same selection rule as backend_from_env — and a typo'd
+            // AD_BACKEND surfaces as itself here, not as a
+            // missing-artifacts complaint.
+            if !runtime::backend::env_selects_reference()? {
+                return Err(e.context(
+                    "no artifacts manifest and the PJRT backend needs \
+                     one (run `make artifacts`, or set \
+                     AD_BACKEND=reference for the built-in registry)"));
+            }
+            crate::info!("no artifacts manifest at {} ({e:#}); using the \
+                          built-in synthetic registry", dir.display());
+            Ok(runtime::Manifest::builtin_test())
+        }
+    }
+}

@@ -9,7 +9,6 @@ use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::info;
-use approx_dropout::runtime::{Engine, Manifest};
 use approx_dropout::search::{self, SearchConfig};
 use approx_dropout::util::argparse::Args;
 use approx_dropout::util::log;
@@ -35,7 +34,10 @@ COMMANDS:
   info         List artifacts in the manifest [--filter substr]
   help         This message
 
-ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace)";
+ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
+     AD_BACKEND (pjrt|reference; reference = pure-Rust interpreter, runs
+     with no artifacts — e.g. train-mlp --tag mlpsyn on the built-in
+     synthetic registry)";
 
 fn main() -> Result<()> {
     log::init_from_env();
@@ -84,8 +86,9 @@ fn config_from_args(args: &Args, default_rates: &[f64]) -> Result<TrainConfig> {
 fn train_mlp(args: &Args) -> Result<()> {
     let cfg = config_from_args(args, &[0.5, 0.5])?;
     info!("config: {cfg:?}");
-    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
-    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
+    let manifest = approx_dropout::manifest_or_builtin()?;
+    let cache = ExecutorCache::from_env(manifest)?;
+    info!("backend: {}", cache.backend().name());
     let schedule = Schedule::new(cfg.variant, &cfg.rates, &cfg.support,
                                  cfg.shared_dp)?;
     if cfg.variant != Variant::Conv {
@@ -138,7 +141,7 @@ fn train_lstm(args: &Args) -> Result<()> {
     }
     let n_tokens = args.usize_or("tokens", 200_000);
     info!("config: {cfg:?}");
-    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    let manifest = approx_dropout::manifest_or_builtin()?;
     // Infer layer count (sites) and vocab from the conv artifact.
     let conv = manifest.get(&format!("{}_conv", cfg.tag))?;
     let sites = conv.sites;
@@ -150,7 +153,8 @@ fn train_lstm(args: &Args) -> Result<()> {
         let r = cfg.rates[0];
         cfg.rates = vec![r; sites];
     }
-    let cache = ExecutorCache::new(Engine::cpu()?, manifest);
+    let cache = ExecutorCache::from_env(manifest)?;
+    info!("backend: {}", cache.backend().name());
     // LSTM artifacts cover equal-dp combos only -> shared dp sampling.
     let schedule = Schedule::new(cfg.variant, &cfg.rates, &cfg.support,
                                  cfg.variant != Variant::Conv)?;
@@ -218,7 +222,7 @@ fn run_search(args: &Args) -> Result<()> {
 }
 
 fn info_cmd(args: &Args) -> Result<()> {
-    let manifest = Manifest::load(&approx_dropout::artifacts_dir())?;
+    let manifest = approx_dropout::manifest_or_builtin()?;
     let filter = args.str_or("filter", "");
     println!("{:<34} {:>7} {:>6} {:>8} {:>9}", "artifact", "variant",
              "dp", "inputs", "exists");

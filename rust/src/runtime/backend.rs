@@ -1,0 +1,291 @@
+//! Execution-backend abstraction: the [`Backend`]/[`Executor`] trait pair
+//! plus the [`Value`] currency that moves between steps.
+//!
+//! The coordinator never talks to PJRT (or any other engine) directly: it
+//! uploads [`HostTensor`]s through a [`Backend`], dispatches them to an
+//! [`Executor`] obtained by compile-by-name from the manifest, and keeps
+//! the returned [`Value`]s resident for the next step. Two backends ship:
+//!
+//! * **PJRT** (`runtime::engine`, behind the `pjrt` cargo feature) — loads
+//!   AOT HLO-text artifacts and keeps state as XLA literals end-to-end.
+//! * **Reference** (`runtime::reference`, always available) — a
+//!   manifest-driven pure-Rust f32 interpreter of the train/eval step
+//!   semantics. No artifacts, no Python, no PJRT: the whole
+//!   sample→dispatch→step→metrics loop is testable hermetically.
+//!
+//! Contract shared by all backends (pinned by `rust/tests/hermetic.rs`):
+//! identical manifest calling convention (inputs `params ++ momenta ++ x,
+//! y, extras, lr`; outputs `params' ++ momenta' ++ loss, correct`),
+//! identical artifact-name dispatch (the coordinator's RNG never sees the
+//! backend), and deterministic results for a fixed seed. Numerics may
+//! differ in float rounding only (summation order is backend-specific).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta};
+
+/// Host-side tensor: shape + dtype-tagged storage. The unit the
+/// coordinator assembles and hands to [`Backend::upload`].
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } =>
+                shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f64> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 =>
+                Ok(data[0] as f64),
+            HostTensor::I32 { data, .. } if data.len() == 1 =>
+                Ok(data[0] as f64),
+            _ => bail!("tensor is not a scalar"),
+        }
+    }
+
+    /// Validate against a manifest tensor description.
+    pub fn check(&self, meta: &TensorMeta) -> Result<()> {
+        if self.shape() != meta.shape.as_slice() {
+            bail!("tensor {}: shape {:?} != manifest {:?}", meta.name,
+                  self.shape(), meta.shape);
+        }
+        let ok = matches!(
+            (self, meta.dtype),
+            (HostTensor::F32 { .. }, Dtype::F32)
+                | (HostTensor::I32 { .. }, Dtype::I32)
+        );
+        if !ok {
+            bail!("tensor {}: dtype mismatch", meta.name);
+        }
+        Ok(())
+    }
+}
+
+/// A backend-resident tensor value — the currency [`crate::runtime::TrainState`]
+/// and the dispatch path move between steps. The reference backend keeps
+/// values in host memory; the PJRT backend keeps XLA literals resident so
+/// a step's outputs feed the next step without host round-trips.
+pub enum Value {
+    Host(HostTensor),
+    #[cfg(feature = "pjrt")]
+    Pjrt(xla::Literal),
+}
+
+impl Value {
+    /// Borrow the host tensor; errors on device-resident values (the
+    /// reference executor calls this on its inputs).
+    pub fn as_host(&self) -> Result<&HostTensor> {
+        match self {
+            Value::Host(t) => Ok(t),
+            #[cfg(feature = "pjrt")]
+            Value::Pjrt(_) =>
+                bail!("value is a PJRT literal, not a host tensor"),
+        }
+    }
+
+    /// First element as f64 (loss/correct scalars).
+    pub fn scalar_f64(&self) -> Result<f64> {
+        match self {
+            Value::Host(t) => t.scalar(),
+            #[cfg(feature = "pjrt")]
+            Value::Pjrt(l) => l
+                .get_first_element::<f32>()
+                .map(|v| v as f64)
+                .map_err(|e| anyhow::anyhow!("scalar from literal: {e:?}")),
+        }
+    }
+
+    /// Copy the value's f32 data back to host (tests / inspection).
+    pub fn to_f32(&self) -> Result<Vec<f32>> {
+        match self {
+            Value::Host(t) => Ok(t.as_f32()?.to_vec()),
+            #[cfg(feature = "pjrt")]
+            Value::Pjrt(l) => l
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("literal to_vec f32: {e:?}")),
+        }
+    }
+}
+
+/// One compiled (or interpreted) artifact: executes steps with inputs in
+/// manifest order and returns outputs in manifest order.
+pub trait Executor {
+    fn meta(&self) -> &ArtifactMeta;
+
+    /// Execute one step. This is the hot path: inputs are whatever
+    /// [`Value`] form the backend keeps resident, outputs likewise.
+    fn run_raw(&self, inputs: &[&Value]) -> Result<Vec<Value>>;
+}
+
+/// An execution engine: compile-by-name from the manifest plus tensor
+/// upload/download. One per process; cheap handles are shared through
+/// [`crate::coordinator::ExecutorCache`].
+pub trait Backend {
+    /// Short name for logs/diagnostics ("pjrt" | "reference").
+    fn name(&self) -> &'static str;
+
+    /// Compile (or build the interpreter for) one manifest artifact.
+    fn compile(&self, manifest: &Manifest, name: &str)
+               -> Result<Arc<dyn Executor>>;
+
+    /// Move a host tensor into the backend's resident value form.
+    fn upload(&self, t: &HostTensor) -> Result<Value>;
+
+    /// Owned-buffer upload: backends that keep values host-side override
+    /// this to take the buffer without a copy.
+    fn ingest(&self, t: HostTensor) -> Result<Value> {
+        self.upload(&t)
+    }
+
+    /// Copy a value back into host form.
+    fn download(&self, v: &Value, meta: &TensorMeta) -> Result<HostTensor> {
+        let _ = meta; // used by the pjrt arm only
+        match v {
+            Value::Host(t) => Ok(t.clone()),
+            #[cfg(feature = "pjrt")]
+            Value::Pjrt(l) => crate::runtime::engine::host_from_literal(
+                l, meta),
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_backend() -> Result<Arc<dyn Backend>> {
+    Ok(Arc::new(crate::runtime::engine::PjrtBackend::cpu()?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_backend() -> Result<Arc<dyn Backend>> {
+    bail!("AD_BACKEND=pjrt, but this build was compiled without the \
+           `pjrt` cargo feature (cargo build --features pjrt)")
+}
+
+/// Whether the `AD_BACKEND` selection resolves to the reference backend
+/// — the single source of truth for the env convention, shared by
+/// [`backend_from_env`] and `crate::manifest_or_builtin` (which must
+/// decide *before* constructing anything). Errors on unknown values so
+/// typos surface as themselves, not as a downstream missing-artifacts
+/// message.
+pub fn env_selects_reference() -> Result<bool> {
+    match std::env::var("AD_BACKEND").as_deref() {
+        Ok("reference") | Ok("ref") => Ok(true),
+        Ok("pjrt") => Ok(false),
+        Ok(other) => bail!("unknown AD_BACKEND '{other}' \
+                            (expected reference|pjrt)"),
+        Err(_) => Ok(cfg!(not(feature = "pjrt"))),
+    }
+}
+
+/// Select the backend from the `AD_BACKEND` env var: `reference` forces
+/// the pure-Rust interpreter, `pjrt` forces PJRT (error when the feature
+/// is compiled out), unset picks PJRT when available, else reference.
+pub fn backend_from_env() -> Result<Arc<dyn Backend>> {
+    if env_selects_reference()? {
+        Ok(Arc::new(crate::runtime::reference::ReferenceBackend::new()))
+    } else {
+        pjrt_backend()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shapes_and_scalars() {
+        let t = HostTensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.len(), 6);
+        assert!(!t.is_empty());
+        assert!(t.as_f32().is_ok());
+        assert!(t.as_i32().is_err());
+        assert!(t.scalar().is_err());
+        let s = HostTensor::scalar_f32(2.5);
+        assert_eq!(s.shape(), &[] as &[usize]);
+        assert_eq!(s.scalar().unwrap(), 2.5);
+        assert_eq!(HostTensor::scalar_i32(-3).scalar().unwrap(), -3.0);
+    }
+
+    #[test]
+    fn check_validates_shape_and_dtype() {
+        use crate::runtime::manifest::Kind;
+        let meta = TensorMeta {
+            name: "w".into(),
+            shape: vec![4],
+            dtype: Dtype::F32,
+            kind: Kind::Param,
+        };
+        assert!(HostTensor::f32(&[4], vec![0.0; 4]).check(&meta).is_ok());
+        assert!(HostTensor::f32(&[5], vec![0.0; 5]).check(&meta).is_err());
+        assert!(HostTensor::i32(&[4], vec![0; 4]).check(&meta).is_err());
+    }
+
+    #[test]
+    fn value_scalar_and_download_roundtrip() {
+        let v = Value::Host(HostTensor::scalar_f32(1.5));
+        assert_eq!(v.scalar_f64().unwrap(), 1.5);
+        let v = Value::Host(HostTensor::f32(&[3], vec![1.0, 2.0, 3.0]));
+        assert_eq!(v.to_f32().unwrap(), vec![1.0, 2.0, 3.0]);
+        assert!(v.as_host().is_ok());
+    }
+
+    #[test]
+    fn env_selection_reference() {
+        // Not a full env test (env vars are process-global); just pin that
+        // the explicit constructor path works.
+        let b = crate::runtime::reference::ReferenceBackend::new();
+        assert_eq!(b.name(), "reference");
+    }
+}

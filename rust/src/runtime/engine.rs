@@ -1,5 +1,6 @@
-//! PJRT engine: load HLO-text artifacts, compile them on the CPU client,
-//! and execute train/eval steps with host-side tensor state.
+//! PJRT execution backend (cargo feature `pjrt`): load HLO-text
+//! artifacts, compile them on the CPU client, and execute train/eval
+//! steps with XLA literals kept resident between steps.
 //!
 //! Design notes:
 //! * Interchange is HLO text (`HloModuleProto::from_text_file`) — see
@@ -10,13 +11,17 @@
 //!   therefore live host-side between steps; upload cost is identical for
 //!   the baseline and the pattern variants, so speedup ratios are
 //!   unaffected (EXPERIMENTS.md section Perf quantifies this).
+//! * The [`Backend`]/[`Executor`] traits (`runtime::backend`) wrap all of
+//!   this: the coordinator sees [`Value`]s, and `Value::Pjrt` keeps the
+//!   zero-copy literal path of the old engine intact.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::runtime::manifest::{ArtifactMeta, Dtype, Manifest,
-                               TensorMeta};
+use crate::runtime::backend::{Backend, Executor, HostTensor, Value};
+use crate::runtime::manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta};
 
 /// Owns the PJRT client. One per process.
 pub struct Engine {
@@ -56,122 +61,102 @@ impl Engine {
     }
 }
 
-/// Host-side tensor: shape + dtype-tagged storage. The unit of state the
-/// coordinator moves in and out of executables.
-#[derive(Clone, Debug)]
-pub enum HostTensor {
-    F32 { shape: Vec<usize>, data: Vec<f32> },
-    I32 { shape: Vec<usize>, data: Vec<i32> },
+/// The PJRT [`Backend`]: compile-by-name over the artifacts directory,
+/// literal upload/download.
+pub struct PjrtBackend {
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    pub fn cpu() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { engine: Engine::cpu()? })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str)
+               -> Result<Arc<dyn Executor>> {
+        Ok(Arc::new(self.engine.load(manifest, name)?))
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<Value> {
+        Ok(Value::Pjrt(t.to_literal()?))
+    }
+}
+
+fn f32_bytes(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    }
+}
+
+/// Build an f32 literal from host data in one copy.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, shape, f32_bytes(data))
+        .map_err(|e| anyhow!("literal f32 {shape:?}: {e:?}"))
+}
+
+/// Build an i32 literal from host data in one copy.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("literal i32 {shape:?}: {e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
 }
 
 impl HostTensor {
-    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
-        HostTensor::F32 { shape: shape.to_vec(), data }
-    }
-
-    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
-        assert_eq!(shape.iter().product::<usize>(), data.len());
-        HostTensor::I32 { shape: shape.to_vec(), data }
-    }
-
-    pub fn scalar_f32(v: f32) -> Self {
-        HostTensor::F32 { shape: vec![], data: vec![v] }
-    }
-
-    pub fn scalar_i32(v: i32) -> Self {
-        HostTensor::I32 { shape: vec![], data: vec![v] }
-    }
-
-    pub fn shape(&self) -> &[usize] {
-        match self {
-            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } =>
-                shape,
-        }
-    }
-
-    pub fn len(&self) -> usize {
-        match self {
-            HostTensor::F32 { data, .. } => data.len(),
-            HostTensor::I32 { data, .. } => data.len(),
-        }
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            HostTensor::F32 { data, .. } => Ok(data),
-            _ => bail!("tensor is not f32"),
-        }
-    }
-
-    pub fn as_i32(&self) -> Result<&[i32]> {
-        match self {
-            HostTensor::I32 { data, .. } => Ok(data),
-            _ => bail!("tensor is not i32"),
-        }
-    }
-
-    pub fn scalar(&self) -> Result<f64> {
-        match self {
-            HostTensor::F32 { data, .. } if data.len() == 1 =>
-                Ok(data[0] as f64),
-            HostTensor::I32 { data, .. } if data.len() == 1 =>
-                Ok(data[0] as f64),
-            _ => bail!("tensor is not a scalar"),
-        }
-    }
-
     /// Single-copy conversion to an XLA literal. Rank-0 tensors take the
     /// dedicated scalar constructor so coordinator-assembled host steps
     /// produce literals identical to the direct `lit_scalar_*` path.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             HostTensor::F32 { shape, data } if shape.is_empty() =>
-                Ok(crate::runtime::state::lit_scalar_f32(data[0])),
+                Ok(lit_scalar_f32(data[0])),
             HostTensor::I32 { shape, data } if shape.is_empty() =>
-                Ok(crate::runtime::state::lit_scalar_i32(data[0])),
-            HostTensor::F32 { shape, data } =>
-                crate::runtime::state::lit_f32(shape, data),
-            HostTensor::I32 { shape, data } =>
-                crate::runtime::state::lit_i32(shape, data),
+                Ok(lit_scalar_i32(data[0])),
+            HostTensor::F32 { shape, data } => lit_f32(shape, data),
+            HostTensor::I32 { shape, data } => lit_i32(shape, data),
         }
     }
+}
 
-    fn from_literal(lit: &xla::Literal, meta: &TensorMeta)
-                    -> Result<HostTensor> {
-        match meta.dtype {
-            Dtype::F32 => Ok(HostTensor::F32 {
-                shape: meta.shape.clone(),
-                data: lit.to_vec::<f32>()
-                    .map_err(|e| anyhow!("to_vec f32 {}: {e:?}", meta.name))?,
-            }),
-            Dtype::I32 => Ok(HostTensor::I32 {
-                shape: meta.shape.clone(),
-                data: lit.to_vec::<i32>()
-                    .map_err(|e| anyhow!("to_vec i32 {}: {e:?}", meta.name))?,
-            }),
-        }
-    }
-
-    /// Validate against a manifest tensor description.
-    pub fn check(&self, meta: &TensorMeta) -> Result<()> {
-        if self.shape() != meta.shape.as_slice() {
-            bail!("tensor {}: shape {:?} != manifest {:?}", meta.name,
-                  self.shape(), meta.shape);
-        }
-        let ok = matches!(
-            (self, meta.dtype),
-            (HostTensor::F32 { .. }, Dtype::F32)
-                | (HostTensor::I32 { .. }, Dtype::I32)
-        );
-        if !ok {
-            bail!("tensor {}: dtype mismatch", meta.name);
-        }
-        Ok(())
+/// Copy a literal back into a host tensor described by `meta`.
+pub fn host_from_literal(lit: &xla::Literal, meta: &TensorMeta)
+                         -> Result<HostTensor> {
+    match meta.dtype {
+        Dtype::F32 => Ok(HostTensor::F32 {
+            shape: meta.shape.clone(),
+            data: lit.to_vec::<f32>()
+                .map_err(|e| anyhow!("to_vec f32 {}: {e:?}", meta.name))?,
+        }),
+        Dtype::I32 => Ok(HostTensor::I32 {
+            shape: meta.shape.clone(),
+            data: lit.to_vec::<i32>()
+                .map_err(|e| anyhow!("to_vec i32 {}: {e:?}", meta.name))?,
+        }),
     }
 }
 
@@ -186,8 +171,8 @@ impl Executable {
     /// the decomposed output literals. This is the hot path: no per-tensor
     /// host copies beyond PJRT's own transfers (`decompose_tuple` is
     /// zero-copy).
-    pub fn run_raw(&self, inputs: &[&xla::Literal])
-                   -> Result<Vec<xla::Literal>> {
+    pub fn run_raw_literals(&self, inputs: &[&xla::Literal])
+                            -> Result<Vec<xla::Literal>> {
         if inputs.len() != self.meta.inputs.len() {
             bail!("{}: {} inputs given, manifest says {}", self.meta.name,
                   inputs.len(), self.meta.inputs.len());
@@ -223,11 +208,40 @@ impl Executable {
             .map(|t| t.to_literal())
             .collect::<Result<_>>()?;
         let refs: Vec<&xla::Literal> = literals.iter().collect();
-        let parts = self.run_raw(&refs)?;
+        let parts = self.run_raw_literals(&refs)?;
         parts
             .iter()
             .zip(&self.meta.outputs)
-            .map(|(lit, m)| HostTensor::from_literal(lit, m))
+            .map(|(lit, m)| host_from_literal(lit, m))
             .collect()
+    }
+}
+
+impl Executor for Executable {
+    fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    fn run_raw(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
+        // Host-resident inputs (the dispatch tail on a cold path) are
+        // converted once here; literal-resident state passes straight
+        // through with no copy.
+        let converted: Vec<Option<xla::Literal>> = inputs
+            .iter()
+            .map(|v| match v {
+                Value::Host(t) => t.to_literal().map(Some),
+                Value::Pjrt(_) => Ok(None),
+            })
+            .collect::<Result<_>>()?;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        for (v, c) in inputs.iter().zip(converted.iter()) {
+            match (*v, c) {
+                (Value::Pjrt(l), _) => refs.push(l),
+                (Value::Host(_), Some(l)) => refs.push(l),
+                (Value::Host(_), None) => unreachable!("converted above"),
+            }
+        }
+        let parts = self.run_raw_literals(&refs)?;
+        Ok(parts.into_iter().map(Value::Pjrt).collect())
     }
 }

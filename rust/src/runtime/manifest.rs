@@ -1,7 +1,13 @@
 //! `artifacts/manifest.json` loader — the contract between the AOT python
-//! side and the Rust runtime. Every executable's exact input/output tensor
-//! order, shapes, dtypes and semantic kinds live here; the coordinator is
-//! generic over variants and architectures because of it.
+//! side and the Rust runtime — plus in-Rust synthetic manifest builders.
+//!
+//! Every executable's exact input/output tensor order, shapes, dtypes and
+//! semantic kinds live here; the coordinator is generic over variants and
+//! architectures because of it. The synthetic builders
+//! ([`Manifest::builtin_test`], [`mlp_artifacts`], [`lstm_artifacts`])
+//! produce byte-for-byte the same schema `aot.py` writes, so the
+//! reference backend can execute without any artifacts directory and the
+//! PJRT backend dispatches identically against the generated files.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -88,6 +94,10 @@ pub struct ArtifactMeta {
     pub variant: String, // "conv" | "eval" | "rdp" | "tdp"
     pub dp: Vec<usize>,
     pub sites: usize,
+    /// Tile edge for the TDP pattern of this architecture (the paper's
+    /// 32, our 128 at scale, 16 for the tiny test archs). Falls back to
+    /// the manifest-global tile when an artifact entry omits it.
+    pub tile: usize,
     pub arch: ArchMeta,
     pub inputs: Vec<TensorMeta>,
     pub outputs: Vec<TensorMeta>,
@@ -170,6 +180,8 @@ impl Manifest {
         let root = json::parse(&text)
             .map_err(|e| anyhow!("{}: {e}", path.display()))?;
 
+        let global_tile =
+            root.get("tile").and_then(Json::as_usize).unwrap_or(32);
         let mut artifacts = BTreeMap::new();
         for a in root.get("artifacts").and_then(Json::as_arr)
             .ok_or_else(|| anyhow!("manifest missing artifacts"))?
@@ -188,6 +200,8 @@ impl Manifest {
                 dp: a.get("dp").and_then(Json::as_arr).unwrap_or(&[])
                     .iter().filter_map(Json::as_usize).collect(),
                 sites: a.get("sites").and_then(Json::as_usize).unwrap_or(0),
+                tile: a.get("tile").and_then(Json::as_usize)
+                    .unwrap_or(global_tile),
                 arch: arch_meta(&model,
                                 a.get("arch")
                                     .ok_or_else(|| anyhow!("missing arch"))?)?,
@@ -208,9 +222,54 @@ impl Manifest {
                 .unwrap_or(&[]).iter().filter_map(Json::as_usize).collect(),
             momentum: root.get("momentum").and_then(Json::as_f64)
                 .unwrap_or(0.9),
-            tile: root.get("tile").and_then(Json::as_usize).unwrap_or(32),
+            tile: global_tile,
             artifacts,
         })
+    }
+
+    /// Assemble a manifest from in-Rust artifact metas (no files on disk;
+    /// `hlo_path` then points at nonexistent files, which only the PJRT
+    /// backend cares about).
+    pub fn synthetic(artifacts: Vec<ArtifactMeta>) -> Manifest {
+        let mut map = BTreeMap::new();
+        for a in artifacts {
+            map.insert(a.name.clone(), a);
+        }
+        Manifest {
+            dir: PathBuf::new(),
+            dp_support: vec![1, 2, 4, 8],
+            momentum: 0.9,
+            tile: 128,
+            artifacts: map,
+        }
+    }
+
+    /// The built-in hermetic registry: the `aot.py --set test` artifacts
+    /// (`mlptest`, `lstmtest` — identical schema, so dispatch/naming
+    /// agree with generated artifacts) plus two synthetic-data-sized
+    /// archs (`mlpsyn` takes the 784-pixel MnistSyn images, `lstmsyn` a
+    /// 64-token corpus) that only exist for artifact-free end-to-end
+    /// training on the reference backend.
+    pub fn builtin_test() -> Manifest {
+        let mut arts = mlp_artifacts(
+            &MlpArchSpec { tag: "mlptest".into(), n_in: 32,
+                           hidden: [64, 64], n_out: 10, batch: 8,
+                           tile: 16 },
+            &[(2, 2)]);
+        arts.extend(lstm_artifacts(
+            &LstmArchSpec { tag: "lstmtest".into(), vocab: 64, hidden: 32,
+                            layers: 2, seq: 5, batch: 4, tile: 16 },
+            &[2]));
+        arts.extend(mlp_artifacts(
+            &MlpArchSpec { tag: "mlpsyn".into(), n_in: 784,
+                           hidden: [64, 64], n_out: 10, batch: 16,
+                           tile: 16 },
+            &[(1, 1), (1, 2), (2, 1), (2, 2)]));
+        arts.extend(lstm_artifacts(
+            &LstmArchSpec { tag: "lstmsyn".into(), vocab: 64, hidden: 32,
+                            layers: 2, seq: 8, batch: 8, tile: 16 },
+            &[1, 2]));
+        Manifest::synthetic(arts)
     }
 
     pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
@@ -237,26 +296,228 @@ impl Manifest {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Synthetic artifact builders (mirror aot.py's registry functions)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+pub struct MlpArchSpec {
+    pub tag: String,
+    pub n_in: usize,
+    pub hidden: [usize; 2],
+    pub n_out: usize,
+    pub batch: usize,
+    pub tile: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LstmArchSpec {
+    pub tag: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub tile: usize,
+}
+
+fn t_f32(name: &str, shape: &[usize], kind: Kind) -> TensorMeta {
+    TensorMeta { name: name.into(), shape: shape.to_vec(),
+                 dtype: Dtype::F32, kind }
+}
+
+fn t_i32(name: &str, shape: &[usize], kind: Kind) -> TensorMeta {
+    TensorMeta { name: name.into(), shape: shape.to_vec(),
+                 dtype: Dtype::I32, kind }
+}
+
+/// Standard train-step input/output lists (mirrors aot.py `_train_io`):
+/// inputs `params ++ m_<param> momenta ++ x, y ++ extras ++ lr`; outputs
+/// `params ++ momenta ++ loss, correct`.
+fn train_io(param_specs: &[(String, Vec<usize>)], x: TensorMeta,
+            y: TensorMeta, extras: Vec<TensorMeta>)
+            -> (Vec<TensorMeta>, Vec<TensorMeta>) {
+    let params: Vec<TensorMeta> = param_specs
+        .iter()
+        .map(|(n, s)| t_f32(n, s, Kind::Param))
+        .collect();
+    let momenta: Vec<TensorMeta> = param_specs
+        .iter()
+        .map(|(n, s)| t_f32(&format!("m_{n}"), s, Kind::Momentum))
+        .collect();
+    let mut inputs = params.clone();
+    inputs.extend(momenta.clone());
+    inputs.push(x);
+    inputs.push(y);
+    inputs.extend(extras);
+    inputs.push(t_f32("lr", &[], Kind::Lr));
+    let mut outputs = params;
+    outputs.extend(momenta);
+    outputs.push(t_f32("loss", &[], Kind::Loss));
+    outputs.push(t_f32("correct", &[], Kind::Correct));
+    (inputs, outputs)
+}
+
+fn eval_io(param_specs: &[(String, Vec<usize>)], x: TensorMeta,
+           y: TensorMeta) -> (Vec<TensorMeta>, Vec<TensorMeta>) {
+    let mut inputs: Vec<TensorMeta> = param_specs
+        .iter()
+        .map(|(n, s)| t_f32(n, s, Kind::Param))
+        .collect();
+    inputs.push(x);
+    inputs.push(y);
+    let outputs = vec![t_f32("loss", &[], Kind::Loss),
+                       t_f32("correct", &[], Kind::Correct)];
+    (inputs, outputs)
+}
+
+fn b0_spec(i: usize) -> TensorMeta {
+    t_i32(&format!("b0_{i}"), &[], Kind::Bias)
+}
+
+/// The full artifact family of one MLP arch: `_conv`, `_eval`, and one
+/// `_rdp_<dp1>_<dp2>` + `_tdp_<dp1>_<dp2>` pair per dp pair (mirrors
+/// aot.py `mlp_artifacts`).
+pub fn mlp_artifacts(spec: &MlpArchSpec, dp_pairs: &[(usize, usize)])
+                     -> Vec<ArtifactMeta> {
+    let [h1, h2] = spec.hidden;
+    let param_specs: Vec<(String, Vec<usize>)> = vec![
+        ("w1".into(), vec![spec.n_in, h1]),
+        ("b1".into(), vec![h1]),
+        ("w2".into(), vec![h1, h2]),
+        ("b2".into(), vec![h2]),
+        ("w3".into(), vec![h2, spec.n_out]),
+        ("b3".into(), vec![spec.n_out]),
+    ];
+    let xs = || t_f32("x", &[spec.batch, spec.n_in], Kind::X);
+    let ys = || t_i32("y", &[spec.batch], Kind::Y);
+    let arch = ArchMeta::Mlp { n_in: spec.n_in, hidden: vec![h1, h2],
+                               n_out: spec.n_out, batch: spec.batch };
+    let base = |name: String, variant: &str, dp: Vec<usize>,
+                io: (Vec<TensorMeta>, Vec<TensorMeta>)| ArtifactMeta {
+        file: format!("{name}.hlo.txt"),
+        name,
+        model: "mlp".into(),
+        variant: variant.into(),
+        dp,
+        sites: 2,
+        tile: spec.tile,
+        arch: arch.clone(),
+        inputs: io.0,
+        outputs: io.1,
+    };
+
+    let mut out = Vec::new();
+    let conv_extras = vec![
+        t_f32("mask0", &[spec.batch, h1], Kind::Mask),
+        t_f32("mask1", &[spec.batch, h2], Kind::Mask),
+        t_f32("scale0", &[], Kind::Scale),
+        t_f32("scale1", &[], Kind::Scale),
+    ];
+    out.push(base(format!("{}_conv", spec.tag), "conv", vec![],
+                  train_io(&param_specs, xs(), ys(), conv_extras)));
+    out.push(base(format!("{}_eval", spec.tag), "eval", vec![],
+                  eval_io(&param_specs, xs(), ys())));
+    for &(dp1, dp2) in dp_pairs {
+        let extras = || vec![b0_spec(0), b0_spec(1),
+                             t_f32("scale0", &[], Kind::Scale),
+                             t_f32("scale1", &[], Kind::Scale)];
+        out.push(base(format!("{}_rdp_{dp1}_{dp2}", spec.tag), "rdp",
+                      vec![dp1, dp2],
+                      train_io(&param_specs, xs(), ys(), extras())));
+        out.push(base(format!("{}_tdp_{dp1}_{dp2}", spec.tag), "tdp",
+                      vec![dp1, dp2],
+                      train_io(&param_specs, xs(), ys(), extras())));
+    }
+    out
+}
+
+/// The artifact family of one LSTM arch: `_conv`, `_eval`, and one
+/// `_rdp_<dp>` + `_tdp_<dp>` pair per divisor (equal-dp combos only;
+/// mirrors aot.py `lstm_artifacts`).
+pub fn lstm_artifacts(spec: &LstmArchSpec, dps: &[usize])
+                      -> Vec<ArtifactMeta> {
+    let (h, l) = (spec.hidden, spec.layers);
+    let mut param_specs: Vec<(String, Vec<usize>)> =
+        vec![("emb".into(), vec![spec.vocab, h])];
+    for li in 0..l {
+        param_specs.push((format!("wx{li}"), vec![h, 4 * h]));
+        param_specs.push((format!("wh{li}"), vec![h, 4 * h]));
+        param_specs.push((format!("bg{li}"), vec![4 * h]));
+    }
+    param_specs.push(("wsoft".into(), vec![h, spec.vocab]));
+    param_specs.push(("bsoft".into(), vec![spec.vocab]));
+    let xs = || t_i32("x", &[spec.batch, spec.seq], Kind::X);
+    let ys = || t_i32("y", &[spec.batch, spec.seq], Kind::Y);
+    let arch = ArchMeta::Lstm { vocab: spec.vocab, hidden: h, layers: l,
+                                seq: spec.seq, batch: spec.batch };
+    let base = |name: String, variant: &str, dp: Vec<usize>,
+                io: (Vec<TensorMeta>, Vec<TensorMeta>)| ArtifactMeta {
+        file: format!("{name}.hlo.txt"),
+        name,
+        model: "lstm".into(),
+        variant: variant.into(),
+        dp,
+        sites: l,
+        tile: spec.tile,
+        arch: arch.clone(),
+        inputs: io.0,
+        outputs: io.1,
+    };
+
+    let mut out = Vec::new();
+    let mut conv_extras = Vec::new();
+    for i in 0..l {
+        conv_extras.push(
+            t_f32(&format!("mask{i}"), &[spec.batch, h], Kind::Mask));
+    }
+    for i in 0..l {
+        conv_extras.push(t_f32(&format!("scale{i}"), &[], Kind::Scale));
+    }
+    out.push(base(format!("{}_conv", spec.tag), "conv", vec![],
+                  train_io(&param_specs, xs(), ys(), conv_extras)));
+    out.push(base(format!("{}_eval", spec.tag), "eval", vec![],
+                  eval_io(&param_specs, xs(), ys())));
+    for &dp in dps {
+        let extras = || {
+            let mut e: Vec<TensorMeta> = (0..l).map(b0_spec).collect();
+            for i in 0..l {
+                e.push(t_f32(&format!("scale{i}"), &[], Kind::Scale));
+            }
+            e
+        };
+        out.push(base(format!("{}_rdp_{dp}", spec.tag), "rdp",
+                      vec![dp; l],
+                      train_io(&param_specs, xs(), ys(), extras())));
+        out.push(base(format!("{}_tdp_{dp}", spec.tag), "tdp",
+                      vec![dp; l],
+                      train_io(&param_specs, xs(), ys(), extras())));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     #[test]
-    fn loads_real_manifest() {
-        let m = Manifest::load(&artifacts_dir()).expect("manifest");
-        assert!(!m.artifacts.is_empty());
+    fn builtin_covers_test_registry() {
+        let m = Manifest::builtin_test();
+        for name in ["mlptest_conv", "mlptest_eval", "mlptest_rdp_2_2",
+                     "mlptest_tdp_2_2", "lstmtest_conv", "lstmtest_eval",
+                     "lstmtest_rdp_2", "lstmtest_tdp_2", "mlpsyn_conv",
+                     "mlpsyn_rdp_1_2", "lstmsyn_rdp_1", "lstmsyn_tdp_2"] {
+            assert!(m.get(name).is_ok(), "missing {name}");
+        }
         assert_eq!(m.tile, 128);
+        assert_eq!(m.get("mlptest_conv").unwrap().tile, 16);
         assert!((m.momentum - 0.9).abs() < 1e-9);
         assert!(m.dp_support.contains(&2));
     }
 
     #[test]
     fn tiny_mlp_entry_shape() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let m = Manifest::builtin_test();
         let a = m.get("mlptest_conv").unwrap();
         assert_eq!(a.model, "mlp");
         assert_eq!(a.variant, "conv");
@@ -269,17 +530,37 @@ mod tests {
         assert_eq!(w1.name, "w1");
         assert_eq!(w1.shape, vec![32, 64]);
         assert_eq!(w1.kind, Kind::Param);
+        assert_eq!(a.param_metas().len(), 6);
+        assert_eq!(a.batch(), 8);
     }
 
     #[test]
     fn rdp_entry_has_bias_inputs() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let m = Manifest::builtin_test();
         let a = m.get("mlptest_rdp_2_2").unwrap();
         assert_eq!(a.dp, vec![2, 2]);
         let biases: Vec<_> =
             a.inputs.iter().filter(|t| t.kind == Kind::Bias).collect();
         assert_eq!(biases.len(), 2);
         assert_eq!(biases[0].dtype, Dtype::I32);
+    }
+
+    #[test]
+    fn lstm_entry_layout_matches_aot() {
+        let m = Manifest::builtin_test();
+        let a = m.get("lstmtest_rdp_2").unwrap();
+        // 9 params (emb + 3x2 cells + wsoft + bsoft), same momenta,
+        // x, y, 2 b0 + 2 scales, lr.
+        assert_eq!(a.n_params(), 9);
+        assert_eq!(a.inputs.len(), 9 + 9 + 2 + 4 + 1);
+        assert_eq!(a.inputs[0].name, "emb");
+        assert_eq!(a.inputs[1].name, "wx0");
+        assert_eq!(a.inputs[9].name, "m_emb");
+        assert_eq!(a.dp, vec![2, 2]);
+        assert_eq!(a.sites, 2);
+        let eval = m.get("lstmtest_eval").unwrap();
+        assert_eq!(eval.inputs.len(), 9 + 2);
+        assert_eq!(eval.outputs.len(), 2);
     }
 
     #[test]
@@ -291,7 +572,39 @@ mod tests {
 
     #[test]
     fn missing_artifact_is_error() {
-        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let m = Manifest::builtin_test();
         assert!(m.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn json_loader_roundtrip() {
+        // Pin the JSON-file path hermetically: write a one-artifact
+        // manifest to a temp dir and load it back.
+        let dir = std::env::temp_dir().join(format!(
+            "ad-manifest-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let text = r#"{
+ "version": 1,
+ "dp_support": [1, 2],
+ "momentum": 0.9,
+ "tile": 128,
+ "artifacts": [
+  {"name": "m_conv", "file": "m_conv.hlo.txt", "model": "mlp",
+   "variant": "conv", "dp": [], "sites": 2, "tile": 16,
+   "arch": {"n_in": 32, "hidden": [64, 64], "n_out": 10, "batch": 8},
+   "inputs": [{"name": "w1", "shape": [32, 64], "dtype": "f32",
+               "kind": "param"}],
+   "outputs": [{"name": "loss", "shape": [], "dtype": "f32",
+                "kind": "loss"}]}
+ ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("m_conv").unwrap();
+        assert_eq!(a.tile, 16, "per-artifact tile overrides global");
+        assert_eq!(m.tile, 128);
+        assert_eq!(a.inputs[0].shape, vec![32, 64]);
+        assert_eq!(m.hlo_path(a), dir.join("m_conv.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

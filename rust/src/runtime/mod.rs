@@ -1,16 +1,27 @@
-//! Runtime layer: PJRT client wrapper (engine), the artifact manifest
-//! contract, and host-side training state.
+//! Runtime layer: the execution-backend abstraction (backend), its two
+//! implementations (PJRT engine behind the `pjrt` feature, pure-Rust
+//! reference interpreter), the artifact manifest contract, and the
+//! backend-resident training state.
 //!
-//! Flow: `Manifest::load` -> `Engine::load(name)` -> `Executable::run` with
-//! `HostTensor`s assembled by the coordinator. One compiled executable per
-//! (model, variant, dp) — compiled lazily, once per process, by the shared
-//! `coordinator::ExecutorCache`.
+//! Flow: `Manifest::load` (or `Manifest::builtin_test`) ->
+//! `Backend::compile(name)` -> `Executor::run_raw` with values uploaded
+//! from coordinator-assembled `HostTensor`s. One executor per
+//! (model, variant, dp) — compiled lazily, once per process, by the
+//! shared `coordinator::ExecutorCache`.
 
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod reference;
 pub mod state;
 
-pub use engine::{Engine, Executable, HostTensor};
-pub use manifest::{ArchMeta, ArtifactMeta, Dtype, Kind, Manifest,
+pub use backend::{backend_from_env, env_selects_reference, Backend,
+                  Executor, HostTensor, Value};
+#[cfg(feature = "pjrt")]
+pub use engine::{Engine, Executable, PjrtBackend};
+pub use manifest::{lstm_artifacts, mlp_artifacts, ArchMeta, ArtifactMeta,
+                   Dtype, Kind, LstmArchSpec, Manifest, MlpArchSpec,
                    TensorMeta};
+pub use reference::ReferenceBackend;
 pub use state::TrainState;

@@ -1,59 +1,27 @@
-//! Training state: parameters + momenta held as **XLA literals** end-to-end.
+//! Training state: parameters + momenta held as backend-resident
+//! [`Value`]s end-to-end.
 //!
 //! Perf-critical design (EXPERIMENTS.md section Perf): a train step's
-//! outputs come back as one tuple literal; `decompose_tuple` is zero-copy,
-//! and feeding the same literals back as the next step's inputs avoids any
-//! host-side reshuffling of the (possibly hundreds of MB) parameter state.
-//! The only per-step copies left are PJRT's own host->device transfers.
+//! outputs come back as backend values; feeding the same values back as
+//! the next step's inputs avoids any host-side reshuffling of the
+//! (possibly hundreds of MB) parameter state. On PJRT those values are
+//! XLA literals (`decompose_tuple` is zero-copy), so the only per-step
+//! copies left are PJRT's own host->device transfers; on the reference
+//! backend they are plain host buffers.
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-use crate::runtime::engine::Executable;
+use crate::runtime::backend::{Backend, Executor, HostTensor, Value};
 use crate::runtime::manifest::{ArtifactMeta, Kind, TensorMeta};
 use crate::util::rng::Rng;
 
 pub struct TrainState {
-    pub params: Vec<xla::Literal>,
-    pub momenta: Vec<xla::Literal>,
+    pub params: Vec<Value>,
+    pub momenta: Vec<Value>,
     /// Manifest metadata of the params (name/shape), same order.
     pub metas: Vec<TensorMeta>,
     /// Cumulative training iterations applied.
     pub step: u64,
-}
-
-fn f32_bytes(data: &[f32]) -> &[u8] {
-    unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                   data.len() * 4)
-    }
-}
-
-/// Build an f32 literal from host data in one copy.
-pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
-    xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32, shape, f32_bytes(data))
-        .map_err(|e| anyhow!("literal f32 {shape:?}: {e:?}"))
-}
-
-/// Build an i32 literal from host data in one copy.
-pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
-    assert_eq!(shape.iter().product::<usize>(), data.len());
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                   data.len() * 4)
-    };
-    xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32, shape, bytes)
-        .map_err(|e| anyhow!("literal i32 {shape:?}: {e:?}"))
-}
-
-pub fn lit_scalar_f32(v: f32) -> xla::Literal {
-    xla::Literal::scalar(v)
-}
-
-pub fn lit_scalar_i32(v: i32) -> xla::Literal {
-    xla::Literal::scalar(v)
 }
 
 impl TrainState {
@@ -61,7 +29,13 @@ impl TrainState {
     /// * 2-D weights: Glorot-uniform  U(+-sqrt(6 / (fan_in + fan_out)))
     /// * embeddings (name "emb"): U(-0.1, 0.1) (Zaremba-style)
     /// * 1-D biases: zeros; momenta: zeros.
-    pub fn init(meta: &ArtifactMeta, rng: &mut Rng) -> TrainState {
+    ///
+    /// The RNG draw order is identical for every backend (draws happen on
+    /// host buffers before upload), so a fixed seed produces the same
+    /// trajectory modulo backend float rounding — and the exact same
+    /// downstream dispatch sequence.
+    pub fn init(meta: &ArtifactMeta, rng: &mut Rng, backend: &dyn Backend)
+                -> Result<TrainState> {
         let mut params = Vec::new();
         let mut metas = Vec::new();
         for t in meta.inputs.iter().filter(|t| t.kind == Kind::Param) {
@@ -78,23 +52,25 @@ impl TrainState {
             } else {
                 vec![0.0; n]
             };
-            params.push(lit_f32(&t.shape, &data).expect("init literal"));
+            params.push(
+                backend.ingest(HostTensor::f32(&t.shape, data))?);
             metas.push(t.clone());
         }
         let momenta = metas
             .iter()
-            .map(|t| lit_f32(&t.shape, &vec![0.0; t.elements()]).unwrap())
-            .collect();
-        TrainState { params, momenta, metas, step: 0 }
+            .map(|t| backend.ingest(
+                HostTensor::f32(&t.shape, vec![0.0; t.elements()])))
+            .collect::<Result<_>>()?;
+        Ok(TrainState { params, momenta, metas, step: 0 })
     }
 
     /// Run one train step: inputs are `params ++ momenta ++ tail` (tail =
-    /// x, y, variant extras, lr in manifest order). The output literals
+    /// x, y, variant extras, lr in manifest order). The output values
     /// replace the state in place. Returns (loss, correct).
-    pub fn step(&mut self, exe: &Executable, tail: &[xla::Literal])
+    pub fn step(&mut self, exe: &dyn Executor, tail: &[Value])
                 -> Result<(f64, f64)> {
         let n = self.params.len();
-        let refs: Vec<&xla::Literal> = self
+        let refs: Vec<&Value> = self
             .params
             .iter()
             .chain(self.momenta.iter())
@@ -104,10 +80,8 @@ impl TrainState {
         if outputs.len() != 2 * n + 2 {
             bail!("expected {} outputs, got {}", 2 * n + 2, outputs.len());
         }
-        let correct = outputs.pop().unwrap().get_first_element::<f32>()
-            .map_err(|e| anyhow!("correct scalar: {e:?}"))? as f64;
-        let loss = outputs.pop().unwrap().get_first_element::<f32>()
-            .map_err(|e| anyhow!("loss scalar: {e:?}"))? as f64;
+        let correct = outputs.pop().unwrap().scalar_f64()?;
+        let loss = outputs.pop().unwrap().scalar_f64()?;
         let mut it = outputs.into_iter();
         for p in self.params.iter_mut() {
             *p = it.next().unwrap();
@@ -119,34 +93,31 @@ impl TrainState {
         Ok((loss, correct))
     }
 
-    /// Run one eval-graph batch against a borrowed executable: inputs are
+    /// Run one eval-graph batch against a borrowed executor: inputs are
     /// `params ++ extra` (extra = x, y in manifest order), outputs are the
     /// (loss, correct) scalars. State is untouched — eval graphs are
     /// dropout-free forward passes.
-    pub fn eval_step(&self, exe: &Executable, extra: &[xla::Literal])
+    pub fn eval_step(&self, exe: &dyn Executor, extra: &[Value])
                      -> Result<(f64, f64)> {
         let mut refs = self.param_refs();
-        for l in extra {
-            refs.push(l);
+        for v in extra {
+            refs.push(v);
         }
         let out = exe.run_raw(&refs)?;
-        let loss = out[0].get_first_element::<f32>()
-            .map_err(|e| anyhow!("loss: {e:?}"))? as f64;
-        let correct = out[1].get_first_element::<f32>()
-            .map_err(|e| anyhow!("correct: {e:?}"))? as f64;
-        Ok((loss, correct))
+        if out.len() < 2 {
+            bail!("eval graph returned {} outputs, expected 2", out.len());
+        }
+        Ok((out[0].scalar_f64()?, out[1].scalar_f64()?))
     }
 
-    /// References to the parameter literals (eval-graph inputs).
-    pub fn param_refs(&self) -> Vec<&xla::Literal> {
+    /// References to the parameter values (eval-graph inputs).
+    pub fn param_refs(&self) -> Vec<&Value> {
         self.params.iter().collect()
     }
 
     /// Copy one parameter back to host (tests / inspection).
     pub fn param_f32(&self, i: usize) -> Result<Vec<f32>> {
-        self.params[i]
-            .to_vec::<f32>()
-            .map_err(|e| anyhow!("param {i} to_vec: {e:?}"))
+        self.params[i].to_f32()
     }
 
     /// Total parameter count (diagnostics).
@@ -159,11 +130,12 @@ impl TrainState {
 mod tests {
     use super::*;
     use crate::runtime::manifest::Manifest;
-    use std::path::PathBuf;
+    use crate::runtime::reference::ReferenceBackend;
 
     fn manifest() -> Manifest {
-        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Manifest::load(&dir).unwrap()
+        // Hermetic: the built-in synthetic manifest mirrors the aot.py
+        // `--set test` registry, no artifacts directory needed.
+        Manifest::builtin_test()
     }
 
     #[test]
@@ -171,7 +143,8 @@ mod tests {
         let m = manifest();
         let meta = m.get("mlptest_conv").unwrap();
         let mut rng = Rng::new(0);
-        let st = TrainState::init(meta, &mut rng);
+        let be = ReferenceBackend::new();
+        let st = TrainState::init(meta, &mut rng, &be).unwrap();
         assert_eq!(st.params.len(), 6);
         assert_eq!(st.metas[0].shape, vec![32, 64]);
         assert_eq!(st.metas[1].shape, vec![64]);
@@ -187,7 +160,8 @@ mod tests {
         let m = manifest();
         let meta = m.get("mlptest_conv").unwrap();
         let mut rng = Rng::new(1);
-        let st = TrainState::init(meta, &mut rng);
+        let be = ReferenceBackend::new();
+        let st = TrainState::init(meta, &mut rng, &be).unwrap();
         let limit = (6.0 / (32 + 64) as f64).sqrt() as f32;
         let w1 = st.param_f32(0).unwrap();
         assert!(w1.iter().all(|&v| v.abs() <= limit));
@@ -196,12 +170,20 @@ mod tests {
     }
 
     #[test]
-    fn lit_roundtrip() {
-        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
-        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1., 2., 3., 4., 5., 6.]);
-        let i = lit_i32(&[4], &[7, 8, 9, 10]).unwrap();
-        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8, 9, 10]);
-        assert_eq!(lit_scalar_f32(2.5).get_first_element::<f32>().unwrap(),
-                   2.5);
+    fn init_draw_order_is_backend_independent() {
+        // Same seed -> bit-identical init through any backend: the draws
+        // happen on host buffers before upload.
+        let m = manifest();
+        let meta = m.get("lstmtest_conv").unwrap();
+        let be = ReferenceBackend::new();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let a = TrainState::init(meta, &mut r1, &be).unwrap();
+        let b = TrainState::init(meta, &mut r2, &be).unwrap();
+        for i in 0..a.params.len() {
+            assert_eq!(a.param_f32(i).unwrap(), b.param_f32(i).unwrap());
+        }
+        // Both RNGs end in the same state.
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 }

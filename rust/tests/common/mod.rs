@@ -1,0 +1,54 @@
+//! Helpers shared by the integration test crates (not itself a test
+//! crate: files under `tests/common/` are only compiled when a test
+//! declares `mod common;`).
+
+#![allow(dead_code)] // each test crate uses a subset
+
+/// Host-side forward pass of the tiny MLP (32 -> 64 -> 64 -> 10):
+/// an independent reimplementation of the eval-graph semantics, used to
+/// cross-check both the PJRT eval artifact (`tests/integration.rs`) and
+/// the reference interpreter (`tests/hermetic.rs`).
+/// Returns (mean loss, correct count).
+pub fn host_mlp_eval(params: &[Vec<f32>], x: &[f32], y: &[i32],
+                     batch: usize) -> (f64, f64) {
+    let dims = [(32usize, 64usize), (64, 64), (64, 10)];
+    let mut act: Vec<f32> = x.to_vec();
+    let mut width = 32;
+    for (li, &(k, n)) in dims.iter().enumerate() {
+        let w = &params[2 * li];
+        let b = &params[2 * li + 1];
+        let mut next = vec![0f32; batch * n];
+        for bi in 0..batch {
+            for j in 0..n {
+                let mut acc = b[j];
+                for i in 0..k {
+                    acc += act[bi * width + i] * w[i * n + j];
+                }
+                // ReLU on hidden layers only.
+                next[bi * n + j] = if li < 2 { acc.max(0.0) } else { acc };
+            }
+        }
+        act = next;
+        width = n;
+    }
+    // Softmax CE + correct count.
+    let mut loss = 0.0f64;
+    let mut correct = 0.0f64;
+    for bi in 0..batch {
+        let logits = &act[bi * 10..(bi + 1) * 10];
+        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 =
+            logits.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        loss -= (logits[y[bi] as usize] - lse) as f64;
+        let argmax = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == y[bi] as usize {
+            correct += 1.0;
+        }
+    }
+    (loss / batch as f64, correct)
+}

@@ -3,19 +3,20 @@
 //! path, `warmup` must cover exactly `schedule.dp_combos()`, trainers
 //! sharing one `ExecutorCache` must compile each artifact once, and the
 //! lr-decay policy promoted from the LSTM trainer must fire generically.
+//!
+//! Hermetic: the whole suite runs on the pure-Rust reference backend over
+//! the built-in synthetic manifest — no artifacts, no Python, no PJRT —
+//! so it must never skip.
 
 use std::collections::BTreeSet;
 
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
-use approx_dropout::runtime::{ArchMeta, Engine, Manifest};
+use approx_dropout::runtime::{ArchMeta, Manifest};
 
 fn setup() -> ExecutorCache {
-    let dir = approx_dropout::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest (run make artifacts)");
-    let engine = Engine::cpu().expect("pjrt cpu");
-    ExecutorCache::new(engine, manifest)
+    ExecutorCache::reference(Manifest::builtin_test())
 }
 
 fn lstm_trainer(cache: &ExecutorCache, variant: Variant, tokens: &[i32],
@@ -51,6 +52,8 @@ fn pipelined_matches_sequential_bit_for_bit() {
         assert_eq!(a.len(), 12);
         assert_eq!(a, b,
                    "{variant:?}: pipelined trajectory must be identical");
+        assert_eq!(seq.metrics.dispatched, pipe.metrics.dispatched,
+                   "{variant:?}: pipelined dispatch must be identical");
     }
 }
 
@@ -174,20 +177,17 @@ fn lr_decay_fires_on_epoch_boundaries() {
     assert!(tr.lr < lr0, "lr must decay: {lr0} -> {}", tr.lr);
 }
 
-/// MLP parity run on the full-size artifact set when present (mirrors the
-/// integration test's skip condition for subset builds).
+/// MLP parity run on the synthetic-data arch (mlpsyn takes the 784-pixel
+/// MnistSyn images, so this exercises the real batcher + mask assembly).
 #[test]
-fn mlp_pipelined_matches_sequential_when_artifacts_present() {
+fn mlp_pipelined_matches_sequential() {
     let cache = setup();
-    if cache.manifest().get("mlp1024x64_conv").is_err() {
-        return; // artifact subset build; skip
-    }
     let data = MnistSyn::generate(256, 3);
     let mk = |seed: u64| {
         let schedule =
             Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], true)
                 .unwrap();
-        MlpTrainer::new(&cache, "mlp1024x64", schedule, data.n, 0.01, seed)
+        MlpTrainer::new(&cache, "mlpsyn", schedule, data.n, 0.01, seed)
             .unwrap()
     };
     let mut seq = mk(11);
@@ -201,4 +201,5 @@ fn mlp_pipelined_matches_sequential_when_artifacts_present() {
     let a: Vec<f64> = seq.metrics.curve.iter().map(|p| p.loss).collect();
     let b: Vec<f64> = pipe.metrics.curve.iter().map(|p| p.loss).collect();
     assert_eq!(a, b);
+    assert_eq!(seq.metrics.dispatched, pipe.metrics.dispatched);
 }

@@ -37,6 +37,47 @@ fn searched_distribution_drop_rate_matches_bernoulli_target() {
     }
 }
 
+/// TDP analogue of the RowPattern convergence test above: over many
+/// sampled iterations, EVERY tile's empirical drop frequency converges to
+/// the Bernoulli target, across the paper's rate grid. (Previously only
+/// RowPattern was measured against the target at multiple rates; tiles
+/// were spot-checked at 0.5 with 16 probes.)
+#[test]
+fn tile_pattern_drop_frequency_converges_at_every_tile() {
+    let cfg = SearchConfig::default();
+    let (k, n) = (128, 128);
+    let iters = 30_000;
+    for &p in &[0.3, 0.5, 0.7] {
+        let dist = search::search(p, &[1, 2, 4], &cfg).distribution;
+        // Feasibility: max rate of {1,2,4} is 0.75 >= 0.7.
+        let probe = TilePattern::new(k, n, 1, 0, 32);
+        let (tk, tn) = probe.grid();
+        let mut rng = Rng::new(p.to_bits() ^ 0x7113_7113);
+        let mut dropped = vec![0u32; tk * tn];
+        for _ in 0..iters {
+            let c = dist.sample(&mut rng);
+            let pat = TilePattern::new(k, n, c.dp, c.b0, 32);
+            for r in 0..tk {
+                for cc in 0..tn {
+                    if !pat.keeps_tile(r, cc) {
+                        dropped[r * tn + cc] += 1;
+                    }
+                }
+            }
+        }
+        let target = dist.expected_rate();
+        for (i, &cnt) in dropped.iter().enumerate() {
+            let f = cnt as f64 / iters as f64;
+            // ~5 sigma at sigma <= 0.5/sqrt(30k) ~ 0.0029, plus the
+            // search's |achieved - p| < 5e-3 slack.
+            assert!((f - target).abs() < 0.02,
+                    "rate {p}, tile {i}: empirical {f} vs {target}");
+            assert!((f - p).abs() < 0.025,
+                    "rate {p}, tile {i}: empirical {f} vs nominal {p}");
+        }
+    }
+}
+
 #[test]
 fn tile_pattern_synapse_drop_rate_matches_target() {
     let cfg = SearchConfig::default();

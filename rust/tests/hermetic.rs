@@ -1,0 +1,324 @@
+//! Hermetic end-to-end tests: the full sample→dispatch→step→metrics loop
+//! on the pure-Rust reference backend. No artifacts directory, no Python,
+//! no PJRT — this suite must ALWAYS run (never skip) and is the CI
+//! default test path.
+//!
+//! What is pinned here:
+//! * short MLP and LSTM training runs actually learn (loss decreases)
+//!   under all three dropout variants,
+//! * the artifact-name dispatch sequence is seed-deterministic, covers
+//!   exactly the schedule's dp combos, and empirically follows the
+//!   searched distribution K,
+//! * the reference interpreter reproduces the semantic invariants the
+//!   PJRT integration suite asserts (dropped RDP rows frozen, eval graph
+//!   == host forward),
+//! * (with `--features pjrt` and generated artifacts) reference and PJRT
+//!   produce the identical dispatch sequence for the same seed.
+
+mod common;
+
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::{Executor, HostTensor, Manifest, TrainState,
+                              Value};
+use approx_dropout::util::rng::Rng;
+
+use common::host_mlp_eval;
+
+fn reference_cache() -> ExecutorCache {
+    ExecutorCache::reference(Manifest::builtin_test())
+}
+
+fn mean(xs: &[f64]) -> f64 {
+    xs.iter().sum::<f64>() / xs.len().max(1) as f64
+}
+
+/// Short real training on the 784-dim synthetic-MNIST arch for every
+/// dropout variant: the loss trend must be downward and evaluation must
+/// produce sane numbers — all with zero artifacts on disk.
+#[test]
+fn mlp_training_learns_all_variants() {
+    let cache = reference_cache();
+    let (train, test) = MnistSyn::train_test(512, 64, 42);
+    for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+        let schedule =
+            Schedule::new(variant, &[0.5, 0.5], &[1, 2], false).unwrap();
+        // lr note: RDP's shared per-batch pattern raises gradient
+        // variance (see bench/drivers.rs); 0.01 is stable for all
+        // variants at rate 0.5.
+        let mut tr = MlpTrainer::new(&cache, "mlpsyn", schedule, train.n,
+                                     0.01, 7)
+            .unwrap();
+        tr.warmup().unwrap();
+        let steps = 80;
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let (loss, acc) = tr.step(&train).unwrap();
+            assert!(loss.is_finite(), "{variant:?}: loss not finite");
+            assert!((0.0..=1.0).contains(&acc));
+            losses.push(loss);
+        }
+        let first = mean(&losses[..10]);
+        let last = mean(&losses[steps - 10..]);
+        assert!(last < first,
+                "{variant:?}: no learning ({first:.3} -> {last:.3})");
+        let (eval_loss, eval_acc) = tr.evaluate(&test).unwrap();
+        assert!(eval_loss.is_finite() && eval_loss > 0.0);
+        assert!((0.0..=1.0).contains(&eval_acc));
+    }
+}
+
+/// Same for the LSTM LM on the synthetic corpus; also checks perplexity
+/// comes out of the eval graph sanely.
+#[test]
+fn lstm_training_learns_all_variants() {
+    let cache = reference_cache();
+    let corpus = Corpus::generate(64, 8000, 800, 800, 9);
+    for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+        let shared = variant != Variant::Conv;
+        let schedule =
+            Schedule::new(variant, &[0.5, 0.5], &[1, 2], shared).unwrap();
+        // lr note: with momentum 0.9 the stable setting is ~0.1 (see
+        // bench/drivers.rs trace_lstm_curve).
+        let mut tr = LstmTrainer::new(&cache, "lstmsyn", schedule,
+                                      &corpus.train, 0.1, 13)
+            .unwrap();
+        tr.warmup().unwrap();
+        let steps = 60;
+        let mut losses = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let (loss, _) = tr.step().unwrap();
+            assert!(loss.is_finite(), "{variant:?}: loss not finite");
+            losses.push(loss);
+        }
+        let first = mean(&losses[..10]);
+        let last = mean(&losses[steps - 10..]);
+        assert!(last < first,
+                "{variant:?}: no learning ({first:.3} -> {last:.3})");
+        // ppl bound: uniform over the 64-token vocab is 64; a briefly
+        // trained model sits below it, but leave slack for eval noise.
+        let (xent, ppl, acc) = tr.evaluate(&corpus.valid).unwrap();
+        assert!(xent.is_finite() && ppl > 1.0 && ppl < 90.0);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+}
+
+/// The dispatch sequence — the observable that encodes the paper's
+/// pattern->static-shape mapping — is deterministic for a fixed seed,
+/// stays inside the schedule's dp combos, and empirically mixes the
+/// divisors per the searched distribution K.
+#[test]
+fn dispatch_sequence_matches_seeded_schedule() {
+    let cache = reference_cache();
+    let corpus = Corpus::generate(64, 8000, 800, 800, 3);
+    let steps = 40;
+    let run = |seed: u64| -> (Vec<String>, Vec<String>) {
+        // Target rate 0.25 over {1, 2} puts roughly half the mass on
+        // each divisor, so both artifact names must appear.
+        let schedule =
+            Schedule::new(Variant::Rdp, &[0.25, 0.25], &[1, 2], true)
+                .unwrap();
+        let mut tr = LstmTrainer::new(&cache, "lstmsyn", schedule,
+                                      &corpus.train, 0.1, seed)
+            .unwrap();
+        let names = tr.executable_names();
+        for _ in 0..steps {
+            tr.step().unwrap();
+        }
+        (tr.metrics.dispatched.clone(), names)
+    };
+    let (a, names) = run(77);
+    assert_eq!(a.len(), steps);
+    // Every dispatched artifact is one the schedule can sample.
+    for n in &a {
+        assert!(names.contains(n), "dispatched {n} not in {names:?}");
+    }
+    // Both divisors actually occur, with a plausible K-mix (K(2) ~ 0.5;
+    // [0.2, 0.8] is a ±3.8 sigma band at 40 samples).
+    let dp2 = a.iter().filter(|n| n.ends_with("_2")).count() as f64
+        / steps as f64;
+    assert!((0.2..=0.8).contains(&dp2), "dp=2 fraction {dp2}");
+    // Seed-determinism, and seeds actually matter.
+    let (b, _) = run(77);
+    assert_eq!(a, b, "same seed must dispatch identically");
+    let (c, _) = run(78);
+    assert_ne!(a, c, "different seed must explore differently");
+}
+
+/// The reference eval executor must agree with the independent host
+/// reimplementation (`tests/common`) to float tolerance — the same
+/// cross-check the PJRT integration suite runs against the AOT eval
+/// graph.
+#[test]
+fn reference_eval_matches_host_forward() {
+    let cache = reference_cache();
+    let exe = cache.get("mlptest_eval").unwrap();
+    let backend = cache.backend().clone();
+    let mut rng = Rng::new(7);
+    let meta = cache.manifest().get("mlptest_conv").unwrap();
+    let state = TrainState::init(meta, &mut rng, backend.as_ref()).unwrap();
+
+    let batch = 8;
+    let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.next_usize(10) as i32).collect();
+    let x_v = backend
+        .upload(&HostTensor::f32(&[batch, 32], x.clone()))
+        .unwrap();
+    let y_v = backend
+        .upload(&HostTensor::i32(&[batch], y.clone()))
+        .unwrap();
+    let mut refs = state.param_refs();
+    refs.push(&x_v);
+    refs.push(&y_v);
+    let out = exe.run_raw(&refs).unwrap();
+    let loss_ref = out[0].scalar_f64().unwrap();
+    let correct_ref = out[1].scalar_f64().unwrap();
+
+    let host_params: Vec<Vec<f32>> =
+        (0..6).map(|i| state.param_f32(i).unwrap()).collect();
+    let (loss_host, correct_host) = host_mlp_eval(&host_params, &x, &y,
+                                                  batch);
+    assert!((loss_ref - loss_host).abs() < 1e-4,
+            "reference {loss_ref} vs host {loss_host}");
+    assert_eq!(correct_ref, correct_host);
+}
+
+fn rdp_step(cache: &ExecutorCache, state: &mut TrainState,
+            exe: &dyn Executor, rng: &mut Rng, b0: (i32, i32), lr: f32)
+            -> (f64, f64) {
+    let backend = cache.backend();
+    let batch = 8;
+    let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.next_usize(10) as i32).collect();
+    let tail: Vec<Value> = vec![
+        backend.upload(&HostTensor::f32(&[batch, 32], x)).unwrap(),
+        backend.upload(&HostTensor::i32(&[batch], y)).unwrap(),
+        backend.upload(&HostTensor::scalar_i32(b0.0)).unwrap(),
+        backend.upload(&HostTensor::scalar_i32(b0.1)).unwrap(),
+        backend.upload(&HostTensor::scalar_f32(2.0)).unwrap(),
+        backend.upload(&HostTensor::scalar_f32(2.0)).unwrap(),
+        backend.upload(&HostTensor::scalar_f32(lr)).unwrap(),
+    ];
+    state.step(exe, &tail).unwrap()
+}
+
+/// The interpreter must reproduce the pattern's exact gradient-sparsity
+/// claim: dropped rows of w3 receive no update, bit-for-bit.
+#[test]
+fn reference_rdp_freezes_dropped_rows_in_w3() {
+    let cache = reference_cache();
+    let exe = cache.get("mlptest_rdp_2_2").unwrap();
+    let mut rng = Rng::new(33);
+    let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
+    let mut state =
+        TrainState::init(meta, &mut rng, cache.backend().as_ref())
+            .unwrap();
+    let w3_before = state.param_f32(4).unwrap();
+
+    let b0_1 = 1; // site-2 pattern: keep rows {1, 3, 5, ...}
+    let (loss, correct) =
+        rdp_step(&cache, &mut state, exe.as_ref(), &mut rng, (0, b0_1),
+                 0.1);
+    assert!(loss.is_finite() && loss > 0.0);
+    assert!((0.0..=8.0).contains(&correct));
+    let w3_after = state.param_f32(4).unwrap();
+
+    let mut kept_changed = 0;
+    for i in 0..64 {
+        let row_changed = (0..10)
+            .any(|j| w3_before[i * 10 + j] != w3_after[i * 10 + j]);
+        if i % 2 == b0_1 as usize {
+            kept_changed += usize::from(row_changed);
+        } else {
+            assert!(!row_changed, "dropped row {i} must be frozen");
+        }
+    }
+    assert!(kept_changed >= 16,
+            "only {kept_changed}/32 kept rows updated");
+}
+
+/// TDP on the reference backend: dropped tiles of w1 must be frozen, per
+/// the tile pattern's DropConnect semantics.
+#[test]
+fn reference_tdp_freezes_dropped_tiles_in_w1() {
+    use approx_dropout::patterns::TilePattern;
+    let cache = reference_cache();
+    let exe = cache.get("mlptest_tdp_2_2").unwrap();
+    let mut rng = Rng::new(5);
+    let meta = cache.manifest().get("mlptest_tdp_2_2").unwrap();
+    assert_eq!(meta.tile, 16, "tiny arch tile must survive the manifest");
+    let mut state =
+        TrainState::init(meta, &mut rng, cache.backend().as_ref())
+            .unwrap();
+    let w1_before = state.param_f32(0).unwrap();
+    let b0_0 = 1;
+    let (loss, _) = rdp_step(&cache, &mut state, exe.as_ref(), &mut rng,
+                             (b0_0, 0), 0.1);
+    assert!(loss.is_finite());
+    let w1_after = state.param_f32(0).unwrap();
+    // w1 is [32, 64], tile 16 -> 2x4 grid; kept iff (c - b0 - r) % 2 == 0.
+    let pat = TilePattern::new(32, 64, 2, b0_0 as usize, 16);
+    for r in 0..2 {
+        for c in 0..4 {
+            let changed = (0..16).any(|i| (0..16).any(|j| {
+                let idx = (r * 16 + i) * 64 + (c * 16 + j);
+                w1_before[idx] != w1_after[idx]
+            }));
+            if pat.keeps_tile(r, c) {
+                assert!(changed, "kept tile ({r},{c}) must update");
+            } else {
+                assert!(!changed, "dropped tile ({r},{c}) must be frozen");
+            }
+        }
+    }
+}
+
+/// Cross-backend acceptance: for the same seed, the reference backend
+/// (built-in manifest) and PJRT (generated artifacts) dispatch the
+/// identical artifact-name sequence, and early losses agree to float
+/// tolerance. Runs on PJRT only when artifacts exist — with one loud
+/// skip line otherwise; the reference half of the claim is covered
+/// unconditionally by `dispatch_sequence_matches_seeded_schedule`.
+#[cfg(feature = "pjrt")]
+#[test]
+fn dispatch_parity_reference_vs_pjrt() {
+    let corpus = Corpus::generate(64, 4000, 400, 400, 17);
+    let run = |cache: &ExecutorCache| -> (Vec<String>, Vec<f64>) {
+        let schedule =
+            Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+        let mut tr = LstmTrainer::new(cache, "lstmtest", schedule,
+                                      &corpus.train, 0.5, 123)
+            .unwrap();
+        for _ in 0..6 {
+            tr.step().unwrap();
+        }
+        (tr.metrics.dispatched.clone(),
+         tr.metrics.curve.iter().map(|p| p.loss).collect())
+    };
+    let (ref_names, ref_losses) = run(&reference_cache());
+
+    let dir = approx_dropout::artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP dispatch_parity_reference_vs_pjrt: no \
+                       artifacts at {} ({e:#})", dir.display());
+            return;
+        }
+    };
+    let pjrt = match ExecutorCache::pjrt_cpu(manifest) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("SKIP dispatch_parity_reference_vs_pjrt: {e:#}");
+            return;
+        }
+    };
+    let (pjrt_names, pjrt_losses) = run(&pjrt);
+    assert_eq!(ref_names, pjrt_names,
+               "dispatch sequences must be backend-independent");
+    for (i, (a, b)) in ref_losses.iter().zip(&pjrt_losses).enumerate() {
+        assert!((a - b).abs() < 1e-2,
+                "step {i}: reference loss {a} vs pjrt {b}");
+    }
+}

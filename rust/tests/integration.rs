@@ -1,89 +1,78 @@
-//! Integration tests over the full stack: manifest -> PJRT compile ->
-//! train/eval execution -> state update. Uses the tiny `mlptest`/`lstmtest`
-//! artifacts built by `make artifacts` (aot.py --set test is a subset of
-//! the default set).
+//! Integration tests over the full PJRT stack: manifest -> PJRT compile
+//! -> train/eval execution -> state update. Uses the tiny
+//! `mlptest`/`lstmtest` artifacts built by `make artifacts` (aot.py
+//! --set test is a subset of the default set).
+//!
+//! This suite is artifact-dependent by nature (it exists to validate the
+//! AOT path), so it compiles only with the `pjrt` feature and — when the
+//! artifacts or the PJRT client are unavailable — prints ONE loud skip
+//! line and returns instead of panicking mid-suite. The hermetic
+//! equivalents of these behaviors live in `rust/tests/hermetic.rs` and
+//! `rust/tests/driver.rs`, which never skip.
+#![cfg(feature = "pjrt")]
+
+mod common;
 
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
-use approx_dropout::runtime::state::{lit_f32, lit_i32, lit_scalar_f32,
-                                     lit_scalar_i32};
-use approx_dropout::runtime::{Engine, Manifest, TrainState};
+use approx_dropout::runtime::{Executor, HostTensor, Manifest, TrainState,
+                              Value};
 use approx_dropout::util::rng::Rng;
 
-fn setup() -> ExecutorCache {
-    let dir = approx_dropout::artifacts_dir();
-    let manifest = Manifest::load(&dir).expect("manifest (run make artifacts)");
-    let engine = Engine::cpu().expect("pjrt cpu");
-    ExecutorCache::new(engine, manifest)
-}
+use common::host_mlp_eval;
 
-/// Host-side forward pass of the tiny MLP (32 -> 64 -> 64 -> 10) used to
-/// cross-check the eval graph's numerics end-to-end.
-fn host_mlp_eval(params: &[Vec<f32>], x: &[f32], y: &[i32], batch: usize)
-                 -> (f64, f64) {
-    let dims = [(32usize, 64usize), (64, 64), (64, 10)];
-    let mut act: Vec<f32> = x.to_vec();
-    let mut width = 32;
-    for (li, &(k, n)) in dims.iter().enumerate() {
-        let w = &params[2 * li];
-        let b = &params[2 * li + 1];
-        let mut next = vec![0f32; batch * n];
-        for bi in 0..batch {
-            for j in 0..n {
-                let mut acc = b[j];
-                for i in 0..k {
-                    acc += act[bi * width + i] * w[i * n + j];
-                }
-                // ReLU on hidden layers only.
-                next[bi * n + j] = if li < 2 { acc.max(0.0) } else { acc };
-            }
+/// PJRT cache over the artifacts directory, or None with one loud
+/// explanation on the first call.
+fn setup() -> Option<ExecutorCache> {
+    static WARN: std::sync::Once = std::sync::Once::new();
+    let dir = approx_dropout::artifacts_dir();
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            WARN.call_once(|| eprintln!(
+                "SKIP (pjrt integration suite): no artifacts manifest at \
+                 {} — run `make artifacts` to enable these tests ({e:#})",
+                dir.display()));
+            return None;
         }
-        act = next;
-        width = n;
-    }
-    // Softmax CE + correct count.
-    let mut loss = 0.0f64;
-    let mut correct = 0.0f64;
-    for bi in 0..batch {
-        let logits = &act[bi * 10..(bi + 1) * 10];
-        let mx = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let lse: f32 =
-            logits.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
-        loss -= (logits[y[bi] as usize] - lse) as f64;
-        let argmax = logits
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if argmax == y[bi] as usize {
-            correct += 1.0;
+    };
+    match ExecutorCache::pjrt_cpu(manifest) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            WARN.call_once(|| eprintln!(
+                "SKIP (pjrt integration suite): PJRT CPU client \
+                 unavailable: {e:#}"));
+            None
         }
     }
-    (loss / batch as f64, correct)
 }
 
 #[test]
 fn eval_graph_matches_host_forward() {
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let exe = cache.get("mlptest_eval").unwrap();
+    let backend = cache.backend().clone();
     let mut rng = Rng::new(7);
     let meta = cache.manifest().get("mlptest_conv").unwrap();
-    let state = TrainState::init(meta, &mut rng);
+    let state = TrainState::init(meta, &mut rng, backend.as_ref()).unwrap();
 
     let batch = 8;
     let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
     let y: Vec<i32> = (0..batch).map(|_| rng.next_usize(10) as i32).collect();
 
-    let x_l = lit_f32(&[batch, 32], &x).unwrap();
-    let y_l = lit_i32(&[batch], &y).unwrap();
+    let x_v = backend
+        .upload(&HostTensor::f32(&[batch, 32], x.clone()))
+        .unwrap();
+    let y_v = backend
+        .upload(&HostTensor::i32(&[batch], y.clone()))
+        .unwrap();
     let mut refs = state.param_refs();
-    refs.push(&x_l);
-    refs.push(&y_l);
+    refs.push(&x_v);
+    refs.push(&y_v);
     let out = exe.run_raw(&refs).unwrap();
-    let loss_dev = out[0].get_first_element::<f32>().unwrap() as f64;
-    let correct_dev = out[1].get_first_element::<f32>().unwrap() as f64;
+    let loss_dev = out[0].scalar_f64().unwrap();
+    let correct_dev = out[1].scalar_f64().unwrap();
 
     let host_params: Vec<Vec<f32>> =
         (0..6).map(|i| state.param_f32(i).unwrap()).collect();
@@ -96,7 +85,7 @@ fn eval_graph_matches_host_forward() {
 
 #[test]
 fn trainer_constructs_and_names_executables() {
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let schedule =
         Schedule::new(Variant::Conv, &[0.5, 0.5], &[1, 2], false).unwrap();
     let tr = MlpTrainer::new(&cache, "mlptest", schedule, 64, 0.05, 11)
@@ -109,33 +98,38 @@ fn trainer_constructs_and_names_executables() {
     assert_eq!(tr.executable_names(), vec!["mlptest_rdp_2_2".to_string()]);
 }
 
-fn run_step(state: &mut TrainState,
-            exe: &approx_dropout::runtime::Executable, rng: &mut Rng,
-            b0: (i32, i32), lr: f32) -> (f64, f64) {
+fn run_step(cache: &ExecutorCache, state: &mut TrainState,
+            exe: &dyn Executor, rng: &mut Rng, b0: (i32, i32), lr: f32)
+            -> (f64, f64) {
+    let backend = cache.backend();
     let batch = 8;
     let x: Vec<f32> = (0..batch * 32).map(|_| rng.next_f32()).collect();
     let y: Vec<i32> = (0..batch).map(|_| rng.next_usize(10) as i32).collect();
-    let tail = vec![
-        lit_f32(&[batch, 32], &x).unwrap(),
-        lit_i32(&[batch], &y).unwrap(),
-        lit_scalar_i32(b0.0),
-        lit_scalar_i32(b0.1),
-        lit_scalar_f32(2.0), // inverted-dropout scale, site 1
-        lit_scalar_f32(2.0), // inverted-dropout scale, site 2
-        lit_scalar_f32(lr),
+    let tail: Vec<Value> = vec![
+        backend.upload(&HostTensor::f32(&[batch, 32], x)).unwrap(),
+        backend.upload(&HostTensor::i32(&[batch], y)).unwrap(),
+        backend.upload(&HostTensor::scalar_i32(b0.0)).unwrap(),
+        backend.upload(&HostTensor::scalar_i32(b0.1)).unwrap(),
+        // inverted-dropout scales, sites 1 and 2
+        backend.upload(&HostTensor::scalar_f32(2.0)).unwrap(),
+        backend.upload(&HostTensor::scalar_f32(2.0)).unwrap(),
+        backend.upload(&HostTensor::scalar_f32(lr)).unwrap(),
     ];
     state.step(exe, &tail).unwrap()
 }
 
 #[test]
 fn rdp_step_loss_finite_and_state_changes() {
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let exe = cache.get("mlptest_rdp_2_2").unwrap();
     let mut rng = Rng::new(21);
     let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
-    let mut state = TrainState::init(meta, &mut rng);
+    let mut state =
+        TrainState::init(meta, &mut rng, cache.backend().as_ref())
+            .unwrap();
     let before = state.param_f32(0).unwrap();
-    let (loss, correct) = run_step(&mut state, &exe, &mut rng, (1, 0), 0.1);
+    let (loss, correct) = run_step(&cache, &mut state, exe.as_ref(),
+                                   &mut rng, (1, 0), 0.1);
     assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
     assert!((0.0..=8.0).contains(&correct));
     let after = state.param_f32(0).unwrap();
@@ -147,15 +141,17 @@ fn rdp_step_loss_finite_and_state_changes() {
 fn rdp_only_kept_rows_update_in_w3() {
     // RDP drops entire rows of the next layer's weight matrix: the
     // gradient (hence the update) of dropped rows of w3 must be zero.
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let exe = cache.get("mlptest_rdp_2_2").unwrap();
     let mut rng = Rng::new(33);
     let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
-    let mut state = TrainState::init(meta, &mut rng);
+    let mut state =
+        TrainState::init(meta, &mut rng, cache.backend().as_ref())
+            .unwrap();
     let w3_before = state.param_f32(4).unwrap();
 
     let b0_1 = 1; // site-2 pattern: keep rows {1, 3, 5, ...}
-    run_step(&mut state, &exe, &mut rng, (0, b0_1), 0.1);
+    run_step(&cache, &mut state, exe.as_ref(), &mut rng, (0, b0_1), 0.1);
     let w3_after = state.param_f32(4).unwrap();
 
     // w3 shape [64, 10]; rows with i % 2 == b0_1 kept, others frozen.
@@ -179,18 +175,21 @@ fn rdp_only_kept_rows_update_in_w3() {
 
 #[test]
 fn tdp_step_runs() {
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let exe = cache.get("mlptest_tdp_2_2").unwrap();
     let mut rng = Rng::new(5);
     let meta = cache.manifest().get("mlptest_tdp_2_2").unwrap();
-    let mut state = TrainState::init(meta, &mut rng);
-    let (loss, _) = run_step(&mut state, &exe, &mut rng, (1, 0), 0.1);
+    let mut state =
+        TrainState::init(meta, &mut rng, cache.backend().as_ref())
+            .unwrap();
+    let (loss, _) = run_step(&cache, &mut state, exe.as_ref(), &mut rng,
+                             (1, 0), 0.1);
     assert!(loss.is_finite());
 }
 
 #[test]
 fn lstm_trainer_end_to_end_tiny() {
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let corpus = Corpus::generate(64, 4000, 400, 400, 9);
     for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
         let shared = variant != Variant::Conv;
@@ -215,15 +214,13 @@ fn lstm_trainer_end_to_end_tiny() {
 
 #[test]
 fn mlp_trainer_learns_real_digits() {
-    // Short but real training on the synthetic MNIST through the tiny
-    // arch... mlptest takes 32-dim inputs, so use the real 784-dim arch
-    // only if present; otherwise validate the loss trend on random data
-    // via the tiny RDP artifact (covered above). Here: LSTM-free check
-    // that a conv schedule trainer improves batch accuracy on digits with
-    // the 2048 arch when available.
-    let cache = setup();
+    // Short but real training on the synthetic MNIST through the 784-dim
+    // arch when the full artifact set is present.
+    let Some(cache) = setup() else { return };
     if cache.manifest().get("mlp1024x64_conv").is_err() {
-        return; // artifact subset build; skip
+        eprintln!("SKIP mlp_trainer_learns_real_digits: artifact subset \
+                   build (no mlp1024x64)");
+        return;
     }
     let data = MnistSyn::generate(512, 3);
     let schedule =
@@ -249,7 +246,7 @@ fn mlp_trainer_learns_real_digits() {
 
 #[test]
 fn deterministic_given_seed() {
-    let cache = setup();
+    let Some(cache) = setup() else { return };
     let corpus = Corpus::generate(64, 3000, 300, 300, 17);
     let run = |seed: u64| -> Vec<f64> {
         let schedule =

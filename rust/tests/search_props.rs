@@ -1,0 +1,74 @@
+//! Property tests (via `util/testkit`) for the Algorithm 1 invariants of
+//! `search::search`: the returned distribution is a proper simplex point,
+//! every support divisor keeps nonzero mass (the entropy term's job), and
+//! random targets over random divisor supports are hit to 1e-2.
+
+use approx_dropout::search::{self, SearchConfig};
+use approx_dropout::util::testkit;
+
+/// Draw a random divisor support: always contains 1 (no-dropout pattern)
+/// and at least one divisor >= 8 so every target rate in [0.2, 0.8] is
+/// feasible (max p_u >= 7/8), plus a random subset in between.
+fn gen_support(rng: &mut approx_dropout::util::rng::Rng) -> Vec<usize> {
+    let pool = [2usize, 3, 4, 5, 6, 8, 10, 16];
+    let mut support = vec![1usize];
+    for &d in &pool {
+        if rng.bernoulli(0.5) {
+            support.push(d);
+        }
+    }
+    let anchor = if rng.bernoulli(0.5) { 8 } else { 16 };
+    if !support.contains(&anchor) {
+        support.push(anchor);
+    }
+    support.sort_unstable();
+    support.dedup();
+    support
+}
+
+#[test]
+fn distribution_is_simplex_with_full_support() {
+    testkit::quickcheck("search simplex", |rng| {
+        let support = gen_support(rng);
+        let p = rng.uniform(0.2, 0.8);
+        let r = search::search(p, &support, &SearchConfig::default());
+        let d = &r.distribution;
+        assert_eq!(d.support, support);
+        let sum: f64 = d.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "probs sum to {sum}");
+        for (dp, &k) in d.support.iter().zip(&d.probs) {
+            assert!(k.is_finite() && k > 0.0,
+                    "divisor {dp} got zero/invalid mass {k} \
+                     (target {p}, support {support:?})");
+        }
+    });
+}
+
+#[test]
+fn achieved_rate_within_1e2_of_random_targets() {
+    testkit::quickcheck("search hits target", |rng| {
+        let support = gen_support(rng);
+        let p = rng.uniform(0.2, 0.8);
+        let r = search::search(p, &support, &SearchConfig::default());
+        assert!((r.achieved_rate - p).abs() < 1e-2,
+                "target {p} achieved {} over {support:?}",
+                r.achieved_rate);
+        // Internal consistency: SearchResult.achieved_rate IS the
+        // distribution's expected rate.
+        assert!((r.achieved_rate - r.distribution.expected_rate()).abs()
+                < 1e-12);
+    });
+}
+
+#[test]
+fn search_is_deterministic_over_random_supports() {
+    testkit::check("search deterministic", 16, |rng| {
+        let support = gen_support(rng);
+        let p = rng.uniform(0.2, 0.8);
+        let cfg = SearchConfig::default();
+        let a = search::search(p, &support, &cfg);
+        let b = search::search(p, &support, &cfg);
+        assert_eq!(a.distribution.probs, b.distribution.probs);
+        assert_eq!(a.iters, b.iters);
+    });
+}
