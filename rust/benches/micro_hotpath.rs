@@ -3,17 +3,35 @@
 //! bottleneck — compare each against the train-step execute time from the
 //! e2e benches.
 
-use approx_dropout::bench::{bench, fmt_time, Table};
+use approx_dropout::bench::{bench, fmt_time, BenchReport, BenchResult,
+                            Table};
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, Schedule,
                                   Variant};
 use approx_dropout::data::Corpus;
 use approx_dropout::patterns::MaskGen;
 use approx_dropout::runtime::{HostTensor, TrainState, Value};
 use approx_dropout::search::{self, SearchConfig};
+use approx_dropout::util::json::Json;
 use approx_dropout::util::rng::Rng;
+
+/// Record one measurement in the machine-readable report (same numbers
+/// as the printed table).
+fn record(report: &mut BenchReport, r: &BenchResult, note: &str) {
+    report.row(vec![
+        ("op", Json::str(&r.name)),
+        ("median_s", Json::num(r.median_s)),
+        ("mad_s", Json::num(r.mad_s)),
+        ("mean_s", Json::num(r.mean_s)),
+        ("per_sec", Json::num(r.per_sec())),
+        ("reps", Json::num(r.reps as f64)),
+        ("note", Json::str(note)),
+    ]);
+}
 
 fn main() -> anyhow::Result<()> {
     let mut table = Table::new(&["op", "median", "per-sec", "note"]);
+    let mut report =
+        BenchReport::new("micro_hotpath", "rust/benches/micro_hotpath.rs");
 
     // 1. Bernoulli mask fill (baseline hot path): 128 x 2048 mask.
     let mut rng = Rng::new(1);
@@ -23,6 +41,7 @@ fn main() -> anyhow::Result<()> {
     table.row(&["mask fill 128x2048".into(), fmt_time(r.median_s),
                 format!("{:.0}/s", r.per_sec()),
                 "per conv iteration x2".into()]);
+    record(&mut report, &r, "per conv iteration x2");
 
     // 2. Pattern sampling (approximate-dropout hot path).
     let schedule = Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2, 4, 8],
@@ -33,6 +52,7 @@ fn main() -> anyhow::Result<()> {
     table.row(&["pattern sample (2 sites)".into(), fmt_time(r.median_s),
                 format!("{:.0}/s", r.per_sec()),
                 "per rdp/tdp iteration".into()]);
+    record(&mut report, &r, "per rdp/tdp iteration");
 
     // 3. Algorithm 1 search (one-time cost).
     let cfg = SearchConfig::default();
@@ -40,6 +60,7 @@ fn main() -> anyhow::Result<()> {
                   || search::search(0.7, &[1, 2, 4, 8], &cfg).iters);
     table.row(&["Algorithm 1 search".into(), fmt_time(r.median_s),
                 format!("{:.1}/s", r.per_sec()), "one-time, init".into()]);
+    record(&mut report, &r, "one-time, init");
 
     // 4. HostTensor -> backend-value marshalling (per-step upload prep)
     //    via a full tiny-artifact execute, isolating coordinator overhead.
@@ -69,6 +90,8 @@ fn main() -> anyhow::Result<()> {
     table.row(&["tiny mlp train step e2e".into(), fmt_time(r.median_s),
                 format!("{:.0}/s", r.per_sec()),
                 format!("{} floor: marshal+exec+absorb", backend.name())]);
+    record(&mut report, &r,
+           &format!("{} floor: marshal+exec+absorb", backend.name()));
 
     // 5. Eval-graph execute (params only, no state absorb).
     let ev = cache.get("mlptest_eval")?;
@@ -84,6 +107,7 @@ fn main() -> anyhow::Result<()> {
     });
     table.row(&["tiny mlp eval".into(), fmt_time(r.median_s),
                 format!("{:.0}/s", r.per_sec()), "".into()]);
+    record(&mut report, &r, "");
 
     // 6. Sequential vs double-buffered step assembly on the tiny LSTM:
     //    same RNG stream, identical trajectories; the pipelined path hides
@@ -103,6 +127,7 @@ fn main() -> anyhow::Result<()> {
     table.row(&[format!("lstm {window}-step loop (seq)"),
                 fmt_time(r.median_s), format!("{:.1}/s", r.per_sec()),
                 "assemble then execute".into()]);
+    record(&mut report, &r, "assemble then execute");
     let mut pipe = mk(7)?;
     pipe.warmup()?;
     let r = bench("lstm_steps_pipelined", 1, 5,
@@ -110,9 +135,13 @@ fn main() -> anyhow::Result<()> {
     table.row(&[format!("lstm {window}-step loop (pipe)"),
                 fmt_time(r.median_s), format!("{:.1}/s", r.per_sec()),
                 "assembly overlapped".into()]);
+    record(&mut report, &r, "assembly overlapped");
 
+    report.set("backend", Json::str(cache.backend().name()));
     println!("== micro hot-path ==");
     table.print();
+    let path = report.write_default("BENCH_micro.json")?;
+    println!("wrote {} ({} rows)", path.display(), report.n_rows());
     println!("\ninterpretation: mask fill + sampling are orders of \
               magnitude below a 2048-arch train step (hundreds of ms) — \
               the coordinator is not the bottleneck.");

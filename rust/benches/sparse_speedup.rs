@@ -1,0 +1,127 @@
+//! The paper's Figure-level speedup claim, reproduced in-repo: dense
+//! (conventional masked dropout) vs **row-skip** (RDP) vs **tile-skip**
+//! (TDP) train-step wall-clock on the structured-sparse backend, at
+//! global dropout rates 0.3 / 0.5 / 0.7, on the `mlpsyn` and `lstmsyn`
+//! archs.
+//!
+//! All three configurations run the identical coordinator path and the
+//! identical step program (`runtime::step`); the only difference is what
+//! the kernels may skip — conventional dropout's Bernoulli masks have no
+//! structure, so its steps pay full dense math plus per-step mask
+//! generation, exactly the baseline the paper measures against.
+//!
+//! Output: a paper-style table on stdout plus machine-readable
+//! `BENCH_sparse.json` (repo root, or `$AD_BENCH_OUT/`) through the
+//! shared `bench::report` writer.
+//!
+//! Knobs: `AD_BENCH_SMOKE=1` (tiny rep counts, CI smoke job),
+//! `AD_BENCH_REPS` (timed steps per configuration), `AD_THREADS`
+//! (sparse worker pool size).
+
+use anyhow::Result;
+
+use approx_dropout::bench::drivers::env_usize;
+use approx_dropout::bench::{bench, fmt_time, BenchReport, Table};
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::sparse::threads_from_env;
+use approx_dropout::runtime::Manifest;
+use approx_dropout::util::json::Json;
+
+const SUPPORT: &[usize] = &[1, 2, 4];
+const RATES: &[f64] = &[0.3, 0.5, 0.7];
+
+struct Cfg {
+    label: &'static str,
+    variant: Variant,
+}
+
+const CFGS: &[Cfg] = &[
+    Cfg { label: "dense", variant: Variant::Conv },
+    Cfg { label: "row-skip", variant: Variant::Rdp },
+    Cfg { label: "tile-skip", variant: Variant::Tdp },
+];
+
+fn main() -> Result<()> {
+    let smoke = env_usize("AD_BENCH_SMOKE", 0) == 1;
+    let reps = env_usize("AD_BENCH_REPS", if smoke { 3 } else { 40 });
+    let warm = if smoke { 1 } else { 5 };
+    let threads = threads_from_env();
+
+    let cache = ExecutorCache::sparse(Manifest::builtin_test());
+    let (mnist, _) = MnistSyn::train_test(512, 64, 42);
+    let corpus = Corpus::generate(64, 8000, 800, 800, 9);
+
+    let mut table = Table::new(&["arch", "rate", "config", "median step",
+                                 "steps/s", "speedup"]);
+    let mut report =
+        BenchReport::new("sparse_speedup", "rust/benches/sparse_speedup.rs");
+    report
+        .set("backend", Json::str("sparse"))
+        .set("threads", Json::num(threads as f64))
+        .set("smoke", Json::Bool(smoke))
+        .set("reps", Json::num(reps as f64))
+        .set("support", Json::Arr(
+            SUPPORT.iter().map(|&d| Json::num(d as f64)).collect()));
+
+    for arch in ["mlpsyn", "lstmsyn"] {
+        for &rate in RATES {
+            let mut dense_s = f64::NAN;
+            for cfg in CFGS {
+                let r = match arch {
+                    "mlpsyn" => {
+                        let schedule = Schedule::new(
+                            cfg.variant, &[rate, rate], SUPPORT, false)?;
+                        let mut tr = MlpTrainer::new(
+                            &cache, arch, schedule, mnist.n, 0.01, 7)?;
+                        tr.warmup()?;
+                        bench(cfg.label, warm, reps,
+                              || tr.step(&mnist).unwrap())
+                    }
+                    _ => {
+                        let shared = cfg.variant != Variant::Conv;
+                        let schedule = Schedule::new(
+                            cfg.variant, &[rate, rate], SUPPORT, shared)?;
+                        let mut tr = LstmTrainer::new(
+                            &cache, arch, schedule, &corpus.train, 0.1,
+                            13)?;
+                        tr.warmup()?;
+                        bench(cfg.label, warm, reps,
+                              || tr.step().unwrap())
+                    }
+                };
+                if cfg.label == "dense" {
+                    dense_s = r.median_s;
+                }
+                let speedup = dense_s / r.median_s;
+                table.row(&[arch.to_string(), format!("{rate}"),
+                            cfg.label.to_string(), fmt_time(r.median_s),
+                            format!("{:.1}", r.per_sec()),
+                            format!("{speedup:.2}x")]);
+                report.row(vec![
+                    ("arch", Json::str(arch)),
+                    ("rate", Json::num(rate)),
+                    ("config", Json::str(cfg.label)),
+                    ("variant", Json::str(cfg.variant.as_str())),
+                    ("median_step_s", Json::num(r.median_s)),
+                    ("mad_s", Json::num(r.mad_s)),
+                    ("mean_step_s", Json::num(r.mean_s)),
+                    ("reps", Json::num(r.reps as f64)),
+                    ("speedup_vs_dense", Json::num(speedup)),
+                ]);
+            }
+        }
+    }
+
+    println!("== sparse speedup (dense vs row-skip vs tile-skip, \
+              {threads} thread(s)) ==");
+    table.print();
+    let path = report.write_default("BENCH_sparse.json")?;
+    println!("\nwrote {} ({} rows)", path.display(), report.n_rows());
+    println!("interpretation: the paper's claim is that regular dropout \
+              patterns turn dropped rows/tiles into *skipped* work; \
+              speedup should grow with the dropout rate and tile-skip \
+              should track row-skip (fig. 7/8).");
+    Ok(())
+}

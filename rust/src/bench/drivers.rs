@@ -16,7 +16,7 @@
 //!                          stay sequential so per-step numbers remain
 //!                          comparable to older runs)
 //! * `AD_BENCH_FULL`        set to 1 to use paper-scale LSTM (H=1536)
-//! * `AD_BACKEND`           pjrt|reference (reference interprets on host
+//! * `AD_BACKEND`           pjrt|reference|sparse (host backends interpret
 //!                          — timing columns then measure the
 //!                          interpreter, not the paper's hardware claim)
 

@@ -3,6 +3,9 @@
 //! Every `rust/benches/*.rs` binary builds on this.
 
 pub mod drivers;
+pub mod report;
+
+pub use report::BenchReport;
 
 use crate::util::stats;
 use crate::util::Timer;

@@ -1,0 +1,134 @@
+//! Machine-readable bench reports: the one writer behind every checked-in
+//! `BENCH_*.json` (`benches/sparse_speedup.rs`, `benches/micro_hotpath.rs`).
+//!
+//! Schema (stable; downstream tooling and the ROADMAP's perf-trajectory
+//! tracking parse these):
+//!
+//! ```json
+//! {
+//!   "bench": "<name>",
+//!   "version": 1,
+//!   "provenance": "<which harness produced the numbers>",
+//!   ... free-form meta (threads, backend, smoke, ...) ...,
+//!   "rows": [ { per-measurement fields }, ... ]
+//! }
+//! ```
+//!
+//! Reports land in the repo root by default (next to ROADMAP.md) so runs
+//! from `rust/` always overwrite the same checked-in files; `AD_BENCH_OUT`
+//! redirects the directory (CI points it at an artifact dir).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub struct BenchReport {
+    name: String,
+    meta: BTreeMap<String, Json>,
+    rows: Vec<Json>,
+}
+
+impl BenchReport {
+    /// New report named `name`, with `provenance` identifying the harness
+    /// that produced the numbers (file path of the bench binary).
+    pub fn new(name: &str, provenance: &str) -> BenchReport {
+        let mut meta = BTreeMap::new();
+        meta.insert("version".to_string(), Json::num(1.0));
+        meta.insert("provenance".to_string(), Json::str(provenance));
+        BenchReport { name: name.to_string(), meta, rows: Vec::new() }
+    }
+
+    /// Set one top-level meta field.
+    pub fn set(&mut self, key: &str, value: Json) -> &mut Self {
+        self.meta.insert(key.to_string(), value);
+        self
+    }
+
+    /// Append one measurement row.
+    pub fn row(&mut self, fields: Vec<(&str, Json)>) -> &mut Self {
+        self.rows.push(Json::obj(fields));
+        self
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".to_string(), Json::str(&self.name));
+        for (k, v) in &self.meta {
+            obj.insert(k.clone(), v.clone());
+        }
+        obj.insert("rows".to_string(), Json::Arr(self.rows.clone()));
+        Json::Obj(obj)
+    }
+
+    /// Write pretty JSON (+ trailing newline) to `path`.
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let text = format!("{}\n", self.to_json().pretty());
+        std::fs::write(path, text)
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Default location of `file_name`: `$AD_BENCH_OUT/` when set, else
+    /// the repo root (one level above the cargo manifest).
+    pub fn default_path(file_name: &str) -> PathBuf {
+        match std::env::var_os("AD_BENCH_OUT") {
+            Some(dir) => PathBuf::from(dir).join(file_name),
+            None => PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("..")
+                .join(file_name),
+        }
+    }
+
+    /// Write to [`Self::default_path`] and return where it landed.
+    pub fn write_default(&self, file_name: &str) -> Result<PathBuf> {
+        let path = Self::default_path(file_name);
+        self.write(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn report_shape_roundtrips() {
+        let mut r = BenchReport::new("sparse_speedup", "benches/x.rs");
+        r.set("threads", Json::num(4.0));
+        r.row(vec![("arch", Json::str("mlpsyn")),
+                   ("median_step_s", Json::num(0.01))]);
+        r.row(vec![("arch", Json::str("lstmsyn")),
+                   ("median_step_s", Json::num(0.02))]);
+        assert_eq!(r.n_rows(), 2);
+        let v = json::parse(&r.to_json().pretty()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("sparse_speedup"));
+        assert_eq!(v.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("threads").unwrap().as_usize(), Some(4));
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].path("arch").unwrap().as_str(), Some("mlpsyn"));
+    }
+
+    #[test]
+    fn write_and_reload() {
+        let dir = std::env::temp_dir().join(format!(
+            "ad-bench-report-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mut r = BenchReport::new("t", "here");
+        r.row(vec![("x", Json::num(1.0))]);
+        r.write(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert!(json::parse(text.trim()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -8,27 +8,41 @@
 //! matter how many trainers run.
 //!
 //! The cache is generic over the execution [`Backend`]: PJRT compiles HLO
-//! artifacts, the reference backend builds interpreters from the manifest
-//! alone. The handle is cheap to clone (`Arc` all the way down); clones
-//! share the underlying map. Lookups take a read lock on the hit path and
-//! upgrade to a write lock only to compile, using the `HashMap` entry API
-//! so a miss costs a single hash probe under the write lock.
+//! artifacts, the reference/sparse backends build step interpreters from
+//! the manifest alone. The handle is cheap to clone (`Arc` all the way
+//! down); clones share the underlying map. Lookups take a read lock on
+//! the hit path and upgrade to a write lock only to compile, using the
+//! `HashMap` entry API so a miss costs a single hash probe under the
+//! write lock.
+//!
+//! ## Poisoning
+//!
+//! A panicking compile used to poison the `RwLock` and wedge every later
+//! trainer in the process with an opaque `PoisonError`. The cache now
+//! *recovers* the guard instead: the map is never left mid-mutation by a
+//! compile panic (the entry is only inserted after `compile` returns
+//! `Ok`), so the data is consistent and the panic stays what it was — one
+//! failed compile, not a process-wide outage. `cache_poisoning_recovers`
+//! below pins this.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard,
+                RwLockWriteGuard};
 
 use anyhow::Result;
 
 use crate::runtime::{backend_from_env, Backend, Executor, Manifest,
-                     ReferenceBackend};
+                     ReferenceBackend, SparseBackend};
 use crate::util::Timer;
+
+type ExeMap = HashMap<String, Arc<dyn Executor>>;
 
 #[derive(Clone)]
 pub struct ExecutorCache {
     backend: Arc<dyn Backend>,
     manifest: Arc<Manifest>,
-    exes: Arc<RwLock<HashMap<String, Arc<dyn Executor>>>>,
+    exes: Arc<RwLock<ExeMap>>,
     /// Compile wall-clock per artifact (diagnostics / EXPERIMENTS Perf).
     compile_log: Arc<Mutex<Vec<(String, f64)>>>,
 }
@@ -49,6 +63,12 @@ impl ExecutorCache {
         Self::new(Arc::new(ReferenceBackend::new()), manifest)
     }
 
+    /// Cache over the structured-sparse compute engine (hermetic; worker
+    /// pool sized by `AD_THREADS`).
+    pub fn sparse(manifest: Manifest) -> Self {
+        Self::new(Arc::new(SparseBackend::new()), manifest)
+    }
+
     /// Cache over the PJRT CPU client.
     #[cfg(feature = "pjrt")]
     pub fn pjrt_cpu(manifest: Manifest) -> Result<Self> {
@@ -56,8 +76,8 @@ impl ExecutorCache {
                      manifest))
     }
 
-    /// Backend selected by `AD_BACKEND` (reference|pjrt); defaults to
-    /// PJRT when compiled in, reference otherwise.
+    /// Backend selected by `AD_BACKEND` (reference|sparse|pjrt);
+    /// defaults to PJRT when compiled in, reference otherwise.
     pub fn from_env(manifest: Manifest) -> Result<Self> {
         Ok(Self::new(backend_from_env()?, manifest))
     }
@@ -70,11 +90,25 @@ impl ExecutorCache {
         &self.manifest
     }
 
+    /// Read guard over the map, recovering from poison (see module docs:
+    /// a compile panic cannot leave the map mid-mutation).
+    fn exes_read(&self) -> RwLockReadGuard<'_, ExeMap> {
+        self.exes.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn exes_write(&self) -> RwLockWriteGuard<'_, ExeMap> {
+        self.exes.write().unwrap_or_else(|p| p.into_inner())
+    }
+
+    fn log_guard(&self) -> MutexGuard<'_, Vec<(String, f64)>> {
+        self.compile_log.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Fetch (compiling if needed) the executor for `name`. The returned
     /// `Arc` is independent of the cache's locks, so callers hold no borrow
     /// across the subsequent execute.
     pub fn get(&self, name: &str) -> Result<Arc<dyn Executor>> {
-        if let Some(exe) = self.exes.read().expect("cache lock").get(name) {
+        if let Some(exe) = self.exes_read().get(name) {
             return Ok(Arc::clone(exe));
         }
         // Compilation runs under the write lock on purpose: it guarantees
@@ -82,7 +116,7 @@ impl ExecutorCache {
         // the benches and tests assert via `compile_times_s`). Readers
         // briefly queue behind a first-time compile; steady-state hits
         // never touch the write lock.
-        let mut map = self.exes.write().expect("cache lock");
+        let mut map = self.exes_write();
         match map.entry(name.to_string()) {
             // Another trainer may have compiled it between the locks.
             Entry::Occupied(e) => Ok(Arc::clone(e.get())),
@@ -92,10 +126,7 @@ impl ExecutorCache {
                 let dt = t.elapsed_s();
                 crate::debug!("compiled {name} in {dt:.2}s \
                                ({})", self.backend.name());
-                self.compile_log
-                    .lock()
-                    .expect("compile log lock")
-                    .push((name.to_string(), dt));
+                self.log_guard().push((name.to_string(), dt));
                 Ok(Arc::clone(slot.insert(exe)))
             }
         }
@@ -112,7 +143,7 @@ impl ExecutorCache {
 
     /// Number of compiled executors currently cached.
     pub fn len(&self) -> usize {
-        self.exes.read().expect("cache lock").len()
+        self.exes_read().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -123,23 +154,19 @@ impl ExecutorCache {
     /// actually performed — a shared cache therefore lists each artifact
     /// at most once.
     pub fn compile_times_s(&self) -> Vec<(String, f64)> {
-        self.compile_log.lock().expect("compile log lock").clone()
+        self.log_guard().clone()
     }
 
     /// Total compilation wall-clock absorbed by this cache.
     pub fn total_compile_s(&self) -> f64 {
-        self.compile_log
-            .lock()
-            .expect("compile log lock")
-            .iter()
-            .map(|(_, s)| s)
-            .sum()
+        self.log_guard().iter().map(|(_, s)| s).sum()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     #[test]
     fn reference_cache_compiles_once_and_counts() {
@@ -156,5 +183,63 @@ mod tests {
         let clone = cache.clone();
         clone.get("mlptest_eval").unwrap();
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn sparse_cache_compiles() {
+        let cache = ExecutorCache::sparse(Manifest::builtin_test());
+        assert_eq!(cache.backend().name(), "sparse");
+        cache.get("mlpsyn_rdp_2_2").unwrap();
+        assert_eq!(cache.len(), 1);
+    }
+
+    /// A backend whose first compile panics (simulating a compiler bug);
+    /// later compiles succeed.
+    #[derive(Debug)]
+    struct FlakyBackend {
+        poisoned_once: AtomicBool,
+        inner: ReferenceBackend,
+    }
+
+    impl Backend for FlakyBackend {
+        fn name(&self) -> &'static str {
+            "flaky"
+        }
+
+        fn compile(&self, manifest: &Manifest, name: &str)
+                   -> Result<Arc<dyn Executor>> {
+            if !self.poisoned_once.swap(true, Ordering::SeqCst) {
+                panic!("injected compile panic");
+            }
+            self.inner.compile(manifest, name)
+        }
+
+        fn upload(&self, t: &crate::runtime::HostTensor)
+                  -> Result<crate::runtime::Value> {
+            self.inner.upload(t)
+        }
+    }
+
+    #[test]
+    fn cache_poisoning_recovers() {
+        let cache = ExecutorCache::new(
+            Arc::new(FlakyBackend {
+                poisoned_once: AtomicBool::new(false),
+                inner: ReferenceBackend::new(),
+            }),
+            Manifest::builtin_test(),
+        );
+        // First compile panics while the write lock is held, poisoning
+        // the RwLock.
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| cache.get("mlptest_eval")));
+        assert!(r.is_err(), "injected panic must propagate");
+        // The cache must keep working — previously this deadlocked every
+        // later trainer in the process on a PoisonError.
+        let exe = cache.get("mlptest_eval").expect("recovered compile");
+        assert_eq!(exe.meta().name, "mlptest_eval");
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.compile_times_s().len(), 1,
+                   "the panicked attempt must not be logged");
     }
 }

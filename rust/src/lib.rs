@@ -40,7 +40,8 @@ pub fn artifacts_dir() -> std::path::PathBuf {
 
 /// The artifacts manifest when one exists, else the built-in synthetic
 /// registry ([`runtime::Manifest::builtin_test`]) — which only the
-/// reference backend can execute. When the effective backend is PJRT
+/// hermetic host backends (reference, sparse) can execute. When the
+/// effective backend is PJRT
 /// (per `AD_BACKEND` / the `pjrt` feature default) a missing manifest
 /// stays a loud fail-fast error: falling back would only defer it to an
 /// opaque HLO-file-not-found at first compile.
@@ -52,11 +53,12 @@ pub fn manifest_or_builtin() -> anyhow::Result<runtime::Manifest> {
             // Same selection rule as backend_from_env — and a typo'd
             // AD_BACKEND surfaces as itself here, not as a
             // missing-artifacts complaint.
-            if !runtime::backend::env_selects_reference()? {
+            if !runtime::backend::env_selects_hermetic()? {
                 return Err(e.context(
                     "no artifacts manifest and the PJRT backend needs \
                      one (run `make artifacts`, or set \
-                     AD_BACKEND=reference for the built-in registry)"));
+                     AD_BACKEND=reference or AD_BACKEND=sparse for the \
+                     built-in registry)"));
             }
             crate::info!("no artifacts manifest at {} ({e:#}); using the \
                           built-in synthetic registry", dir.display());

@@ -35,9 +35,11 @@ COMMANDS:
   help         This message
 
 ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
-     AD_BACKEND (pjrt|reference; reference = pure-Rust interpreter, runs
-     with no artifacts — e.g. train-mlp --tag mlpsyn on the built-in
-     synthetic registry)";
+     AD_BACKEND (pjrt|reference|sparse; reference = pure-Rust
+     masked-dense interpreter, sparse = multithreaded row/tile-skipping
+     compute engine — both run with no artifacts, e.g. train-mlp
+     --tag mlpsyn on the built-in synthetic registry),
+     AD_THREADS (sparse backend worker count; default = all cores)";
 
 fn main() -> Result<()> {
     log::init_from_env();

@@ -4,14 +4,18 @@
 //! The coordinator never talks to PJRT (or any other engine) directly: it
 //! uploads [`HostTensor`]s through a [`Backend`], dispatches them to an
 //! [`Executor`] obtained by compile-by-name from the manifest, and keeps
-//! the returned [`Value`]s resident for the next step. Two backends ship:
+//! the returned [`Value`]s resident for the next step. Three backends
+//! ship:
 //!
 //! * **PJRT** (`runtime::engine`, behind the `pjrt` cargo feature) — loads
 //!   AOT HLO-text artifacts and keeps state as XLA literals end-to-end.
-//! * **Reference** (`runtime::reference`, always available) — a
-//!   manifest-driven pure-Rust f32 interpreter of the train/eval step
-//!   semantics. No artifacts, no Python, no PJRT: the whole
+//! * **Reference** (`runtime::reference`, always available) — the shared
+//!   step interpreter (`runtime::step`) over masked-dense element math.
+//!   No artifacts, no Python, no PJRT: the whole
 //!   sample→dispatch→step→metrics loop is testable hermetically.
+//! * **Sparse** (`runtime::sparse`, always available) — the same step
+//!   interpreter over the multithreaded row-/tile-skipping kernel
+//!   library; dropped coordinates are never loaded or multiplied.
 //!
 //! Contract shared by all backends (pinned by `rust/tests/hermetic.rs`):
 //! identical manifest calling convention (inputs `params ++ momenta ++ x,
@@ -212,30 +216,51 @@ fn pjrt_backend() -> Result<Arc<dyn Backend>> {
            `pjrt` cargo feature (cargo build --features pjrt)")
 }
 
-/// Whether the `AD_BACKEND` selection resolves to the reference backend
-/// — the single source of truth for the env convention, shared by
-/// [`backend_from_env`] and `crate::manifest_or_builtin` (which must
-/// decide *before* constructing anything). Errors on unknown values so
-/// typos surface as themselves, not as a downstream missing-artifacts
-/// message.
-pub fn env_selects_reference() -> Result<bool> {
+/// Which backend the `AD_BACKEND` env var selects — the single source of
+/// truth for the env convention, shared by [`backend_from_env`] and
+/// `crate::manifest_or_builtin` (which must decide *before* constructing
+/// anything). Errors on unknown values so typos surface as themselves,
+/// not as a downstream missing-artifacts message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Reference,
+    Sparse,
+    Pjrt,
+}
+
+pub fn backend_kind_from_env() -> Result<BackendKind> {
     match std::env::var("AD_BACKEND").as_deref() {
-        Ok("reference") | Ok("ref") => Ok(true),
-        Ok("pjrt") => Ok(false),
+        Ok("reference") | Ok("ref") => Ok(BackendKind::Reference),
+        Ok("sparse") => Ok(BackendKind::Sparse),
+        Ok("pjrt") => Ok(BackendKind::Pjrt),
         Ok(other) => bail!("unknown AD_BACKEND '{other}' \
-                            (expected reference|pjrt)"),
-        Err(_) => Ok(cfg!(not(feature = "pjrt"))),
+                            (expected reference|sparse|pjrt)"),
+        Err(_) => Ok(if cfg!(feature = "pjrt") {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::Reference
+        }),
     }
 }
 
+/// Whether the `AD_BACKEND` selection resolves to a hermetic host
+/// backend (reference or sparse) — those execute the built-in synthetic
+/// manifest with no artifacts on disk.
+pub fn env_selects_hermetic() -> Result<bool> {
+    Ok(backend_kind_from_env()? != BackendKind::Pjrt)
+}
+
 /// Select the backend from the `AD_BACKEND` env var: `reference` forces
-/// the pure-Rust interpreter, `pjrt` forces PJRT (error when the feature
-/// is compiled out), unset picks PJRT when available, else reference.
+/// the pure-Rust masked-dense interpreter, `sparse` the structured-sparse
+/// compute engine, `pjrt` the PJRT client (error when the feature is
+/// compiled out); unset picks PJRT when available, else reference.
 pub fn backend_from_env() -> Result<Arc<dyn Backend>> {
-    if env_selects_reference()? {
-        Ok(Arc::new(crate::runtime::reference::ReferenceBackend::new()))
-    } else {
-        pjrt_backend()
+    match backend_kind_from_env()? {
+        BackendKind::Reference =>
+            Ok(Arc::new(crate::runtime::reference::ReferenceBackend::new())),
+        BackendKind::Sparse =>
+            Ok(Arc::new(crate::runtime::sparse::SparseBackend::new())),
+        BackendKind::Pjrt => pjrt_backend(),
     }
 }
 

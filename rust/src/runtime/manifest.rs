@@ -260,15 +260,21 @@ impl Manifest {
             &LstmArchSpec { tag: "lstmtest".into(), vocab: 64, hidden: 32,
                             layers: 2, seq: 5, batch: 4, tile: 16 },
             &[2]));
+        // The syn archs carry the full {1,2,4}^2 dp grid so schedules can
+        // target the paper's rate range (dp=4 covers p up to 0.75 — the
+        // speedup bench sweeps 0.3/0.5/0.7). dp=4 divides every syn
+        // tile-grid edge it masks (w1 784x64 and w2 64x64 at tile 16;
+        // lstm wx 32x128 and wsoft 32x64 at tile 16).
         arts.extend(mlp_artifacts(
             &MlpArchSpec { tag: "mlpsyn".into(), n_in: 784,
                            hidden: [64, 64], n_out: 10, batch: 16,
                            tile: 16 },
-            &[(1, 1), (1, 2), (2, 1), (2, 2)]));
+            &[(1, 1), (1, 2), (1, 4), (2, 1), (2, 2), (2, 4), (4, 1),
+              (4, 2), (4, 4)]));
         arts.extend(lstm_artifacts(
             &LstmArchSpec { tag: "lstmsyn".into(), vocab: 64, hidden: 32,
                             layers: 2, seq: 8, batch: 8, tile: 16 },
-            &[1, 2]));
+            &[1, 2, 4]));
         Manifest::synthetic(arts)
     }
 
@@ -506,7 +512,9 @@ mod tests {
         for name in ["mlptest_conv", "mlptest_eval", "mlptest_rdp_2_2",
                      "mlptest_tdp_2_2", "lstmtest_conv", "lstmtest_eval",
                      "lstmtest_rdp_2", "lstmtest_tdp_2", "mlpsyn_conv",
-                     "mlpsyn_rdp_1_2", "lstmsyn_rdp_1", "lstmsyn_tdp_2"] {
+                     "mlpsyn_rdp_1_2", "lstmsyn_rdp_1", "lstmsyn_tdp_2",
+                     "mlpsyn_rdp_4_4", "mlpsyn_tdp_2_4", "lstmsyn_rdp_4",
+                     "lstmsyn_tdp_4"] {
             assert!(m.get(name).is_ok(), "missing {name}");
         }
         assert_eq!(m.tile, 128);

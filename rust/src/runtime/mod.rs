@@ -1,7 +1,8 @@
-//! Runtime layer: the execution-backend abstraction (backend), its two
+//! Runtime layer: the execution-backend abstraction (backend), its
 //! implementations (PJRT engine behind the `pjrt` feature, pure-Rust
-//! reference interpreter), the artifact manifest contract, and the
-//! backend-resident training state.
+//! reference interpreter, structured-sparse compute engine), the shared
+//! step interpreter they both plug kernels into, the artifact manifest
+//! contract, and the backend-resident training state.
 //!
 //! Flow: `Manifest::load` (or `Manifest::builtin_test`) ->
 //! `Backend::compile(name)` -> `Executor::run_raw` with values uploaded
@@ -14,14 +15,19 @@ pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod reference;
+pub mod sparse;
 pub mod state;
+pub mod step;
 
-pub use backend::{backend_from_env, env_selects_reference, Backend,
-                  Executor, HostTensor, Value};
+pub use backend::{backend_from_env, backend_kind_from_env,
+                  env_selects_hermetic, Backend, BackendKind, Executor,
+                  HostTensor, Value};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable, PjrtBackend};
 pub use manifest::{lstm_artifacts, mlp_artifacts, ArchMeta, ArtifactMeta,
                    Dtype, Kind, LstmArchSpec, Manifest, MlpArchSpec,
                    TensorMeta};
 pub use reference::ReferenceBackend;
+pub use sparse::{SparseBackend, SparseKernels};
 pub use state::TrainState;
+pub use step::{DenseKernels, Kernels, Skip, StepProgram};

@@ -1,37 +1,23 @@
-//! Reference execution backend: a manifest-driven pure-Rust interpreter of
-//! the train/eval step semantics. No artifacts, no Python, no PJRT — this
-//! is what makes the end-to-end coordinator loop testable hermetically.
+//! Reference execution backend: the shared step interpreter
+//! (`runtime::step::StepProgram`) over masked-**dense** element math
+//! ([`DenseKernels`]). No artifacts, no Python, no PJRT — this is what
+//! makes the end-to-end coordinator loop testable hermetically.
 //!
-//! Semantics contract (mirrors `python/compile/model.py`, pinned by
-//! `rust/tests/hermetic.rs` and cross-checked against PJRT by
-//! `rust/tests/integration.rs` when artifacts exist):
-//!
-//! * Same manifest calling convention: inputs `params ++ momenta ++ x, y,
-//!   extras, lr`; outputs `params' ++ momenta' ++ loss, correct`.
-//! * The compact RDP/TDP graphs are interpreted in their mathematically
-//!   identical *masked-dense* form: RDP multiplies activations by the row
-//!   pattern's 0/1 keep vector (`{b0 + dp*j}`) and the runtime `1/(1-p)`
-//!   scale; TDP multiplies the weight matrix by the diagonal-stripe tile
-//!   mask. Kept coordinates compute exactly what the compact graph
-//!   computes; dropped coordinates (and their gradients) are exactly zero
-//!   — e.g. dropped rows of `w3` stay bit-identical across a step, the
-//!   same invariant the PJRT integration suite pins.
-//! * SGD with momentum in Caffe semantics: `m' = mu*m + g`,
-//!   `p' = p - lr*m'`, `mu` from the manifest.
-//! * All math is f32 on host (loss accumulation in f64). Floating-point
-//!   summation *order* differs from XLA, so losses agree with PJRT to
-//!   float tolerance, not bit-for-bit; dispatch sequences and RNG draw
-//!   order agree exactly (the backend is invisible to the coordinator).
+//! The model semantics (manifest calling convention, RDP/TDP masked-dense
+//! interpretation, BPTT, Caffe SGD-momentum) live in `runtime::step`;
+//! this file only binds them to the dense kernels and the host `Value`
+//! representation. The structurally identical sibling is
+//! `runtime::sparse::SparseBackend`, which binds the *same* program to
+//! row-/tile-skipping kernels — `rust/tests/hermetic.rs` pins that the
+//! two agree on full train steps.
 
 use std::sync::Arc;
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::patterns::{pick_block, RowPattern, TilePattern};
 use crate::runtime::backend::{Backend, Executor, HostTensor, Value};
-use crate::runtime::manifest::{ArchMeta, ArtifactMeta, Manifest};
-
-const FORGET_BIAS: f32 = 1.0;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::step::{DenseKernels, StepProgram};
 
 /// The always-available pure-Rust backend.
 #[derive(Clone, Debug, Default)]
@@ -50,13 +36,8 @@ impl Backend for ReferenceBackend {
 
     fn compile(&self, manifest: &Manifest, name: &str)
                -> Result<Arc<dyn Executor>> {
-        let meta = manifest.get(name)?.clone();
-        match meta.model.as_str() {
-            "mlp" | "lstm" => {}
-            other => bail!("reference backend: unknown model '{other}' \
-                            (artifact {name})"),
-        }
-        Ok(Arc::new(RefExecutor { meta, momentum: manifest.momentum as f32 }))
+        Ok(Arc::new(StepProgram::new(manifest, name,
+                                     Arc::new(DenseKernels))?))
     }
 
     fn upload(&self, t: &HostTensor) -> Result<Value> {
@@ -68,1020 +49,31 @@ impl Backend for ReferenceBackend {
     }
 }
 
-/// One interpreted artifact. Holds everything `run_raw` needs: the
-/// manifest metadata (shapes, dp combination, per-arch tile edge) and the
-/// manifest-level momentum coefficient.
-pub struct RefExecutor {
-    meta: ArtifactMeta,
-    momentum: f32,
-}
-
-impl Executor for RefExecutor {
-    fn meta(&self) -> &ArtifactMeta {
-        &self.meta
-    }
-
-    fn run_raw(&self, inputs: &[&Value]) -> Result<Vec<Value>> {
-        if inputs.len() != self.meta.inputs.len() {
-            bail!("{}: {} inputs given, manifest says {}", self.meta.name,
-                  inputs.len(), self.meta.inputs.len());
-        }
-        let host: Vec<&HostTensor> = inputs
-            .iter()
-            .map(|v| v.as_host())
-            .collect::<Result<_>>()?;
-        for (t, m) in host.iter().zip(&self.meta.inputs) {
-            t.check(m)?;
-        }
-        match (self.meta.model.as_str(), self.meta.variant.as_str()) {
-            ("mlp", "eval") => self.mlp_eval(&host),
-            ("mlp", _) => self.mlp_train(&host),
-            ("lstm", "eval") => self.lstm_eval(&host),
-            ("lstm", _) => self.lstm_train(&host),
-            (m, v) => bail!("reference backend: unsupported artifact \
-                             {m}/{v}"),
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Dense f32 helpers (row-major everywhere)
-// ---------------------------------------------------------------------------
-
-/// `a [m,k] @ b [k,n] -> [m,n]`.
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue; // masked activations make this sparse
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-    out
-}
-
-/// `a [m,n] @ b^T` with `b [k,n]` -> `[m,k]`.
-fn matmul_nt(a: &[f32], b: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * n);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0f32; m * k];
-    for i in 0..m {
-        let arow = &a[i * n..(i + 1) * n];
-        for j in 0..k {
-            let brow = &b[j * n..(j + 1) * n];
-            let mut acc = 0f32;
-            for (&av, &bv) in arow.iter().zip(brow) {
-                acc += av * bv;
-            }
-            out[i * k + j] = acc;
-        }
-    }
-    out
-}
-
-/// `a^T @ b` with `a [m,k]`, `b [m,n]` -> `[k,n]`, accumulated into `out`.
-fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
-                 out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), m * n);
-    debug_assert_eq!(out.len(), k * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let brow = &b[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
-            let orow = &mut out[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    }
-}
-
-fn matmul_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0f32; k * n];
-    matmul_tn_acc(a, b, m, k, n, &mut out);
-    out
-}
-
-/// `x [m,n] += bias [n]` broadcast over rows.
-fn add_row_bias(x: &mut [f32], bias: &[f32]) {
-    let n = bias.len();
-    for row in x.chunks_mut(n) {
-        for (v, &b) in row.iter_mut().zip(bias) {
-            *v += b;
-        }
-    }
-}
-
-/// Column sums of `x [m,n]` -> `[n]`, accumulated into `out`.
-fn colsum_acc(x: &[f32], n: usize, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), n);
-    for row in x.chunks(n) {
-        for (o, &v) in out.iter_mut().zip(row) {
-            *o += v;
-        }
-    }
-}
-
-fn relu_inplace(x: &mut [f32]) {
-    for v in x.iter_mut() {
-        if *v < 0.0 {
-            *v = 0.0;
-        }
-    }
-}
-
-fn sigmoid(x: f32) -> f32 {
-    1.0 / (1.0 + (-x).exp())
-}
-
-/// Softmax cross-entropy over `rows` rows of `cols` logits against int
-/// targets. Returns (mean nll, correct count, d_logits) with the gradient
-/// already scaled by `1/rows` (the mean). Matches `model.softmax_xent`.
-fn softmax_xent_grad(logits: &[f32], targets: &[i32], rows: usize,
-                     cols: usize) -> Result<(f32, f32, Vec<f32>)> {
-    debug_assert_eq!(logits.len(), rows * cols);
-    let mut loss = 0f64;
-    let mut correct = 0f32;
-    let mut grad = vec![0f32; rows * cols];
-    let inv = 1.0 / rows as f32;
-    for r in 0..rows {
-        let y = targets[r];
-        if y < 0 || y as usize >= cols {
-            bail!("label {y} out of range [0, {cols})");
-        }
-        let row = &logits[r * cols..(r + 1) * cols];
-        let mut mx = f32::NEG_INFINITY;
-        let mut argmax = 0;
-        for (j, &v) in row.iter().enumerate() {
-            if v > mx {
-                mx = v;
-                argmax = j;
-            }
-        }
-        let mut sum = 0f32;
-        for &v in row {
-            sum += (v - mx).exp();
-        }
-        let lse = sum.ln() + mx;
-        loss += (lse - row[y as usize]) as f64;
-        if argmax == y as usize {
-            correct += 1.0;
-        }
-        let grow = &mut grad[r * cols..(r + 1) * cols];
-        for (j, (g, &v)) in grow.iter_mut().zip(row).enumerate() {
-            let p = (v - lse).exp();
-            *g = (p - if j == y as usize { 1.0 } else { 0.0 }) * inv;
-        }
-    }
-    Ok(((loss / rows as f64) as f32, correct, grad))
-}
-
-// ---------------------------------------------------------------------------
-// Dropout-site transforms (the masked-dense form of the compact graphs)
-// ---------------------------------------------------------------------------
-
-/// How one dropout site transforms the value it guards.
-enum Feed {
-    /// No dropout at this site (layer-0 inputs, eval graphs).
-    Plain,
-    /// Activation mask + inverted-dropout scale: `conv` (per-element
-    /// Bernoulli matrix, `rows == batch`) and `rdp` (row-pattern keep
-    /// vector, `rows == 1`, broadcast over the batch).
-    Act { m: Vec<f32>, rows: usize, s: f32 },
-    /// Weight mask (`tdp` DropConnect at tile granularity): the matmul
-    /// runs against `w ∘ mask`, the scale applies to the product.
-    Weight { mask: Vec<f32>, s: f32 },
-}
-
-impl Feed {
-    /// Apply an activation mask to `x [b, h]` (no-op for Plain/Weight).
-    fn mask_act(&self, x: &[f32], b: usize, h: usize) -> Vec<f32> {
-        match self {
-            Feed::Act { m, rows, s } => {
-                let mut out = Vec::with_capacity(b * h);
-                for bi in 0..b {
-                    let mrow = if *rows == 1 {
-                        &m[..h]
-                    } else {
-                        let r = bi % rows;
-                        &m[r * h..(r + 1) * h]
-                    };
-                    let xrow = &x[bi * h..(bi + 1) * h];
-                    for (xv, mv) in xrow.iter().zip(mrow) {
-                        out.push(xv * mv * s);
-                    }
-                }
-                out
-            }
-            _ => x.to_vec(),
-        }
-    }
-}
-
-/// Row-pattern 0/1 keep vector with input validation (bail, not panic).
-fn row_mask_checked(m: usize, dp: usize, b0: usize) -> Result<Vec<f32>> {
-    if dp == 0 || dp > m {
-        bail!("rdp: dp={dp} out of range for layer width {m}");
-    }
-    if b0 >= dp {
-        bail!("rdp: bias b0={b0} must be < dp={dp}");
-    }
-    Ok(RowPattern::new(m, dp, b0).mask())
-}
-
-/// Tile-pattern 0/1 weight mask with input validation.
-fn tile_mask_checked(k: usize, n: usize, dp: usize, b0: usize, tile: usize)
-                     -> Result<Vec<f32>> {
-    if dp == 0 {
-        bail!("tdp: dp must be >= 1");
-    }
-    if b0 >= dp {
-        bail!("tdp: bias b0={b0} must be < dp={dp}");
-    }
-    let (tr, tc) = (pick_block(k, tile), pick_block(n, tile));
-    let (tk, tn) = (k / tr, n / tc);
-    if tn % dp != 0 && tk % dp != 0 {
-        bail!("tdp: dp={dp} must divide one tile-grid edge of {tk}x{tn} \
-               (weight {k}x{n}, tile {tr}x{tc})");
-    }
-    Ok(TilePattern::new(k, n, dp, b0, tile).mask())
-}
-
-fn hadamard(a: &[f32], b: &[f32]) -> Vec<f32> {
-    a.iter().zip(b).map(|(x, y)| x * y).collect()
-}
-
-fn scale_vec(a: &[f32], s: f32) -> Vec<f32> {
-    a.iter().map(|x| x * s).collect()
-}
-
-// ---------------------------------------------------------------------------
-// Executor internals
-// ---------------------------------------------------------------------------
-
-impl RefExecutor {
-    fn n_params(&self) -> usize {
-        self.meta.n_params()
-    }
-
-    /// Split train-step inputs per the manifest convention.
-    fn split_train<'a>(&self, inp: &[&'a HostTensor])
-                       -> Result<(Vec<&'a [f32]>, Vec<&'a [f32]>,
-                                  &'a HostTensor, &'a [i32],
-                                  Vec<&'a HostTensor>, f32)> {
-        let np = self.n_params();
-        let params: Vec<&[f32]> =
-            inp[..np].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
-        let momenta: Vec<&[f32]> = inp[np..2 * np]
-            .iter()
-            .map(|t| t.as_f32())
-            .collect::<Result<_>>()?;
-        let x = inp[2 * np];
-        let y = inp[2 * np + 1].as_i32()?;
-        let extras: Vec<&HostTensor> =
-            inp[2 * np + 2..inp.len() - 1].to_vec();
-        let lr = inp[inp.len() - 1].as_f32()?[0];
-        Ok((params, momenta, x, y, extras, lr))
-    }
-
-    /// Per-site feeds from the variant extras. `widths[i]` is the
-    /// activation width guarded by site i (for rdp masks); `wdims[i]` the
-    /// weight matrix dims guarded by site i (for tdp masks).
-    fn site_feeds(&self, extras: &[&HostTensor], sites: usize,
-                  widths: &[usize], wdims: &[(usize, usize)])
-                  -> Result<Vec<Feed>> {
-        if extras.len() != 2 * sites {
-            bail!("{}: expected {} variant extras, got {}", self.meta.name,
-                  2 * sites, extras.len());
-        }
-        if self.meta.variant != "conv" && self.meta.dp.len() != sites {
-            bail!("{}: manifest dp {:?} does not cover {} sites",
-                  self.meta.name, self.meta.dp, sites);
-        }
-        let mut feeds = Vec::with_capacity(sites);
-        for i in 0..sites {
-            let s = extras[sites + i].as_f32()?[0];
-            let feed = match self.meta.variant.as_str() {
-                "conv" => Feed::Act {
-                    m: extras[i].as_f32()?.to_vec(),
-                    rows: extras[i].shape()[0],
-                    s,
-                },
-                "rdp" => {
-                    let b0 = extras[i].as_i32()?[0];
-                    if b0 < 0 {
-                        bail!("rdp: negative bias {b0}");
-                    }
-                    let dp = self.meta.dp[i];
-                    Feed::Act {
-                        m: row_mask_checked(widths[i], dp, b0 as usize)?,
-                        rows: 1,
-                        s,
-                    }
-                }
-                "tdp" => {
-                    let b0 = extras[i].as_i32()?[0];
-                    if b0 < 0 {
-                        bail!("tdp: negative bias {b0}");
-                    }
-                    let dp = self.meta.dp[i];
-                    let (k, n) = wdims[i];
-                    Feed::Weight {
-                        mask: tile_mask_checked(k, n, dp, b0 as usize,
-                                                self.meta.tile)?,
-                        s,
-                    }
-                }
-                other => bail!("reference backend: unknown variant \
-                                '{other}'"),
-            };
-            feeds.push(feed);
-        }
-        Ok(feeds)
-    }
-
-    /// Pack `(new params, new momenta, loss, correct)` in manifest output
-    /// order.
-    fn pack(&self, new_p: Vec<Vec<f32>>, new_m: Vec<Vec<f32>>, loss: f32,
-            correct: f32) -> Result<Vec<Value>> {
-        let np = self.n_params();
-        let mut out = Vec::with_capacity(2 * np + 2);
-        for (i, p) in new_p.into_iter().enumerate() {
-            out.push(Value::Host(HostTensor::f32(
-                &self.meta.outputs[i].shape, p)));
-        }
-        for (i, m) in new_m.into_iter().enumerate() {
-            out.push(Value::Host(HostTensor::f32(
-                &self.meta.outputs[np + i].shape, m)));
-        }
-        out.push(Value::Host(HostTensor::scalar_f32(loss)));
-        out.push(Value::Host(HostTensor::scalar_f32(correct)));
-        Ok(out)
-    }
-
-    /// `m' = mu*m + g`, `p' = p - lr*m'` (Caffe semantics).
-    fn sgd(&self, params: &[&[f32]], momenta: &[&[f32]],
-           grads: &[Vec<f32>], lr: f32)
-           -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
-        let mu = self.momentum;
-        let mut new_p = Vec::with_capacity(params.len());
-        let mut new_m = Vec::with_capacity(params.len());
-        for ((p, m), g) in params.iter().zip(momenta).zip(grads) {
-            let nm: Vec<f32> = m.iter().zip(g.iter())
-                .map(|(&mv, &gv)| mu * mv + gv)
-                .collect();
-            let np: Vec<f32> = p.iter().zip(&nm)
-                .map(|(&pv, &mv)| pv - lr * mv)
-                .collect();
-            new_p.push(np);
-            new_m.push(nm);
-        }
-        (new_p, new_m)
-    }
-
-    // -- MLP ---------------------------------------------------------------
-
-    fn mlp_dims(&self) -> Result<(usize, usize, usize, usize, usize)> {
-        match &self.meta.arch {
-            ArchMeta::Mlp { n_in, hidden, n_out, batch } => {
-                if hidden.len() != 2 {
-                    bail!("reference mlp supports 2 hidden layers, \
-                           got {}", hidden.len());
-                }
-                Ok((*n_in, hidden[0], hidden[1], *n_out, *batch))
-            }
-            _ => bail!("artifact {} is not an MLP", self.meta.name),
-        }
-    }
-
-    fn mlp_train(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
-        let (n_in, h1, h2, n_out, batch) = self.mlp_dims()?;
-        let (params, momenta, xt, y, extras, lr) = self.split_train(inp)?;
-        let x = xt.as_f32()?;
-        let (w1, b1, w2, b2, w3, b3) = (params[0], params[1], params[2],
-                                        params[3], params[4], params[5]);
-        let feeds = self.site_feeds(&extras, 2, &[h1, h2],
-                                    &[(n_in, h1), (h1, h2)])?;
-
-        // Forward. Two shapes: activation-masked (conv/rdp) applies the
-        // site mask after relu; weight-masked (tdp) masks w and scales the
-        // product before the bias (mirrors _mlp_logits_tdp).
-        let weight_masked = matches!(feeds[0], Feed::Weight { .. });
-        let (out0, out1, w2m);
-        if weight_masked {
-            let (mask1, s1) = match &feeds[0] {
-                Feed::Weight { mask, s } => (mask, *s),
-                _ => unreachable!(),
-            };
-            let (mask2, s2) = match &feeds[1] {
-                Feed::Weight { mask, s } => (mask, *s),
-                _ => unreachable!(),
-            };
-            let w1v = hadamard(w1, mask1);
-            let w2v = hadamard(w2, mask2);
-            let mut z1 = scale_vec(&matmul(x, &w1v, batch, n_in, h1), s1);
-            add_row_bias(&mut z1, b1);
-            relu_inplace(&mut z1);
-            let mut z2 = scale_vec(&matmul(&z1, &w2v, batch, h1, h2), s2);
-            add_row_bias(&mut z2, b2);
-            relu_inplace(&mut z2);
-            out0 = z1;
-            out1 = z2;
-            w2m = Some(w2v);
-        } else {
-            let mut z1 = matmul(x, w1, batch, n_in, h1);
-            add_row_bias(&mut z1, b1);
-            relu_inplace(&mut z1);
-            let o0 = feeds[0].mask_act(&z1, batch, h1);
-            let mut z2 = matmul(&o0, w2, batch, h1, h2);
-            add_row_bias(&mut z2, b2);
-            relu_inplace(&mut z2);
-            let o1 = feeds[1].mask_act(&z2, batch, h2);
-            out0 = o0;
-            out1 = o1;
-            w2m = None;
-        }
-        let mut logits = matmul(&out1, w3, batch, h2, n_out);
-        add_row_bias(&mut logits, b3);
-        let (loss, correct, dlogits) =
-            softmax_xent_grad(&logits, y, batch, n_out)?;
-
-        // Backward.
-        let dw3 = matmul_tn(&out1, &dlogits, batch, h2, n_out);
-        let mut db3 = vec![0f32; n_out];
-        colsum_acc(&dlogits, n_out, &mut db3);
-        let dout1 = matmul_nt(&dlogits, w3, batch, n_out, h2);
-
-        let (dw1, db1, dw2, db2);
-        if weight_masked {
-            let (mask1, s1) = match &feeds[0] {
-                Feed::Weight { mask, s } => (mask, *s),
-                _ => unreachable!(),
-            };
-            let (mask2, s2) = match &feeds[1] {
-                Feed::Weight { mask, s } => (mask, *s),
-                _ => unreachable!(),
-            };
-            // out1 = relu((out0 @ w2m)*s2 + b2)
-            let dz2: Vec<f32> = dout1.iter().zip(&out1)
-                .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
-                .collect();
-            let mut db2v = vec![0f32; h2];
-            colsum_acc(&dz2, h2, &mut db2v);
-            let du2 = scale_vec(&dz2, s2);
-            let dw2v = hadamard(&matmul_tn(&out0, &du2, batch, h1, h2),
-                                mask2);
-            let dout0 = matmul_nt(&du2, w2m.as_ref().unwrap(), batch, h2,
-                                  h1);
-            let dz1: Vec<f32> = dout0.iter().zip(&out0)
-                .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
-                .collect();
-            let mut db1v = vec![0f32; h1];
-            colsum_acc(&dz1, h1, &mut db1v);
-            let du1 = scale_vec(&dz1, s1);
-            let dw1v = hadamard(&matmul_tn(x, &du1, batch, n_in, h1),
-                                mask1);
-            dw1 = dw1v;
-            db1 = db1v;
-            dw2 = dw2v;
-            db2 = db2v;
-        } else {
-            // out1 = relu(out0 @ w2 + b2) ∘ m2 ∘ s2. The relu derivative
-            // tests the *pre-mask* activation; recover it from out1 only
-            // where the mask keeps (dropped units have zero upstream grad
-            // after the mask anyway).
-            let da1 = feeds[1].mask_act(&dout1, batch, h2);
-            // a2 > 0 wherever out1 > 0 OR (masked-out unit): for masked-out
-            // units da1 is already zero, so using out1's sign is exact on
-            // every coordinate that can carry gradient.
-            let dz2: Vec<f32> = da1.iter().zip(&out1)
-                .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
-                .collect();
-            let mut db2v = vec![0f32; h2];
-            colsum_acc(&dz2, h2, &mut db2v);
-            let dw2v = matmul_tn(&out0, &dz2, batch, h1, h2);
-            let dout0 = matmul_nt(&dz2, w2, batch, h2, h1);
-            let da0 = feeds[0].mask_act(&dout0, batch, h1);
-            let dz1: Vec<f32> = da0.iter().zip(&out0)
-                .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
-                .collect();
-            let mut db1v = vec![0f32; h1];
-            colsum_acc(&dz1, h1, &mut db1v);
-            let dw1v = matmul_tn(x, &dz1, batch, n_in, h1);
-            dw1 = dw1v;
-            db1 = db1v;
-            dw2 = dw2v;
-            db2 = db2v;
-        }
-
-        let grads = vec![dw1, db1, dw2, db2, dw3, db3];
-        let (new_p, new_m) = self.sgd(&params, &momenta, &grads, lr);
-        self.pack(new_p, new_m, loss, correct)
-    }
-
-    fn mlp_eval(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
-        let (n_in, h1, h2, n_out, batch) = self.mlp_dims()?;
-        let np = self.n_params();
-        let params: Vec<&[f32]> =
-            inp[..np].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
-        let x = inp[np].as_f32()?;
-        let y = inp[np + 1].as_i32()?;
-        let mut a1 = matmul(x, params[0], batch, n_in, h1);
-        add_row_bias(&mut a1, params[1]);
-        relu_inplace(&mut a1);
-        let mut a2 = matmul(&a1, params[2], batch, h1, h2);
-        add_row_bias(&mut a2, params[3]);
-        relu_inplace(&mut a2);
-        let mut logits = matmul(&a2, params[4], batch, h2, n_out);
-        add_row_bias(&mut logits, params[5]);
-        let (loss, correct, _) =
-            softmax_xent_grad(&logits, y, batch, n_out)?;
-        Ok(vec![
-            Value::Host(HostTensor::scalar_f32(loss)),
-            Value::Host(HostTensor::scalar_f32(correct)),
-        ])
-    }
-
-    // -- LSTM --------------------------------------------------------------
-
-    fn lstm_dims(&self) -> Result<(usize, usize, usize, usize, usize)> {
-        match &self.meta.arch {
-            ArchMeta::Lstm { vocab, hidden, layers, seq, batch } =>
-                Ok((*vocab, *hidden, *layers, *seq, *batch)),
-            _ => bail!("artifact {} is not an LSTM", self.meta.name),
-        }
-    }
-
-    fn lstm_train(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
-        let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
-        let (params, momenta, xt, y, extras, lr) = self.split_train(inp)?;
-        let x = xt.as_i32()?;
-        // Sites: site l-1 guards layer l's input for l in 1..L; site L-1
-        // guards the softmax input (Zaremba-style non-recurrent dropout).
-        let widths = vec![h; layers];
-        let mut wdims = Vec::with_capacity(layers);
-        for _ in 0..layers.saturating_sub(1) {
-            wdims.push((h, 4 * h)); // tdp masks wx of the consuming layer
-        }
-        wdims.push((h, vocab)); // last site masks wsoft
-        let feeds = self.site_feeds(&extras, layers, &widths, &wdims)?;
-
-        let fwd = self.lstm_forward(&params, x, Some(feeds.as_slice()),
-                                    true)?;
-        let rows = seq * batch;
-        let mut targets = vec![0i32; rows];
-        for b in 0..batch {
-            for t in 0..seq {
-                targets[t * batch + b] = y[b * seq + t];
-            }
-        }
-        let (loss, correct, dlogits) =
-            softmax_xent_grad(&fwd.logits, &targets, rows, vocab)?;
-        let grads = self.lstm_backward(&params, x, &feeds, &fwd,
-                                       &dlogits)?;
-        let (new_p, new_m) = self.sgd(&params, &momenta, &grads, lr);
-        self.pack(new_p, new_m, loss, correct)
-    }
-
-    fn lstm_eval(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
-        let (vocab, _h, _layers, seq, batch) = self.lstm_dims()?;
-        let np = self.n_params();
-        let params: Vec<&[f32]> =
-            inp[..np].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
-        let x = inp[np].as_i32()?;
-        let y = inp[np + 1].as_i32()?;
-        let fwd = self.lstm_forward(&params, x, None, false)?;
-        let rows = seq * batch;
-        let mut targets = vec![0i32; rows];
-        for b in 0..batch {
-            for t in 0..seq {
-                targets[t * batch + b] = y[b * seq + t];
-            }
-        }
-        let (loss, correct, _) =
-            softmax_xent_grad(&fwd.logits, &targets, rows, vocab)?;
-        Ok(vec![
-            Value::Host(HostTensor::scalar_f32(loss)),
-            Value::Host(HostTensor::scalar_f32(correct)),
-        ])
-    }
-
-    fn lstm_forward(&self, params: &[&[f32]], x: &[i32],
-                    feeds: Option<&[Feed]>, keep_caches: bool)
-                    -> Result<LstmFwd> {
-        let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
-        let emb = params[0];
-        let cells: Vec<(&[f32], &[f32], &[f32])> = (0..layers)
-            .map(|l| (params[1 + 3 * l], params[2 + 3 * l],
-                      params[3 + 3 * l]))
-            .collect();
-        let wsoft = params[params.len() - 2];
-        let bsoft = params[params.len() - 1];
-
-        // Per-layer tdp-masked wx, built once per step (b0 is fixed for
-        // the iteration). masked_wx[l] guards layer l's input (l >= 1).
-        let mut masked_wx: Vec<Option<Vec<f32>>> = vec![None; layers];
-        if let Some(fs) = feeds {
-            for l in 1..layers {
-                if let Feed::Weight { mask, .. } = &fs[l - 1] {
-                    masked_wx[l] = Some(hadamard(cells[l].0, mask));
-                }
-            }
-        }
-
-        let mut h_state = vec![vec![0f32; batch * h]; layers];
-        let mut c_state = vec![vec![0f32; batch * h]; layers];
-        let mut caches: Vec<CellCache> = Vec::new();
-        let mut flat = vec![0f32; seq * batch * h];
-
-        for t in 0..seq {
-            // Embedding rows for timestep t: e_t [batch, h].
-            let mut inp = vec![0f32; batch * h];
-            for b in 0..batch {
-                let tok = x[b * seq + t];
-                if tok < 0 || tok as usize >= vocab {
-                    bail!("token {tok} out of range [0, {vocab})");
-                }
-                let row = &emb[tok as usize * h..(tok as usize + 1) * h];
-                inp[b * h..(b + 1) * h].copy_from_slice(row);
-            }
-            for l in 0..layers {
-                let (wx, wh, bg) = cells[l];
-                // Input contribution to the gates, per the site's feed.
-                let (minp, mut gates) = if l == 0 {
-                    let g = matmul(&inp, wx, batch, h, 4 * h);
-                    (inp.clone(), g)
-                } else {
-                    match feeds.map(|fs| &fs[l - 1]) {
-                        Some(Feed::Act { .. }) => {
-                            let mi = feeds.unwrap()[l - 1]
-                                .mask_act(&inp, batch, h);
-                            let g = matmul(&mi, wx, batch, h, 4 * h);
-                            (mi, g)
-                        }
-                        Some(Feed::Weight { s, .. }) => {
-                            let g = scale_vec(
-                                &matmul(&inp,
-                                        masked_wx[l].as_ref().unwrap(),
-                                        batch, h, 4 * h),
-                                *s);
-                            (inp.clone(), g)
-                        }
-                        _ => {
-                            let g = matmul(&inp, wx, batch, h, 4 * h);
-                            (inp.clone(), g)
-                        }
-                    }
-                };
-                let rec = matmul(&h_state[l], wh, batch, h, 4 * h);
-                for (g, r) in gates.iter_mut().zip(&rec) {
-                    *g += r;
-                }
-                add_row_bias(&mut gates, bg);
-
-                // Gate order i, f, g, o (jnp.split(gates, 4, axis=-1)).
-                let mut gi = vec![0f32; batch * h];
-                let mut gf = vec![0f32; batch * h];
-                let mut gg = vec![0f32; batch * h];
-                let mut go = vec![0f32; batch * h];
-                for b in 0..batch {
-                    for j in 0..h {
-                        let base = b * 4 * h;
-                        gi[b * h + j] = sigmoid(gates[base + j]);
-                        gf[b * h + j] =
-                            sigmoid(gates[base + h + j] + FORGET_BIAS);
-                        gg[b * h + j] = gates[base + 2 * h + j].tanh();
-                        go[b * h + j] = sigmoid(gates[base + 3 * h + j]);
-                    }
-                }
-                let c_prev = std::mem::take(&mut c_state[l]);
-                let h_prev = std::mem::take(&mut h_state[l]);
-                let mut c = vec![0f32; batch * h];
-                let mut tanh_c = vec![0f32; batch * h];
-                let mut hn = vec![0f32; batch * h];
-                for j in 0..batch * h {
-                    c[j] = gf[j] * c_prev[j] + gi[j] * gg[j];
-                    tanh_c[j] = c[j].tanh();
-                    hn[j] = go[j] * tanh_c[j];
-                }
-                c_state[l] = c.clone();
-                h_state[l] = hn.clone();
-                if keep_caches {
-                    caches.push(CellCache {
-                        minp,
-                        gi,
-                        gf,
-                        gg,
-                        go,
-                        c_prev,
-                        tanh_c,
-                        h_prev,
-                    });
-                }
-                inp = hn;
-            }
-            // Top-layer output for timestep t, flat row t*batch + b.
-            for b in 0..batch {
-                flat[(t * batch + b) * h..(t * batch + b + 1) * h]
-                    .copy_from_slice(
-                        &h_state[layers - 1][b * h..(b + 1) * h]);
-            }
-        }
-
-        // Softmax projection per the last site's feed.
-        let rows = seq * batch;
-        let (mflat, mut logits, masked_wsoft) =
-            match feeds.map(|fs| &fs[layers - 1]) {
-                Some(Feed::Act { .. }) => {
-                    let mf = feeds.unwrap()[layers - 1]
-                        .mask_act(&flat, rows, h);
-                    let lg = matmul(&mf, wsoft, rows, h, vocab);
-                    (Some(mf), lg, None)
-                }
-                Some(Feed::Weight { mask, s }) => {
-                    let wm = hadamard(wsoft, mask);
-                    let lg = scale_vec(&matmul(&flat, &wm, rows, h, vocab),
-                                       *s);
-                    (None, lg, Some(wm))
-                }
-                _ => (None, matmul(&flat, wsoft, rows, h, vocab), None),
-            };
-        add_row_bias(&mut logits, bsoft);
-        Ok(LstmFwd { caches, flat, mflat, masked_wx, masked_wsoft, logits })
-    }
-
-    fn lstm_backward(&self, params: &[&[f32]], x: &[i32], feeds: &[Feed],
-                     fwd: &LstmFwd, dlogits: &[f32])
-                     -> Result<Vec<Vec<f32>>> {
-        let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
-        let cells: Vec<(&[f32], &[f32], &[f32])> = (0..layers)
-            .map(|l| (params[1 + 3 * l], params[2 + 3 * l],
-                      params[3 + 3 * l]))
-            .collect();
-        let wsoft = params[params.len() - 2];
-        let rows = seq * batch;
-
-        let mut demb = vec![0f32; vocab * h];
-        let mut dwx: Vec<Vec<f32>> =
-            (0..layers).map(|_| vec![0f32; h * 4 * h]).collect();
-        let mut dwh: Vec<Vec<f32>> =
-            (0..layers).map(|_| vec![0f32; h * 4 * h]).collect();
-        let mut dbg: Vec<Vec<f32>> =
-            (0..layers).map(|_| vec![0f32; 4 * h]).collect();
-        let mut dbsoft = vec![0f32; vocab];
-        colsum_acc(dlogits, vocab, &mut dbsoft);
-
-        // Softmax projection backward.
-        let (dwsoft, dflat) = match &feeds[layers - 1] {
-            Feed::Act { .. } => {
-                let mf = fwd.mflat.as_ref().expect("mflat cached");
-                let dws = matmul_tn(mf, dlogits, rows, h, vocab);
-                let df_pre = matmul_nt(dlogits, wsoft, rows, vocab, h);
-                let df = feeds[layers - 1].mask_act(&df_pre, rows, h);
-                (dws, df)
-            }
-            Feed::Weight { mask, s } => {
-                let ds = scale_vec(dlogits, *s);
-                let dws = hadamard(&matmul_tn(&fwd.flat, &ds, rows, h,
-                                              vocab),
-                                   mask);
-                let df = matmul_nt(
-                    &ds, fwd.masked_wsoft.as_ref().expect("wsoft mask"),
-                    rows, vocab, h);
-                (dws, df)
-            }
-            Feed::Plain => {
-                let dws = matmul_tn(&fwd.flat, dlogits, rows, h, vocab);
-                let df = matmul_nt(dlogits, wsoft, rows, vocab, h);
-                (dws, df)
-            }
-        };
-
-        // BPTT over the cached cells.
-        let mut dh_next = vec![vec![0f32; batch * h]; layers];
-        let mut dc_next = vec![vec![0f32; batch * h]; layers];
-        for t in (0..seq).rev() {
-            let mut dh_cur: Vec<Vec<f32>> = dh_next.clone();
-            // Top-layer output fed the softmax at this timestep.
-            for b in 0..batch {
-                let src = &dflat[(t * batch + b) * h
-                                 ..(t * batch + b + 1) * h];
-                let dst = &mut dh_cur[layers - 1][b * h..(b + 1) * h];
-                for (d, &s) in dst.iter_mut().zip(src) {
-                    *d += s;
-                }
-            }
-            for l in (0..layers).rev() {
-                let cache = &fwd.caches[t * layers + l];
-                let (wx, wh, _bg) = cells[l];
-                let dh = &dh_cur[l];
-                let dc_in = &dc_next[l];
-                let n = batch * h;
-                let mut da = vec![0f32; batch * 4 * h];
-                let mut dc_prev = vec![0f32; n];
-                for b in 0..batch {
-                    for j in 0..h {
-                        let k = b * h + j;
-                        let (i_, f_, g_, o_) = (cache.gi[k], cache.gf[k],
-                                                cache.gg[k], cache.go[k]);
-                        let tc = cache.tanh_c[k];
-                        let do_ = dh[k] * tc;
-                        let dc = dc_in[k] + dh[k] * o_ * (1.0 - tc * tc);
-                        let df = dc * cache.c_prev[k];
-                        let di = dc * g_;
-                        let dg = dc * i_;
-                        dc_prev[k] = dc * f_;
-                        let base = b * 4 * h;
-                        da[base + j] = di * i_ * (1.0 - i_);
-                        da[base + h + j] = df * f_ * (1.0 - f_);
-                        da[base + 2 * h + j] = dg * (1.0 - g_ * g_);
-                        da[base + 3 * h + j] = do_ * o_ * (1.0 - o_);
-                    }
-                }
-                colsum_acc(&da, 4 * h, &mut dbg[l]);
-                matmul_tn_acc(&cache.h_prev, &da, batch, h, 4 * h,
-                              &mut dwh[l]);
-                dh_next[l] = matmul_nt(&da, wh, batch, 4 * h, h);
-                dc_next[l] = dc_prev;
-
-                // Input path.
-                if l == 0 {
-                    matmul_tn_acc(&cache.minp, &da, batch, h, 4 * h,
-                                  &mut dwx[0]);
-                    let de = matmul_nt(&da, wx, batch, 4 * h, h);
-                    for b in 0..batch {
-                        let tok = x[b * seq + t] as usize;
-                        let dst = &mut demb[tok * h..(tok + 1) * h];
-                        let src = &de[b * h..(b + 1) * h];
-                        for (d, &s) in dst.iter_mut().zip(src) {
-                            *d += s;
-                        }
-                    }
-                } else {
-                    match &feeds[l - 1] {
-                        Feed::Act { .. } => {
-                            matmul_tn_acc(&cache.minp, &da, batch, h,
-                                          4 * h, &mut dwx[l]);
-                            let dmi = matmul_nt(&da, wx, batch, 4 * h, h);
-                            let dinp =
-                                feeds[l - 1].mask_act(&dmi, batch, h);
-                            for (d, &s) in
-                                dh_cur[l - 1].iter_mut().zip(&dinp)
-                            {
-                                *d += s;
-                            }
-                        }
-                        Feed::Weight { mask, s } => {
-                            let dgs = scale_vec(&da, *s);
-                            let mut dwx_t = vec![0f32; h * 4 * h];
-                            matmul_tn_acc(&cache.minp, &dgs, batch, h,
-                                          4 * h, &mut dwx_t);
-                            for ((d, &g), &m) in dwx[l].iter_mut()
-                                .zip(&dwx_t)
-                                .zip(mask)
-                            {
-                                *d += g * m;
-                            }
-                            let dinp = matmul_nt(
-                                &dgs, fwd.masked_wx[l].as_ref().unwrap(),
-                                batch, 4 * h, h);
-                            for (d, &s2) in
-                                dh_cur[l - 1].iter_mut().zip(&dinp)
-                            {
-                                *d += s2;
-                            }
-                        }
-                        Feed::Plain => {
-                            matmul_tn_acc(&cache.minp, &da, batch, h,
-                                          4 * h, &mut dwx[l]);
-                            let dinp = matmul_nt(&da, wx, batch, 4 * h, h);
-                            for (d, &s2) in
-                                dh_cur[l - 1].iter_mut().zip(&dinp)
-                            {
-                                *d += s2;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-
-        // Assemble grads in param order: emb, (wx, wh, bg) per layer,
-        // wsoft, bsoft.
-        let mut grads = Vec::with_capacity(3 * layers + 3);
-        grads.push(demb);
-        for l in 0..layers {
-            grads.push(std::mem::take(&mut dwx[l]));
-            grads.push(std::mem::take(&mut dwh[l]));
-            grads.push(std::mem::take(&mut dbg[l]));
-        }
-        grads.push(dwsoft);
-        grads.push(dbsoft);
-        Ok(grads)
-    }
-}
-
-/// Per-(t, l) forward cache for BPTT. All buffers are [batch, h] except
-/// `minp` (the matrix actually multiplied into `wx`, i.e. masked input for
-/// act-mask sites, raw input otherwise).
-struct CellCache {
-    minp: Vec<f32>,
-    gi: Vec<f32>,
-    gf: Vec<f32>,
-    gg: Vec<f32>,
-    go: Vec<f32>,
-    c_prev: Vec<f32>,
-    tanh_c: Vec<f32>,
-    h_prev: Vec<f32>,
-}
-
-/// Forward-pass artifacts the backward pass consumes.
-struct LstmFwd {
-    caches: Vec<CellCache>,
-    /// Top-layer outputs [seq*batch, h], row t*batch + b.
-    flat: Vec<f32>,
-    /// Masked+scaled flat (act-mask softmax sites only).
-    mflat: Option<Vec<f32>>,
-    /// Per-layer tdp-masked wx (None for other feeds / layer 0).
-    masked_wx: Vec<Option<Vec<f32>>>,
-    /// tdp-masked wsoft.
-    masked_wsoft: Option<Vec<f32>>,
-    /// [seq*batch, vocab] including bsoft.
-    logits: Vec<f32>,
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn matmul_shapes_and_values() {
-        // [2,3] @ [3,2]
-        let a = [1., 2., 3., 4., 5., 6.];
-        let b = [7., 8., 9., 10., 11., 12.];
-        let c = matmul(&a, &b, 2, 3, 2);
-        assert_eq!(c, vec![58., 64., 139., 154.]);
-        // a @ (b^T)^T == a @ b via matmul_nt with b stored transposed.
-        let bt = [7., 9., 11., 8., 10., 12.]; // [2,3] = b^T
-        let c2 = matmul_nt(&a, &bt, 2, 3, 2);
-        assert_eq!(c2, c);
-        // a^T @ a: [3,3] symmetric.
-        let g = matmul_tn(&a, &a, 2, 3, 3);
-        assert_eq!(g[0 * 3 + 1], g[1 * 3 + 0]);
-        assert_eq!(g[0], 1. * 1. + 4. * 4.);
+    fn compiles_builtin_artifacts() {
+        let m = Manifest::builtin_test();
+        let be = ReferenceBackend::new();
+        assert_eq!(be.name(), "reference");
+        for name in ["mlptest_conv", "mlptest_eval", "mlptest_rdp_2_2",
+                     "mlptest_tdp_2_2", "lstmtest_conv", "lstmtest_eval",
+                     "lstmtest_rdp_2", "lstmtest_tdp_2"] {
+            let exe = be.compile(&m, name).unwrap();
+            assert_eq!(exe.meta().name, name);
+        }
+        assert!(be.compile(&m, "nonexistent").is_err());
     }
 
     #[test]
-    fn softmax_xent_matches_hand_computation() {
-        // Two rows, 3 classes; uniform logits -> loss = ln 3.
-        let logits = [0f32; 6];
-        let (loss, correct, grad) =
-            softmax_xent_grad(&logits, &[0, 2], 2, 3).unwrap();
-        assert!((loss - 3f32.ln()).abs() < 1e-6);
-        // argmax of a uniform row is index 0 (first max).
-        assert_eq!(correct, 1.0);
-        // grad rows sum to zero; target entry is (1/3 - 1)/rows.
-        let s: f32 = grad[..3].iter().sum();
-        assert!(s.abs() < 1e-6);
-        assert!((grad[0] - (1.0 / 3.0 - 1.0) / 2.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn softmax_xent_rejects_bad_labels() {
-        assert!(softmax_xent_grad(&[0f32; 3], &[3], 1, 3).is_err());
-        assert!(softmax_xent_grad(&[0f32; 3], &[-1], 1, 3).is_err());
-    }
-
-    #[test]
-    fn row_and_tile_mask_validation() {
-        assert!(row_mask_checked(8, 2, 1).is_ok());
-        assert!(row_mask_checked(8, 2, 2).is_err());
-        assert!(row_mask_checked(8, 0, 0).is_err());
-        assert!(tile_mask_checked(32, 64, 2, 0, 16).is_ok());
-        assert!(tile_mask_checked(32, 64, 2, 2, 16).is_err());
-        // dp=3 divides neither 32/16=2 nor 64/16=4.
-        assert!(tile_mask_checked(32, 64, 3, 0, 16).is_err());
-    }
-
-    #[test]
-    fn act_feed_masks_and_scales() {
-        let f = Feed::Act { m: vec![1.0, 0.0], rows: 1, s: 2.0 };
-        let out = f.mask_act(&[1.0, 1.0, 3.0, 4.0], 2, 2);
-        assert_eq!(out, vec![2.0, 0.0, 6.0, 0.0]);
-        let plain = Feed::Plain.mask_act(&[1.0, 2.0], 1, 2);
-        assert_eq!(plain, vec![1.0, 2.0]);
+    fn values_stay_host_side() {
+        let be = ReferenceBackend::new();
+        let t = HostTensor::f32(&[2], vec![1.0, 2.0]);
+        let v = be.upload(&t).unwrap();
+        assert_eq!(v.to_f32().unwrap(), vec![1.0, 2.0]);
+        let v2 = be.ingest(t).unwrap();
+        assert!(v2.as_host().is_ok());
     }
 }

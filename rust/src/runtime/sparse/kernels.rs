@@ -1,0 +1,640 @@
+//! Structured-sparse f32 kernel library: cache-blocked GEMM/GEMV with
+//! **row-skip** and **tile-skip** variants. This is the compute engine the
+//! paper's speedup claim rests on — where the reference backend evaluates
+//! masked-*dense* math, these kernels never touch a dropped coordinate:
+//! dropped rows of the shared dimension are never loaded or multiplied,
+//! dropped output rows/columns are never written (they stay exactly
+//! zero), and dropped weight tiles are never read (the *raw* weight is
+//! passed in; see [`Kernels::prep_weight`]).
+//!
+//! ## Blocking and parallelism
+//!
+//! Every kernel partitions its **output** into disjoint ranges — row
+//! chunks of [`CHUNK_ROWS`] rows (GEMM/NT), kept-gradient-row chunks or
+//! tile-rows (TN) — and runs the chunks on the process-wide worker pool
+//! (`sparse::pool`, sized by `AD_THREADS`). Each output element is
+//! computed entirely within one chunk with the shared dimension streamed
+//! in ascending index order ([`KBLOCK`]-sized panels keep the B operand
+//! L1/L2-resident), so results are bit-identical across thread counts
+//! *and* bit-compatible with the dense kernels: skipping an exactly-zero
+//! contribution is an IEEE no-op, and the surviving contributions are
+//! accumulated in the same order the dense loops use. Calls below
+//! [`MIN_PAR_WORK`] multiply-accumulates run inline on the caller — the
+//! pool round-trip costs more than the math at tiny sizes.
+//!
+//! Contract details (which operand a [`Skip`] describes per method) live
+//! on the [`Kernels`] trait; the property suite
+//! (`rust/tests/sparse_kernels.rs`) pins sparse == dense-under-mask for
+//! randomized shapes, skips, and tilings.
+
+use crate::patterns::{RowPattern, TilePattern};
+use crate::runtime::sparse::pool::{self, ThreadPool};
+use crate::runtime::step::kernels::{Kernels, Skip};
+
+/// Output rows per parallel chunk. Fixed (not derived from the thread
+/// count) so the partition is reproducible; correctness never depends on
+/// it — see the determinism contract in `sparse::pool`.
+const CHUNK_ROWS: usize = 8;
+
+/// Shared-dimension panel size: KBLOCK rows of B (<= KBLOCK * n floats)
+/// stay cache-resident while a chunk's A rows stream over them.
+const KBLOCK: usize = 64;
+
+/// Minimum multiply-accumulate count before a call is worth fanning out
+/// to the worker pool.
+const MIN_PAR_WORK: usize = 32 * 1024;
+
+/// The structure-exploiting kernel set. Stateless; dispatches through the
+/// process-wide `AD_THREADS` pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SparseKernels;
+
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: every task writes through the pointer only inside the disjoint
+// output range its chunk index selects.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+fn all_indices(dim: usize) -> Vec<usize> {
+    (0..dim).collect()
+}
+
+/// Run `task` over `n_chunks` chunks, inline when the call is too small
+/// to amortize the pool handshake.
+fn run_chunks(p: &ThreadPool, work: usize, n_chunks: usize,
+              task: &(dyn Fn(usize) + Sync)) {
+    if work < MIN_PAR_WORK || n_chunks <= 1 || p.n_threads() == 1 {
+        for c in 0..n_chunks {
+            task(c);
+        }
+    } else {
+        p.run(n_chunks, task);
+    }
+}
+
+impl Kernels for SparseKernels {
+    fn name(&self) -> &'static str {
+        "sparse"
+    }
+
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+            k_skip: &Skip, out_skip: &Skip) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let p = pool::global();
+        let mut out = vec![0f32; m * n];
+        match k_skip {
+            Skip::Tiles(pat) => {
+                gemm_tiles(p, a, b, m, k, n, pat, &mut out);
+            }
+            _ => {
+                let kidx = k_skip.kept(k)
+                    .unwrap_or_else(|| all_indices(k));
+                match out_skip {
+                    // Only worth packing when columns are actually
+                    // dropped; a keep-everything pattern (dp=1 draws)
+                    // would pay a full copy of B for zero skipped work.
+                    Skip::Rows(q) if q.kept_count() < q.m => {
+                        gemm_rows_cols(p, a, b, m, k, n, &kidx, q,
+                                       &mut out);
+                    }
+                    _ => gemm_rows(p, a, b, m, k, n, &kidx, &mut out),
+                }
+            }
+        }
+        out
+    }
+
+    fn gemm_nt(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize,
+               skip: &Skip) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+        let p = pool::global();
+        let mut out = vec![0f32; m * k];
+        match skip {
+            Skip::Tiles(pat) => nt_tiles(p, a, b, m, n, k, pat, &mut out),
+            _ => {
+                let jidx = skip.kept(k).unwrap_or_else(|| all_indices(k));
+                nt_rows(p, a, b, m, n, k, &jidx, &mut out);
+            }
+        }
+        out
+    }
+
+    fn gemm_tn_acc(&self, a: &[f32], b: &[f32], m: usize, k: usize,
+                   n: usize, row_skip: &Skip, col_skip: &Skip,
+                   out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        let p = pool::global();
+        match row_skip {
+            Skip::Tiles(pat) => tn_tiles(p, a, b, m, k, n, pat, out),
+            _ => {
+                let pidx =
+                    row_skip.kept(k).unwrap_or_else(|| all_indices(k));
+                let cidx = match col_skip {
+                    Skip::Rows(q) => Some(q.kept_indices()),
+                    _ => None,
+                };
+                tn_rows(p, a, b, m, k, n, &pidx, cidx.as_deref(), out);
+            }
+        }
+    }
+
+    fn prep_weight(&self, _w: &[f32], _k: usize, _n: usize, _skip: &Skip)
+                   -> Option<Vec<f32>> {
+        // Never materialize a masked weight: the GEMM loops skip dropped
+        // tiles themselves, off the raw buffer.
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM: C[m,n] = A[m,k] @ B[k,n]
+// ---------------------------------------------------------------------------
+
+/// Row-skip GEMM: only the shared-dimension indices in `kidx` are
+/// touched. Chunks over output rows; KBLOCK-panel over `kidx`.
+fn gemm_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
+             n: usize, kidx: &[usize], out: &mut [f32]) {
+    let n_chunks = ceil_div(m, CHUNK_ROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |c: usize| {
+        let r0 = c * CHUNK_ROWS;
+        let r1 = (r0 + CHUNK_ROWS).min(m);
+        // SAFETY: rows r0..r1 belong to this chunk alone.
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * n),
+                                           (r1 - r0) * n)
+        };
+        for kb in kidx.chunks(KBLOCK) {
+            for (ri, i) in (r0..r1).enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut seg[ri * n..(ri + 1) * n];
+                for &pi in kb {
+                    let av = arow[pi];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[pi * n..(pi + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    };
+    run_chunks(p, m * kidx.len() * n, n_chunks, &task);
+}
+
+/// Row-skip + column-restricted GEMM: the kept columns of the kept rows
+/// of B are packed into a compact `[kk, nc]` panel (dropped coordinates
+/// are never read), the product is computed compactly, and the result is
+/// scattered to the kept output columns — the paper's "smaller dense
+/// matmul" in one call.
+fn gemm_rows_cols(p: &ThreadPool, a: &[f32], b: &[f32], m: usize,
+                  k: usize, n: usize, kidx: &[usize], cols: &RowPattern,
+                  out: &mut [f32]) {
+    debug_assert_eq!(cols.m, n);
+    let cidx = cols.kept_indices();
+    let (kk, nc) = (kidx.len(), cidx.len());
+    if nc == 0 || kk == 0 {
+        return;
+    }
+    let mut bp = vec![0f32; kk * nc];
+    for (pi, &pr) in kidx.iter().enumerate() {
+        let brow = &b[pr * n..(pr + 1) * n];
+        let prow = &mut bp[pi * nc..(pi + 1) * nc];
+        for (dst, &j) in prow.iter_mut().zip(&cidx) {
+            *dst = brow[j];
+        }
+    }
+    let mut cp = vec![0f32; m * nc];
+    {
+        let n_chunks = ceil_div(m, CHUNK_ROWS);
+        let ptr = SendPtr(cp.as_mut_ptr());
+        let task = move |c: usize| {
+            let r0 = c * CHUNK_ROWS;
+            let r1 = (r0 + CHUNK_ROWS).min(m);
+            let seg = unsafe {
+                std::slice::from_raw_parts_mut(ptr.0.add(r0 * nc),
+                                               (r1 - r0) * nc)
+            };
+            let mut p0 = 0;
+            while p0 < kk {
+                let p1 = (p0 + KBLOCK).min(kk);
+                for (ri, i) in (r0..r1).enumerate() {
+                    let arow = &a[i * k..(i + 1) * k];
+                    let orow = &mut seg[ri * nc..(ri + 1) * nc];
+                    for pi in p0..p1 {
+                        let av = arow[kidx[pi]];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &bp[pi * nc..(pi + 1) * nc];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                p0 = p1;
+            }
+        };
+        run_chunks(p, m * kk * nc, n_chunks, &task);
+    }
+    for i in 0..m {
+        let crow = &cp[i * nc..(i + 1) * nc];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (ci, &j) in cidx.iter().enumerate() {
+            orow[j] = crow[ci];
+        }
+    }
+}
+
+/// Tile-skip GEMM: B is a `[k, n]` weight under a tile pattern; only
+/// kept tiles are loaded. Kept tiles are visited in row-major grid order,
+/// so each output element accumulates its k-contributions ascending.
+fn gemm_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
+              n: usize, pat: &TilePattern, out: &mut [f32]) {
+    debug_assert_eq!((pat.k, pat.n), (k, n));
+    let (tr, tc) = (pat.tr, pat.tc);
+    let kept = pat.kept_tiles();
+    let n_chunks = ceil_div(m, CHUNK_ROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let kept_ref: &[(usize, usize)] = &kept;
+    let task = move |c: usize| {
+        let r0 = c * CHUNK_ROWS;
+        let r1 = (r0 + CHUNK_ROWS).min(m);
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * n),
+                                           (r1 - r0) * n)
+        };
+        for &(gr, gc) in kept_ref {
+            let k0 = gr * tr;
+            let j0 = gc * tc;
+            for (ri, i) in (r0..r1).enumerate() {
+                let arow = &a[i * k + k0..i * k + k0 + tr];
+                let orow = &mut seg[ri * n + j0..ri * n + j0 + tc];
+                for (p0, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[(k0 + p0) * n + j0..][..tc];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    };
+    run_chunks(p, m * kept.len() * tr * tc, n_chunks, &task);
+}
+
+// ---------------------------------------------------------------------------
+// NT: C[m,k] = A[m,n] @ B[k,n]^T
+// ---------------------------------------------------------------------------
+
+/// Output-column-restricted NT: only output columns in `jidx` are
+/// computed (B rows outside it are never loaded); the rest stay zero.
+fn nt_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
+           k: usize, jidx: &[usize], out: &mut [f32]) {
+    let n_chunks = ceil_div(m, CHUNK_ROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |c: usize| {
+        let r0 = c * CHUNK_ROWS;
+        let r1 = (r0 + CHUNK_ROWS).min(m);
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * k),
+                                           (r1 - r0) * k)
+        };
+        for (ri, i) in (r0..r1).enumerate() {
+            let arow = &a[i * n..(i + 1) * n];
+            let orow = &mut seg[ri * k..(ri + 1) * k];
+            for &j in jidx {
+                let brow = &b[j * n..(j + 1) * n];
+                let mut acc = 0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                orow[j] = acc;
+            }
+        }
+    };
+    run_chunks(p, m * jidx.len() * n, n_chunks, &task);
+}
+
+/// Tile-masked NT: B is a `[k, n]` weight under a tile pattern; each
+/// output column j (a B row) sums only over that row's kept tiles, in
+/// ascending column order (value-equal to the dense dot against the
+/// masked weight).
+fn nt_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
+            k: usize, pat: &TilePattern, out: &mut [f32]) {
+    debug_assert_eq!((pat.k, pat.n), (k, n));
+    let (tr, tc) = (pat.tr, pat.tc);
+    let (tk, tn) = pat.grid();
+    let kept = pat.kept_count();
+    let n_chunks = ceil_div(m, CHUNK_ROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |c: usize| {
+        let r0 = c * CHUNK_ROWS;
+        let r1 = (r0 + CHUNK_ROWS).min(m);
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * k),
+                                           (r1 - r0) * k)
+        };
+        for (ri, i) in (r0..r1).enumerate() {
+            let arow = &a[i * n..(i + 1) * n];
+            let orow = &mut seg[ri * k..(ri + 1) * k];
+            for gr in 0..tk {
+                for j0 in 0..tr {
+                    let j = gr * tr + j0;
+                    let brow = &b[j * n..(j + 1) * n];
+                    let mut acc = 0f32;
+                    for gc in 0..tn {
+                        if !pat.keeps_tile(gr, gc) {
+                            continue;
+                        }
+                        let c0 = gc * tc;
+                        for t in 0..tc {
+                            acc += arow[c0 + t] * brow[c0 + t];
+                        }
+                    }
+                    orow[j] = acc;
+                }
+            }
+        }
+    };
+    run_chunks(p, m * kept * tr * tc, n_chunks, &task);
+}
+
+// ---------------------------------------------------------------------------
+// TN: C[k,n] += A[m,k]^T @ B[m,n]  (gradient accumulation)
+// ---------------------------------------------------------------------------
+
+/// Kept output rows per parallel chunk in the TN kernels.
+const CHUNK_GROWS: usize = 8;
+
+/// Row/column-restricted TN accumulation: only output rows in `pidx`
+/// (and, when `cidx` is given, columns in it) receive updates; A's
+/// dropped columns and B's dropped columns are never loaded.
+fn tn_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
+           n: usize, pidx: &[usize], cidx: Option<&[usize]>,
+           out: &mut [f32]) {
+    let n_chunks = ceil_div(pidx.len(), CHUNK_GROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |c: usize| {
+        let g0 = c * CHUNK_GROWS;
+        let g1 = (g0 + CHUNK_GROWS).min(pidx.len());
+        for &pr in &pidx[g0..g1] {
+            // SAFETY: kept rows are unique; each belongs to one chunk.
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(ptr.0.add(pr * n), n)
+            };
+            match cidx {
+                None => {
+                    for i in 0..m {
+                        let av = a[i * k + pr];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[i * n..(i + 1) * n];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+                Some(cs) => {
+                    for i in 0..m {
+                        let av = a[i * k + pr];
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[i * n..(i + 1) * n];
+                        for &j in cs {
+                            orow[j] += av * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    };
+    let width = cidx.map_or(n, <[usize]>::len);
+    run_chunks(p, pidx.len() * m * width, n_chunks, &task);
+}
+
+/// Tile-restricted TN accumulation: only C's kept tiles receive updates.
+/// Chunks over tile-rows (disjoint output row ranges).
+fn tn_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
+            n: usize, pat: &TilePattern, out: &mut [f32]) {
+    debug_assert_eq!((pat.k, pat.n), (k, n));
+    let (tr, tc) = (pat.tr, pat.tc);
+    let (tk, tn) = pat.grid();
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |gr: usize| {
+        for gc in 0..tn {
+            if !pat.keeps_tile(gr, gc) {
+                continue;
+            }
+            let c0 = gc * tc;
+            for p0 in 0..tr {
+                let pr = gr * tr + p0;
+                // SAFETY: tile-row `gr` owns output rows gr*tr..(gr+1)*tr.
+                let oseg = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        ptr.0.add(pr * n + c0), tc)
+                };
+                for i in 0..m {
+                    let av = a[i * k + pr];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[i * n + c0..][..tc];
+                    for (o, &bv) in oseg.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+        }
+    };
+    run_chunks(p, pat.kept_count() * tr * tc * m, tk, &task);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::step::kernels::DenseKernels;
+    use crate::util::rng::Rng;
+    use crate::util::testkit::{self, gen_choice, gen_vec_f32};
+
+    const D: Skip = Skip::Dense;
+
+    fn close(a: &[f32], b: &[f32]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= 1e-5 * x.abs().max(y.abs()).max(1.0),
+                    "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_skip_matches_dense_kernels_exactly() {
+        testkit::quickcheck("sparse dense-path parity", |rng| {
+            let (m, k, n) = (testkit::gen_range(rng, 1, 20),
+                             testkit::gen_range(rng, 1, 40),
+                             testkit::gen_range(rng, 1, 40));
+            let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+            let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+            let s = SparseKernels;
+            let d = DenseKernels;
+            assert_eq!(s.gemm(&a, &b, m, k, n, &D, &D),
+                       d.gemm(&a, &b, m, k, n, &D, &D));
+            let bt = gen_vec_f32(rng, n * k, -1.0, 1.0);
+            let a2 = gen_vec_f32(rng, m * n, -1.0, 1.0);
+            assert_eq!(s.gemm_nt(&a2, &bt, m, n, k, &D),
+                       d.gemm_nt(&a2, &bt, m, n, k, &D));
+            let b2 = gen_vec_f32(rng, m * n, -1.0, 1.0);
+            close(&s.gemm_tn(&a, &b2, m, k, n, &D, &D),
+                  &d.gemm_tn(&a, &b2, m, k, n, &D, &D));
+        });
+    }
+
+    #[test]
+    fn row_skip_never_needs_dropped_rows() {
+        // Poison the dropped rows of B with NaN: a correct row-skip GEMM
+        // never loads them.
+        let mut rng = Rng::new(11);
+        let (m, k, n) = (6, 32, 24);
+        let pat = RowPattern::new(k, 4, 1);
+        // a's dropped columns are structurally zero (masked activations).
+        let mut a = gen_vec_f32(&mut rng, m * k, -1.0, 1.0);
+        for i in 0..m {
+            for p2 in 0..k {
+                if !pat.keeps(p2) {
+                    a[i * k + p2] = 0.0;
+                }
+            }
+        }
+        let mut b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
+        let clean = b.clone();
+        for p2 in 0..k {
+            if !pat.keeps(p2) {
+                for j in 0..n {
+                    b[p2 * n + j] = f32::NAN;
+                }
+            }
+        }
+        let s = SparseKernels;
+        let got = s.gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
+        let want = DenseKernels.gemm(&a, &clean, m, k, n, &D, &D);
+        assert_eq!(got, want);
+        assert!(got.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn tile_skip_never_needs_dropped_tiles() {
+        let mut rng = Rng::new(12);
+        let (m, k, n) = (5, 32, 32);
+        let pat = TilePattern::new(k, n, 2, 1, 16);
+        let a = gen_vec_f32(&mut rng, m * k, -1.0, 1.0);
+        let mut w = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
+        let masked: Vec<f32> =
+            w.iter().zip(pat.mask()).map(|(&x, mk)| x * mk).collect();
+        // Poison dropped tiles in the raw weight.
+        for (v, mk) in w.iter_mut().zip(pat.mask()) {
+            if mk == 0.0 {
+                *v = f32::NAN;
+            }
+        }
+        let s = SparseKernels;
+        let skip = Skip::Tiles(pat);
+        let got = s.gemm(&a, &w, m, k, n, &skip, &D);
+        let want = DenseKernels.gemm(&a, &masked, m, k, n, &D, &D);
+        assert_eq!(got, want);
+        // NT against the same tiled weight.
+        let a2 = gen_vec_f32(&mut rng, m * n, -1.0, 1.0);
+        let got = s.gemm_nt(&a2, &w, m, n, k, &skip);
+        let want = DenseKernels.gemm_nt(&a2, &masked, m, n, k, &D);
+        close(&got, &want);
+        assert!(got.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn results_bit_stable_across_thread_counts() {
+        let mut rng = Rng::new(13);
+        let (m, k, n) = (24, 96, 80);
+        let a = gen_vec_f32(&mut rng, m * k, -1.0, 1.0);
+        let b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
+        let kidx: Vec<usize> = (0..k).step_by(2).collect();
+        let pools = [ThreadPool::new(1), ThreadPool::new(2),
+                     ThreadPool::new(5)];
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for p in &pools {
+            let mut out = vec![0f32; m * n];
+            gemm_rows(p, &a, &b, m, k, n, &kidx, &mut out);
+            outs.push(out);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+        // Same for the TN accumulator.
+        let b2 = gen_vec_f32(&mut rng, m * n, -1.0, 1.0);
+        let pidx: Vec<usize> = (1..k).step_by(2).collect();
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        for p in &pools {
+            let mut out = vec![0.5f32; k * n];
+            tn_rows(p, &a, &b2, m, k, n, &pidx, None, &mut out);
+            outs.push(out);
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[0], outs[2]);
+    }
+
+    #[test]
+    fn out_col_restriction_leaves_dropped_cols_zero() {
+        testkit::quickcheck("gemm out-col restriction", |rng| {
+            let m = testkit::gen_range(rng, 1, 10);
+            let k = 8 * testkit::gen_range(rng, 1, 6);
+            let n = 8 * testkit::gen_range(rng, 1, 6);
+            let dp = *gen_choice(rng, &[2usize, 4]);
+            let b0 = testkit::gen_range(rng, 0, dp);
+            let q = RowPattern::new(n, dp, b0);
+            let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+            let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+            let s = SparseKernels;
+            let got = s.gemm(&a, &b, m, k, n, &D, &Skip::Rows(q));
+            let full = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
+            for i in 0..m {
+                for j in 0..n {
+                    if q.keeps(j) {
+                        let (x, y) = (got[i * n + j], full[i * n + j]);
+                        assert!((x - y).abs() <= 1e-5, "{x} vs {y}");
+                    } else {
+                        assert_eq!(got[i * n + j], 0.0);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemv_matches_gemm_row() {
+        let mut rng = Rng::new(14);
+        let (k, n) = (48, 36);
+        let x = gen_vec_f32(&mut rng, k, -1.0, 1.0);
+        let b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
+        let pat = RowPattern::new(k, 4, 2);
+        let s = SparseKernels;
+        let y = s.gemv(&x, &b, k, n, &Skip::Rows(pat), &D);
+        // Equals the masked-dense product.
+        let xm: Vec<f32> = x.iter().enumerate()
+            .map(|(i, &v)| if pat.keeps(i) { v } else { 0.0 })
+            .collect();
+        let want = DenseKernels.gemm(&xm, &b, 1, k, n, &D, &D);
+        assert_eq!(y, want);
+    }
+}

@@ -1,0 +1,319 @@
+//! Hand-rolled worker-thread pool for the sparse kernel library (rayon is
+//! unavailable offline; std::thread::scope would respawn OS threads on
+//! every GEMM call, which at our matrix sizes costs more than the math).
+//!
+//! Model: one process-wide pool of `AD_THREADS - 1` persistent workers
+//! (the caller participates, so `AD_THREADS=1` means fully inline).
+//! [`ThreadPool::run`] publishes one *job* — a `Fn(usize)` over chunk
+//! indices `0..n_chunks` — and returns only when every chunk has executed.
+//! Chunks are claimed from a shared atomic counter, so load-balancing is
+//! dynamic while the work *assignment* stays irrelevant to the result:
+//!
+//! ## Determinism contract
+//!
+//! Kernels partition their **output** into disjoint index ranges, one per
+//! chunk, and every output element is computed entirely within its chunk
+//! with a fixed inner accumulation order. Which thread runs a chunk (and
+//! how many threads exist) therefore cannot change any result bit —
+//! `AD_THREADS=1` and `AD_THREADS=64` produce identical buffers, which
+//! `rust/tests/sparse_kernels.rs` pins.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread;
+
+/// One published job: a chunk runner plus the claim/completion counters.
+/// `task` is a caller-stack closure laundered to `'static`; see the
+/// SAFETY argument in [`ThreadPool::run`].
+struct Job {
+    task: &'static (dyn Fn(usize) + Sync),
+    n_chunks: usize,
+    epoch: u64,
+    next: AtomicUsize,
+    done: AtomicUsize,
+    panicked: AtomicBool,
+    finished: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+struct Shared {
+    slot: Mutex<Slot>,
+    work_cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+struct Slot {
+    job: Option<Arc<Job>>,
+    epoch: u64,
+}
+
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    n_threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with `n_threads` total executors: the caller plus
+    /// `n_threads - 1` spawned workers. `n_threads <= 1` spawns nothing
+    /// and [`Self::run`] executes inline.
+    pub fn new(n_threads: usize) -> ThreadPool {
+        let n_threads = n_threads.max(1);
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(Slot { job: None, epoch: 0 }),
+            work_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (1..n_threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("ad-sparse-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn sparse worker")
+            })
+            .collect();
+        ThreadPool { shared, handles, n_threads }
+    }
+
+    /// Total executor count (callers size their chunking off this).
+    pub fn n_threads(&self) -> usize {
+        self.n_threads
+    }
+
+    /// Run `task` over chunk indices `0..n_chunks`, blocking until every
+    /// chunk has completed. Panics (after all chunks drain) if any chunk
+    /// panicked on a worker.
+    pub fn run(&self, n_chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+        if n_chunks == 0 {
+            return;
+        }
+        if self.handles.is_empty() || n_chunks == 1 {
+            for c in 0..n_chunks {
+                task(c);
+            }
+            return;
+        }
+        // SAFETY: `run` does not return until `done == n_chunks`, i.e.
+        // every invocation of `task` has finished (workers that race past
+        // the end only observe an exhausted chunk counter and never call
+        // `task` again). The laundered reference therefore never outlives
+        // the borrow it came from in any observable way.
+        let task: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(task) };
+        let job = {
+            let mut slot = self.shared.slot.lock().expect("pool slot");
+            slot.epoch += 1;
+            let job = Arc::new(Job {
+                task,
+                n_chunks,
+                epoch: slot.epoch,
+                next: AtomicUsize::new(0),
+                done: AtomicUsize::new(0),
+                panicked: AtomicBool::new(false),
+                finished: Mutex::new(false),
+                done_cv: Condvar::new(),
+            });
+            slot.job = Some(Arc::clone(&job));
+            job
+        };
+        self.shared.work_cv.notify_all();
+        work_on(&job); // the caller is executor #0
+        let mut fin = job.finished.lock().expect("job finished lock");
+        while !*fin {
+            fin = job.done_cv.wait(fin).expect("job finished wait");
+        }
+        drop(fin);
+        // Retire the job so idle workers park instead of re-inspecting
+        // it — but only if the slot still holds *this* job: another
+        // caller may have published a newer one concurrently, and
+        // clearing that would silently strand its workers.
+        {
+            let mut slot = self.shared.slot.lock().expect("pool slot");
+            if slot.job.as_ref().map_or(false, |j| j.epoch == job.epoch) {
+                slot.job = None;
+            }
+        }
+        if job.panicked.load(Ordering::Acquire) {
+            panic!("sparse kernel chunk panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut slot = shared.slot.lock().expect("pool slot");
+            loop {
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                let fresh = match &slot.job {
+                    Some(j) if j.epoch != last_epoch =>
+                        Some(Arc::clone(j)),
+                    _ => None,
+                };
+                if let Some(j) = fresh {
+                    break j;
+                }
+                slot = shared.work_cv.wait(slot).expect("pool slot wait");
+            }
+        };
+        last_epoch = job.epoch;
+        work_on(&job);
+    }
+}
+
+/// Claim and run chunks until the counter is exhausted. Chunk panics are
+/// contained (recorded on the job, re-raised by the caller) so a bad
+/// kernel never wedges the completion protocol.
+fn work_on(job: &Job) {
+    loop {
+        let c = job.next.fetch_add(1, Ordering::Relaxed);
+        if c >= job.n_chunks {
+            return;
+        }
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| (job.task)(c)));
+        if r.is_err() {
+            job.panicked.store(true, Ordering::Release);
+        }
+        if job.done.fetch_add(1, Ordering::AcqRel) + 1 == job.n_chunks {
+            let mut fin = job.finished.lock().expect("job finished lock");
+            *fin = true;
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Thread count from `AD_THREADS`, defaulting to the machine's available
+/// parallelism. `AD_THREADS=1` disables the workers entirely.
+pub fn threads_from_env() -> usize {
+    match std::env::var("AD_THREADS") {
+        Ok(v) => v.trim().parse().ok().filter(|&n| n >= 1).unwrap_or_else(
+            || {
+                crate::warn_!("AD_THREADS='{v}' is not a positive \
+                               integer; using 1");
+                1
+            }),
+        Err(_) => thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1),
+    }
+}
+
+/// The process-wide pool the sparse kernels dispatch through, built
+/// lazily from `AD_THREADS` on first use.
+pub fn global() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(threads_from_env()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = ThreadPool::new(4);
+        for n_chunks in [0usize, 1, 2, 7, 64] {
+            let hits: Vec<AtomicUsize> =
+                (0..n_chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(n_chunks, &|c| {
+                hits[c].fetch_add(1, Ordering::Relaxed);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = ThreadPool::new(1);
+        assert_eq!(pool.n_threads(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.run(5, &|c| {
+            sum.fetch_add(c, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_workers() {
+        let pool = ThreadPool::new(3);
+        for round in 1..=20usize {
+            let sum = AtomicUsize::new(0);
+            pool.run(round, &|c| {
+                sum.fetch_add(c + 1, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed),
+                       round * (round + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn disjoint_output_writes_are_visible_to_caller() {
+        // The pattern every kernel uses: chunks write disjoint ranges of
+        // one output buffer through a raw pointer.
+        struct Ptr(*mut f32);
+        unsafe impl Send for Ptr {}
+        unsafe impl Sync for Ptr {}
+        let pool = ThreadPool::new(4);
+        let n = 1024;
+        let chunk = 64;
+        let mut out = vec![0f32; n];
+        let p = Ptr(out.as_mut_ptr());
+        let n_chunks = n / chunk;
+        pool.run(n_chunks, &|c| {
+            let base = c * chunk;
+            let seg = unsafe {
+                std::slice::from_raw_parts_mut(p.0.add(base), chunk)
+            };
+            for (i, v) in seg.iter_mut().enumerate() {
+                *v = (base + i) as f32;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f32);
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_reraised_and_pool_survives() {
+        let pool = ThreadPool::new(2);
+        let r = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                pool.run(8, &|c| {
+                    if c == 3 {
+                        panic!("boom");
+                    }
+                });
+            }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // The pool still works afterwards.
+        let sum = AtomicUsize::new(0);
+        pool.run(4, &|c| {
+            sum.fetch_add(c, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn env_parsing_defaults() {
+        // Only exercise the parse paths that don't depend on process env
+        // mutation (env vars are process-global in tests).
+        assert!(threads_from_env() >= 1);
+    }
+}

@@ -1,0 +1,310 @@
+//! The element-math contract of the step interpreter: a [`Kernels`]
+//! implementation supplies every heavy matrix operation a train/eval step
+//! performs, together with the *structural sparsity* ([`Skip`]) of each
+//! operand, so one shared step program (`runtime::step`) can run as
+//! masked-dense math (reference backend) or as row-/tile-skipping compact
+//! math (sparse backend) without duplicating the model semantics.
+//!
+//! ## The Skip contract
+//!
+//! A [`Skip`] describes zeros that are *known before the kernel runs*
+//! because they come from a regular dropout pattern (paper section III),
+//! not from data. Implementations may exploit the structure (never load or
+//! multiply the dropped coordinates) or ignore it (compute masked-dense) —
+//! both must produce the same value on every coordinate a caller can
+//! observe:
+//!
+//! * `Skip::Dense` — no structure; plain dense math.
+//! * `Skip::Rows(p)` — a [`RowPattern`] over one index axis. The meaning
+//!   per position is documented on each method; in every case coordinates
+//!   outside the kept set `{b0 + dp*j}` are exactly zero in the operand
+//!   (inputs) or may be left exactly zero (outputs, which callers mask or
+//!   never read downstream).
+//! * `Skip::Tiles(t)` — a [`TilePattern`] over a `[k, n]` weight matrix:
+//!   the weight is tile-masked. Kernels that exploit the structure receive
+//!   the **raw** weight and must not touch dropped tiles; kernels that
+//!   don't are given the pre-masked weight by [`Kernels::prep_weight`].
+//!
+//! Exact-zero skipping is value-preserving: the dense path accumulates the
+//! dropped coordinates as `acc += x * 0.0`, an exact no-op in IEEE f32 (up
+//! to the sign of a zero total), and both shipped implementations
+//! accumulate the shared dimension in ascending index order — so reference
+//! and sparse agree far tighter than the 1e-5 relative tolerance the
+//! parity suite (`rust/tests/hermetic.rs`) enforces.
+
+use crate::patterns::{RowPattern, TilePattern};
+
+/// Structural sparsity of one GEMM operand/axis. See the module docs for
+/// the exact contract per [`Kernels`] method.
+#[derive(Clone, Copy, Debug)]
+pub enum Skip {
+    Dense,
+    Rows(RowPattern),
+    Tiles(TilePattern),
+}
+
+impl Skip {
+    /// Kept indices along an axis of width `dim` (`None` = all kept).
+    /// Panics on `Tiles` — tile structure never flattens to an index
+    /// list; methods handle it explicitly.
+    pub fn kept(&self, dim: usize) -> Option<Vec<usize>> {
+        match self {
+            Skip::Dense => None,
+            Skip::Rows(p) => {
+                debug_assert_eq!(p.m, dim, "Rows skip width mismatch");
+                Some(p.kept_indices())
+            }
+            Skip::Tiles(_) => {
+                panic!("Skip::Tiles has no flat kept-index list")
+            }
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Skip::Dense)
+    }
+}
+
+/// The element math of one execution backend. All matrices are row-major
+/// f32; shapes are trusted (`debug_assert`ed, validated upstream by the
+/// manifest `check`).
+pub trait Kernels: Send + Sync + std::fmt::Debug {
+    /// Short name for logs/diagnostics ("dense" | "sparse").
+    fn name(&self) -> &'static str;
+
+    /// `C[m,n] = A[m,k] @ B[k,n]`.
+    ///
+    /// * `k_skip` — structure along the shared dim: `Rows(p)` means A's
+    ///   columns outside `p` are exactly zero (masked activations);
+    ///   `Tiles(t)` means B is tile-masked (pass B through
+    ///   [`Self::prep_weight`] first).
+    /// * `out_skip` — `Rows(q)`: output columns outside `q` may be left
+    ///   exactly zero (the caller masks them before any further use).
+    ///   Never `Tiles`.
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+            k_skip: &Skip, out_skip: &Skip) -> Vec<f32>;
+
+    /// `C[m,k] = A[m,n] @ B[k,n]^T`.
+    ///
+    /// * `skip` — `Rows(q)`: output columns (the k axis) outside `q` may
+    ///   be left exactly zero; `Tiles(t)`: B is tile-masked over `[k,n]`
+    ///   (prepared weight for non-exploiting kernels).
+    fn gemm_nt(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize,
+               skip: &Skip) -> Vec<f32>;
+
+    /// `C[k,n] += A[m,k]^T @ B[m,n]` (gradient accumulation).
+    ///
+    /// * `row_skip` — `Rows(p)`: A's columns (C's rows) outside `p` are
+    ///   exactly zero — dropped gradient rows receive no accumulation,
+    ///   the bit-freeze invariant the hermetic suite pins. `Tiles(t)`:
+    ///   only C's kept tiles receive accumulation.
+    /// * `col_skip` — `Rows(q)`: B's columns (C's columns) outside `q`
+    ///   are exactly zero. Never `Tiles`.
+    fn gemm_tn_acc(&self, a: &[f32], b: &[f32], m: usize, k: usize,
+                   n: usize, row_skip: &Skip, col_skip: &Skip,
+                   out: &mut [f32]);
+
+    /// Allocating wrapper over [`Self::gemm_tn_acc`].
+    fn gemm_tn(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+               row_skip: &Skip, col_skip: &Skip) -> Vec<f32> {
+        let mut out = vec![0f32; k * n];
+        self.gemm_tn_acc(a, b, m, k, n, row_skip, col_skip, &mut out);
+        out
+    }
+
+    /// `y[n] = x[k] @ B[k,n]` — the GEMV (single-row) entry point; same
+    /// skip contract as [`Self::gemm`] with `m == 1`.
+    fn gemv(&self, x: &[f32], b: &[f32], k: usize, n: usize,
+            k_skip: &Skip, out_skip: &Skip) -> Vec<f32> {
+        self.gemm(x, b, 1, k, n, k_skip, out_skip)
+    }
+
+    /// Prepare a `[k, n]` weight for repeated GEMMs under `skip`:
+    /// implementations that compute masked-dense return the materialized
+    /// `w ∘ mask` (`Some`), structure-exploiting implementations return
+    /// `None` (use the raw weight; their loops never read dropped tiles).
+    /// `Dense`/`Rows` skips never need preparation.
+    fn prep_weight(&self, w: &[f32], k: usize, n: usize, skip: &Skip)
+                   -> Option<Vec<f32>>;
+}
+
+// ---------------------------------------------------------------------------
+// DenseKernels: the reference backend's masked-dense loops
+// ---------------------------------------------------------------------------
+
+/// The reference element math: exactly the scalar loops the pure-Rust
+/// interpreter has always used. `Rows` skips are ignored (the structural
+/// zeros in the operands already produce the right result — and the inner
+/// loops skip zero activations elementwise, like the compact graphs'
+/// cost model's *dense* baseline); `Tiles` skips run against the
+/// pre-masked weight from [`Kernels::prep_weight`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseKernels;
+
+impl Kernels for DenseKernels {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn gemm(&self, a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+            _k_skip: &Skip, _out_skip: &Skip) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue; // masked activations make this sparse
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    fn gemm_nt(&self, a: &[f32], b: &[f32], m: usize, n: usize, k: usize,
+               _skip: &Skip) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * n);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0f32; m * k];
+        for i in 0..m {
+            let arow = &a[i * n..(i + 1) * n];
+            for j in 0..k {
+                let brow = &b[j * n..(j + 1) * n];
+                let mut acc = 0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                out[i * k + j] = acc;
+            }
+        }
+        out
+    }
+
+    fn gemm_tn_acc(&self, a: &[f32], b: &[f32], m: usize, k: usize,
+                   n: usize, row_skip: &Skip, _col_skip: &Skip,
+                   out: &mut [f32]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), m * n);
+        debug_assert_eq!(out.len(), k * n);
+        if let Skip::Tiles(pat) = row_skip {
+            // Compute the full gradient into a scratch buffer, mask, then
+            // accumulate — dropped tiles of `out` receive no update even
+            // when `out` carries prior accumulation (LSTM BPTT).
+            let mut tmp = vec![0f32; k * n];
+            dense_tn(a, b, m, k, n, &mut tmp);
+            let mask = pat.mask();
+            for ((o, &t), &mk) in out.iter_mut().zip(&tmp).zip(&mask) {
+                *o += t * mk;
+            }
+            return;
+        }
+        dense_tn(a, b, m, k, n, out);
+    }
+
+    fn prep_weight(&self, w: &[f32], k: usize, n: usize, skip: &Skip)
+                   -> Option<Vec<f32>> {
+        match skip {
+            Skip::Tiles(pat) => {
+                debug_assert_eq!(w.len(), k * n);
+                debug_assert_eq!((pat.k, pat.n), (k, n));
+                let mask = pat.mask();
+                Some(w.iter().zip(&mask).map(|(&x, &m)| x * m).collect())
+            }
+            _ => None,
+        }
+    }
+}
+
+/// `out[k,n] += a[m,k]^T @ b[m,n]` — the shared dense accumulation loop.
+fn dense_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
+            out: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let brow = &b[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const D: Skip = Skip::Dense;
+
+    #[test]
+    fn dense_gemm_shapes_and_values() {
+        let kern = DenseKernels;
+        // [2,3] @ [3,2]
+        let a = [1., 2., 3., 4., 5., 6.];
+        let b = [7., 8., 9., 10., 11., 12.];
+        let c = kern.gemm(&a, &b, 2, 3, 2, &D, &D);
+        assert_eq!(c, vec![58., 64., 139., 154.]);
+        // a @ (b^T)^T == a @ b via gemm_nt with b stored transposed.
+        let bt = [7., 9., 11., 8., 10., 12.]; // [2,3] = b^T
+        let c2 = kern.gemm_nt(&a, &bt, 2, 3, 2, &D);
+        assert_eq!(c2, c);
+        // a^T @ a: [3,3] symmetric.
+        let g = kern.gemm_tn(&a, &a, 2, 3, 3, &D, &D);
+        assert_eq!(g[1], g[3]);
+        assert_eq!(g[0], 1. * 1. + 4. * 4.);
+        // gemv == gemm with m = 1.
+        let y = kern.gemv(&a[..3], &b, 3, 2, &D, &D);
+        assert_eq!(y, c[..2].to_vec());
+    }
+
+    #[test]
+    fn dense_prep_weight_masks_tiles() {
+        let kern = DenseKernels;
+        let pat = TilePattern::new(32, 64, 2, 0, 16);
+        let w = vec![1f32; 32 * 64];
+        let wm = kern.prep_weight(&w, 32, 64, &Skip::Tiles(pat)).unwrap();
+        assert_eq!(wm, pat.mask());
+        assert!(kern.prep_weight(&w, 32, 64, &D).is_none());
+        let rows = Skip::Rows(RowPattern::new(64, 2, 0));
+        assert!(kern.prep_weight(&w, 32, 64, &rows).is_none());
+    }
+
+    #[test]
+    fn dense_tn_tiles_freezes_dropped_tiles_under_accumulation() {
+        let kern = DenseKernels;
+        let pat = TilePattern::new(32, 32, 2, 1, 16);
+        let a = vec![1f32; 4 * 32];
+        let b = vec![1f32; 4 * 32];
+        let mut out = vec![5f32; 32 * 32];
+        kern.gemm_tn_acc(&a, &b, 4, 32, 32, &Skip::Tiles(pat), &D,
+                         &mut out);
+        for r in 0..2 {
+            for c in 0..2 {
+                let v = out[(r * 16) * 32 + c * 16];
+                if pat.keeps_tile(r, c) {
+                    assert_eq!(v, 5.0 + 4.0, "kept tile ({r},{c})");
+                } else {
+                    assert_eq!(v, 5.0, "dropped tile ({r},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_kept_lists() {
+        assert!(Skip::Dense.kept(8).is_none());
+        let r = Skip::Rows(RowPattern::new(8, 2, 1));
+        assert_eq!(r.kept(8).unwrap(), vec![1, 3, 5, 7]);
+        assert!(!r.is_dense());
+        assert!(Skip::Dense.is_dense());
+    }
+}

@@ -1,8 +1,11 @@
-//! Minimal JSON parser for `artifacts/manifest.json`.
+//! Minimal JSON parser + writer for `artifacts/manifest.json` and the
+//! machine-readable bench reports (`BENCH_*.json`).
 //!
 //! Supports the full JSON grammar we emit (objects, arrays, strings with
 //! escapes, numbers, bools, null); serde is unavailable offline. Not a
 //! general-purpose library — errors carry byte offsets for debugging.
+//! The writer round-trips through the parser (`writer_roundtrip` below);
+//! non-finite numbers serialize as `null` (JSON has no NaN/inf).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -69,6 +72,126 @@ impl Json {
         }
         Some(cur)
     }
+
+    // -- construction helpers (bench reports) ------------------------------
+
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn str(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+
+    /// Object from (key, value) pairs; later duplicates win (BTreeMap).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect())
+    }
+
+    // -- writer ------------------------------------------------------------
+
+    /// Compact serialization.
+    pub fn dumps(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, None, 0);
+        out
+    }
+
+    /// Pretty serialization (2-space indent), ending without a newline.
+    pub fn pretty(&self) -> String {
+        let mut out = String::new();
+        self.write_into(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write_into(&self, out: &mut String, indent: Option<usize>,
+                  depth: usize) {
+        let (nl, pad, pad_in) = match indent {
+            Some(w) => ("\n", " ".repeat(w * depth),
+                        " ".repeat(w * (depth + 1))),
+            None => ("", String::new(), String::new()),
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => out.push_str(&fmt_num(*n)),
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(v) => {
+                if v.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    item.write_into(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    write_escaped(k, out);
+                    out.push(':');
+                    if indent.is_some() {
+                        out.push(' ');
+                    }
+                    v.write_into(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Integers print without a fraction; other finite values use Rust's
+/// shortest round-trip repr; non-finite becomes `null` (invalid in JSON).
+fn fmt_num(n: f64) -> String {
+    if !n.is_finite() {
+        return "null".to_string();
+    }
+    if n.fract() == 0.0 && n.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n:?}")
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 #[derive(Debug)]
@@ -321,5 +444,34 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn writer_roundtrip() {
+        let v = Json::obj(vec![
+            ("name", Json::str("bench \"x\"\n")),
+            ("n", Json::num(3.0)),
+            ("t", Json::num(0.12345)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+            ("rows", Json::Arr(vec![
+                Json::num(-1.5e-7),
+                Json::obj(vec![("k", Json::str("v"))]),
+                Json::Arr(vec![]),
+            ])),
+        ]);
+        for text in [v.dumps(), v.pretty()] {
+            assert_eq!(parse(&text).unwrap(), v, "text:\n{text}");
+        }
+        // Integers print without fraction; NaN degrades to null.
+        assert_eq!(Json::num(3.0).dumps(), "3");
+        assert_eq!(Json::num(f64::NAN).dumps(), "null");
+        assert_eq!(Json::num(0.5).dumps(), "0.5");
+    }
+
+    #[test]
+    fn pretty_indents() {
+        let v = Json::obj(vec![("a", Json::Arr(vec![Json::num(1.0)]))]);
+        assert_eq!(v.pretty(), "{\n  \"a\": [\n    1\n  ]\n}");
     }
 }

@@ -9,9 +9,13 @@
 //! * the artifact-name dispatch sequence is seed-deterministic, covers
 //!   exactly the schedule's dp combos, and empirically follows the
 //!   searched distribution K,
-//! * the reference interpreter reproduces the semantic invariants the
-//!   PJRT integration suite asserts (dropped RDP rows frozen, eval graph
-//!   == host forward),
+//! * the host interpreters (reference AND sparse) reproduce the semantic
+//!   invariants the PJRT integration suite asserts (dropped RDP
+//!   rows/TDP tiles frozen, eval graph == host forward),
+//! * the structured-sparse backend matches the reference backend to
+//!   <= 1e-5 relative on one full train step for all six
+//!   (model x variant) cases, dispatches identical artifact-name
+//!   sequences, and tracks the reference loss trajectory step-for-step,
 //! * (with `--features pjrt` and generated artifacts) reference and PJRT
 //!   produce the identical dispatch sequence for the same seed.
 
@@ -20,7 +24,8 @@ mod common;
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
-use approx_dropout::runtime::{Executor, HostTensor, Manifest, TrainState,
+use approx_dropout::runtime::{ArchMeta, ArtifactMeta, Dtype, Executor,
+                              HostTensor, Kind, Manifest, TrainState,
                               Value};
 use approx_dropout::util::rng::Rng;
 
@@ -28,6 +33,15 @@ use common::host_mlp_eval;
 
 fn reference_cache() -> ExecutorCache {
     ExecutorCache::reference(Manifest::builtin_test())
+}
+
+fn sparse_cache() -> ExecutorCache {
+    ExecutorCache::sparse(Manifest::builtin_test())
+}
+
+/// Both hermetic host backends; cross-backend tests iterate these.
+fn host_caches() -> [ExecutorCache; 2] {
+    [reference_cache(), sparse_cache()]
 }
 
 fn mean(xs: &[f64]) -> f64 {
@@ -203,72 +217,84 @@ fn rdp_step(cache: &ExecutorCache, state: &mut TrainState,
     state.step(exe, &tail).unwrap()
 }
 
-/// The interpreter must reproduce the pattern's exact gradient-sparsity
-/// claim: dropped rows of w3 receive no update, bit-for-bit.
+/// The interpreters (reference AND sparse) must reproduce the pattern's
+/// exact gradient-sparsity claim: dropped rows of w3 receive no update,
+/// bit-for-bit.
 #[test]
-fn reference_rdp_freezes_dropped_rows_in_w3() {
-    let cache = reference_cache();
-    let exe = cache.get("mlptest_rdp_2_2").unwrap();
-    let mut rng = Rng::new(33);
-    let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
-    let mut state =
-        TrainState::init(meta, &mut rng, cache.backend().as_ref())
-            .unwrap();
-    let w3_before = state.param_f32(4).unwrap();
+fn rdp_freezes_dropped_rows_in_w3_on_host_backends() {
+    for cache in host_caches() {
+        let backend_name = cache.backend().name();
+        let exe = cache.get("mlptest_rdp_2_2").unwrap();
+        let mut rng = Rng::new(33);
+        let meta = cache.manifest().get("mlptest_rdp_2_2").unwrap();
+        let mut state =
+            TrainState::init(meta, &mut rng, cache.backend().as_ref())
+                .unwrap();
+        let w3_before = state.param_f32(4).unwrap();
 
-    let b0_1 = 1; // site-2 pattern: keep rows {1, 3, 5, ...}
-    let (loss, correct) =
-        rdp_step(&cache, &mut state, exe.as_ref(), &mut rng, (0, b0_1),
-                 0.1);
-    assert!(loss.is_finite() && loss > 0.0);
-    assert!((0.0..=8.0).contains(&correct));
-    let w3_after = state.param_f32(4).unwrap();
+        let b0_1 = 1; // site-2 pattern: keep rows {1, 3, 5, ...}
+        let (loss, correct) =
+            rdp_step(&cache, &mut state, exe.as_ref(), &mut rng, (0, b0_1),
+                     0.1);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!((0.0..=8.0).contains(&correct));
+        let w3_after = state.param_f32(4).unwrap();
 
-    let mut kept_changed = 0;
-    for i in 0..64 {
-        let row_changed = (0..10)
-            .any(|j| w3_before[i * 10 + j] != w3_after[i * 10 + j]);
-        if i % 2 == b0_1 as usize {
-            kept_changed += usize::from(row_changed);
-        } else {
-            assert!(!row_changed, "dropped row {i} must be frozen");
+        let mut kept_changed = 0;
+        for i in 0..64 {
+            let row_changed = (0..10)
+                .any(|j| w3_before[i * 10 + j] != w3_after[i * 10 + j]);
+            if i % 2 == b0_1 as usize {
+                kept_changed += usize::from(row_changed);
+            } else {
+                assert!(!row_changed,
+                        "{backend_name}: dropped row {i} must be frozen");
+            }
         }
+        assert!(kept_changed >= 16,
+                "{backend_name}: only {kept_changed}/32 kept rows updated");
     }
-    assert!(kept_changed >= 16,
-            "only {kept_changed}/32 kept rows updated");
 }
 
-/// TDP on the reference backend: dropped tiles of w1 must be frozen, per
+/// TDP on both host backends: dropped tiles of w1 must be frozen, per
 /// the tile pattern's DropConnect semantics.
 #[test]
-fn reference_tdp_freezes_dropped_tiles_in_w1() {
+fn tdp_freezes_dropped_tiles_in_w1_on_host_backends() {
     use approx_dropout::patterns::TilePattern;
-    let cache = reference_cache();
-    let exe = cache.get("mlptest_tdp_2_2").unwrap();
-    let mut rng = Rng::new(5);
-    let meta = cache.manifest().get("mlptest_tdp_2_2").unwrap();
-    assert_eq!(meta.tile, 16, "tiny arch tile must survive the manifest");
-    let mut state =
-        TrainState::init(meta, &mut rng, cache.backend().as_ref())
-            .unwrap();
-    let w1_before = state.param_f32(0).unwrap();
-    let b0_0 = 1;
-    let (loss, _) = rdp_step(&cache, &mut state, exe.as_ref(), &mut rng,
-                             (b0_0, 0), 0.1);
-    assert!(loss.is_finite());
-    let w1_after = state.param_f32(0).unwrap();
-    // w1 is [32, 64], tile 16 -> 2x4 grid; kept iff (c - b0 - r) % 2 == 0.
-    let pat = TilePattern::new(32, 64, 2, b0_0 as usize, 16);
-    for r in 0..2 {
-        for c in 0..4 {
-            let changed = (0..16).any(|i| (0..16).any(|j| {
-                let idx = (r * 16 + i) * 64 + (c * 16 + j);
-                w1_before[idx] != w1_after[idx]
-            }));
-            if pat.keeps_tile(r, c) {
-                assert!(changed, "kept tile ({r},{c}) must update");
-            } else {
-                assert!(!changed, "dropped tile ({r},{c}) must be frozen");
+    for cache in host_caches() {
+        let backend_name = cache.backend().name();
+        let exe = cache.get("mlptest_tdp_2_2").unwrap();
+        let mut rng = Rng::new(5);
+        let meta = cache.manifest().get("mlptest_tdp_2_2").unwrap();
+        assert_eq!(meta.tile, 16,
+                   "tiny arch tile must survive the manifest");
+        let mut state =
+            TrainState::init(meta, &mut rng, cache.backend().as_ref())
+                .unwrap();
+        let w1_before = state.param_f32(0).unwrap();
+        let b0_0 = 1;
+        let (loss, _) = rdp_step(&cache, &mut state, exe.as_ref(),
+                                 &mut rng, (b0_0, 0), 0.1);
+        assert!(loss.is_finite());
+        let w1_after = state.param_f32(0).unwrap();
+        // w1 is [32, 64], tile 16 -> 2x4 grid; kept iff
+        // (c - b0 - r) % 2 == 0.
+        let pat = TilePattern::new(32, 64, 2, b0_0 as usize, 16);
+        for r in 0..2 {
+            for c in 0..4 {
+                let changed = (0..16).any(|i| (0..16).any(|j| {
+                    let idx = (r * 16 + i) * 64 + (c * 16 + j);
+                    w1_before[idx] != w1_after[idx]
+                }));
+                if pat.keeps_tile(r, c) {
+                    assert!(changed,
+                            "{backend_name}: kept tile ({r},{c}) must \
+                             update");
+                } else {
+                    assert!(!changed,
+                            "{backend_name}: dropped tile ({r},{c}) must \
+                             be frozen");
+                }
             }
         }
     }
@@ -321,4 +347,209 @@ fn dispatch_parity_reference_vs_pjrt() {
         assert!((a - b).abs() < 1e-2,
                 "step {i}: reference loss {a} vs pjrt {b}");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse-vs-reference parity (the sparse subsystem's acceptance tests)
+// ---------------------------------------------------------------------------
+
+/// Synthesize the post-(params ++ momenta) tail of a train step from the
+/// manifest metas: x/y data, Bernoulli masks (conv), b0 bias scalars
+/// (rdp/tdp), scales, lr. One host-side tensor list, ingested into each
+/// backend, so both see bit-identical inputs.
+fn synth_tail(meta: &ArtifactMeta, rng: &mut Rng) -> Vec<HostTensor> {
+    let np = meta.n_params();
+    let (label_hi, vocab) = match &meta.arch {
+        ArchMeta::Mlp { n_out, .. } => (*n_out, 0),
+        ArchMeta::Lstm { vocab, .. } => (*vocab, *vocab),
+    };
+    let mut site = 0usize;
+    let mut tail = Vec::new();
+    for t in &meta.inputs[2 * np..] {
+        let ht = match t.kind {
+            Kind::X => match t.dtype {
+                Dtype::F32 => HostTensor::f32(
+                    &t.shape,
+                    (0..t.elements()).map(|_| rng.next_f32()).collect()),
+                Dtype::I32 => HostTensor::i32(
+                    &t.shape,
+                    (0..t.elements())
+                        .map(|_| rng.next_usize(vocab) as i32)
+                        .collect()),
+            },
+            Kind::Y => HostTensor::i32(
+                &t.shape,
+                (0..t.elements())
+                    .map(|_| rng.next_usize(label_hi) as i32)
+                    .collect()),
+            Kind::Mask => HostTensor::f32(&t.shape,
+                                          rng.mask_vec(0.5, t.elements())),
+            Kind::Bias => {
+                let dp = meta.dp[site];
+                site += 1;
+                HostTensor::scalar_i32(rng.next_usize(dp) as i32)
+            }
+            Kind::Scale => HostTensor::scalar_f32(2.0),
+            Kind::Lr => HostTensor::scalar_f32(0.05),
+            other => panic!("unexpected tail tensor kind {other:?}"),
+        };
+        tail.push(ht);
+    }
+    tail
+}
+
+fn assert_close_rel(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let scale = x.abs().max(y.abs()).max(1.0);
+        assert!((x - y).abs() <= tol * scale,
+                "{what}[{i}]: reference {x} vs sparse {y}");
+    }
+}
+
+/// Satellite acceptance: `AD_BACKEND=sparse` vs `reference` agree to
+/// <= 1e-5 relative on one full train step — updated params, updated
+/// momenta, loss, and correct-count — for all six (model x variant)
+/// cases on the syn archs.
+#[test]
+fn sparse_matches_reference_on_one_full_step_all_six_cases() {
+    let rc = reference_cache();
+    let sc = sparse_cache();
+    for name in ["mlpsyn_conv", "mlpsyn_rdp_2_2", "mlpsyn_tdp_2_2",
+                 "lstmsyn_conv", "lstmsyn_rdp_2", "lstmsyn_tdp_2"] {
+        let meta = rc.manifest().get(name).unwrap().clone();
+        let mut data_rng = Rng::new(0xC0FFEE);
+        let tail = synth_tail(&meta, &mut data_rng);
+
+        let run = |cache: &ExecutorCache| -> (Vec<Vec<f32>>, f64, f64) {
+            let backend = cache.backend();
+            let exe = cache.get(name).unwrap();
+            // Same init seed -> bit-identical params on both backends
+            // (draws happen on host buffers before upload).
+            let mut rng = Rng::new(4242);
+            let mut state =
+                TrainState::init(&meta, &mut rng, backend.as_ref())
+                    .unwrap();
+            let vals: Vec<Value> = tail
+                .iter()
+                .map(|t| backend.ingest(t.clone()).unwrap())
+                .collect();
+            let (loss, correct) =
+                state.step(exe.as_ref(), &vals).unwrap();
+            let mut tensors = Vec::new();
+            for i in 0..state.params.len() {
+                tensors.push(state.param_f32(i).unwrap());
+            }
+            for m in &state.momenta {
+                tensors.push(m.to_f32().unwrap());
+            }
+            (tensors, loss, correct)
+        };
+
+        let (ref_t, ref_loss, ref_correct) = run(&rc);
+        let (sp_t, sp_loss, sp_correct) = run(&sc);
+        assert!((ref_loss - sp_loss).abs()
+                    <= 1e-5 * ref_loss.abs().max(1.0),
+                "{name}: loss {ref_loss} vs {sp_loss}");
+        assert_eq!(ref_correct, sp_correct, "{name}: correct count");
+        for (i, (a, b)) in ref_t.iter().zip(&sp_t).enumerate() {
+            assert_close_rel(a, b, 1e-5, &format!("{name} tensor {i}"));
+        }
+    }
+}
+
+/// The sparse backend must be invisible to the coordinator: identical
+/// artifact-name dispatch sequences for the same seed, and per-step
+/// losses matching the reference trajectory, across every variant on
+/// both models.
+#[test]
+fn sparse_dispatch_sequences_match_reference() {
+    let rc = reference_cache();
+    let sc = sparse_cache();
+    let (mnist, _) = MnistSyn::train_test(256, 64, 21);
+    let corpus = Corpus::generate(64, 6000, 600, 600, 5);
+    let steps = 10;
+
+    for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+        // MLP.
+        let run_mlp = |cache: &ExecutorCache| {
+            let schedule =
+                Schedule::new(variant, &[0.5, 0.5], &[1, 2], false)
+                    .unwrap();
+            let mut tr = MlpTrainer::new(cache, "mlpsyn", schedule,
+                                         mnist.n, 0.01, 31)
+                .unwrap();
+            for _ in 0..steps {
+                tr.step(&mnist).unwrap();
+            }
+            (tr.metrics.dispatched.clone(),
+             tr.metrics.curve.iter().map(|p| p.loss).collect::<Vec<_>>())
+        };
+        let (ref_names, ref_losses) = run_mlp(&rc);
+        let (sp_names, sp_losses) = run_mlp(&sc);
+        assert_eq!(ref_names, sp_names, "{variant:?}: mlp dispatch");
+        for (i, (a, b)) in ref_losses.iter().zip(&sp_losses).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                    "{variant:?}: mlp step {i} loss {a} vs {b}");
+        }
+
+        // LSTM.
+        let shared = variant != Variant::Conv;
+        let run_lstm = |cache: &ExecutorCache| {
+            let schedule =
+                Schedule::new(variant, &[0.5, 0.5], &[1, 2], shared)
+                    .unwrap();
+            let mut tr = LstmTrainer::new(cache, "lstmsyn", schedule,
+                                          &corpus.train, 0.1, 17)
+                .unwrap();
+            for _ in 0..steps {
+                tr.step().unwrap();
+            }
+            (tr.metrics.dispatched.clone(),
+             tr.metrics.curve.iter().map(|p| p.loss).collect::<Vec<_>>())
+        };
+        let (ref_names, ref_losses) = run_lstm(&rc);
+        let (sp_names, sp_losses) = run_lstm(&sc);
+        assert_eq!(ref_names, sp_names, "{variant:?}: lstm dispatch");
+        for (i, (a, b)) in ref_losses.iter().zip(&sp_losses).enumerate() {
+            assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                    "{variant:?}: lstm step {i} loss {a} vs {b}");
+        }
+    }
+}
+
+/// Evaluation graphs agree across the host backends too (dense math on
+/// both, but routed through different kernels).
+#[test]
+fn sparse_eval_matches_reference_eval() {
+    let rc = reference_cache();
+    let sc = sparse_cache();
+    let meta = rc.manifest().get("mlpsyn_conv").unwrap().clone();
+    let mut data_rng = Rng::new(77);
+    let batch = meta.batch();
+    let x: Vec<f32> =
+        (0..batch * 784).map(|_| data_rng.next_f32()).collect();
+    let y: Vec<i32> =
+        (0..batch).map(|_| data_rng.next_usize(10) as i32).collect();
+    let run = |cache: &ExecutorCache| -> (f64, f64) {
+        let backend = cache.backend();
+        let exe = cache.get("mlpsyn_eval").unwrap();
+        let mut rng = Rng::new(123);
+        let state = TrainState::init(&meta, &mut rng, backend.as_ref())
+            .unwrap();
+        let extra = vec![
+            backend
+                .ingest(HostTensor::f32(&[batch, 784], x.clone()))
+                .unwrap(),
+            backend
+                .ingest(HostTensor::i32(&[batch], y.clone()))
+                .unwrap(),
+        ];
+        state.eval_step(exe.as_ref(), &extra).unwrap()
+    };
+    let (rl, rcorrect) = run(&rc);
+    let (sl, scorrect) = run(&sc);
+    assert!((rl - sl).abs() <= 1e-6 * rl.abs().max(1.0),
+            "eval loss {rl} vs {sl}");
+    assert_eq!(rcorrect, scorrect);
 }

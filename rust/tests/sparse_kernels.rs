@@ -1,0 +1,249 @@
+//! Property tests of the structured-sparse kernel library: for randomized
+//! shapes, skip-lists, and tilings, every sparse kernel equals the dense
+//! kernel applied to the correspondingly *masked* operands — the contract
+//! that lets one step program (`runtime::step`) run on either backend.
+//!
+//! Tolerances: the sparse kernels accumulate the shared dimension in the
+//! same ascending order as the dense loops and only skip exactly-zero
+//! contributions, so most comparisons here are `assert_eq` (bitwise), not
+//! epsilon checks.
+
+use approx_dropout::patterns::{RowPattern, TilePattern};
+use approx_dropout::runtime::{DenseKernels, Kernels, Skip, SparseKernels};
+use approx_dropout::util::rng::Rng;
+use approx_dropout::util::testkit::{self, gen_choice, gen_range,
+                                    gen_vec_f32};
+
+const D: Skip = Skip::Dense;
+
+/// Zero the columns of `a [m,k]` that `pat` drops (the structural
+/// precondition the step program guarantees for masked activations).
+fn mask_cols(a: &mut [f32], m: usize, k: usize, pat: &RowPattern) {
+    for i in 0..m {
+        for p in 0..k {
+            if !pat.keeps(p) {
+                a[i * k + p] = 0.0;
+            }
+        }
+    }
+}
+
+/// `w ∘ mask` for a tile pattern.
+fn mask_tiles(w: &[f32], pat: &TilePattern) -> Vec<f32> {
+    w.iter().zip(pat.mask()).map(|(&x, m)| x * m).collect()
+}
+
+/// Random tile-pattern weight dims valid for dp in {2, 4} at tile 16.
+fn gen_tile_dims(rng: &mut Rng) -> (usize, usize) {
+    *gen_choice(rng, &[(32usize, 64usize), (64, 32), (64, 64), (32, 128),
+                       (128, 32)])
+}
+
+#[test]
+fn gemm_row_skip_equals_dense_on_masked_activations() {
+    testkit::quickcheck("gemm row-skip", |rng| {
+        let m = gen_range(rng, 1, 12);
+        let dp = *gen_choice(rng, &[1usize, 2, 3, 4]);
+        let k = dp * gen_range(rng, 1, 20);
+        let n = gen_range(rng, 1, 40);
+        let b0 = gen_range(rng, 0, dp);
+        let pat = RowPattern::new(k, dp, b0);
+        let mut a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+        mask_cols(&mut a, m, k, &pat);
+        let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+        let got = SparseKernels.gemm(&a, &b, m, k, n, &Skip::Rows(pat),
+                                     &D);
+        let want = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
+        assert_eq!(got, want, "m={m} k={k} n={n} dp={dp} b0={b0}");
+    });
+}
+
+#[test]
+fn gemm_tile_skip_equals_dense_on_masked_weight() {
+    testkit::quickcheck("gemm tile-skip", |rng| {
+        let m = gen_range(rng, 1, 10);
+        let (k, n) = gen_tile_dims(rng);
+        let dp = *gen_choice(rng, &[2usize, 4]);
+        let b0 = gen_range(rng, 0, dp);
+        let pat = TilePattern::new(k, n, dp, b0, 16);
+        let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+        let w = gen_vec_f32(rng, k * n, -1.0, 1.0);
+        let skip = Skip::Tiles(pat);
+        // Dense kernels require the prepared (masked) weight; sparse
+        // kernels take the raw one — that asymmetry IS the contract.
+        let wm = DenseKernels.prep_weight(&w, k, n, &skip).unwrap();
+        assert_eq!(wm, mask_tiles(&w, &pat));
+        assert!(SparseKernels.prep_weight(&w, k, n, &skip).is_none());
+        let got = SparseKernels.gemm(&a, &w, m, k, n, &skip, &D);
+        let want = DenseKernels.gemm(&a, &wm, m, k, n, &skip, &D);
+        assert_eq!(got, want, "k={k} n={n} dp={dp} b0={b0}");
+    });
+}
+
+#[test]
+fn gemm_out_skip_computes_kept_columns_only() {
+    testkit::quickcheck("gemm out-skip", |rng| {
+        let m = gen_range(rng, 1, 10);
+        let k = gen_range(rng, 1, 30);
+        let dp = *gen_choice(rng, &[2usize, 4]);
+        let n = dp * gen_range(rng, 1, 12);
+        let b0 = gen_range(rng, 0, dp);
+        let q = RowPattern::new(n, dp, b0);
+        let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+        let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+        let got = SparseKernels.gemm(&a, &b, m, k, n, &D, &Skip::Rows(q));
+        let full = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
+        for i in 0..m {
+            for j in 0..n {
+                if q.keeps(j) {
+                    assert_eq!(got[i * n + j], full[i * n + j],
+                               "kept ({i},{j})");
+                } else {
+                    assert_eq!(got[i * n + j], 0.0, "dropped ({i},{j})");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_nt_row_and_tile_skips_match_dense() {
+    testkit::quickcheck("gemm_nt skips", |rng| {
+        // Rows: output columns restricted.
+        let m = gen_range(rng, 1, 10);
+        let n = gen_range(rng, 1, 30);
+        let dp = *gen_choice(rng, &[2usize, 4]);
+        let k = dp * gen_range(rng, 1, 10);
+        let b0 = gen_range(rng, 0, dp);
+        let q = RowPattern::new(k, dp, b0);
+        let a = gen_vec_f32(rng, m * n, -1.0, 1.0);
+        let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+        let got = SparseKernels.gemm_nt(&a, &b, m, n, k, &Skip::Rows(q));
+        let full = DenseKernels.gemm_nt(&a, &b, m, n, k, &D);
+        for i in 0..m {
+            for j in 0..k {
+                if q.keeps(j) {
+                    assert_eq!(got[i * k + j], full[i * k + j]);
+                } else {
+                    assert_eq!(got[i * k + j], 0.0);
+                }
+            }
+        }
+
+        // Tiles: B tile-masked.
+        let (tk2, tn2) = gen_tile_dims(rng);
+        let pat = TilePattern::new(tk2, tn2, dp, b0, 16);
+        let a2 = gen_vec_f32(rng, m * tn2, -1.0, 1.0);
+        let w = gen_vec_f32(rng, tk2 * tn2, -1.0, 1.0);
+        let got = SparseKernels.gemm_nt(&a2, &w, m, tn2, tk2,
+                                        &Skip::Tiles(pat));
+        let want = DenseKernels.gemm_nt(&a2, &mask_tiles(&w, &pat), m,
+                                        tn2, tk2, &D);
+        for (i, (&x, &y)) in got.iter().zip(&want).enumerate() {
+            assert!((x - y).abs() <= 1e-6 * x.abs().max(y.abs()).max(1.0),
+                    "nt tiles elem {i}: {x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn gemm_tn_acc_freezes_dropped_rows_cols_and_tiles() {
+    testkit::quickcheck("gemm_tn_acc skips", |rng| {
+        let m = gen_range(rng, 1, 10);
+        let dpr = *gen_choice(rng, &[2usize, 4]);
+        let dpc = *gen_choice(rng, &[1usize, 2]);
+        let k = dpr * gen_range(rng, 1, 10);
+        let n = dpc * gen_range(rng, 1, 15);
+        let pr = RowPattern::new(k, dpr, gen_range(rng, 0, dpr));
+        let qc = RowPattern::new(n, dpc, gen_range(rng, 0, dpc));
+        let mut a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+        mask_cols(&mut a, m, k, &pr);
+        let mut b = gen_vec_f32(rng, m * n, -1.0, 1.0);
+        mask_cols(&mut b, m, n, &qc);
+        let prior = 0.25f32;
+        let mut got = vec![prior; k * n];
+        SparseKernels.gemm_tn_acc(&a, &b, m, k, n, &Skip::Rows(pr),
+                                  &Skip::Rows(qc), &mut got);
+        let mut want = vec![prior; k * n];
+        DenseKernels.gemm_tn_acc(&a, &b, m, k, n, &D, &D, &mut want);
+        assert_eq!(got, want);
+        // Dropped gradient rows keep their prior value bit-for-bit (the
+        // momentum/param freeze invariant).
+        for p in 0..k {
+            if !pr.keeps(p) {
+                for j in 0..n {
+                    assert_eq!(got[p * n + j], prior);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemm_tn_acc_tiles_matches_dense_masked_accumulation() {
+    testkit::quickcheck("gemm_tn_acc tiles", |rng| {
+        let m = gen_range(rng, 1, 8);
+        let (k, n) = gen_tile_dims(rng);
+        let dp = *gen_choice(rng, &[2usize, 4]);
+        let b0 = gen_range(rng, 0, dp);
+        let pat = TilePattern::new(k, n, dp, b0, 16);
+        let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+        let b = gen_vec_f32(rng, m * n, -1.0, 1.0);
+        let skip = Skip::Tiles(pat);
+        let mut got = vec![1.5f32; k * n];
+        SparseKernels.gemm_tn_acc(&a, &b, m, k, n, &skip, &D, &mut got);
+        let mut want = vec![1.5f32; k * n];
+        DenseKernels.gemm_tn_acc(&a, &b, m, k, n, &skip, &D, &mut want);
+        assert_eq!(got, want);
+        let (gk, gn) = pat.grid();
+        for r in 0..gk {
+            for c in 0..gn {
+                if !pat.keeps_tile(r, c) {
+                    let v = got[(r * pat.tr) * n + c * pat.tc];
+                    assert_eq!(v, 1.5, "dropped tile ({r},{c})");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn gemv_is_the_single_row_gemm() {
+    testkit::quickcheck("gemv", |rng| {
+        let dp = *gen_choice(rng, &[1usize, 2, 4]);
+        let k = dp * gen_range(rng, 1, 16);
+        let n = gen_range(rng, 1, 40);
+        let pat = RowPattern::new(k, dp, gen_range(rng, 0, dp));
+        let mut x = gen_vec_f32(rng, k, -1.0, 1.0);
+        mask_cols(&mut x, 1, k, &pat);
+        let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+        let skip = Skip::Rows(pat);
+        let got = SparseKernels.gemv(&x, &b, k, n, &skip, &D);
+        let want = DenseKernels.gemm(&x, &b, 1, k, n, &D, &D);
+        assert_eq!(got, want);
+    });
+}
+
+/// Large-enough shapes to actually cross the kernels' parallel threshold
+/// (the quickcheck shapes above mostly run inline): exercises the worker
+/// pool path end-to-end and re-checks dense parity there.
+#[test]
+fn parallel_path_matches_dense() {
+    let mut rng = Rng::new(1234);
+    let (m, k, n) = (64, 256, 192);
+    let pat = RowPattern::new(k, 2, 1);
+    let mut a = gen_vec_f32(&mut rng, m * k, -1.0, 1.0);
+    mask_cols(&mut a, m, k, &pat);
+    let b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
+    let got = SparseKernels.gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
+    let want = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
+    assert_eq!(got, want);
+
+    let b2 = gen_vec_f32(&mut rng, m * n, -1.0, 1.0);
+    let mut got = vec![0f32; k * n];
+    SparseKernels.gemm_tn_acc(&a, &b2, m, k, n, &Skip::Rows(pat), &D,
+                              &mut got);
+    let mut want = vec![0f32; k * n];
+    DenseKernels.gemm_tn_acc(&a, &b2, m, k, n, &D, &D, &mut want);
+    assert_eq!(got, want);
+}

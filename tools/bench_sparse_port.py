@@ -1,0 +1,619 @@
+#!/usr/bin/env python3
+"""Numpy port of the structured-sparse kernel library + speedup bench.
+
+Two jobs:
+
+1. ``--validate`` — re-derive the kernel contracts of
+   ``rust/src/runtime/sparse/kernels.rs`` in numpy and check them against
+   masked-dense math for randomized shapes/skips/tilings, then run a full
+   MLP train-step parity check (reference masked-dense vs sparse skipping
+   math, all three variants) mirroring the placement of every `Skip` in
+   ``rust/src/runtime/step/mod.rs``. This is the cross-language check of
+   the sparse subsystem's *math* (the same technique PR 2 used to
+   validate the reference interpreter against the JAX graphs).
+
+2. ``--bench`` — produce ``BENCH_sparse.json`` with the same schema as
+   ``rust/benches/sparse_speedup.rs``, from a *scale model* of the Rust
+   kernels: every kernel is executed as a loop whose iteration count is
+   proportional to the multiply-accumulates actually touched (row/tile
+   loops with 16-wide column blocks), so skipped rows/tiles translate
+   into skipped iterations exactly as they do in the blocked Rust loops.
+   Absolute times are python's, but the dense-vs-skip *ratios* model the
+   scalar Rust kernels. The report's ``provenance`` field records this;
+   rerun the Rust harness (``cargo run --release --bin sparse_speedup``)
+   to replace it with native numbers when a cargo toolchain is present.
+
+Both run by default. Exit code is nonzero on any validation failure.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Patterns (mirror rust/src/patterns/{row,tile}.rs)
+# ---------------------------------------------------------------------------
+
+
+def pick_block(dim, cap):
+    if dim <= cap:
+        return dim
+    for b in range(cap, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1
+
+
+def row_kept(m, dp, b0):
+    """Kept indices {b0 + dp*j} of an m-wide site."""
+    return np.arange(b0, (m // dp) * dp, dp)
+
+
+def row_mask(m, dp, b0):
+    mask = np.zeros(m, np.float32)
+    mask[row_kept(m, dp, b0)] = 1.0
+    return mask
+
+
+class TilePat:
+    def __init__(self, k, n, dp, b0, tile):
+        self.k, self.n, self.dp, self.b0 = k, n, dp, b0
+        self.tr, self.tc = pick_block(k, tile), pick_block(n, tile)
+        self.tk, self.tn = k // self.tr, n // self.tc
+        assert self.tn % dp == 0 or self.tk % dp == 0
+
+    def keeps(self, r, c):
+        dp, b0 = self.dp, self.b0
+        return (c % dp + dp - (b0 + r) % dp) % dp == 0
+
+    def kept_tiles(self):
+        return [(r, c) for r in range(self.tk) for c in range(self.tn)
+                if self.keeps(r, c)]
+
+    def mask(self):
+        m = np.zeros((self.k, self.n), np.float32)
+        for r, c in self.kept_tiles():
+            m[r * self.tr:(r + 1) * self.tr,
+              c * self.tc:(c + 1) * self.tc] = 1.0
+        return m
+
+
+# ---------------------------------------------------------------------------
+# Scale-model kernels: iteration count proportional to touched MACs
+# ---------------------------------------------------------------------------
+
+NB = 16  # column-block width: one loop iteration covers <= NB columns
+
+
+# Every kernel below executes one python/numpy op per (shared-dimension
+# index, <= NB-wide column block) — the same granularity across the
+# dense, row-skip, and tile-skip paths — so wall-clock ratios track the
+# ratio of touched MACs, which is what the blocked scalar Rust kernels
+# deliver.
+
+
+def k_gemm(a, b, kept_k=None, kept_n=None, tiles=None):
+    """out[m,n] = a[m,k] @ b[k,n] under skips (cf. SparseKernels::gemm)."""
+    m, k = a.shape
+    _, n = b.shape
+    out = np.zeros((m, n), np.float32)
+    if tiles is not None:
+        tr, tc = tiles.tr, tiles.tc
+        qall = np.arange(n)
+        for r, c in tiles.kept_tiles():
+            k0, j0 = r * tr, c * tc
+            for p in range(k0, k0 + tr):
+                ap = a[:, p:p + 1]
+                bp = b[p]
+                for q0 in range(j0, j0 + tc, NB):
+                    js = qall[q0:min(q0 + NB, j0 + tc)]
+                    out[:, js] += ap * bp[js]
+        return out
+    kk = np.arange(k) if kept_k is None else kept_k
+    nn = np.arange(n) if kept_n is None else kept_n
+    for p in kk:
+        ap = a[:, p:p + 1]
+        bp = b[p]
+        for j0 in range(0, len(nn), NB):
+            js = nn[j0:j0 + NB]
+            out[:, js] += ap * bp[js]
+    return out
+
+
+def k_nt(a, b, kept_j=None, tiles=None):
+    """out[m,k] = a[m,n] @ b[k,n].T under skips (cf. gemm_nt)."""
+    m, n = a.shape
+    k, _ = b.shape
+    out = np.zeros((m, k), np.float32)
+    if tiles is not None:
+        tr, tc = tiles.tr, tiles.tc
+        qall = np.arange(n)
+        for r, c in tiles.kept_tiles():
+            c0 = c * tc
+            for j in range(r * tr, (r + 1) * tr):
+                for q0 in range(c0, c0 + tc, NB):
+                    qs = qall[q0:min(q0 + NB, c0 + tc)]
+                    out[:, j] += a[:, qs] @ b[j, qs]
+        return out
+    jj = np.arange(k) if kept_j is None else kept_j
+    qall = np.arange(n)
+    for j in jj:
+        for q0 in range(0, n, NB):
+            qs = qall[q0:q0 + NB]
+            out[:, j] += a[:, qs] @ b[j, qs]
+    return out
+
+
+def k_tn(a, b, kept_p=None, kept_n=None, tiles=None, out=None):
+    """out[k,n] += a[m,k].T @ b[m,n] under skips (cf. gemm_tn_acc)."""
+    m, k = a.shape
+    _, n = b.shape
+    if out is None:
+        out = np.zeros((k, n), np.float32)
+    if tiles is not None:
+        tr, tc = tiles.tr, tiles.tc
+        qall = np.arange(n)
+        for r, c in tiles.kept_tiles():
+            c0 = c * tc
+            for p in range(r * tr, (r + 1) * tr):
+                for q0 in range(c0, c0 + tc, NB):
+                    qs = qall[q0:min(q0 + NB, c0 + tc)]
+                    out[p, qs] += a[:, p] @ b[:, qs]
+        return out
+    pp = np.arange(k) if kept_p is None else kept_p
+    nn = np.arange(n) if kept_n is None else kept_n
+    for p in pp:
+        ap = a[:, p]
+        for j0 in range(0, len(nn), NB):
+            js = nn[j0:j0 + NB]
+            out[p, js] += ap @ b[:, js]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Kernel-contract validation (mirror rust/tests/sparse_kernels.rs)
+# ---------------------------------------------------------------------------
+
+
+def check(name, got, want, atol=2e-5):
+    if not np.allclose(got, want, atol=atol, rtol=1e-5):
+        err = float(np.max(np.abs(np.asarray(got) - np.asarray(want))))
+        raise AssertionError(f"{name}: max err {err}")
+
+
+def validate_kernels(seed=0):
+    rng = np.random.default_rng(seed)
+    for case in range(40):
+        m = int(rng.integers(1, 12))
+        dp = int(rng.choice([1, 2, 4]))
+        k = dp * int(rng.integers(1, 16))
+        n = int(rng.integers(1, 40))
+        b0 = int(rng.integers(0, dp))
+        kept = row_kept(k, dp, b0)
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        am = a * row_mask(k, dp, b0)[None, :]
+        b = rng.standard_normal((k, n)).astype(np.float32)
+        check(f"gemm rows case {case}", k_gemm(am, b, kept_k=kept),
+              am @ b)
+        # Out-column restriction: kept columns match, dropped exactly 0.
+        dpn = int(rng.choice([2, 4]))
+        n2 = dpn * int(rng.integers(1, 10))
+        b0n = int(rng.integers(0, dpn))
+        b2 = rng.standard_normal((k, n2)).astype(np.float32)
+        got = k_gemm(a, b2, kept_n=row_kept(n2, dpn, b0n))
+        want = (a @ b2) * row_mask(n2, dpn, b0n)[None, :]
+        check(f"gemm out-cols case {case}", got, want)
+        # NT with output-column restriction.
+        a3 = rng.standard_normal((m, n)).astype(np.float32)
+        b3 = rng.standard_normal((k, n)).astype(np.float32)
+        got = k_nt(a3, b3, kept_j=kept)
+        want = (a3 @ b3.T) * row_mask(k, dp, b0)[None, :]
+        check(f"nt rows case {case}", got, want)
+        # TN with row + column restriction (gradient freeze).
+        b4 = rng.standard_normal((m, n2)).astype(np.float32)
+        b4m = b4 * row_mask(n2, dpn, b0n)[None, :]
+        got = k_tn(am, b4m, kept_p=kept, kept_n=row_kept(n2, dpn, b0n))
+        want = am.T @ b4m
+        check(f"tn rows/cols case {case}", got, want)
+
+    # Tile skips.
+    for case in range(40):
+        m = int(rng.integers(1, 10))
+        k, n = [(32, 64), (64, 32), (64, 64), (32, 128), (784, 64)][
+            case % 5]
+        dp = int(rng.choice([2, 4]))
+        pat = TilePat(k, n, dp, int(rng.integers(0, dp)), 16)
+        a = rng.standard_normal((m, k)).astype(np.float32)
+        w = rng.standard_normal((k, n)).astype(np.float32)
+        wm = w * pat.mask()
+        check(f"gemm tiles case {case}", k_gemm(a, w, tiles=pat), a @ wm)
+        a2 = rng.standard_normal((m, n)).astype(np.float32)
+        check(f"nt tiles case {case}", k_nt(a2, w, tiles=pat), a2 @ wm.T)
+        b2 = rng.standard_normal((m, n)).astype(np.float32)
+        check(f"tn tiles case {case}", k_tn(a, b2, tiles=pat),
+              (a.T @ b2) * pat.mask())
+    print("kernel contracts: OK (80 randomized cases)")
+
+
+# ---------------------------------------------------------------------------
+# MLP train-step parity: masked-dense (reference) vs skipping (sparse)
+# ---------------------------------------------------------------------------
+# Mirrors rust/src/runtime/step/mod.rs::mlp_train, including which Skip
+# goes where (the `ask`/`sk` distinction for the tdp path).
+
+
+def softmax_xent_grad(logits, y):
+    rows = logits.shape[0]
+    mx = logits.max(axis=1, keepdims=True)
+    lse = np.log(np.exp(logits - mx).sum(axis=1, keepdims=True)) + mx
+    loss = float(np.mean(lse[:, 0] - logits[np.arange(rows), y]))
+    p = np.exp(logits - lse)
+    p[np.arange(rows), y] -= 1.0
+    return loss, (p / rows).astype(np.float32)
+
+
+def mlp_step(params, momenta, x, y, variant, cfg, lr, mu, sparse):
+    """One train step; `sparse=False` is the masked-dense reference."""
+    w1, b1, w2, b2, w3, b3 = params
+    B = x.shape[0]
+    h1, h2 = w1.shape[1], w2.shape[1]
+
+    def gemm(a, b, kept_k=None, kept_n=None, tiles=None):
+        if not sparse:
+            return a @ b
+        return k_gemm(a, b, kept_k, kept_n, tiles)
+
+    def nt(a, b, kept_j=None, tiles=None):
+        if not sparse:
+            return a @ b.T
+        return k_nt(a, b, kept_j, tiles)
+
+    def tn(a, b, kept_p=None, kept_n=None, tiles=None):
+        if not sparse:
+            return a.T @ b
+        return k_tn(a, b, kept_p, kept_n, tiles)
+
+    if variant == "tdp":
+        pat1, pat2, s1, s2 = cfg
+        w1u = w1 if sparse else w1 * pat1.mask()
+        w2u = w2 if sparse else w2 * pat2.mask()
+        t1 = pat1 if sparse else None
+        t2 = pat2 if sparse else None
+        z1 = np.maximum(gemm(x, w1u, tiles=t1) * s1 + b1, 0.0)
+        z2 = np.maximum(gemm(z1, w2u, tiles=t2) * s2 + b2, 0.0)
+        out0, out1 = z1, z2
+        logits = gemm(out1, w3) + b3
+        loss, dlogits = softmax_xent_grad(logits, y)
+        dw3 = tn(out1, dlogits)
+        db3 = dlogits.sum(axis=0)
+        dout1 = nt(dlogits, w3)
+        dz2 = np.where(out1 > 0, dout1, 0.0).astype(np.float32)
+        db2 = dz2.sum(axis=0)
+        du2 = dz2 * s2
+        dw2 = tn(out0, du2, tiles=t2) if sparse else (out0.T @ du2) \
+            * pat2.mask()
+        dout0 = nt(du2, w2u, tiles=t2) if sparse else du2 @ w2u.T
+        dz1 = np.where(out0 > 0, dout0, 0.0).astype(np.float32)
+        db1 = dz1.sum(axis=0)
+        du1 = dz1 * s1
+        dw1 = tn(x, du1, tiles=t1) if sparse else (x.T @ du1) \
+            * pat1.mask()
+    else:
+        if variant == "conv":
+            m0, m1, s0, s1 = cfg
+            kk0 = kk1 = None
+        else:  # rdp
+            (dp0, b00), (dp1, b01), s0, s1 = cfg
+            m0 = np.tile(row_mask(h1, dp0, b00), (B, 1))
+            m1 = np.tile(row_mask(h2, dp1, b01), (B, 1))
+            kk0 = row_kept(h1, dp0, b00)
+            kk1 = row_kept(h2, dp1, b01)
+        z1 = np.maximum(gemm(x, w1, kept_n=kk0) + b1, 0.0)
+        o0 = (z1 * m0 * s0).astype(np.float32)
+        z2 = np.maximum(gemm(o0, w2, kept_k=kk0, kept_n=kk1) + b2, 0.0)
+        o1 = (z2 * m1 * s1).astype(np.float32)
+        out0, out1 = o0, o1
+        logits = gemm(out1, w3, kept_k=kk1) + b3
+        loss, dlogits = softmax_xent_grad(logits, y)
+        dw3 = tn(out1, dlogits, kept_p=kk1)
+        db3 = dlogits.sum(axis=0)
+        dout1 = nt(dlogits, w3, kept_j=kk1)
+        da1 = (dout1 * m1 * s1).astype(np.float32)
+        dz2 = np.where(out1 > 0, da1, 0.0).astype(np.float32)
+        db2 = dz2.sum(axis=0)
+        dw2 = tn(out0, dz2, kept_p=kk0, kept_n=kk1)
+        dout0 = nt(dz2, w2, kept_j=kk0)
+        da0 = (dout0 * m0 * s0).astype(np.float32)
+        dz1 = np.where(out0 > 0, da0, 0.0).astype(np.float32)
+        db1 = dz1.sum(axis=0)
+        dw1 = tn(x, dz1, kept_n=kk0)
+
+    grads = [dw1, db1, dw2, db2, dw3, db3]
+    new_m = [mu * m + g for m, g in zip(momenta, grads)]
+    new_p = [p - lr * nm for p, nm in zip(params, new_m)]
+    return loss, new_p, new_m
+
+
+def validate_mlp_step(seed=1):
+    rng = np.random.default_rng(seed)
+    n_in, h1, h2, n_out, B = 784, 64, 64, 10, 16
+    dims = [(n_in, h1), (h1,), (h1, h2), (h2,), (h2, n_out), (n_out,)]
+    params = [
+        (rng.uniform(-1, 1, d) * np.sqrt(6 / sum(d if len(d) == 2
+                                                 else (d[0], d[0]))))
+        .astype(np.float32) if len(d) == 2
+        else np.zeros(d, np.float32) for d in dims]
+    momenta = [rng.standard_normal(d).astype(np.float32) * 0.01
+               for d in dims]
+    x = rng.random((B, n_in)).astype(np.float32)
+    y = rng.integers(0, n_out, B)
+    cases = [
+        ("conv", ((rng.random((B, h1)) < 0.5).astype(np.float32),
+                  (rng.random((B, h2)) < 0.5).astype(np.float32),
+                  2.0, 2.0)),
+        ("rdp", ((2, 1), (4, 3), 2.0, 2.0)),
+        ("tdp", (TilePat(n_in, h1, 2, 1, 16), TilePat(h1, h2, 4, 2, 16),
+                 2.0, 2.0)),
+    ]
+    for variant, cfg in cases:
+        ref = mlp_step(params, momenta, x, y, variant, cfg, 0.05, 0.9,
+                       sparse=False)
+        spa = mlp_step(params, momenta, x, y, variant, cfg, 0.05, 0.9,
+                       sparse=True)
+        check(f"mlp step loss ({variant})", spa[0], ref[0])
+        for i, (a, b) in enumerate(zip(ref[1] + ref[2],
+                                       spa[1] + spa[2])):
+            check(f"mlp step {variant} tensor {i}", b, a)
+        # rdp/tdp: dropped rows/tiles of the guarded grads must be zero
+        # in the *sparse* gradients (bit-freeze invariant) — momenta paths
+        # carry prior momentum, so compare the param delta structure via
+        # the reference instead (already equal above).
+    print("mlp train-step parity (conv/rdp/tdp): OK")
+
+
+# ---------------------------------------------------------------------------
+# Bench: dense vs row-skip vs tile-skip on mlpsyn / lstmsyn shapes
+# ---------------------------------------------------------------------------
+
+
+def dp_sequence(rate, steps, rng):
+    """Per-step dp draws whose long-run drop rate is `rate` over support
+    {1,2,4} (two-point mixture; the Rust harness uses the searched K)."""
+    if rate <= 0.5:
+        k2 = rate / 0.5
+        probs = {1: 1 - k2, 2: k2, 4: 0.0}
+    else:
+        k4 = (rate - 0.5) / 0.25
+        probs = {1: 0.0, 2: 1 - k4, 4: k4}
+    support = [1, 2, 4]
+    p = np.array([probs[d] for d in support])
+    return [int(rng.choice(support, p=p)) for _ in range(steps)]
+
+
+def mlpsyn_step(variant, dp, rng, bufs):
+    """One mlpsyn train step through the scale-model kernels."""
+    x, w1, w2, w3 = bufs["x"], bufs["w1"], bufs["w2"], bufs["w3"]
+    B, n_in = x.shape
+    h1, h2 = w1.shape[1], w2.shape[1]
+    y = bufs["y"]
+    if variant == "conv":
+        cfg = ((rng.random((B, h1)) < 0.5).astype(np.float32),
+               (rng.random((B, h2)) < 0.5).astype(np.float32), 2.0, 2.0)
+        v = "conv"
+    elif variant == "rdp":
+        if dp == 1:
+            cfg = ((1, 0), (1, 0), 1.0, 1.0)
+        else:
+            cfg = ((dp, int(rng.integers(0, dp))),
+                   (dp, int(rng.integers(0, dp))), 2.0, 2.0)
+        v = "rdp"
+    else:
+        b0a, b0b = int(rng.integers(0, dp)), int(rng.integers(0, dp))
+        cfg = (TilePat(n_in, h1, dp, b0a, 16),
+               TilePat(h1, h2, dp, b0b, 16), 2.0, 2.0)
+        v = "tdp"
+    return mlp_step([w1, bufs["b1"], w2, bufs["b2"], w3, bufs["b3"]],
+                    bufs["mom"], x, y, v, cfg, 0.01, 0.9, sparse=True)
+
+
+def lstmsyn_step(variant, dp, rng, bufs):
+    """Timing model of one lstmsyn BPTT step: the exact GEMM call list of
+    runtime/step's LSTM forward + backward (shapes and skips), with the
+    gate nonlinearities included; recurrence values are stand-ins (timing
+    only — numerical parity is covered by the kernel-contract and MLP
+    checks, which exercise the same skip identities)."""
+    h, vocab, B, seq, layers = 32, 64, 8, 8, 2
+    inp, hs, wx, wh, wsoft = (bufs["inp"], bufs["h"], bufs["wx"],
+                              bufs["wh"], bufs["wsoft"])
+    kept = None
+    t0 = t1 = None
+    if variant == "rdp" and dp > 1:
+        kept = row_kept(h, dp, int(rng.integers(0, dp)))
+    if variant == "tdp" and dp > 1:
+        t0 = TilePat(h, 4 * h, dp, int(rng.integers(0, dp)), 16)
+        t1 = TilePat(h, vocab, dp, int(rng.integers(0, dp)), 16)
+    conv_mask = None
+    if variant == "conv":
+        conv_mask = (rng.random((B, h)) < 0.5).astype(np.float32)
+    # Forward.
+    for _ in range(seq):
+        for l in range(layers):
+            guarded = l > 0  # site l-1 guards layer l's input
+            if guarded and variant == "rdp":
+                gates = k_gemm(inp, wx, kept_k=kept)
+            elif guarded and variant == "tdp":
+                gates = k_gemm(inp, wx, tiles=t0)
+            else:
+                a = inp * conv_mask if (guarded and conv_mask is not None) \
+                    else inp
+                gates = k_gemm(a, wx)
+            gates = gates + k_gemm(hs, wh)
+            gates = 1.0 / (1.0 + np.exp(-np.clip(gates, -30, 30)))
+    rows = bufs["flat"]
+    if variant == "tdp":
+        logits = k_gemm(rows, wsoft, tiles=t1)
+    else:
+        logits = k_gemm(rows, wsoft,
+                        kept_k=kept if variant == "rdp" else None)
+    dlog = (logits - logits.mean(axis=1, keepdims=True)).astype(
+        np.float32) / rows.shape[0]
+    # Backward: softmax projection.
+    if variant == "tdp":
+        k_tn(rows, dlog, tiles=t1)
+        k_nt(dlog, wsoft, tiles=t1)
+    else:
+        k_tn(rows, dlog, kept_p=kept)
+        k_nt(dlog, wsoft, kept_j=kept)
+    # Backward: cells.
+    da = bufs["da"]
+    for _ in range(seq):
+        for l in reversed(range(layers)):
+            k_tn(hs, da)           # dwh
+            k_nt(da, wh)           # dh_prev
+            guarded = l > 0
+            if guarded and variant == "rdp":
+                k_tn(inp, da, kept_p=kept)   # dwx (rows restricted)
+                k_nt(da, wx, kept_j=kept)    # dinp (cols restricted)
+            elif guarded and variant == "tdp":
+                k_tn(inp, da, tiles=t0)
+                k_nt(da, wx, tiles=t0)
+            else:
+                k_tn(inp, da)
+                k_nt(da, wx)                 # demb / dinp
+    return None
+
+
+def bench(out_path, steps, warm, seed=7):
+    rng = np.random.default_rng(seed)
+    report = {
+        "bench": "sparse_speedup",
+        "version": 1,
+        "provenance": (
+            "tools/bench_sparse_port.py — numpy scale-model port of "
+            "rust/benches/sparse_speedup.rs (loop iterations proportional "
+            "to touched MACs; no cargo toolchain in this container). "
+            "Regenerate natively with: cargo run --release --bin "
+            "sparse_speedup"),
+        "backend": "sparse",
+        "threads": 1,
+        "smoke": False,
+        "reps": steps,
+        "support": [1, 2, 4],
+        "rows": [],
+    }
+
+    # mlpsyn buffers.
+    n_in, h1, h2, n_out, B = 784, 64, 64, 10, 16
+    mlp_bufs = {
+        "x": rng.random((B, n_in)).astype(np.float32),
+        "y": rng.integers(0, n_out, B),
+        "w1": (rng.standard_normal((n_in, h1)) * 0.05).astype(np.float32),
+        "b1": np.zeros(h1, np.float32),
+        "w2": (rng.standard_normal((h1, h2)) * 0.05).astype(np.float32),
+        "b2": np.zeros(h2, np.float32),
+        "w3": (rng.standard_normal((h2, n_out)) * 0.05).astype(np.float32),
+        "b3": np.zeros(n_out, np.float32),
+    }
+    dims = [(n_in, h1), (h1,), (h1, h2), (h2,), (h2, n_out), (n_out,)]
+    mlp_bufs["mom"] = [np.zeros(d, np.float32) for d in dims]
+
+    # lstmsyn buffers.
+    h, vocab, B2, seq = 32, 64, 8, 8
+    lstm_bufs = {
+        "inp": rng.random((B2, h)).astype(np.float32),
+        "h": rng.random((B2, h)).astype(np.float32),
+        "wx": (rng.standard_normal((h, 4 * h)) * 0.05).astype(np.float32),
+        "wh": (rng.standard_normal((h, 4 * h)) * 0.05).astype(np.float32),
+        "wsoft": (rng.standard_normal((h, vocab)) * 0.05).astype(
+            np.float32),
+        "flat": rng.random((seq * B2, h)).astype(np.float32),
+        "da": rng.random((B2, 4 * h)).astype(np.float32),
+    }
+
+    def run(arch, variant, rate):
+        dps = dp_sequence(rate if variant != "conv" else 0.0,
+                          warm + steps, rng)
+        times = []
+        for i, dp in enumerate(dps):
+            t0 = time.perf_counter()
+            if arch == "mlpsyn":
+                mlpsyn_step(variant, dp, rng, mlp_bufs)
+            else:
+                lstmsyn_step(variant, dp, rng, lstm_bufs)
+            dt = time.perf_counter() - t0
+            if i >= warm:
+                times.append(dt)
+        times = np.array(times)
+        med = float(np.median(times))
+        return {
+            "median_step_s": med,
+            "mad_s": float(np.median(np.abs(times - med))),
+            "mean_step_s": float(times.mean()),
+        }
+
+    table = []
+    for arch in ["mlpsyn", "lstmsyn"]:
+        for rate in [0.3, 0.5, 0.7]:
+            dense = None
+            for label, variant in [("dense", "conv"),
+                                   ("row-skip", "rdp"),
+                                   ("tile-skip", "tdp")]:
+                r = run(arch, variant, rate)
+                if label == "dense":
+                    dense = r["median_step_s"]
+                speedup = dense / r["median_step_s"]
+                row = {
+                    "arch": arch,
+                    "rate": rate,
+                    "config": label,
+                    "variant": variant,
+                    "reps": steps,
+                    "speedup_vs_dense": round(speedup, 4),
+                }
+                row.update({k: round(v, 8) for k, v in r.items()})
+                report["rows"].append(row)
+                table.append((arch, rate, label, r["median_step_s"],
+                              speedup))
+
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"wrote {out_path} ({len(report['rows'])} rows)")
+    print(f"{'arch':8} {'rate':>5} {'config':>10} {'median':>10} "
+          f"{'speedup':>8}")
+    ok = True
+    for arch, rate, label, med, sp in table:
+        print(f"{arch:8} {rate:5.1f} {label:>10} {med * 1e3:9.3f}ms "
+              f"{sp:7.2f}x")
+        if label != "dense" and rate >= 0.5 and sp <= 1.0:
+            ok = False
+            print(f"  ^^ NOT faster than dense at rate {rate}")
+    return ok
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--bench", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--warm", type=int, default=3)
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..",
+        "BENCH_sparse.json"))
+    args = ap.parse_args()
+    do_all = not (args.validate or args.bench)
+    ok = True
+    if args.validate or do_all:
+        validate_kernels()
+        validate_mlp_step()
+    if args.bench or do_all:
+        ok = bench(os.path.normpath(args.out), args.steps, args.warm)
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()
