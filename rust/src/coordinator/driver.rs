@@ -26,13 +26,18 @@
 //! wall-clock changes. Backend values (e.g. XLA literals) are never
 //! created off the main thread.
 
-use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::patterns::Choice;
 use crate::runtime::{HostTensor, TrainState, Value};
+use crate::service::checkpoint::{fnv1a64, Checkpoint, TensorCkpt,
+                                 CKPT_VERSION, DISPATCH_TAIL};
+use crate::util::json::Json;
 use crate::util::Timer;
 
 /// One fully assembled training step, host-side: everything except the
@@ -87,6 +92,22 @@ pub trait ModelFront {
 
     /// Examples per eval batch (batch, or batch*seq tokens).
     fn eval_examples_per_batch(&self) -> usize;
+
+    /// Canonical one-line fingerprint of the front's configuration (tag,
+    /// variant, rates, artifact combos, geometry). Hashed into
+    /// checkpoints so a resume against a different experiment setup is
+    /// rejected up front. Must be deterministic across processes.
+    fn config_line(&self) -> String;
+
+    /// Serializable assembly-state snapshot — the RNG cursor and batcher
+    /// position/order; everything beyond `TrainState` a resumed run needs
+    /// to reproduce the uninterrupted trajectory bit-for-bit.
+    fn snapshot(&self) -> Json;
+
+    /// Restore a [`ModelFront::snapshot`]. Must validate: a corrupt or
+    /// mismatched snapshot is an error, never a silently different
+    /// random stream.
+    fn restore(&mut self, snap: &Json) -> Result<()>;
 }
 
 /// Push one `b0` bias scalar per site (approximate-dropout variants).
@@ -157,6 +178,11 @@ pub struct Trainer<F: ModelFront> {
     pub lr_decay: f32,
     pub decay_after: usize,
     epochs_done: usize,
+    /// Construction-time lr. `lr` above is *state* (it decays and is
+    /// restored from checkpoints); the initial value is *config* and is
+    /// folded into the checkpoint config hash, so resuming under a
+    /// different `--lr` is rejected instead of silently ignored.
+    lr0: f32,
 }
 
 impl<F: ModelFront> Trainer<F> {
@@ -174,6 +200,7 @@ impl<F: ModelFront> Trainer<F> {
             lr_decay: 1.0,
             decay_after: usize::MAX,
             epochs_done: 0,
+            lr0: lr,
         }
     }
 
@@ -259,7 +286,7 @@ impl<F: ModelFront> Trainer<F> {
             return Ok(0.0);
         }
         let Trainer { front, cache, state, metrics, lr, lr_decay,
-                      decay_after, epochs_done } = self;
+                      decay_after, epochs_done, .. } = self;
         let mut ctx = LoopCtx {
             cache,
             state,
@@ -297,6 +324,127 @@ impl<F: ModelFront> Trainer<F> {
             }
             Ok(sum / n as f64)
         })
+    }
+
+    /// FNV-1a hash of the session's canonical fingerprint: the front's
+    /// config line plus the driver hyper-parameters and parameter schema.
+    /// Stored in checkpoints; `restore` rejects a mismatch.
+    pub fn config_hash(&self) -> u64 {
+        let metas: Vec<String> = self
+            .state
+            .metas
+            .iter()
+            .map(|t| format!("{}:{:?}", t.name, t.shape))
+            .collect();
+        fnv1a64(&format!("{} | lr0_bits={} lr_decay={} decay_after={} \
+                          | {}",
+                         self.front.config_line(), self.lr0.to_bits(),
+                         self.lr_decay, self.decay_after,
+                         metas.join(",")))
+    }
+
+    /// Capture the full resumable session state — see
+    /// `service::checkpoint` for what a checkpoint contains and why.
+    /// Works on any backend (`Value::to_f32` copies device-resident
+    /// params back to host).
+    pub fn checkpoint(&self) -> Result<Checkpoint> {
+        let dump = |vals: &[Value]| -> Result<Vec<TensorCkpt>> {
+            vals.iter()
+                .zip(&self.state.metas)
+                .map(|(v, m)| {
+                    Ok(TensorCkpt {
+                        name: m.name.clone(),
+                        shape: m.shape.clone(),
+                        data: v.to_f32().with_context(
+                            || format!("checkpointing {}", m.name))?,
+                    })
+                })
+                .collect()
+        };
+        let tail_at = self.metrics.dispatched.len()
+            .saturating_sub(DISPATCH_TAIL);
+        Ok(Checkpoint {
+            version: CKPT_VERSION,
+            config_hash: self.config_hash(),
+            backend: self.cache.backend().name().to_string(),
+            step: self.state.step,
+            epochs_done: self.epochs_done,
+            lr: self.lr,
+            front: self.front.snapshot(),
+            params: dump(&self.state.params)?,
+            momenta: dump(&self.state.momenta)?,
+            dispatch_total: self.metrics.dispatched.len(),
+            dispatch_tail: self.metrics.dispatched[tail_at..].to_vec(),
+        })
+    }
+
+    /// `checkpoint()` + atomic write to `path`.
+    pub fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        self.checkpoint()?.save(path)
+    }
+
+    /// Overwrite this trainer's state with a checkpoint, after verifying
+    /// the format version and config hash. The trainer must have been
+    /// constructed with the same configuration (same constructor
+    /// arguments); continuing afterwards reproduces, bit for bit, the
+    /// trajectory the checkpointed run would have produced without the
+    /// interruption. Metrics restart empty — curve/dispatch entries
+    /// recorded after a resume carry absolute step numbers, and the
+    /// checkpoint's `dispatch_tail` stays available for cross-checking.
+    pub fn restore(&mut self, ckpt: &Checkpoint) -> Result<()> {
+        if ckpt.version != CKPT_VERSION {
+            bail!("checkpoint version {} unsupported (expected \
+                   {CKPT_VERSION})", ckpt.version);
+        }
+        let want = self.config_hash();
+        if ckpt.config_hash != want {
+            bail!("checkpoint config hash {:016x} does not match this \
+                   trainer's configuration {want:016x} — refusing to \
+                   resume a different experiment (tag/variant/rates/\
+                   support/seed/lr-policy must all match)",
+                  ckpt.config_hash);
+        }
+        if ckpt.params.len() != self.state.metas.len()
+            || ckpt.momenta.len() != self.state.metas.len()
+        {
+            bail!("checkpoint has {} params / {} momenta, model has {}",
+                  ckpt.params.len(), ckpt.momenta.len(),
+                  self.state.metas.len());
+        }
+        let backend = self.cache.backend().clone();
+        let ingest = |ts: &[TensorCkpt]| -> Result<Vec<Value>> {
+            ts.iter()
+                .zip(&self.state.metas)
+                .map(|(t, m)| {
+                    if t.shape != m.shape || t.name != m.name {
+                        bail!("checkpoint tensor {}:{:?} does not match \
+                               model tensor {}:{:?}", t.name, t.shape,
+                              m.name, m.shape);
+                    }
+                    backend.ingest(HostTensor::f32(&t.shape,
+                                                   t.data.clone()))
+                })
+                .collect()
+        };
+        // Validate both halves fully before mutating anything: a failed
+        // restore must leave the trainer as it was.
+        let params = ingest(&ckpt.params)?;
+        let momenta = ingest(&ckpt.momenta)?;
+        self.front.restore(&ckpt.front)?;
+        self.state.params = params;
+        self.state.momenta = momenta;
+        self.state.step = ckpt.step;
+        self.lr = ckpt.lr;
+        self.epochs_done = ckpt.epochs_done;
+        self.metrics = TrainMetrics::default();
+        Ok(())
+    }
+
+    /// Load a `*.ckpt` file and [`Trainer::restore`] from it.
+    pub fn resume_from(&mut self, path: &Path) -> Result<()> {
+        let ckpt = Checkpoint::load(path)?;
+        self.restore(&ckpt)
+            .with_context(|| format!("resuming from {}", path.display()))
     }
 
     /// Evaluate through the dropout-free `<tag>_eval` graph; returns

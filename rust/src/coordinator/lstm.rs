@@ -6,7 +6,7 @@
 //! equal-dp combinations; see aot.py), so artifact names truncate the dp
 //! combination to its first element.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::driver::{push_bias_scalars, push_scale_scalars,
                                  ModelFront, StepInput, Trainer};
@@ -15,6 +15,8 @@ use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::data::BpttBatcher;
 use crate::runtime::{ArchMeta, HostTensor, Manifest, TrainState};
+use crate::service::checkpoint::{rng_state_from_json, rng_state_to_json};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The LSTM trainer is the generic driver over [`LstmFront`].
@@ -27,6 +29,9 @@ pub struct LstmFront {
     hidden: usize,
     batch: usize,
     seq: usize,
+    /// Construction seed — hashed into checkpoints because callers
+    /// regenerate the corpus from it (see `MlpFront::seed`).
+    seed: u64,
     rng: Rng,
 }
 
@@ -119,6 +124,49 @@ impl ModelFront for LstmFront {
     fn eval_examples_per_batch(&self) -> usize {
         self.batch * self.seq
     }
+
+    fn config_line(&self) -> String {
+        format!("lstm tag={} variant={} rates={:?} shared_dp={} \
+                 combos={:?} batch={} seq={} hidden={} seed={}",
+                self.tag, self.schedule.variant.as_str(),
+                self.schedule.rates, self.schedule.shared_dp,
+                self.schedule.dp_combos(), self.batch, self.seq,
+                self.hidden, self.seed)
+    }
+
+    fn snapshot(&self) -> Json {
+        let (pos, epoch) = self.batcher.snapshot();
+        Json::obj(vec![
+            ("kind", Json::str("lstm")),
+            ("rng", rng_state_to_json(self.rng.state())),
+            ("pos", Json::num(pos as f64)),
+            ("epoch", Json::num(epoch as f64)),
+            ("track_len", Json::num(self.batcher.track_len() as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        if snap.get("kind").and_then(Json::as_str) != Some("lstm") {
+            bail!("front snapshot is not an LSTM state");
+        }
+        let rng = Rng::from_state(rng_state_from_json(
+            snap.get("rng").ok_or_else(|| anyhow!("snapshot: no rng"))?)?)
+            .ok_or_else(|| anyhow!("snapshot: dead rng state"))?;
+        let pos = snap.get("pos").and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("snapshot: no pos"))?;
+        let epoch = snap.get("epoch").and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("snapshot: no epoch"))?;
+        if let Some(tl) = snap.get("track_len").and_then(Json::as_usize) {
+            if tl != self.batcher.track_len() {
+                bail!("snapshot was taken over a corpus with track \
+                       length {tl}, this trainer has {} — the resumed \
+                       token stream would differ", self.batcher.track_len());
+            }
+        }
+        self.batcher.restore(pos, epoch)?;
+        self.rng = rng;
+        Ok(())
+    }
 }
 
 impl Trainer<LstmFront> {
@@ -145,6 +193,7 @@ impl Trainer<LstmFront> {
             hidden,
             batch,
             seq,
+            seed,
             rng,
         };
         Ok(Trainer::from_parts(cache, front, state, lr))

@@ -8,7 +8,7 @@
 //! identical path but generates Bernoulli masks instead of bias scalars —
 //! wall-clock comparisons therefore measure exactly the paper's quantity.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::driver::{push_bias_scalars, push_scale_scalars,
                                  ModelFront, StepInput, Trainer};
@@ -16,6 +16,8 @@ use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::data::{MnistBatcher, MnistSyn};
 use crate::runtime::{ArchMeta, HostTensor, Manifest, TrainState};
+use crate::service::checkpoint::{rng_state_from_json, rng_state_to_json};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// The MLP trainer is the generic driver over [`MlpFront`].
@@ -28,6 +30,10 @@ pub struct MlpFront {
     hidden: Vec<usize>,
     batch: usize,
     n_in: usize,
+    /// Construction seed — part of the checkpoint config hash because
+    /// callers (CLI, serve) regenerate the *dataset* from it; resuming
+    /// under a different seed would silently train on different data.
+    seed: u64,
     rng: Rng,
 }
 
@@ -110,6 +116,56 @@ impl ModelFront for MlpFront {
     fn eval_examples_per_batch(&self) -> usize {
         self.batch
     }
+
+    fn config_line(&self) -> String {
+        format!("mlp tag={} variant={} rates={:?} shared_dp={} \
+                 combos={:?} batch={} hidden={:?} n_in={} seed={}",
+                self.tag, self.schedule.variant.as_str(),
+                self.schedule.rates, self.schedule.shared_dp,
+                self.schedule.dp_combos(), self.batch, self.hidden,
+                self.n_in, self.seed)
+    }
+
+    fn snapshot(&self) -> Json {
+        let (order, cursor, epoch) = self.batcher.snapshot();
+        Json::obj(vec![
+            ("kind", Json::str("mlp")),
+            ("rng", rng_state_to_json(self.rng.state())),
+            ("order", Json::Arr(
+                order.iter().map(|&i| Json::num(i as f64)).collect())),
+            // usize::MAX (the first-call sentinel) exceeds f64's exact
+            // integer range, so the cursor travels as hex.
+            ("cursor", Json::str(
+                &crate::service::checkpoint::hex_u64(cursor as u64))),
+            ("epoch", Json::num(epoch as f64)),
+        ])
+    }
+
+    fn restore(&mut self, snap: &Json) -> Result<()> {
+        if snap.get("kind").and_then(Json::as_str) != Some("mlp") {
+            bail!("front snapshot is not an MLP state");
+        }
+        let rng = Rng::from_state(rng_state_from_json(
+            snap.get("rng").ok_or_else(|| anyhow!("snapshot: no rng"))?)?)
+            .ok_or_else(|| anyhow!("snapshot: dead rng state"))?;
+        let order: Vec<usize> = snap
+            .get("order")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("snapshot: no batcher order"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(
+                || anyhow!("snapshot: bad order entry")))
+            .collect::<Result<_>>()?;
+        let cursor = crate::service::checkpoint::parse_hex_u64(
+            snap.get("cursor").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("snapshot: no cursor"))?)?
+            as usize;
+        let epoch = snap.get("epoch").and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("snapshot: no epoch"))?;
+        self.batcher.restore(order, cursor, epoch)?;
+        self.rng = rng;
+        Ok(())
+    }
 }
 
 impl Trainer<MlpFront> {
@@ -135,6 +191,7 @@ impl Trainer<MlpFront> {
             hidden,
             batch,
             n_in,
+            seed,
             rng,
         };
         Ok(Trainer::from_parts(cache, front, state, lr))

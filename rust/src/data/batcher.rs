@@ -6,6 +6,8 @@
 //! across a thread), and reusing the caller's Vec capacity keeps the
 //! steady state down to the one unavoidable copy out of the dataset.
 
+use anyhow::{bail, Result};
+
 use crate::data::mnist::{MnistSyn, IMG_PIXELS};
 use crate::util::rng::Rng;
 
@@ -51,6 +53,42 @@ impl MnistBatcher {
             y.push(data.labels[i] as i32);
         }
         self.cursor += self.batch;
+    }
+
+    /// Checkpoint view: (shuffled order, cursor, epoch). `cursor ==
+    /// usize::MAX` is the "first call pending" sentinel — a resumed run
+    /// must reproduce the mid-epoch shuffle exactly, so the order vector
+    /// is part of the state, not re-derivable.
+    pub fn snapshot(&self) -> (Vec<usize>, usize, usize) {
+        (self.order.clone(), self.cursor, self.epoch)
+    }
+
+    /// Restore a [`MnistBatcher::snapshot`]. Rejects snapshots that are
+    /// not a permutation of this batcher's index range or whose cursor is
+    /// out of bounds — a corrupt checkpoint must not surface later as a
+    /// silent out-of-range panic mid-training.
+    pub fn restore(&mut self, order: Vec<usize>, cursor: usize,
+                   epoch: usize) -> Result<()> {
+        if order.len() != self.order.len() {
+            bail!("batcher restore: order has {} entries, dataset has {}",
+                  order.len(), self.order.len());
+        }
+        let mut seen = vec![false; order.len()];
+        for &i in &order {
+            if i >= seen.len() || seen[i] {
+                bail!("batcher restore: order is not a permutation of \
+                       0..{}", seen.len());
+            }
+            seen[i] = true;
+        }
+        if cursor != usize::MAX && cursor > order.len() {
+            bail!("batcher restore: cursor {cursor} out of range (n = {})",
+                  order.len());
+        }
+        self.order = order;
+        self.cursor = cursor;
+        self.epoch = epoch;
+        Ok(())
     }
 }
 
@@ -101,6 +139,30 @@ impl BpttBatcher {
             y.extend_from_slice(&self.tracks[base + 1..base + self.seq + 1]);
         }
         self.pos += self.seq;
+    }
+
+    /// Tokens per parallel track (checkpoint validation: a resumed
+    /// batcher must be built over an identically-sized corpus).
+    pub fn track_len(&self) -> usize {
+        self.track_len
+    }
+
+    /// Checkpoint view: (pos, epoch). The tracks themselves are rebuilt
+    /// deterministically from the corpus at reconstruction time.
+    pub fn snapshot(&self) -> (usize, usize) {
+        (self.pos, self.epoch)
+    }
+
+    /// Restore a [`BpttBatcher::snapshot`]; rejects an out-of-range
+    /// position (corrupt checkpoint) up front.
+    pub fn restore(&mut self, pos: usize, epoch: usize) -> Result<()> {
+        if pos > self.track_len {
+            bail!("bptt restore: pos {pos} beyond track length {}",
+                  self.track_len);
+        }
+        self.pos = pos;
+        self.epoch = epoch;
+        Ok(())
     }
 }
 
@@ -174,6 +236,53 @@ mod tests {
         assert_eq!(x.len(), 8 * IMG_PIXELS);
         assert_eq!((x.capacity(), y.capacity()), (cx, cy));
         assert_eq!(x.as_ptr(), px, "no reallocation in steady state");
+    }
+
+    #[test]
+    fn mnist_snapshot_restore_resumes_identically() {
+        let data = MnistSyn::generate(48, 9);
+        let mut a = MnistBatcher::new(48, 8);
+        let mut rng_a = Rng::new(21);
+        for _ in 0..3 {
+            mnist_next(&mut a, &data, &mut rng_a);
+        }
+        let (order, cursor, epoch) = a.snapshot();
+        let rng_snap = rng_a.state();
+        let ahead: Vec<_> =
+            (0..5).map(|_| mnist_next(&mut a, &data, &mut rng_a)).collect();
+        let mut b = MnistBatcher::new(48, 8);
+        b.restore(order, cursor, epoch).unwrap();
+        let mut rng_b = Rng::from_state(rng_snap).unwrap();
+        let resumed: Vec<_> =
+            (0..5).map(|_| mnist_next(&mut b, &data, &mut rng_b)).collect();
+        assert_eq!(ahead, resumed, "restored batcher must replay exactly");
+        assert_eq!(a.epoch, b.epoch);
+    }
+
+    #[test]
+    fn mnist_restore_rejects_corrupt_state() {
+        let mut b = MnistBatcher::new(16, 4);
+        assert!(b.restore(vec![0; 16], 0, 1).is_err(), "not a permutation");
+        assert!(b.restore((0..8).collect(), 0, 1).is_err(), "wrong length");
+        assert!(b.restore((0..16).collect(), 17, 1).is_err(), "bad cursor");
+        assert!(b.restore((0..16).collect(), usize::MAX, 0).is_ok(),
+                "the first-call sentinel round-trips");
+    }
+
+    #[test]
+    fn bptt_snapshot_restore_resumes_identically() {
+        let tokens: Vec<i32> = (0..217).collect();
+        let mut a = BpttBatcher::new(&tokens, 3, 7);
+        for _ in 0..4 {
+            bptt_next(&mut a);
+        }
+        let (pos, epoch) = a.snapshot();
+        let ahead: Vec<_> = (0..9).map(|_| bptt_next(&mut a)).collect();
+        let mut b = BpttBatcher::new(&tokens, 3, 7);
+        b.restore(pos, epoch).unwrap();
+        let resumed: Vec<_> = (0..9).map(|_| bptt_next(&mut b)).collect();
+        assert_eq!(ahead, resumed);
+        assert!(b.restore(10_000, 0).is_err(), "out-of-range pos rejected");
     }
 
     #[test]

@@ -7,5 +7,5 @@ pub mod mnist;
 pub mod ptb;
 
 pub use batcher::{BpttBatcher, MnistBatcher};
-pub use mnist::MnistSyn;
+pub use mnist::{MnistSyn, IMG_PIXELS};
 pub use ptb::Corpus;

@@ -21,6 +21,7 @@ pub mod data;
 pub mod patterns;
 pub mod runtime;
 pub mod search;
+pub mod service;
 pub mod util;
 
 /// Crate version (from Cargo.toml).

@@ -2,15 +2,20 @@
 //! random dropout, run the pattern search, generate data, inspect
 //! artifacts. See `approx-dropout help`.
 
+use std::path::Path;
+
 use anyhow::{bail, Result};
 
+use approx_dropout::bench::BenchReport;
 use approx_dropout::config::TrainConfig;
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
-                                  Schedule, Variant};
+                                  Schedule, TrainMetrics, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::info;
 use approx_dropout::search::{self, SearchConfig};
+use approx_dropout::service;
 use approx_dropout::util::argparse::Args;
+use approx_dropout::util::json::Json;
 use approx_dropout::util::log;
 
 const HELP: &str = "\
@@ -31,8 +36,19 @@ COMMANDS:
                 trajectories, assembly overlapped with execution)
   search       Run the SGD-based pattern search (Algorithm 1)
                --rate 0.7 [--support 1,2,4,8 | --n 10 (paper {1..N})]
+  serve        Run a fleet of training jobs from a TOML manifest
+               --jobs jobs.toml [--workers N] [--tick N]
+               [--checkpoint-every N] [--ckpt-dir DIR] [--out DIR]
+               (jobs with an existing <ckpt-dir>/<name>.ckpt resume from
+                it; per-job REPORT_<name>.json lands in --out)
   info         List artifacts in the manifest [--filter substr]
   help         This message
+
+CHECKPOINTS (train-mlp / train-lstm):
+  --ckpt-out FILE     write a *.ckpt at the end of the run
+  --resume-from FILE  restore a *.ckpt before training (--steps then run
+                      on top; the trajectory continues bit-exactly)
+  --curve-out FILE    write the recorded loss curve as JSON
 
 ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
      AD_BACKEND (pjrt|reference|sparse; reference = pure-Rust
@@ -49,6 +65,7 @@ fn main() -> Result<()> {
         Some("train-mlp") => train_mlp(&args),
         Some("train-lstm") => train_lstm(&args),
         Some("search") => run_search(&args),
+        Some("serve") => serve(&args),
         Some("info") => info_cmd(&args),
         Some("help") | None => {
             println!("{HELP}");
@@ -105,6 +122,10 @@ fn train_mlp(args: &Args) -> Result<()> {
                                              cfg.seed);
     let mut tr = MlpTrainer::new(&cache, &cfg.tag, schedule, cfg.n_train,
                                  cfg.lr as f32, cfg.seed)?;
+    if let Some(p) = args.get("resume-from") {
+        tr.resume_from(Path::new(p))?;
+        info!("resumed from {p} at step {}", tr.state.step);
+    }
     info!("compiling {} executable(s)...", tr.executable_names().len());
     tr.warmup()?;
     let report_every = (cfg.steps / 10).max(1);
@@ -133,7 +154,41 @@ fn train_mlp(args: &Args) -> Result<()> {
     println!("final: test loss {eval_loss:.4}, test accuracy \
               {:.2}%, median step {:.1} ms",
              eval_acc * 100.0, tr.metrics.median_step_s() * 1e3);
+    finish_run(args, &tr.metrics, &cfg.tag, |p| tr.save_checkpoint(p))
+}
+
+/// Shared `--curve-out` / `--ckpt-out` epilogue for the train commands.
+fn finish_run<F>(args: &Args, metrics: &TrainMetrics, tag: &str,
+                 save: F) -> Result<()>
+where
+    F: FnOnce(&Path) -> Result<()>,
+{
+    if let Some(p) = args.get("curve-out") {
+        write_curve(metrics, tag, Path::new(p))?;
+        info!("loss curve written to {p}");
+    }
+    if let Some(p) = args.get("ckpt-out") {
+        save(Path::new(p))?;
+        info!("checkpoint written to {p}");
+    }
     Ok(())
+}
+
+/// Loss curve as JSON (absolute step numbers — a resumed run's curve
+/// concatenates exactly onto its parent's, which the CI resume smoke
+/// checks).
+fn write_curve(metrics: &TrainMetrics, tag: &str, path: &Path)
+               -> Result<()> {
+    let mut r = BenchReport::new("curve", "approx-dropout --curve-out");
+    r.set("tag", Json::str(tag));
+    for p in &metrics.curve {
+        r.row(vec![
+            ("step", Json::num(p.step as f64)),
+            ("loss", Json::num(p.loss)),
+            ("acc", Json::num(p.acc)),
+        ]);
+    }
+    r.write(path)
 }
 
 fn train_lstm(args: &Args) -> Result<()> {
@@ -164,6 +219,10 @@ fn train_lstm(args: &Args) -> Result<()> {
                                   n_tokens / 10, cfg.seed);
     let mut tr = LstmTrainer::new(&cache, &cfg.tag, schedule, &corpus.train,
                                   cfg.lr as f32, cfg.seed)?;
+    if let Some(p) = args.get("resume-from") {
+        tr.resume_from(Path::new(p))?;
+        info!("resumed from {p} at step {}", tr.state.step);
+    }
     info!("compiling {} executable(s)...", tr.executable_names().len());
     tr.warmup()?;
     let report_every = (cfg.steps / 10).max(1);
@@ -195,7 +254,44 @@ fn train_lstm(args: &Args) -> Result<()> {
               (unigram baseline ppl {:.1})",
              acc * 100.0, tr.metrics.median_step_s() * 1e3,
              corpus.unigram_xent(&corpus.valid).exp());
-    Ok(())
+    finish_run(args, &tr.metrics, &cfg.tag, |p| tr.save_checkpoint(p))
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let jobs_path = args.get("jobs").ok_or_else(
+        || anyhow::anyhow!("serve requires --jobs <file.toml> (see \
+                            examples/jobs.toml)"))?;
+    let (specs, mut cfg) =
+        service::load_jobs_manifest(Path::new(jobs_path))?;
+    if let Some(w) = args.get("workers") {
+        cfg.slots = w.parse()
+            .map_err(|_| anyhow::anyhow!("bad --workers"))?;
+    }
+    if let Some(t) = args.get("tick") {
+        cfg.tick_steps = t.parse()
+            .map_err(|_| anyhow::anyhow!("bad --tick"))?;
+    }
+    if let Some(c) = args.get("checkpoint-every") {
+        cfg.checkpoint_every = c.parse()
+            .map_err(|_| anyhow::anyhow!("bad --checkpoint-every"))?;
+    }
+    if let Some(d) = args.get("ckpt-dir") {
+        cfg.ckpt_dir = Some(d.into());
+    }
+    if let Some(d) = args.get("out") {
+        cfg.out_dir = Some(d.into());
+    }
+    if cfg.slots == 0 || cfg.tick_steps == 0 {
+        bail!("serve: workers and tick must be positive");
+    }
+    let manifest = approx_dropout::manifest_or_builtin()?;
+    let cache = ExecutorCache::from_env(manifest)?;
+    info!("serving {} job(s) over {} slot(s) (tick {} steps, backend \
+           {})", specs.len(), cfg.slots, cfg.tick_steps,
+          cache.backend().name());
+    let report = service::run_jobs(&cache, &specs, &cfg)?;
+    print!("{}", service::summarize(&report));
+    service::ensure_all_ok(&report)
 }
 
 fn run_search(args: &Args) -> Result<()> {

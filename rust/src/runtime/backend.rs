@@ -165,7 +165,11 @@ impl Value {
 
 /// One compiled (or interpreted) artifact: executes steps with inputs in
 /// manifest order and returns outputs in manifest order.
-pub trait Executor {
+///
+/// `Send + Sync` is part of the contract: executors live in the
+/// process-wide `ExecutorCache` map, which the multi-job service layer
+/// shares across concurrent session threads.
+pub trait Executor: Send + Sync {
     fn meta(&self) -> &ArtifactMeta;
 
     /// Execute one step. This is the hot path: inputs are whatever
@@ -175,8 +179,11 @@ pub trait Executor {
 
 /// An execution engine: compile-by-name from the manifest plus tensor
 /// upload/download. One per process; cheap handles are shared through
-/// [`crate::coordinator::ExecutorCache`].
-pub trait Backend {
+/// [`crate::coordinator::ExecutorCache`] — including across the service
+/// layer's concurrent job threads, hence `Send + Sync`. (Backend-resident
+/// [`Value`]s carry no such bound: each training session stays pinned to
+/// the thread that runs it.)
+pub trait Backend: Send + Sync {
     /// Short name for logs/diagnostics ("pjrt" | "reference").
     fn name(&self) -> &'static str;
 

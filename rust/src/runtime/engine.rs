@@ -166,6 +166,23 @@ pub struct Executable {
     pub meta: ArtifactMeta,
 }
 
+// SAFETY: the PJRT C API guarantees client/executable thread safety
+// (PJRT_Client and PJRT_LoadedExecutable may be used concurrently from
+// multiple threads). The `Backend`/`Executor` traits require
+// Send + Sync so the shared `ExecutorCache` can serve concurrent
+// service sessions. CAUTION: the offline `xla` crate's Rust wrappers
+// have NOT been audited for internal non-atomic state (e.g. Rc-based
+// handle sharing) — until that audit happens, the service layer
+// defensively serializes every PJRT backend touch behind a single slot
+// (see service/scheduler.rs `run_jobs`), so cross-thread accesses are
+// totally ordered by the gate mutex rather than truly concurrent.
+// `Value::Pjrt` literals deliberately carry no Send/Sync claim —
+// sessions keep their resident values on one thread.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
 impl Executable {
     /// Execute with pre-built literals (manifest input order) and return
     /// the decomposed output literals. This is the hot path: no per-tensor

@@ -130,7 +130,7 @@ impl ThreadPool {
         // clearing that would silently strand its workers.
         {
             let mut slot = self.shared.slot.lock().expect("pool slot");
-            if slot.job.as_ref().map_or(false, |j| j.epoch == job.epoch) {
+            if slot.job.as_ref().is_some_and(|j| j.epoch == job.epoch) {
                 slot.job = None;
             }
         }
@@ -198,18 +198,33 @@ fn work_on(job: &Job) {
 }
 
 /// Thread count from `AD_THREADS`, defaulting to the machine's available
-/// parallelism. `AD_THREADS=1` disables the workers entirely.
+/// parallelism. `AD_THREADS=1` disables the workers entirely (fully
+/// inline execution on the calling thread).
+///
+/// Invalid values (`AD_THREADS=abc`, `=0`, `=-3`) used to degrade to a
+/// *single* thread with only a warn-level hint — an order-of-magnitude
+/// silent slowdown on big machines. They now fall back to the same
+/// default as an unset variable (all cores), loudly; an empty/whitespace
+/// value is treated as unset. Results are bit-identical either way (see
+/// the determinism contract above), so the fallback can never change a
+/// trajectory — only wall-clock.
 pub fn threads_from_env() -> usize {
+    let default = thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
     match std::env::var("AD_THREADS") {
-        Ok(v) => v.trim().parse().ok().filter(|&n| n >= 1).unwrap_or_else(
-            || {
-                crate::warn_!("AD_THREADS='{v}' is not a positive \
-                               integer; using 1");
-                1
-            }),
-        Err(_) => thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1),
+        Ok(v) if v.trim().is_empty() => default,
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                crate::warn_!("AD_THREADS='{v}' is not a positive integer; \
+                               falling back to all {default} core(s) (same \
+                               as unset; results are thread-count \
+                               independent)");
+                default
+            }
+        },
+        Err(_) => default,
     }
 }
 

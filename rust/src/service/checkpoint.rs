@@ -1,0 +1,381 @@
+//! Versioned training-session checkpoints (`*.ckpt`).
+//!
+//! A checkpoint captures everything a `Trainer` needs to reproduce the
+//! exact trajectory a never-interrupted run would have produced:
+//!
+//! * the full `TrainState` — parameters and momenta as **f32 bit
+//!   patterns** (u32 per element, exact for every value including NaN;
+//!   decimal round-tripping would be one rounding bug away from silent
+//!   trajectory drift) plus the cumulative step counter,
+//! * the model front's assembly state — RNG cursor (the raw 256-bit
+//!   Xoshiro state, as hex strings since JSON numbers are f64 and cannot
+//!   carry a u64) and batcher position/shuffle order,
+//! * the driver state — current lr (f32 bits, it decays over epochs) and
+//!   `epochs_done`,
+//! * a **config hash** (FNV-1a 64 over the session's canonical
+//!   fingerprint) — resuming against a different experiment setup is
+//!   rejected up front instead of surfacing as shape errors or, worse, a
+//!   quietly different experiment,
+//! * the dispatch-log tail — the last few artifact names dispatched
+//!   before the checkpoint, for post-mortem cross-checking of resumed
+//!   runs against their originals.
+//!
+//! Serialization goes through `util::json` (serde is unavailable
+//! offline). The format is versioned by the `ad_checkpoint` field;
+//! readers reject versions they do not understand. See DESIGN.md
+//! section 10.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Current checkpoint format version. Bump on any incompatible change to
+/// the JSON layout; `Checkpoint::from_json` rejects everything else.
+pub const CKPT_VERSION: u64 = 1;
+
+/// How many trailing dispatch-log entries a checkpoint retains.
+pub const DISPATCH_TAIL: usize = 32;
+
+/// One serialized f32 tensor (a parameter or momentum buffer).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorCkpt {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// A fully materialized checkpoint. Produced by `Trainer::checkpoint`,
+/// consumed by `Trainer::restore` / `Trainer::resume_from`.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub version: u64,
+    pub config_hash: u64,
+    /// Backend that wrote the checkpoint (informational: trajectories are
+    /// only bit-reproducible on the same backend family).
+    pub backend: String,
+    pub step: u64,
+    pub epochs_done: usize,
+    pub lr: f32,
+    /// Model-front snapshot (RNG cursor + batcher state), opaque here.
+    pub front: Json,
+    pub params: Vec<TensorCkpt>,
+    pub momenta: Vec<TensorCkpt>,
+    /// Total dispatches recorded by the session that wrote this.
+    pub dispatch_total: usize,
+    /// Last `<= DISPATCH_TAIL` artifact names dispatched.
+    pub dispatch_tail: Vec<String>,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ad_checkpoint", Json::num(self.version as f64)),
+            ("config_hash", Json::str(&hex_u64(self.config_hash))),
+            ("backend", Json::str(&self.backend)),
+            ("step", Json::num(self.step as f64)),
+            ("epochs_done", Json::num(self.epochs_done as f64)),
+            ("lr_bits", Json::num(f64::from(self.lr.to_bits()))),
+            ("front", self.front.clone()),
+            ("params", tensors_to_json(&self.params)),
+            ("momenta", tensors_to_json(&self.momenta)),
+            ("dispatch_total", Json::num(self.dispatch_total as f64)),
+            ("dispatch_tail", Json::Arr(
+                self.dispatch_tail.iter().map(|s| Json::str(s)).collect())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Checkpoint> {
+        let version = v
+            .get("ad_checkpoint")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("not a checkpoint: missing \
+                                    'ad_checkpoint' version field"))?
+            as u64;
+        if version != CKPT_VERSION {
+            bail!("checkpoint format version {version} is not supported \
+                   (this build reads version {CKPT_VERSION})");
+        }
+        let config_hash = parse_hex_u64(
+            v.get("config_hash").and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("checkpoint: missing config_hash"))?)
+            .context("checkpoint: bad config_hash")?;
+        let lr_bits = v.get("lr_bits").and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("checkpoint: missing lr_bits"))?;
+        Ok(Checkpoint {
+            version,
+            config_hash,
+            backend: v.get("backend").and_then(Json::as_str)
+                .unwrap_or("unknown").to_string(),
+            step: v.get("step").and_then(Json::as_i64)
+                .ok_or_else(|| anyhow!("checkpoint: missing step"))?
+                as u64,
+            epochs_done: v.get("epochs_done").and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("checkpoint: missing epochs_done"))?,
+            lr: f32::from_bits(f64_to_u32(lr_bits)
+                .context("checkpoint: bad lr_bits")?),
+            front: v.get("front")
+                .ok_or_else(|| anyhow!("checkpoint: missing front state"))?
+                .clone(),
+            params: tensors_from_json(v.get("params"), "params")?,
+            momenta: tensors_from_json(v.get("momenta"), "momenta")?,
+            dispatch_total: v.get("dispatch_total").and_then(Json::as_usize)
+                .unwrap_or(0),
+            dispatch_tail: v
+                .get("dispatch_tail")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|s| s.as_str().map(str::to_string))
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+
+    /// Write atomically: serialize to `<path>.tmp`, then rename over
+    /// `path`, so a crash mid-write can never leave a truncated
+    /// checkpoint where a good one used to be.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(
+                    || format!("creating {}", dir.display()))?;
+            }
+        }
+        let tmp = path.with_extension("ckpt.tmp");
+        let text = format!("{}\n", self.to_json().pretty());
+        std::fs::write(&tmp, text)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path).with_context(
+            || format!("renaming {} -> {}", tmp.display(), path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(text.trim())
+            .map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Self::from_json(&v)
+            .with_context(|| format!("parsing checkpoint {}",
+                                     path.display()))
+    }
+}
+
+fn tensors_to_json(ts: &[TensorCkpt]) -> Json {
+    Json::Arr(ts.iter().map(|t| {
+        Json::obj(vec![
+            ("name", Json::str(&t.name)),
+            ("shape", Json::Arr(
+                t.shape.iter().map(|&d| Json::num(d as f64)).collect())),
+            ("bits", Json::Arr(
+                t.data.iter()
+                    .map(|&x| Json::num(f64::from(x.to_bits())))
+                    .collect())),
+        ])
+    }).collect())
+}
+
+fn tensors_from_json(v: Option<&Json>, what: &str) -> Result<Vec<TensorCkpt>> {
+    let arr = v
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("checkpoint: missing {what} array"))?;
+    arr.iter().map(|t| {
+        let name = t.get("name").and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("checkpoint {what}: tensor missing \
+                                    name"))?
+            .to_string();
+        let shape: Vec<usize> = t
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint {what}/{name}: missing \
+                                    shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(
+                || anyhow!("checkpoint {what}/{name}: bad shape entry")))
+            .collect::<Result<_>>()?;
+        let bits = t.get("bits").and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("checkpoint {what}/{name}: missing \
+                                    bits"))?;
+        if bits.len() != shape.iter().product::<usize>() {
+            bail!("checkpoint {what}/{name}: {} elements for shape \
+                   {shape:?}", bits.len());
+        }
+        let data = bits.iter().map(|b| {
+            let n = b.as_f64().ok_or_else(
+                || anyhow!("checkpoint {what}/{name}: non-numeric bits"))?;
+            Ok(f32::from_bits(f64_to_u32(n).with_context(
+                || format!("checkpoint {what}/{name}"))?))
+        }).collect::<Result<_>>()?;
+        Ok(TensorCkpt { name, shape, data })
+    }).collect()
+}
+
+/// Exact f64 -> u32 (JSON numbers are f64; bit patterns must round-trip
+/// exactly, so anything fractional or out of range is a corrupt file).
+fn f64_to_u32(n: f64) -> Result<u32> {
+    if n.fract() != 0.0 || !(0.0..=f64::from(u32::MAX)).contains(&n) {
+        bail!("value {n} is not a u32 bit pattern");
+    }
+    Ok(n as u32)
+}
+
+/// FNV-1a 64-bit — the checkpoint config hash. Not cryptographic; it
+/// guards against honest config mixups, not adversaries.
+pub fn fnv1a64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// u64 -> fixed-width hex (JSON numbers are f64: a u64 would lose bits).
+pub fn hex_u64(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+pub fn parse_hex_u64(s: &str) -> Result<u64> {
+    u64::from_str_radix(s, 16)
+        .map_err(|e| anyhow!("bad hex u64 '{s}': {e}"))
+}
+
+/// Serialize a 256-bit RNG state as a JSON array of four hex strings
+/// (model fronts embed this in their snapshots).
+pub fn rng_state_to_json(s: [u64; 4]) -> Json {
+    Json::Arr(s.iter().map(|&w| Json::str(&hex_u64(w))).collect())
+}
+
+pub fn rng_state_from_json(v: &Json) -> Result<[u64; 4]> {
+    let arr = v.as_arr()
+        .ok_or_else(|| anyhow!("rng state: expected array"))?;
+    if arr.len() != 4 {
+        bail!("rng state: expected 4 words, got {}", arr.len());
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        s[i] = parse_hex_u64(w.as_str().ok_or_else(
+            || anyhow!("rng state: non-string word"))?)?;
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            version: CKPT_VERSION,
+            config_hash: fnv1a64("mlp tag=x rates=[0.5]"),
+            backend: "reference".into(),
+            step: 20,
+            epochs_done: 1,
+            lr: 0.009_999_5,
+            front: Json::obj(vec![
+                ("kind", Json::str("mlp")),
+                ("rng", rng_state_to_json([1, u64::MAX, 3, 4])),
+            ]),
+            params: vec![TensorCkpt {
+                name: "w1".into(),
+                shape: vec![2, 3],
+                data: vec![1.5, -0.0, f32::NAN, 3.25e-39, 1e30, -7.0],
+            }],
+            momenta: vec![TensorCkpt {
+                name: "w1".into(),
+                shape: vec![2, 3],
+                data: vec![0.0; 6],
+            }],
+            dispatch_total: 20,
+            dispatch_tail: vec!["a_rdp_2_2".into(), "a_rdp_4_4".into()],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let c = sample();
+        let text = c.to_json().pretty();
+        let back = Checkpoint::from_json(&json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back.version, c.version);
+        assert_eq!(back.config_hash, c.config_hash);
+        assert_eq!(back.step, c.step);
+        assert_eq!(back.epochs_done, c.epochs_done);
+        assert_eq!(back.lr.to_bits(), c.lr.to_bits());
+        assert_eq!(back.dispatch_tail, c.dispatch_tail);
+        // Bit-exact through the text form — including NaN, -0.0 and
+        // subnormals, which decimal JSON floats would mangle.
+        for (a, b) in c.params.iter().zip(&back.params) {
+            let ab: Vec<u32> = a.data.iter().map(|x| x.to_bits()).collect();
+            let bb: Vec<u32> = b.data.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(ab, bb);
+            assert_eq!(a.shape, b.shape);
+        }
+        assert_eq!(
+            rng_state_from_json(c.front.get("rng").unwrap()).unwrap(),
+            [1, u64::MAX, 3, 4]
+        );
+    }
+
+    #[test]
+    fn file_roundtrip_and_atomic_write() {
+        let dir = std::env::temp_dir()
+            .join(format!("ad-ckpt-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ckpt");
+        let c = sample();
+        c.save(&path).unwrap();
+        assert!(!path.with_extension("ckpt.tmp").exists(),
+                "tmp file must be renamed away");
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.config_hash, c.config_hash);
+        assert_eq!(back.params[0].data[0], 1.5);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_garbage() {
+        let mut v = sample().to_json();
+        if let Json::Obj(m) = &mut v {
+            m.insert("ad_checkpoint".into(), Json::num(99.0));
+        }
+        let err = Checkpoint::from_json(&v).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+        assert!(Checkpoint::from_json(&Json::obj(vec![])).is_err());
+        // Element count must match the declared shape.
+        let mut v = sample().to_json();
+        if let Some(Json::Arr(ps)) = v.get("params").cloned() {
+            let mut bad = ps.clone();
+            if let Json::Obj(m) = &mut bad[0] {
+                m.insert("shape".into(),
+                         Json::Arr(vec![Json::num(5.0)]));
+            }
+            if let Json::Obj(top) = &mut v {
+                top.insert("params".into(), Json::Arr(bad));
+            }
+        }
+        assert!(Checkpoint::from_json(&v).is_err());
+    }
+
+    #[test]
+    fn hex_and_hash_helpers() {
+        assert_eq!(parse_hex_u64(&hex_u64(u64::MAX)).unwrap(), u64::MAX);
+        assert_eq!(parse_hex_u64(&hex_u64(0)).unwrap(), 0);
+        assert!(parse_hex_u64("zz").is_err());
+        // FNV-1a reference vectors.
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64("config a"), fnv1a64("config b"));
+    }
+
+    #[test]
+    fn u32_bit_pattern_guard() {
+        assert!(f64_to_u32(0.5).is_err());
+        assert!(f64_to_u32(-1.0).is_err());
+        assert!(f64_to_u32(4.3e9).is_err());
+        assert_eq!(f64_to_u32(f64::from(u32::MAX)).unwrap(), u32::MAX);
+    }
+}

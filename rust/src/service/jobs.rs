@@ -1,0 +1,367 @@
+//! Jobs manifest: the TOML document the `serve` subcommand consumes.
+//!
+//! Layout (parsed with `util::toml`, dotted-path keys):
+//!
+//! ```toml
+//! [service]
+//! workers = 2            # concurrent backend slots
+//! tick_steps = 10        # fairness quantum (steps per slot hold)
+//! checkpoint_every = 20  # steps between checkpoint writes (0 = final only)
+//! ckpt_dir = "ckpts"     # enables checkpoint/resume
+//! out_dir = "reports"    # per-job REPORT_<name>.json land here
+//!
+//! [jobs.mlp-rdp]
+//! model = "mlp"
+//! tag = "mlpsyn"
+//! variant = "rdp"
+//! rates = [0.5, 0.5]     # or: rate = 0.5 (expanded to every site)
+//! support = [1, 2]
+//! steps = 40             # absolute target — resume-aware
+//! lr = 0.01
+//! seed = 7
+//! n_train = 256
+//! n_test = 64
+//!
+//! [jobs.lstm-base]
+//! model = "lstm"
+//! tag = "lstmsyn"
+//! variant = "conv"
+//! rate = 0.5
+//! steps = 30
+//! lr = 0.5
+//! tokens = 20000
+//! ```
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::schedule::Variant;
+use crate::util::toml::{self, TomlDoc};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Lstm,
+}
+
+impl ModelKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Lstm => "lstm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        Ok(match s {
+            "mlp" => ModelKind::Mlp,
+            "lstm" => ModelKind::Lstm,
+            other => bail!("unknown model '{other}' (expected mlp|lstm)"),
+        })
+    }
+}
+
+/// One training job. `steps` is the *absolute* step target: a job resumed
+/// from a step-30 checkpoint with `steps = 40` runs 10 more steps.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub model: ModelKind,
+    pub tag: String,
+    pub variant: Variant,
+    /// Per-site rates; a single entry is expanded to every site at
+    /// session-build time (site count comes from the artifact manifest).
+    pub rates: Vec<f64>,
+    pub support: Vec<usize>,
+    pub shared_dp: bool,
+    pub steps: usize,
+    pub lr: f64,
+    pub lr_decay: f64,
+    pub decay_after: usize,
+    pub seed: u64,
+    /// MLP dataset sizes (images).
+    pub n_train: usize,
+    pub n_test: usize,
+    /// LSTM corpus size (tokens).
+    pub tokens: usize,
+}
+
+impl JobSpec {
+    /// Defaults for one job named `name` (MLP flavor; lstm jobs override).
+    pub fn named(name: &str) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            model: ModelKind::Mlp,
+            tag: "mlpsyn".into(),
+            variant: Variant::Rdp,
+            rates: vec![0.5],
+            support: vec![1, 2],
+            shared_dp: false,
+            steps: 40,
+            lr: 0.01,
+            lr_decay: 1.0,
+            decay_after: usize::MAX,
+            seed: 42,
+            n_train: 256,
+            n_test: 64,
+            tokens: 20_000,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty()
+            || !self.name.chars().all(
+                |c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+        {
+            bail!("job name '{}' must be non-empty [A-Za-z0-9_-] (it \
+                   names checkpoint and report files)", self.name);
+        }
+        if self.rates.is_empty()
+            || self.rates.iter().any(|&r| !(0.0..1.0).contains(&r))
+        {
+            bail!("job '{}': rates must be non-empty and in [0, 1), got \
+                   {:?}", self.name, self.rates);
+        }
+        if self.support.is_empty() || self.support.contains(&0) {
+            bail!("job '{}': bad divisor support {:?}", self.name,
+                  self.support);
+        }
+        if self.lr <= 0.0 {
+            bail!("job '{}': lr must be positive", self.name);
+        }
+        if self.steps == 0 {
+            bail!("job '{}': steps must be positive", self.name);
+        }
+        Ok(())
+    }
+}
+
+/// Fleet-level configuration (the `[service]` table).
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Concurrent backend slots — at most this many sessions step (or
+    /// compile, or evaluate) at any instant.
+    pub slots: usize,
+    /// Fairness quantum: steps a session runs per slot hold before
+    /// re-queuing behind its siblings.
+    pub tick_steps: usize,
+    /// Steps between periodic checkpoint writes; 0 = checkpoint only on
+    /// completion. Only meaningful with `ckpt_dir`.
+    pub checkpoint_every: usize,
+    /// Directory for `<job>.ckpt` files; enables crash-resume (a rerun of
+    /// the same manifest picks every job up from its last checkpoint).
+    pub ckpt_dir: Option<PathBuf>,
+    /// Directory for per-job `REPORT_<job>.json` files.
+    pub out_dir: Option<PathBuf>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            slots: 2,
+            tick_steps: 10,
+            checkpoint_every: 0,
+            ckpt_dir: None,
+            out_dir: None,
+        }
+    }
+}
+
+/// Read a usize field, rejecting negatives loudly: `steps = -1` must be
+/// a manifest error, not a two's-complement ~1.8e19-step job.
+fn usize_field(doc: &TomlDoc, key: &str, default: usize) -> Result<usize> {
+    match doc.get(key).and_then(|v| v.as_i64()) {
+        None => Ok(default),
+        Some(v) if v >= 0 => Ok(v as usize),
+        Some(v) => bail!("{key}: must be non-negative, got {v}"),
+    }
+}
+
+/// Parse a jobs manifest document into (jobs in name order, service cfg).
+pub fn jobs_from_doc(doc: &TomlDoc) -> Result<(Vec<JobSpec>, ServiceConfig)> {
+    let d = ServiceConfig::default();
+    let cfg = ServiceConfig {
+        slots: usize_field(doc, "service.workers", d.slots)?,
+        tick_steps: usize_field(doc, "service.tick_steps", d.tick_steps)?,
+        checkpoint_every: usize_field(doc, "service.checkpoint_every",
+                                      d.checkpoint_every)?,
+        ckpt_dir: doc.get("service.ckpt_dir")
+            .and_then(|v| v.as_str())
+            .map(PathBuf::from),
+        out_dir: doc.get("service.out_dir")
+            .and_then(|v| v.as_str())
+            .map(PathBuf::from),
+    };
+    if cfg.slots == 0 || cfg.tick_steps == 0 {
+        bail!("[service]: workers and tick_steps must be positive");
+    }
+    let names: BTreeSet<String> = doc
+        .keys_under("jobs")
+        .iter()
+        .filter_map(|k| {
+            k.strip_prefix("jobs.")
+                .and_then(|r| r.split('.').next())
+                .map(str::to_string)
+        })
+        .collect();
+    if names.is_empty() {
+        bail!("jobs manifest defines no [jobs.<name>] tables");
+    }
+    let mut jobs = Vec::with_capacity(names.len());
+    for name in names {
+        jobs.push(job_from_doc(doc, &name)?);
+    }
+    Ok((jobs, cfg))
+}
+
+fn job_from_doc(doc: &TomlDoc, name: &str) -> Result<JobSpec> {
+    let key = |field: &str| format!("jobs.{name}.{field}");
+    let model = ModelKind::parse(doc.str_or(&key("model"), "mlp"))?;
+    let mut j = JobSpec::named(name);
+    j.model = model;
+    if model == ModelKind::Lstm {
+        j.tag = "lstmsyn".into();
+        j.lr = 0.5;
+    }
+    j.tag = doc.str_or(&key("tag"), &j.tag).to_string();
+    j.variant = Variant::parse(doc.str_or(&key("variant"), "rdp"))?;
+    // Malformed array entries are hard errors, never silently dropped:
+    // a typo'd `rates = [0.5, "0.7"]` must not quietly become a
+    // different experiment.
+    if let Some(arr) = doc.get(&key("rates")).and_then(|v| v.as_arr()) {
+        j.rates = arr
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(
+                || anyhow!("jobs.{name}.rates: non-numeric entry {x:?}")))
+            .collect::<Result<_>>()?;
+    }
+    if let Some(r) = doc.get(&key("rate")).and_then(|v| v.as_f64()) {
+        j.rates = vec![r];
+    }
+    if let Some(arr) = doc.get(&key("support")).and_then(|v| v.as_arr()) {
+        j.support = arr
+            .iter()
+            .map(|x| match x.as_i64() {
+                Some(v) if v >= 1 => Ok(v as usize),
+                _ => Err(anyhow!("jobs.{name}.support: entries must be \
+                                  positive integers, got {x:?}")),
+            })
+            .collect::<Result<_>>()?;
+    }
+    j.shared_dp = doc.bool_or(&key("shared_dp"), j.shared_dp);
+    j.steps = usize_field(doc, &key("steps"), j.steps)?;
+    j.lr = doc.f64_or(&key("lr"), j.lr);
+    j.lr_decay = doc.f64_or(&key("lr_decay"), j.lr_decay);
+    j.decay_after = usize_field(doc, &key("decay_after"), j.decay_after)?;
+    j.seed = usize_field(doc, &key("seed"), j.seed as usize)? as u64;
+    j.n_train = usize_field(doc, &key("n_train"), j.n_train)?;
+    j.n_test = usize_field(doc, &key("n_test"), j.n_test)?;
+    j.tokens = usize_field(doc, &key("tokens"), j.tokens)?;
+    j.validate()?;
+    Ok(j)
+}
+
+/// Load a jobs manifest from a TOML file.
+pub fn load_jobs_manifest(path: &Path)
+                          -> Result<(Vec<JobSpec>, ServiceConfig)> {
+    let doc = toml::parse_file(path)?;
+    jobs_from_doc(&doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = "\
+[service]
+workers = 3
+tick_steps = 5
+checkpoint_every = 10
+ckpt_dir = \"ckpts\"
+out_dir = \"reports\"
+
+[jobs.alpha]
+model = \"mlp\"
+variant = \"rdp\"
+rates = [0.25, 0.25]
+support = [1, 2]
+steps = 12
+seed = 5
+
+[jobs.beta]
+model = \"lstm\"
+variant = \"conv\"
+rate = 0.3
+steps = 8
+tokens = 9000
+";
+
+    #[test]
+    fn parses_manifest_with_defaults_and_overrides() {
+        let doc = toml::parse(MANIFEST).unwrap();
+        let (jobs, cfg) = jobs_from_doc(&doc).unwrap();
+        assert_eq!(cfg.slots, 3);
+        assert_eq!(cfg.tick_steps, 5);
+        assert_eq!(cfg.checkpoint_every, 10);
+        assert_eq!(cfg.ckpt_dir.as_deref(),
+                   Some(Path::new("ckpts")));
+        assert_eq!(jobs.len(), 2);
+        let a = &jobs[0];
+        assert_eq!(a.name, "alpha");
+        assert_eq!(a.model, ModelKind::Mlp);
+        assert_eq!(a.rates, vec![0.25, 0.25]);
+        assert_eq!(a.steps, 12);
+        assert_eq!(a.tag, "mlpsyn", "default tag by model");
+        let b = &jobs[1];
+        assert_eq!(b.model, ModelKind::Lstm);
+        assert_eq!(b.tag, "lstmsyn");
+        assert_eq!(b.variant, Variant::Conv);
+        assert_eq!(b.rates, vec![0.3], "scalar rate expands at build");
+        assert_eq!(b.tokens, 9000);
+        assert_eq!(b.lr, 0.5, "lstm default lr");
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        let no_jobs = toml::parse("[service]\nworkers = 2\n").unwrap();
+        assert!(jobs_from_doc(&no_jobs).is_err());
+        let bad_rate = toml::parse("[jobs.a]\nrate = 1.5\n").unwrap();
+        assert!(jobs_from_doc(&bad_rate).is_err());
+        let bad_model =
+            toml::parse("[jobs.a]\nmodel = \"cnn\"\n").unwrap();
+        assert!(jobs_from_doc(&bad_model).is_err());
+        let bad_workers =
+            toml::parse("[service]\nworkers = 0\n[jobs.a]\nsteps = 1\n")
+                .unwrap();
+        assert!(jobs_from_doc(&bad_workers).is_err());
+        // Negative integers must error, not wrap through `as usize`.
+        for doc in ["[jobs.a]\nsteps = -1\n",
+                    "[jobs.a]\nn_train = -5\n",
+                    "[jobs.a]\nseed = -2\n",
+                    "[jobs.a]\nsupport = [1, -2]\n",
+                    "[service]\nworkers = -1\n[jobs.a]\nsteps = 1\n"] {
+            let doc = toml::parse(doc).unwrap();
+            assert!(jobs_from_doc(&doc).is_err(), "negatives must fail");
+        }
+        // Malformed array entries error instead of silently dropping.
+        let typo =
+            toml::parse("[jobs.a]\nrates = [0.5, \"0.7\"]\n").unwrap();
+        assert!(jobs_from_doc(&typo).is_err(), "typo'd rate must fail");
+    }
+
+    #[test]
+    fn job_name_charset_is_enforced() {
+        let doc = toml::parse("[jobs.bad name]\nsteps = 1\n");
+        // Our TOML subset folds "bad name" into the key; the validator
+        // rejects it either way.
+        if let Ok(doc) = doc {
+            assert!(jobs_from_doc(&doc).is_err());
+        }
+        let mut j = JobSpec::named("ok-job_1");
+        j.validate().unwrap();
+        j.name = "no/slash".into();
+        assert!(j.validate().is_err());
+    }
+}

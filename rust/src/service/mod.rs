@@ -1,0 +1,26 @@
+//! Session subsystem: checkpointable training sessions and the
+//! concurrent multi-job service layer behind the `serve` CLI.
+//!
+//! * [`checkpoint`] — the versioned `*.ckpt` format: full `TrainState`
+//!   (f32 bit patterns), RNG cursor, batcher position, lr/epoch driver
+//!   state, config hash, dispatch-log tail. `Trainer::checkpoint` /
+//!   `Trainer::resume_from` (in `coordinator::driver`) produce and
+//!   consume these; a resumed run reproduces the uninterrupted
+//!   trajectory bit for bit on the hermetic backends.
+//! * [`jobs`] — the TOML jobs manifest (`[service]` + `[jobs.<name>]`
+//!   tables) mapping to [`jobs::JobSpec`]/[`jobs::ServiceConfig`].
+//! * [`scheduler`] — the fleet loop: FIFO backend-slot gate, per-job
+//!   runner threads, `catch_unwind` crash quarantine, periodic
+//!   checkpoint ticks, per-job JSON reports via `bench::report`.
+//!
+//! DESIGN.md section 10 documents the format and the scheduling model.
+
+pub mod checkpoint;
+pub mod jobs;
+pub mod scheduler;
+
+pub use checkpoint::{Checkpoint, CKPT_VERSION};
+pub use jobs::{jobs_from_doc, load_jobs_manifest, JobSpec, ModelKind,
+               ServiceConfig};
+pub use scheduler::{run_jobs, summarize, ensure_all_ok, JobOutcome,
+                    JobStatus, ServiceReport, SlotGate};

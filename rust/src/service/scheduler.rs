@@ -1,0 +1,604 @@
+//! Multi-job scheduler: run a fleet of MLP/LSTM training sessions
+//! concurrently over one shared `ExecutorCache`, with fair backend-slot
+//! accounting, periodic checkpoint ticks, and a crash-isolation boundary.
+//!
+//! Design:
+//! * **One runner thread per job, gated by a FIFO slot queue.** Sessions
+//!   are pinned to their thread for life — backend-resident `Value`s
+//!   never cross threads (the PJRT literal form is thread-affine). The
+//!   [`SlotGate`] is the job queue: `slots` tokens, strict FIFO handoff,
+//!   so N jobs over S slots interleave round-robin with a quantum of
+//!   `tick_steps` steps. Compilation (warmup) and evaluation count as
+//!   slot work too — at most `slots` sessions touch the backend at any
+//!   instant, which is what keeps a fleet from oversubscribing the
+//!   sparse worker pool.
+//! * **Crash isolation.** Every slice of backend work runs under
+//!   `catch_unwind`: a panicking job (bad artifact, kernel bug) is
+//!   quarantined — marked failed, logged at warn level, its slot
+//!   released — and every sibling proceeds. This extends the PR 3
+//!   poison-recovery work: the shared cache already survives a
+//!   panicked compile; now the fleet survives a panicked session.
+//! * **Checkpoint ticks.** With a `ckpt_dir`, each job writes
+//!   `<name>.ckpt` every `checkpoint_every` steps (atomic rename) and on
+//!   completion; a rerun of the same manifest resumes every job from its
+//!   last checkpoint (`Trainer::resume_from`), so preemption costs at
+//!   most one tick of work.
+//!
+//! Per-job trajectories are deterministic regardless of fleet
+//! interleaving: each session owns its RNG/batcher, and both hermetic
+//! backends are bit-stable under concurrency (disjoint state; the sparse
+//! pool's determinism contract is thread-count independent).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::bench::report::BenchReport;
+use crate::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer, Schedule,
+                         Variant};
+use crate::data::{Corpus, MnistSyn, IMG_PIXELS};
+use crate::runtime::ArchMeta;
+use crate::service::jobs::{JobSpec, ModelKind, ServiceConfig};
+use crate::util::json::Json;
+use crate::util::Timer;
+use crate::{info, warn_};
+
+// ---------------------------------------------------------------------------
+// Slot gate
+
+/// FIFO semaphore: `slots` tokens, strictly ordered handoff. The wait
+/// queue doubles as the service's job queue — a session re-acquiring
+/// after a tick goes to the back, behind every sibling already waiting.
+pub struct SlotGate {
+    state: Mutex<GateState>,
+    cv: Condvar,
+}
+
+struct GateState {
+    available: usize,
+    queue: VecDeque<u64>,
+    next_ticket: u64,
+    in_use: usize,
+    peak: usize,
+}
+
+/// RAII slot hold; releases (and wakes the queue head) on drop — also on
+/// the unwind path, so a panicking job can never leak its slot.
+pub struct SlotHold<'a> {
+    gate: &'a SlotGate,
+}
+
+impl SlotGate {
+    pub fn new(slots: usize) -> SlotGate {
+        SlotGate {
+            state: Mutex::new(GateState {
+                available: slots.max(1),
+                queue: VecDeque::new(),
+                next_ticket: 0,
+                in_use: 0,
+                peak: 0,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until this caller reaches the head of the queue and a slot
+    /// is free.
+    pub fn acquire(&self) -> SlotHold<'_> {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        let ticket = g.next_ticket;
+        g.next_ticket += 1;
+        g.queue.push_back(ticket);
+        while !(g.available > 0 && g.queue.front() == Some(&ticket)) {
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+        g.queue.pop_front();
+        g.available -= 1;
+        g.in_use += 1;
+        g.peak = g.peak.max(g.in_use);
+        // With >1 slot the *new* head may have woken on the same release
+        // burst we did, observed itself mid-queue, and gone back to
+        // sleep — if a slot is still free, wake the queue again or it
+        // idles until the next release (missed-wakeup hazard).
+        let wake_next = g.available > 0 && !g.queue.is_empty();
+        drop(g);
+        if wake_next {
+            self.cv.notify_all();
+        }
+        SlotHold { gate: self }
+    }
+
+    /// Highest concurrent-hold count observed (fairness accounting).
+    pub fn peak(&self) -> usize {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).peak
+    }
+}
+
+impl Drop for SlotHold<'_> {
+    fn drop(&mut self) {
+        let mut g = self.gate.state.lock()
+            .unwrap_or_else(|p| p.into_inner());
+        g.available += 1;
+        g.in_use -= 1;
+        drop(g);
+        self.gate.cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sessions
+
+/// One live training session: a trainer plus its (deterministically
+/// regenerated) dataset. Pinned to its runner thread.
+enum Session {
+    Mlp {
+        tr: MlpTrainer,
+        train: MnistSyn,
+        test: MnistSyn,
+    },
+    Lstm {
+        tr: LstmTrainer,
+        valid: Vec<i32>,
+    },
+}
+
+impl Session {
+    /// Build (and optionally resume) a session. Runs under a slot: setup
+    /// includes weight init, warmup compilation and checkpoint ingest.
+    fn build(cache: &ExecutorCache, spec: &JobSpec, ckpt: Option<&Path>)
+             -> Result<Session> {
+        let mut session = match spec.model {
+            ModelKind::Mlp => {
+                let conv = cache.manifest()
+                    .get(&format!("{}_conv", spec.tag))?;
+                let (n_in, sites) = match &conv.arch {
+                    ArchMeta::Mlp { n_in, hidden, .. } =>
+                        (*n_in, hidden.len()),
+                    _ => bail!("job '{}': {} is not an MLP tag",
+                               spec.name, spec.tag),
+                };
+                if n_in != IMG_PIXELS {
+                    bail!("job '{}': tag {} takes {}-wide inputs but the \
+                           service feeds {IMG_PIXELS}-pixel synthetic \
+                           MNIST", spec.name, spec.tag, n_in);
+                }
+                let schedule = Schedule::new(
+                    spec.variant, &expand_rates(&spec.rates, sites),
+                    &spec.support, spec.shared_dp)?;
+                let (train, test) = MnistSyn::train_test(
+                    spec.n_train, spec.n_test, spec.seed);
+                let mut tr = MlpTrainer::new(cache, &spec.tag, schedule,
+                                             spec.n_train,
+                                             spec.lr as f32, spec.seed)?;
+                tr.lr_decay = spec.lr_decay as f32;
+                tr.decay_after = spec.decay_after;
+                Session::Mlp { tr, train, test }
+            }
+            ModelKind::Lstm => {
+                let conv = cache.manifest()
+                    .get(&format!("{}_conv", spec.tag))?;
+                let (sites, vocab) = match &conv.arch {
+                    ArchMeta::Lstm { layers, vocab, .. } =>
+                        (*layers, *vocab),
+                    _ => bail!("job '{}': {} is not an LSTM tag",
+                               spec.name, spec.tag),
+                };
+                // LSTM artifact sets cover equal-dp combos only.
+                let shared = spec.variant != Variant::Conv;
+                let schedule = Schedule::new(
+                    spec.variant, &expand_rates(&spec.rates, sites),
+                    &spec.support, shared)?;
+                let corpus = Corpus::generate(
+                    vocab, spec.tokens, spec.tokens / 10,
+                    spec.tokens / 10, spec.seed);
+                let mut tr = LstmTrainer::new(cache, &spec.tag, schedule,
+                                              &corpus.train,
+                                              spec.lr as f32, spec.seed)?;
+                tr.lr_decay = spec.lr_decay as f32;
+                tr.decay_after = spec.decay_after;
+                Session::Lstm { tr, valid: corpus.valid }
+            }
+        };
+        if let Some(path) = ckpt {
+            if path.exists() {
+                session.resume_from(path)?;
+                info!("job resumed from {} at step {}", path.display(),
+                      session.steps_done());
+            }
+        }
+        session.warmup()?;
+        Ok(session)
+    }
+
+    fn resume_from(&mut self, path: &Path) -> Result<()> {
+        match self {
+            Session::Mlp { tr, .. } => tr.resume_from(path),
+            Session::Lstm { tr, .. } => tr.resume_from(path),
+        }
+    }
+
+    fn warmup(&mut self) -> Result<()> {
+        match self {
+            Session::Mlp { tr, .. } => tr.warmup(),
+            Session::Lstm { tr, .. } => tr.warmup(),
+        }
+    }
+
+    fn steps_done(&self) -> usize {
+        match self {
+            Session::Mlp { tr, .. } => tr.state.step as usize,
+            Session::Lstm { tr, .. } => tr.state.step as usize,
+        }
+    }
+
+    fn run(&mut self, n: usize) -> Result<()> {
+        match self {
+            Session::Mlp { tr, train, .. } => {
+                tr.train_with(train, n)?;
+            }
+            Session::Lstm { tr, .. } => {
+                tr.train(n)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn save_checkpoint(&self, path: &Path) -> Result<()> {
+        match self {
+            Session::Mlp { tr, .. } => tr.save_checkpoint(path),
+            Session::Lstm { tr, .. } => tr.save_checkpoint(path),
+        }
+    }
+
+    /// (eval loss, eval accuracy) through the dropout-free eval graph.
+    fn evaluate(&mut self) -> Result<(f64, f64)> {
+        match self {
+            Session::Mlp { tr, test, .. } => tr.evaluate_with(test),
+            Session::Lstm { tr, valid } => {
+                tr.evaluate_with(valid.as_slice())
+            }
+        }
+    }
+
+    fn curve(&self) -> Vec<(u64, f64, f64)> {
+        let m = match self {
+            Session::Mlp { tr, .. } => &tr.metrics,
+            Session::Lstm { tr, .. } => &tr.metrics,
+        };
+        m.curve.iter().map(|p| (p.step, p.loss, p.acc)).collect()
+    }
+
+    fn last_loss(&self) -> f64 {
+        match self {
+            Session::Mlp { tr, .. } => tr.metrics.last_loss(),
+            Session::Lstm { tr, .. } => tr.metrics.last_loss(),
+        }
+    }
+
+    fn median_step_s(&self) -> f64 {
+        match self {
+            Session::Mlp { tr, .. } => tr.metrics.median_step_s(),
+            Session::Lstm { tr, .. } => tr.metrics.median_step_s(),
+        }
+    }
+
+    fn dispatched(&self) -> usize {
+        match self {
+            Session::Mlp { tr, .. } => tr.metrics.dispatched.len(),
+            Session::Lstm { tr, .. } => tr.metrics.dispatched.len(),
+        }
+    }
+}
+
+fn expand_rates(rates: &[f64], sites: usize) -> Vec<f64> {
+    if rates.len() == 1 && sites > 1 {
+        vec![rates[0]; sites]
+    } else {
+        rates.to_vec()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Outcomes
+
+/// Terminal state of one job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    Done,
+    /// Quarantined: the reason string starts with "panic:" when the job
+    /// died by panic rather than by error.
+    Failed(String),
+}
+
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub name: String,
+    pub status: JobStatus,
+    /// Absolute step count reached (includes pre-resume steps).
+    pub steps_done: usize,
+    /// Step the session resumed from, when it started from a checkpoint.
+    pub resumed_at: Option<usize>,
+    /// Slot holds this job consumed (fairness accounting).
+    pub ticks: usize,
+    pub final_loss: f64,
+    pub eval: Option<(f64, f64)>,
+    pub wall_s: f64,
+    pub report_path: Option<PathBuf>,
+}
+
+impl JobOutcome {
+    pub fn ok(&self) -> bool {
+        self.status == JobStatus::Done
+    }
+}
+
+/// Fleet result: per-job outcomes (manifest order) plus the fairness
+/// accounting the slot gate observed.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub outcomes: Vec<JobOutcome>,
+    /// Peak concurrent slot holds — never exceeds the configured slots.
+    pub peak_slots: usize,
+}
+
+impl ServiceReport {
+    pub fn all_ok(&self) -> bool {
+        self.outcomes.iter().all(JobOutcome::ok)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The fleet loop
+
+/// Run every job to completion (or quarantine) and return the outcomes
+/// in `specs` order. See the module docs for the scheduling model.
+pub fn run_jobs(cache: &ExecutorCache, specs: &[JobSpec],
+                cfg: &ServiceConfig) -> Result<ServiceReport> {
+    for s in specs {
+        s.validate()?;
+    }
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
+    // PJRT: serialize all backend access through a single slot. The C
+    // API is thread-safe, but the offline `xla` crate's wrapper types
+    // have not been audited for concurrent use from multiple sessions
+    // (see the Send/Sync notes in runtime/engine.rs); one slot makes
+    // every backend touch happen-before the next via the gate mutex.
+    let slots = if cache.backend().name() == "pjrt" && cfg.slots > 1 {
+        warn_!("service: PJRT backend — clamping {} slots to 1 \
+                (serialized backend access)", cfg.slots);
+        1
+    } else {
+        cfg.slots
+    };
+    let gate = SlotGate::new(slots);
+    let outcomes: Vec<JobOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|spec| {
+                let gate = &gate;
+                scope.spawn(move || run_one(cache, spec, cfg, gate))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .zip(specs)
+            .map(|(h, spec)| h.join().unwrap_or_else(|_| JobOutcome {
+                // Unreachable in practice: run_one contains every panic.
+                name: spec.name.clone(),
+                status: JobStatus::Failed("runner thread died".into()),
+                steps_done: 0,
+                resumed_at: None,
+                ticks: 0,
+                final_loss: f64::NAN,
+                eval: None,
+                wall_s: 0.0,
+                report_path: None,
+            }))
+            .collect()
+    });
+    Ok(ServiceReport { outcomes, peak_slots: gate.peak() })
+}
+
+fn ckpt_path(cfg: &ServiceConfig, spec: &JobSpec) -> Option<PathBuf> {
+    cfg.ckpt_dir.as_ref().map(|d| d.join(format!("{}.ckpt", spec.name)))
+}
+
+/// Drive one job to its terminal state. Never panics: backend work is
+/// wrapped in `catch_unwind`, and a panic quarantines this job only.
+fn run_one(cache: &ExecutorCache, spec: &JobSpec, cfg: &ServiceConfig,
+           gate: &SlotGate) -> JobOutcome {
+    let timer = Timer::start();
+    let mut out = JobOutcome {
+        name: spec.name.clone(),
+        status: JobStatus::Done,
+        steps_done: 0,
+        resumed_at: None,
+        ticks: 0,
+        final_loss: f64::NAN,
+        eval: None,
+        wall_s: 0.0,
+        report_path: None,
+    };
+    let ckpt = ckpt_path(cfg, spec);
+    let fail = |mut out: JobOutcome, why: String, timer: &Timer| {
+        warn_!("job '{}' quarantined: {why}", spec.name);
+        out.status = JobStatus::Failed(why);
+        out.wall_s = timer.elapsed_s();
+        out
+    };
+
+    // -- setup (under a slot: init + warmup compile are backend work) --
+    let hold = gate.acquire();
+    out.ticks += 1;
+    let built = catch_unwind(AssertUnwindSafe(
+        || Session::build(cache, spec, ckpt.as_deref())));
+    drop(hold);
+    let mut session = match built {
+        Ok(Ok(s)) => s,
+        Ok(Err(e)) => return fail(out, format!("setup: {e:#}"), &timer),
+        Err(p) => return fail(out, format!("panic: setup: {}",
+                                           panic_msg(&p)), &timer),
+    };
+    if session.steps_done() > 0 {
+        out.resumed_at = Some(session.steps_done());
+        out.steps_done = session.steps_done();
+    }
+
+    // -- train in fairness quanta --
+    let mut last_ckpt_at = session.steps_done();
+    while session.steps_done() < spec.steps {
+        let n = cfg.tick_steps.min(spec.steps - session.steps_done());
+        let hold = gate.acquire();
+        out.ticks += 1;
+        let r = catch_unwind(AssertUnwindSafe(|| session.run(n)));
+        drop(hold);
+        match r {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                return fail(out, format!("step {}: {e:#}",
+                                         session.steps_done() + 1),
+                            &timer);
+            }
+            Err(p) => {
+                return fail(out, format!("panic: step {}: {}",
+                                         session.steps_done() + 1,
+                                         panic_msg(&p)), &timer);
+            }
+        }
+        out.steps_done = session.steps_done();
+        out.final_loss = session.last_loss();
+        if let Some(path) = &ckpt {
+            let due = cfg.checkpoint_every > 0
+                && session.steps_done() - last_ckpt_at
+                    >= cfg.checkpoint_every;
+            if due {
+                match session.save_checkpoint(path) {
+                    Ok(()) => last_ckpt_at = session.steps_done(),
+                    // Non-fatal: training state is intact; the next tick
+                    // retries the write.
+                    Err(e) => warn_!("job '{}': checkpoint write failed \
+                                      ({e:#}); continuing", spec.name),
+                }
+            }
+        }
+    }
+
+    // -- final checkpoint + evaluation + report --
+    if let Some(path) = &ckpt {
+        if let Err(e) = session.save_checkpoint(path) {
+            warn_!("job '{}': final checkpoint failed ({e:#})", spec.name);
+        }
+    }
+    let hold = gate.acquire();
+    out.ticks += 1;
+    let ev = catch_unwind(AssertUnwindSafe(|| session.evaluate()));
+    drop(hold);
+    match ev {
+        Ok(Ok(pair)) => out.eval = Some(pair),
+        Ok(Err(e)) => return fail(out, format!("eval: {e:#}"), &timer),
+        Err(p) => return fail(out, format!("panic: eval: {}",
+                                           panic_msg(&p)), &timer),
+    }
+    out.final_loss = session.last_loss();
+    out.wall_s = timer.elapsed_s();
+    if let Some(dir) = &cfg.out_dir {
+        match write_report(dir, spec, &session, &out) {
+            Ok(p) => out.report_path = Some(p),
+            Err(e) => warn_!("job '{}': report write failed ({e:#})",
+                             spec.name),
+        }
+    }
+    info!("job '{}' done: {} steps, final loss {:.4}, {:.1}s wall",
+          spec.name, out.steps_done, out.final_loss, out.wall_s);
+    out
+}
+
+/// Per-job `TrainMetrics` as JSON through the shared bench-report writer
+/// (same schema family as `BENCH_*.json`: meta + rows).
+fn write_report(dir: &Path, spec: &JobSpec, session: &Session,
+                out: &JobOutcome) -> Result<PathBuf> {
+    let mut r = BenchReport::new("serve", "service::scheduler");
+    r.set("job", Json::str(&spec.name));
+    r.set("model", Json::str(spec.model.as_str()));
+    r.set("tag", Json::str(&spec.tag));
+    r.set("variant", Json::str(spec.variant.as_str()));
+    r.set("seed", Json::num(spec.seed as f64));
+    r.set("steps", Json::num(out.steps_done as f64));
+    r.set("resumed_at", match out.resumed_at {
+        Some(s) => Json::num(s as f64),
+        None => Json::Null,
+    });
+    r.set("ticks", Json::num(out.ticks as f64));
+    r.set("final_loss", Json::num(out.final_loss));
+    if let Some((el, ea)) = out.eval {
+        r.set("eval_loss", Json::num(el));
+        r.set("eval_acc", Json::num(ea));
+        if spec.model == ModelKind::Lstm {
+            r.set("eval_ppl", Json::num(el.exp()));
+        }
+    }
+    r.set("median_step_s", Json::num(session.median_step_s()));
+    r.set("dispatched", Json::num(session.dispatched() as f64));
+    r.set("wall_s", Json::num(out.wall_s));
+    for (step, loss, acc) in session.curve() {
+        r.row(vec![
+            ("step", Json::num(step as f64)),
+            ("loss", Json::num(loss)),
+            ("acc", Json::num(acc)),
+        ]);
+    }
+    let path = dir.join(format!("REPORT_{}.json", spec.name));
+    r.write(&path)?;
+    Ok(path)
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+/// Human summary printed by the `serve` CLI.
+pub fn summarize(report: &ServiceReport) -> String {
+    let mut s = format!("{:<16} {:>8} {:>7} {:>10} {:>10} {:>8}  status\n",
+                        "job", "steps", "ticks", "final", "eval", "wall_s");
+    for o in &report.outcomes {
+        let eval = o.eval.map(|(l, _)| format!("{l:.4}"))
+            .unwrap_or_else(|| "-".into());
+        let status = match &o.status {
+            JobStatus::Done => "done".to_string(),
+            JobStatus::Failed(why) => format!("FAILED: {why}"),
+        };
+        s.push_str(&format!("{:<16} {:>8} {:>7} {:>10.4} {:>10} {:>8.1}  \
+                             {}\n",
+                            o.name, o.steps_done, o.ticks, o.final_loss,
+                            eval, o.wall_s, status));
+    }
+    s.push_str(&format!("peak concurrent slots: {}\n", report.peak_slots));
+    s
+}
+
+/// Convenience used by the CLI: fail loudly when any job failed.
+pub fn ensure_all_ok(report: &ServiceReport) -> Result<()> {
+    let failed: Vec<&JobOutcome> = report
+        .outcomes
+        .iter()
+        .filter(|o| !o.ok())
+        .collect();
+    if failed.is_empty() {
+        return Ok(());
+    }
+    Err(anyhow!("{} job(s) failed: {}", failed.len(),
+                failed.iter().map(|o| o.name.as_str())
+                    .collect::<Vec<_>>().join(", ")))
+}

@@ -1,0 +1,512 @@
+//! Session-subsystem tests: checkpoint/resume bit-exactness, scheduler
+//! fairness, crash isolation, and checkpoint round-trip properties.
+//!
+//! Hermetic: everything runs on the in-process host backends (reference
+//! and structured-sparse) over the built-in synthetic manifest. The CI
+//! matrix re-runs this suite under AD_THREADS={1,4} and both AD_BACKEND
+//! values; sparse-kernel bit-stability across thread counts is pinned by
+//! `tests/sparse_kernels.rs`, which is what makes the cross-thread-count
+//! resume guarantee compose.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Trainer, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::{Backend, Executor, HostTensor, Manifest,
+                              ReferenceBackend, Value};
+use approx_dropout::service::checkpoint::Checkpoint;
+use approx_dropout::service::{jobs::JobSpec, jobs::ModelKind,
+                              jobs::ServiceConfig, run_jobs, JobStatus};
+use approx_dropout::util::json;
+use approx_dropout::util::rng::Rng;
+use approx_dropout::util::testkit;
+
+fn caches() -> Vec<(&'static str, ExecutorCache)> {
+    vec![
+        ("reference", ExecutorCache::reference(Manifest::builtin_test())),
+        ("sparse", ExecutorCache::sparse(Manifest::builtin_test())),
+    ]
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ad-service-{}-{tag}",
+                                              std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn mlp_trainer(cache: &ExecutorCache, variant: Variant, rates: &[f64],
+               data_n: usize, seed: u64) -> MlpTrainer {
+    let schedule = Schedule::new(variant, rates, &[1, 2], true).unwrap();
+    MlpTrainer::new(cache, "mlpsyn", schedule, data_n, 0.01, seed).unwrap()
+}
+
+fn lstm_trainer(cache: &ExecutorCache, variant: Variant, tokens: &[i32],
+                seed: u64) -> LstmTrainer {
+    let shared = variant != Variant::Conv;
+    let schedule =
+        Schedule::new(variant, &[0.5, 0.5], &[2], shared).unwrap();
+    LstmTrainer::new(cache, "lstmtest", schedule, tokens, 0.5, seed)
+        .unwrap()
+}
+
+fn param_bits<F: approx_dropout::coordinator::ModelFront>(
+    tr: &Trainer<F>) -> Vec<Vec<u32>> {
+    (0..tr.state.params.len())
+        .map(|i| {
+            tr.state.param_f32(i).unwrap()
+                .iter().map(|x| x.to_bits()).collect()
+        })
+        .collect()
+}
+
+/// The acceptance property: train N, checkpoint, resume in a *fresh*
+/// trainer, train M more — the resumed trajectory (losses, accuracies,
+/// dispatch sequence, final parameter bits, lr) is identical to an
+/// uninterrupted N+M run. Pinned on both hermetic backends for both
+/// architectures, through an actual checkpoint file.
+#[test]
+fn resume_matches_uninterrupted_bit_for_bit() {
+    let dir = tmp_dir("resume");
+    let data = MnistSyn::generate(192, 3);
+    let corpus = Corpus::generate(64, 4000, 400, 400, 9);
+    for (bname, cache) in caches() {
+        for model in ["mlp", "lstm"] {
+            for variant in [Variant::Conv, Variant::Rdp, Variant::Tdp] {
+                let path = dir.join(format!("{bname}-{model}-{}.ckpt",
+                                            variant.as_str()));
+                type Traj = (Vec<(u64, f64, f64)>, Vec<String>,
+                             Vec<Vec<u32>>);
+                let (full, tail): (Traj, Traj) = if model == "mlp" {
+                    let mut a = mlp_trainer(&cache, variant,
+                                            &[0.25, 0.25], data.n, 11);
+                    a.warmup().unwrap();
+                    a.train_with(&data, 12).unwrap();
+                    let full = (curve(&a.metrics),
+                                a.metrics.dispatched.clone(),
+                                param_bits(&a));
+
+                    let mut b = mlp_trainer(&cache, variant,
+                                            &[0.25, 0.25], data.n, 11);
+                    b.warmup().unwrap();
+                    b.train_with(&data, 6).unwrap();
+                    b.save_checkpoint(&path).unwrap();
+
+                    let mut c = mlp_trainer(&cache, variant,
+                                            &[0.25, 0.25], data.n, 11);
+                    c.resume_from(&path).unwrap();
+                    c.warmup().unwrap();
+                    assert_eq!(c.state.step, 6);
+                    c.train_with(&data, 6).unwrap();
+                    (full, (curve(&c.metrics),
+                            c.metrics.dispatched.clone(),
+                            param_bits(&c)))
+                } else {
+                    let mut a = lstm_trainer(&cache, variant,
+                                             &corpus.train, 11);
+                    a.warmup().unwrap();
+                    a.train(12).unwrap();
+                    let full = (curve(&a.metrics),
+                                a.metrics.dispatched.clone(),
+                                param_bits(&a));
+
+                    let mut b = lstm_trainer(&cache, variant,
+                                             &corpus.train, 11);
+                    b.warmup().unwrap();
+                    b.train(6).unwrap();
+                    b.save_checkpoint(&path).unwrap();
+
+                    let mut c = lstm_trainer(&cache, variant,
+                                             &corpus.train, 11);
+                    c.resume_from(&path).unwrap();
+                    c.warmup().unwrap();
+                    assert_eq!(c.state.step, 6);
+                    c.train(6).unwrap();
+                    (full, (curve(&c.metrics),
+                            c.metrics.dispatched.clone(),
+                            param_bits(&c)))
+                };
+                let ctx = format!("{bname}/{model}/{:?}", variant);
+                assert_eq!(&full.0[6..], &tail.0[..],
+                           "{ctx}: resumed losses must be bit-identical");
+                assert_eq!(&full.1[6..], &tail.1[..],
+                           "{ctx}: resumed dispatch must be identical");
+                assert_eq!(full.2, tail.2,
+                           "{ctx}: final params must be bit-identical");
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn curve(m: &approx_dropout::coordinator::TrainMetrics)
+         -> Vec<(u64, f64, f64)> {
+    m.curve.iter().map(|p| (p.step, p.loss, p.acc)).collect()
+}
+
+/// lr-decay driver state (lr, epochs_done) survives a checkpoint: an
+/// interrupted run crossing epoch boundaries decays on the same steps as
+/// an uninterrupted one.
+#[test]
+fn resume_preserves_lr_decay_trajectory() {
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    // Tiny corpus -> one BPTT window per epoch, so decay fires every
+    // couple of steps (same construction as tests/driver.rs).
+    let (batch, seq) = match &cache.manifest().get("lstmtest_conv")
+        .unwrap().arch
+    {
+        approx_dropout::runtime::ArchMeta::Lstm { batch, seq, .. } =>
+            (*batch, *seq),
+        _ => panic!("lstmtest is not an LSTM"),
+    };
+    let corpus = Corpus::generate(64, batch * (seq + 2), 64, 64, 5);
+    let mk = |seed| {
+        let mut tr = lstm_trainer(&cache, Variant::Rdp, &corpus.train,
+                                  seed);
+        tr.lr_decay = 0.5;
+        tr.decay_after = 0;
+        tr
+    };
+    let mut a = mk(6);
+    a.warmup().unwrap();
+    a.train(10).unwrap();
+
+    let dir = tmp_dir("lrdecay");
+    let path = dir.join("l.ckpt");
+    let mut b = mk(6);
+    b.warmup().unwrap();
+    b.train(5).unwrap();
+    b.save_checkpoint(&path).unwrap();
+    let mut c = mk(6);
+    c.resume_from(&path).unwrap();
+    assert_eq!(c.lr, b.lr, "decayed lr must round-trip bit-exactly");
+    assert_eq!(c.epochs_done(), b.epochs_done());
+    c.train(5).unwrap();
+    let full = curve(&a.metrics);
+    let tail = curve(&c.metrics);
+    assert_eq!(&full[5..], &tail[..],
+               "post-resume decay trajectory must match");
+    assert_eq!(a.lr, c.lr);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resuming against a different experiment configuration is rejected by
+/// the config hash, and a doctored version field is rejected by the
+/// format check.
+#[test]
+fn resume_rejects_config_and_version_mismatch() {
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let data = MnistSyn::generate(128, 4);
+    let mut a = mlp_trainer(&cache, Variant::Rdp, &[0.25, 0.25], data.n, 1);
+    a.warmup().unwrap();
+    a.train_with(&data, 2).unwrap();
+    let ckpt = a.checkpoint().unwrap();
+
+    // Different rates -> different schedule -> different hash.
+    let mut other =
+        mlp_trainer(&cache, Variant::Rdp, &[0.5, 0.5], data.n, 1);
+    let err = other.restore(&ckpt).unwrap_err();
+    assert!(err.to_string().contains("config hash"), "{err}");
+    // Different variant too.
+    let mut conv =
+        mlp_trainer(&cache, Variant::Conv, &[0.25, 0.25], data.n, 1);
+    assert!(conv.restore(&ckpt).is_err());
+    // Different seed too: the dataset is regenerated from it, so a
+    // cross-seed resume would silently train on different data.
+    let mut reseeded =
+        mlp_trainer(&cache, Variant::Rdp, &[0.25, 0.25], data.n, 2);
+    assert!(reseeded.restore(&ckpt).is_err());
+    // Same config accepts.
+    let mut same =
+        mlp_trainer(&cache, Variant::Rdp, &[0.25, 0.25], data.n, 1);
+    same.restore(&ckpt).unwrap();
+    assert_eq!(same.state.step, 2);
+
+    // Doctored version.
+    let mut bad = ckpt.clone();
+    bad.version = 99;
+    assert!(same.restore(&bad).unwrap_err().to_string()
+            .contains("version"));
+}
+
+/// Property: over random (variant, rates, support, seed, split) configs,
+/// a checkpoint that round-trips through its JSON text restores into a
+/// trajectory identical to the donor's continuation.
+#[test]
+fn checkpoint_roundtrip_property_over_random_configs() {
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let corpus = Corpus::generate(64, 3000, 300, 300, 2);
+    testkit::check("ckpt_roundtrip", 6, |rng: &mut Rng| {
+        let variant = *testkit::gen_choice(
+            rng, &[Variant::Conv, Variant::Rdp, Variant::Tdp]);
+        let rate = *testkit::gen_choice(rng, &[0.25, 0.5]);
+        let seed = rng.next_u64() % 1000;
+        let pre = testkit::gen_range(rng, 1, 5);
+        let post = testkit::gen_range(rng, 1, 4);
+        let shared = variant != Variant::Conv;
+        let mk = |s| {
+            // lstmtest artifacts cover dp=2 only (builtin registry).
+            let schedule =
+                Schedule::new(variant, &[rate, rate], &[2], shared)
+                    .unwrap();
+            LstmTrainer::new(&cache, "lstmtest", schedule, &corpus.train,
+                             0.5, s).unwrap()
+        };
+        let mut donor = mk(seed);
+        donor.warmup().unwrap();
+        donor.train(pre).unwrap();
+        // Round-trip through the serialized text form.
+        let text = donor.checkpoint().unwrap().to_json().pretty();
+        let back =
+            Checkpoint::from_json(&json::parse(&text).unwrap()).unwrap();
+        let mut resumed = mk(seed);
+        resumed.restore(&back).unwrap();
+        donor.train(post).unwrap();
+        resumed.train(post).unwrap();
+        let d: Vec<f64> =
+            donor.metrics.curve[pre..].iter().map(|p| p.loss).collect();
+        let r: Vec<f64> =
+            resumed.metrics.curve.iter().map(|p| p.loss).collect();
+        assert_eq!(d, r, "variant {variant:?} rate {rate} pre {pre}");
+        assert_eq!(param_bits(&donor), param_bits(&resumed));
+    });
+}
+
+/// Scheduler fairness: more jobs than slots, everything queued finishes,
+/// concurrency never exceeds the slot count, and outcomes come back in
+/// manifest order.
+#[test]
+fn scheduler_runs_all_jobs_within_slot_budget() {
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let mk = |name: &str, seed: u64| {
+        let mut j = JobSpec::named(name);
+        j.rates = vec![0.25, 0.25];
+        j.steps = 6;
+        j.seed = seed;
+        j.n_train = 128;
+        j.n_test = 64;
+        j
+    };
+    let specs = vec![mk("a", 1), mk("b", 2), mk("c", 3), mk("d", 4)];
+    for slots in [1, 2] {
+        let cfg = ServiceConfig {
+            slots,
+            tick_steps: 2,
+            ..ServiceConfig::default()
+        };
+        let report = run_jobs(&cache, &specs, &cfg).unwrap();
+        assert_eq!(report.outcomes.len(), 4);
+        assert!(report.peak_slots <= slots,
+                "peak {} > slots {slots}", report.peak_slots);
+        for (o, s) in report.outcomes.iter().zip(&specs) {
+            assert_eq!(o.name, s.name, "manifest order preserved");
+            assert_eq!(o.status, JobStatus::Done, "{}: {:?}", o.name,
+                       o.status);
+            assert_eq!(o.steps_done, 6);
+            assert!(o.eval.is_some());
+            // 3 train ticks (6 steps / quantum 2) + setup + eval holds.
+            assert_eq!(o.ticks, 5);
+        }
+        assert!(report.all_ok());
+    }
+}
+
+/// Identical jobs produce identical trajectories no matter how the fleet
+/// interleaves them — per-session determinism survives concurrency.
+#[test]
+fn concurrent_jobs_are_trajectory_deterministic() {
+    let dir = tmp_dir("det");
+    let mk = |name: &str| {
+        let mut j = JobSpec::named(name);
+        j.rates = vec![0.25, 0.25];
+        j.steps = 5;
+        j.seed = 42;
+        j.n_train = 128;
+        j.n_test = 64;
+        j
+    };
+    let specs = vec![mk("x"), mk("y"), mk("z")];
+    for (_, cache) in caches() {
+        let cfg = ServiceConfig {
+            slots: 3,
+            tick_steps: 1,
+            out_dir: Some(dir.clone()),
+            ..ServiceConfig::default()
+        };
+        let report = run_jobs(&cache, &specs, &cfg).unwrap();
+        assert!(report.all_ok());
+        let losses: Vec<f64> = report
+            .outcomes
+            .iter()
+            .map(|o| o.final_loss)
+            .collect();
+        assert_eq!(losses[0].to_bits(), losses[1].to_bits());
+        assert_eq!(losses[0].to_bits(), losses[2].to_bits());
+        // Reports landed and parse.
+        for o in &report.outcomes {
+            let p = o.report_path.as_ref().expect("report written");
+            let v = json::parse(
+                std::fs::read_to_string(p).unwrap().trim()).unwrap();
+            assert_eq!(v.get("job").unwrap().as_str(),
+                       Some(o.name.as_str()));
+            assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 5);
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Crash isolation
+
+/// Wraps the reference backend; executors for artifacts whose name
+/// contains `victim` panic on their `calls_before_panic`-th run.
+#[derive(Debug)]
+struct SabotageBackend {
+    inner: ReferenceBackend,
+    victim: &'static str,
+}
+
+struct SabotageExe {
+    inner: Arc<dyn Executor>,
+    calls: AtomicUsize,
+}
+
+impl Executor for SabotageExe {
+    fn meta(&self) -> &approx_dropout::runtime::ArtifactMeta {
+        self.inner.meta()
+    }
+
+    fn run_raw(&self, _inputs: &[&Value]) -> Result<Vec<Value>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        panic!("injected step panic");
+    }
+}
+
+impl Backend for SabotageBackend {
+    fn name(&self) -> &'static str {
+        "sabotage"
+    }
+
+    fn compile(&self, manifest: &Manifest, name: &str)
+               -> Result<Arc<dyn Executor>> {
+        let inner = self.inner.compile(manifest, name)?;
+        if name.contains(self.victim) {
+            Ok(Arc::new(SabotageExe { inner,
+                                      calls: AtomicUsize::new(0) }))
+        } else {
+            Ok(inner)
+        }
+    }
+
+    fn upload(&self, t: &HostTensor) -> Result<Value> {
+        self.inner.upload(t)
+    }
+}
+
+/// A job whose backend panics mid-step is quarantined; its siblings run
+/// to completion over the same shared cache (extends the PR 3 cache
+/// poison-recovery to whole sessions).
+#[test]
+fn crash_isolation_quarantines_only_the_panicking_job() {
+    let cache = ExecutorCache::new(
+        Arc::new(SabotageBackend {
+            inner: ReferenceBackend::new(),
+            victim: "_tdp",
+        }),
+        Manifest::builtin_test(),
+    );
+    let mk = |name: &str, variant: Variant| {
+        let mut j = JobSpec::named(name);
+        j.variant = variant;
+        j.rates = vec![0.25, 0.25];
+        j.steps = 6;
+        j.seed = 3;
+        j.n_train = 128;
+        j.n_test = 64;
+        j
+    };
+    let specs = vec![
+        mk("healthy-conv", Variant::Conv),
+        mk("victim-tdp", Variant::Tdp),
+        mk("healthy-rdp", Variant::Rdp),
+    ];
+    let cfg = ServiceConfig {
+        slots: 2,
+        tick_steps: 2,
+        ..ServiceConfig::default()
+    };
+    let report = run_jobs(&cache, &specs, &cfg).unwrap();
+    let by_name = |n: &str| {
+        report.outcomes.iter().find(|o| o.name == n).unwrap()
+    };
+    match &by_name("victim-tdp").status {
+        JobStatus::Failed(why) => {
+            assert!(why.contains("panic"), "quarantine reason: {why}");
+            assert!(why.contains("injected step panic"), "{why}");
+        }
+        s => panic!("victim should fail, got {s:?}"),
+    }
+    assert_eq!(by_name("healthy-conv").status, JobStatus::Done);
+    assert_eq!(by_name("healthy-rdp").status, JobStatus::Done);
+    assert_eq!(by_name("healthy-rdp").steps_done, 6);
+    assert!(!report.all_ok());
+}
+
+/// The crash-recovery loop end to end: serve a fleet with checkpointing,
+/// then serve the *same manifest again* — every job resumes from its
+/// final checkpoint and completes immediately, trajectory intact.
+#[test]
+fn rerunning_the_fleet_resumes_from_checkpoints() {
+    let dir = tmp_dir("fleet-resume");
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let mk = |steps: usize| {
+        let mut j = JobSpec::named("resumer");
+        j.model = ModelKind::Lstm;
+        j.tag = "lstmtest".into();
+        j.variant = Variant::Rdp;
+        j.rates = vec![0.5, 0.5];
+        j.support = vec![2];
+        j.steps = steps;
+        j.lr = 0.5;
+        j.seed = 8;
+        j.tokens = 4000;
+        j
+    };
+    let cfg = ServiceConfig {
+        slots: 1,
+        tick_steps: 3,
+        checkpoint_every: 3,
+        ckpt_dir: Some(dir.clone()),
+        out_dir: None,
+    };
+    // Phase 1: run to step 6 ("preemption" = the fleet simply ends).
+    let r1 = run_jobs(&cache, &[mk(6)], &cfg).unwrap();
+    assert!(r1.all_ok());
+    assert!(dir.join("resumer.ckpt").exists());
+    // Phase 2: same job, target 12 — resumes at 6, runs 6 more.
+    let r2 = run_jobs(&cache, &[mk(12)], &cfg).unwrap();
+    assert!(r2.all_ok());
+    let o = &r2.outcomes[0];
+    assert_eq!(o.resumed_at, Some(6));
+    assert_eq!(o.steps_done, 12);
+    // The stitched trajectory equals one uninterrupted 12-step run.
+    let mut solo = lstm_trainer(&cache, Variant::Rdp,
+                                &Corpus::generate(64, 4000, 400, 400, 8)
+                                    .train, 8);
+    solo.warmup().unwrap();
+    solo.train(12).unwrap();
+    assert_eq!(solo.metrics.curve.last().unwrap().loss.to_bits(),
+               o.final_loss.to_bits(),
+               "fleet-resumed trajectory must equal the solo run");
+    // Phase 3: already complete — nothing to do, still Done.
+    let r3 = run_jobs(&cache, &[mk(12)], &cfg).unwrap();
+    assert_eq!(r3.outcomes[0].steps_done, 12);
+    assert_eq!(r3.outcomes[0].resumed_at, Some(12));
+    assert!(r3.all_ok());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,91 @@
+#!/usr/bin/env python3
+"""Gate native sparse-speedup numbers against the checked-in baseline.
+
+Usage:
+    check_bench_regression.py NATIVE.json CHECKED_IN.json [--tolerance 0.25]
+
+Fails (exit 1) if any gated row's native `speedup_vs_dense` falls more
+than `tolerance` (fraction) below the checked-in value. Gated rows are
+the paper-relevant operating points: rate in {0.5, 0.7} for the
+row-skip and tile-skip configs, on every arch present in the baseline.
+Dense rows (speedup 1.0 by construction) and the low-rate smoke points
+are reported but not gated.
+
+The checked-in BENCH_sparse.json's `provenance` field records which
+harness produced it (the numpy scale model vs a native cargo run); the
+gate applies either way — a >25% drop below the recorded operating
+points is a regression signal worth a red build, and the tolerance knob
+is there for recalibration when the baseline is regenerated natively.
+"""
+
+import argparse
+import json
+import sys
+
+GATED_RATES = (0.5, 0.7)
+GATED_CONFIGS = ("row-skip", "tile-skip")
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return doc, {
+        (r["arch"], r["rate"], r["config"]): r["speedup_vs_dense"]
+        for r in doc["rows"]
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("native")
+    ap.add_argument("checked_in")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional drop below baseline")
+    args = ap.parse_args()
+
+    native_doc, native = load_rows(args.native)
+    checked_doc, checked = load_rows(args.checked_in)
+    print(f"baseline provenance: {checked_doc['provenance']}")
+    print(f"native   provenance: {native_doc['provenance']}")
+    print(f"tolerance: native >= (1 - {args.tolerance}) * baseline\n")
+    print(f"{'arch':8} {'rate':>5} {'config':>10} {'native':>8} "
+          f"{'baseline':>9} {'floor':>7}  verdict")
+
+    failures = []
+    for key in sorted(checked):
+        arch, rate, config = key
+        base = checked[key]
+        nat = native.get(key)
+        gated = rate in GATED_RATES and config in GATED_CONFIGS
+        if nat is None:
+            line_verdict = "MISSING" if gated else "missing (ungated)"
+            if gated:
+                failures.append(f"{key}: missing from native report")
+            print(f"{arch:8} {rate:5} {config:>10} {'-':>8} {base:9.2f} "
+                  f"{'-':>7}  {line_verdict}")
+            continue
+        floor = (1.0 - args.tolerance) * base
+        if gated:
+            ok = nat >= floor
+            verdict = "ok" if ok else "REGRESSION"
+            if not ok:
+                failures.append(
+                    f"{key}: native {nat:.2f} < floor {floor:.2f} "
+                    f"(baseline {base:.2f})")
+        else:
+            verdict = "info"
+        print(f"{arch:8} {rate:5} {config:>10} {nat:8.2f} {base:9.2f} "
+              f"{floor:7.2f}  {verdict}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} gated speedup(s) regressed "
+              f">{args.tolerance:.0%} below the checked-in baseline:")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: all gated speedups within tolerance of the baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

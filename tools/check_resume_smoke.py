@@ -1,0 +1,49 @@
+#!/usr/bin/env python3
+"""Checkpoint/resume smoke check: interrupted == uninterrupted.
+
+Usage:
+    check_resume_smoke.py FIRST.json RESUMED.json FULL.json
+
+FIRST   — curve of a run that trained N steps and wrote a checkpoint
+RESUMED — curve of a run that resumed that checkpoint and trained M more
+FULL    — curve of an uninterrupted N+M-step run (same config/seed)
+
+Asserts the concatenation FIRST + RESUMED equals FULL *exactly* — step
+numbers, losses and accuracies — i.e. resume reproduces the trajectory
+bit-for-bit (curve JSON carries shortest-round-trip f64 decimals, so
+float equality after json.load is bit equality).
+"""
+
+import json
+import sys
+
+
+def rows(path):
+    with open(path) as f:
+        return [(r["step"], r["loss"], r["acc"])
+                for r in json.load(f)["rows"]]
+
+
+def main():
+    if len(sys.argv) != 4:
+        print(__doc__)
+        return 2
+    first, resumed, full = map(rows, sys.argv[1:4])
+    stitched = first + resumed
+    print(f"first: {len(first)} steps, resumed: {len(resumed)} steps, "
+          f"full: {len(full)} steps")
+    if len(stitched) != len(full):
+        print(f"FAIL: stitched has {len(stitched)} steps, full has "
+              f"{len(full)}")
+        return 1
+    bad = [(a, b) for a, b in zip(stitched, full) if a != b]
+    if bad:
+        print(f"FAIL: {len(bad)} step(s) diverge; first: "
+              f"stitched={bad[0][0]} full={bad[0][1]}")
+        return 1
+    print("OK: resumed trajectory is identical to the uninterrupted run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
