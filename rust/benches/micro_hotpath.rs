@@ -138,6 +138,12 @@ fn main() -> anyhow::Result<()> {
     record(&mut report, &r, "assembly overlapped");
 
     report.set("backend", Json::str(cache.backend().name()));
+    // Only the sparse backend executes microkernels; recording one for
+    // reference/pjrt runs would be false provenance.
+    if cache.backend().name() == "sparse" {
+        report.set("microkernel", Json::str(
+            approx_dropout::runtime::SparseKernels::auto().microkernel()));
+    }
     println!("== micro hot-path ==");
     table.print();
     let path = report.write_default("BENCH_micro.json")?;

@@ -10,27 +10,42 @@
 //! structure, so its steps pay full dense math plus per-step mask
 //! generation, exactly the baseline the paper measures against.
 //!
+//! When the CPU has SIMD microkernels (AVX2+FMA / NEON; see
+//! `runtime::sparse::simd`), a second section re-times the GEMM-dominated
+//! `mlpsyn` configurations on the scalar microkernels (`<config>@scalar`
+//! rows, `AD_SIMD=off` equivalent) so the report also carries the
+//! SIMD-vs-scalar speedup the microkernel layer is responsible for.
+//!
 //! Output: a paper-style table on stdout plus machine-readable
 //! `BENCH_sparse.json` (repo root, or `$AD_BENCH_OUT/`) through the
-//! shared `bench::report` writer.
+//! shared `bench::report` writer. Any run of this binary is a *native*
+//! measurement — the report's `provenance` says so, and CI's
+//! `bench-regression` job uploads it as the refresh candidate for the
+//! checked-in baseline (`tools/check_bench_regression.py
+//! --refresh-baseline`).
 //!
 //! Knobs: `AD_BENCH_SMOKE=1` (tiny rep counts, CI smoke job),
 //! `AD_BENCH_REPS` (timed steps per configuration), `AD_THREADS`
-//! (sparse worker pool size).
+//! (sparse worker pool size), `AD_SIMD` (microkernel selection).
 
 use anyhow::Result;
 
 use approx_dropout::bench::drivers::env_usize;
-use approx_dropout::bench::{bench, fmt_time, BenchReport, Table};
+use approx_dropout::bench::{bench, fmt_time, BenchReport, BenchResult,
+                            Table};
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::runtime::sparse::threads_from_env;
-use approx_dropout::runtime::Manifest;
+use approx_dropout::runtime::{Manifest, SparseKernels};
 use approx_dropout::util::json::Json;
 
 const SUPPORT: &[usize] = &[1, 2, 4];
 const RATES: &[f64] = &[0.3, 0.5, 0.7];
+
+/// Rates re-timed on the scalar microkernels for the SIMD-vs-scalar
+/// section (the regression gate's operating points).
+const SIMD_CMP_RATES: &[f64] = &[0.5, 0.7];
 
 struct Cfg {
     label: &'static str,
@@ -43,85 +58,166 @@ const CFGS: &[Cfg] = &[
     Cfg { label: "tile-skip", variant: Variant::Tdp },
 ];
 
+/// The datasets + repetition settings every measurement shares.
+struct Bencher {
+    mnist: MnistSyn,
+    corpus: Corpus,
+    warm: usize,
+    reps: usize,
+}
+
+impl Bencher {
+    /// One timed (arch, rate, config) measurement on a given cache.
+    fn run(&self, cache: &ExecutorCache, arch: &str, rate: f64,
+           cfg: &Cfg) -> Result<BenchResult> {
+        Ok(match arch {
+            "mlpsyn" => {
+                let schedule = Schedule::new(cfg.variant, &[rate, rate],
+                                             SUPPORT, false)?;
+                let mut tr = MlpTrainer::new(cache, arch, schedule,
+                                             self.mnist.n, 0.01, 7)?;
+                tr.warmup()?;
+                bench(cfg.label, self.warm, self.reps,
+                      || tr.step(&self.mnist).unwrap())
+            }
+            _ => {
+                let shared = cfg.variant != Variant::Conv;
+                let schedule = Schedule::new(cfg.variant, &[rate, rate],
+                                             SUPPORT, shared)?;
+                let mut tr = LstmTrainer::new(cache, arch, schedule,
+                                              &self.corpus.train, 0.1,
+                                              13)?;
+                tr.warmup()?;
+                bench(cfg.label, self.warm, self.reps,
+                      || tr.step().unwrap())
+            }
+        })
+    }
+}
+
+/// Identity of one report row (everything but the measurement itself).
+struct RowCtx<'a> {
+    arch: &'a str,
+    rate: f64,
+    label: &'a str,
+    variant: Variant,
+    microkernel: &'a str,
+}
+
+/// The two output surfaces every row lands on.
+struct Sink {
+    report: BenchReport,
+    table: Table,
+}
+
+impl Sink {
+    fn push(&mut self, ctx: &RowCtx<'_>, r: &BenchResult, dense_s: f64) {
+        let speedup = dense_s / r.median_s;
+        self.table.row(&[ctx.arch.to_string(), format!("{}", ctx.rate),
+                         ctx.label.to_string(),
+                         ctx.microkernel.to_string(),
+                         fmt_time(r.median_s),
+                         format!("{:.1}", r.per_sec()),
+                         format!("{speedup:.2}x")]);
+        self.report.row(vec![
+            ("arch", Json::str(ctx.arch)),
+            ("rate", Json::num(ctx.rate)),
+            ("config", Json::str(ctx.label)),
+            ("variant", Json::str(ctx.variant.as_str())),
+            ("microkernel", Json::str(ctx.microkernel)),
+            ("median_step_s", Json::num(r.median_s)),
+            ("mad_s", Json::num(r.mad_s)),
+            ("mean_step_s", Json::num(r.mean_s)),
+            ("reps", Json::num(r.reps as f64)),
+            ("speedup_vs_dense", Json::num(speedup)),
+        ]);
+    }
+}
+
 fn main() -> Result<()> {
     let smoke = env_usize("AD_BENCH_SMOKE", 0) == 1;
     let reps = env_usize("AD_BENCH_REPS", if smoke { 3 } else { 40 });
     let warm = if smoke { 1 } else { 5 };
     let threads = threads_from_env();
+    let mk = SparseKernels::auto().microkernel();
 
     let cache = ExecutorCache::sparse(Manifest::builtin_test());
     let (mnist, _) = MnistSyn::train_test(512, 64, 42);
-    let corpus = Corpus::generate(64, 8000, 800, 800, 9);
+    let bencher = Bencher {
+        mnist,
+        corpus: Corpus::generate(64, 8000, 800, 800, 9),
+        warm,
+        reps,
+    };
 
-    let mut table = Table::new(&["arch", "rate", "config", "median step",
-                                 "steps/s", "speedup"]);
     let mut report =
-        BenchReport::new("sparse_speedup", "rust/benches/sparse_speedup.rs");
+        BenchReport::new("sparse_speedup",
+                         "native: rust/benches/sparse_speedup.rs \
+                          (cargo run --release --bin sparse_speedup)");
     report
         .set("backend", Json::str("sparse"))
         .set("threads", Json::num(threads as f64))
+        .set("microkernel", Json::str(mk))
+        .set("target_arch", Json::str(std::env::consts::ARCH))
         .set("smoke", Json::Bool(smoke))
         .set("reps", Json::num(reps as f64))
         .set("support", Json::Arr(
             SUPPORT.iter().map(|&d| Json::num(d as f64)).collect()));
+    let mut sink = Sink {
+        report,
+        table: Table::new(&["arch", "rate", "config", "microkernel",
+                            "median step", "steps/s", "speedup"]),
+    };
 
     for arch in ["mlpsyn", "lstmsyn"] {
         for &rate in RATES {
             let mut dense_s = f64::NAN;
             for cfg in CFGS {
-                let r = match arch {
-                    "mlpsyn" => {
-                        let schedule = Schedule::new(
-                            cfg.variant, &[rate, rate], SUPPORT, false)?;
-                        let mut tr = MlpTrainer::new(
-                            &cache, arch, schedule, mnist.n, 0.01, 7)?;
-                        tr.warmup()?;
-                        bench(cfg.label, warm, reps,
-                              || tr.step(&mnist).unwrap())
-                    }
-                    _ => {
-                        let shared = cfg.variant != Variant::Conv;
-                        let schedule = Schedule::new(
-                            cfg.variant, &[rate, rate], SUPPORT, shared)?;
-                        let mut tr = LstmTrainer::new(
-                            &cache, arch, schedule, &corpus.train, 0.1,
-                            13)?;
-                        tr.warmup()?;
-                        bench(cfg.label, warm, reps,
-                              || tr.step().unwrap())
-                    }
-                };
+                let r = bencher.run(&cache, arch, rate, cfg)?;
                 if cfg.label == "dense" {
                     dense_s = r.median_s;
                 }
-                let speedup = dense_s / r.median_s;
-                table.row(&[arch.to_string(), format!("{rate}"),
-                            cfg.label.to_string(), fmt_time(r.median_s),
-                            format!("{:.1}", r.per_sec()),
-                            format!("{speedup:.2}x")]);
-                report.row(vec![
-                    ("arch", Json::str(arch)),
-                    ("rate", Json::num(rate)),
-                    ("config", Json::str(cfg.label)),
-                    ("variant", Json::str(cfg.variant.as_str())),
-                    ("median_step_s", Json::num(r.median_s)),
-                    ("mad_s", Json::num(r.mad_s)),
-                    ("mean_step_s", Json::num(r.mean_s)),
-                    ("reps", Json::num(r.reps as f64)),
-                    ("speedup_vs_dense", Json::num(speedup)),
-                ]);
+                sink.push(&RowCtx { arch, rate, label: cfg.label,
+                                    variant: cfg.variant,
+                                    microkernel: mk },
+                          &r, dense_s);
+            }
+        }
+    }
+
+    // SIMD-vs-scalar section: only meaningful when the active
+    // microkernel is actually vectorized. The GEMM-dominated mlpsyn
+    // configurations are where the microkernel layer carries the load.
+    if mk != "scalar" {
+        let scalar_cache =
+            ExecutorCache::sparse_scalar(Manifest::builtin_test());
+        for &rate in SIMD_CMP_RATES {
+            let mut dense_s = f64::NAN;
+            for cfg in CFGS {
+                let r = bencher.run(&scalar_cache, "mlpsyn", rate, cfg)?;
+                if cfg.label == "dense" {
+                    dense_s = r.median_s;
+                }
+                let label = format!("{}@scalar", cfg.label);
+                sink.push(&RowCtx { arch: "mlpsyn", rate, label: &label,
+                                    variant: cfg.variant,
+                                    microkernel: "scalar" },
+                          &r, dense_s);
             }
         }
     }
 
     println!("== sparse speedup (dense vs row-skip vs tile-skip, \
-              {threads} thread(s)) ==");
-    table.print();
-    let path = report.write_default("BENCH_sparse.json")?;
-    println!("\nwrote {} ({} rows)", path.display(), report.n_rows());
+              {threads} thread(s), {mk} microkernel) ==");
+    sink.table.print();
+    let path = sink.report.write_default("BENCH_sparse.json")?;
+    println!("\nwrote {} ({} rows)", path.display(),
+             sink.report.n_rows());
     println!("interpretation: the paper's claim is that regular dropout \
               patterns turn dropped rows/tiles into *skipped* work; \
               speedup should grow with the dropout rate and tile-skip \
-              should track row-skip (fig. 7/8).");
+              should track row-skip (fig. 7/8). The @scalar rows isolate \
+              the SIMD microkernel contribution on the GEMM-dominated \
+              mlpsyn configs (AD_SIMD=off equivalent).");
     Ok(())
 }

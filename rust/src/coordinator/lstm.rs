@@ -189,7 +189,7 @@ impl Trainer<LstmFront> {
         let front = LstmFront {
             tag: tag.to_string(),
             schedule,
-            batcher: BpttBatcher::new(train_tokens, batch, seq),
+            batcher: BpttBatcher::new(train_tokens, batch, seq)?,
             hidden,
             batch,
             seq,

@@ -187,7 +187,7 @@ impl Trainer<MlpFront> {
         let front = MlpFront {
             tag: tag.to_string(),
             schedule,
-            batcher: MnistBatcher::new(n_train, batch),
+            batcher: MnistBatcher::new(n_train, batch)?,
             hidden,
             batch,
             n_in,

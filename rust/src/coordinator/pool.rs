@@ -64,9 +64,22 @@ impl ExecutorCache {
     }
 
     /// Cache over the structured-sparse compute engine (hermetic; worker
-    /// pool sized by `AD_THREADS`).
+    /// pool sized by `AD_THREADS`, microkernels by `AD_SIMD` + CPU
+    /// feature detection).
     pub fn sparse(manifest: Manifest) -> Self {
         Self::new(Arc::new(SparseBackend::new()), manifest)
+    }
+
+    /// Cache over the sparse engine pinned to the portable scalar
+    /// microkernels — the `AD_SIMD=off` configuration, constructible
+    /// without touching process env (tests, the speedup bench's
+    /// SIMD-vs-scalar comparison).
+    pub fn sparse_scalar(manifest: Manifest) -> Self {
+        Self::new(
+            Arc::new(SparseBackend::with_kernels(
+                crate::runtime::SparseKernels::scalar())),
+            manifest,
+        )
     }
 
     /// Cache over the PJRT CPU client.

@@ -21,14 +21,24 @@ pub struct MnistBatcher {
 }
 
 impl MnistBatcher {
-    pub fn new(n: usize, batch: usize) -> Self {
-        assert!(batch <= n);
-        MnistBatcher {
+    /// A batcher over `n` samples. `batch` must satisfy
+    /// `1 <= batch <= n`: the reshuffle branch in
+    /// [`Self::next_batch_into`] resets `cursor = 0` and then slices
+    /// `order[0..batch]`, so a batch larger than the dataset would
+    /// surface later as an out-of-range slice panic mid-training —
+    /// reject it here, loudly, as the config error it is.
+    pub fn new(n: usize, batch: usize) -> Result<Self> {
+        if batch == 0 || batch > n {
+            bail!("batch size {batch} is invalid for a {n}-sample \
+                   dataset (need 1 <= batch <= n; shrink --batch or \
+                   raise --n-train)");
+        }
+        Ok(MnistBatcher {
             order: (0..n).collect(),
             cursor: usize::MAX, // force shuffle on first call
             batch,
             epoch: 0,
-        }
+        })
     }
 
     /// Fill the next batch from `data` into `x` ([batch * 784]) and `y`
@@ -106,15 +116,28 @@ pub struct BpttBatcher {
 }
 
 impl BpttBatcher {
-    pub fn new(tokens: &[i32], batch: usize, seq: usize) -> Self {
+    /// A BPTT batcher over a token stream. Same construction-time
+    /// validation policy as [`MnistBatcher::new`]: an undersized corpus
+    /// is a loud config error here, not a slice panic in the first
+    /// `next_window_into` call.
+    pub fn new(tokens: &[i32], batch: usize, seq: usize) -> Result<Self> {
+        if batch == 0 || seq == 0 {
+            bail!("bptt batcher needs batch >= 1 and seq >= 1 \
+                   (got batch={batch}, seq={seq})");
+        }
         let track_len = tokens.len() / batch;
-        assert!(track_len > seq, "corpus too small for batch x seq");
+        if track_len <= seq {
+            bail!("corpus of {} tokens is too small for batch={batch} x \
+                   seq={seq} (each of the {batch} parallel tracks holds \
+                   {track_len} tokens; need > seq — shrink --batch/--seq \
+                   or raise --tokens)", tokens.len());
+        }
         let mut tracks = vec![0i32; batch * track_len];
         for b in 0..batch {
             tracks[b * track_len..(b + 1) * track_len]
                 .copy_from_slice(&tokens[b * track_len..(b + 1) * track_len]);
         }
-        BpttBatcher { tracks, track_len, batch, seq, pos: 0, epoch: 0 }
+        Ok(BpttBatcher { tracks, track_len, batch, seq, pos: 0, epoch: 0 })
     }
 
     /// Number of windows per epoch.
@@ -189,7 +212,7 @@ mod tests {
     #[test]
     fn mnist_batches_cover_epoch_without_repeats() {
         let data = MnistSyn::generate(64, 1);
-        let mut b = MnistBatcher::new(64, 16);
+        let mut b = MnistBatcher::new(64, 16).unwrap();
         let mut rng = Rng::new(2);
         let mut seen = std::collections::BTreeSet::new();
         for _ in 0..4 {
@@ -209,7 +232,7 @@ mod tests {
     #[test]
     fn mnist_batch_contents_match_dataset() {
         let data = MnistSyn::generate(32, 3);
-        let mut b = MnistBatcher::new(32, 8);
+        let mut b = MnistBatcher::new(32, 8).unwrap();
         let mut rng = Rng::new(4);
         let (x, y) = mnist_next(&mut b, &data, &mut rng);
         // Every batch row must be an exact dataset image with its label.
@@ -225,7 +248,7 @@ mod tests {
     #[test]
     fn mnist_buffer_capacity_is_reused() {
         let data = MnistSyn::generate(32, 5);
-        let mut b = MnistBatcher::new(32, 8);
+        let mut b = MnistBatcher::new(32, 8).unwrap();
         let mut rng = Rng::new(6);
         let mut x = Vec::new();
         let mut y = Vec::new();
@@ -241,7 +264,7 @@ mod tests {
     #[test]
     fn mnist_snapshot_restore_resumes_identically() {
         let data = MnistSyn::generate(48, 9);
-        let mut a = MnistBatcher::new(48, 8);
+        let mut a = MnistBatcher::new(48, 8).unwrap();
         let mut rng_a = Rng::new(21);
         for _ in 0..3 {
             mnist_next(&mut a, &data, &mut rng_a);
@@ -250,7 +273,7 @@ mod tests {
         let rng_snap = rng_a.state();
         let ahead: Vec<_> =
             (0..5).map(|_| mnist_next(&mut a, &data, &mut rng_a)).collect();
-        let mut b = MnistBatcher::new(48, 8);
+        let mut b = MnistBatcher::new(48, 8).unwrap();
         b.restore(order, cursor, epoch).unwrap();
         let mut rng_b = Rng::from_state(rng_snap).unwrap();
         let resumed: Vec<_> =
@@ -261,7 +284,7 @@ mod tests {
 
     #[test]
     fn mnist_restore_rejects_corrupt_state() {
-        let mut b = MnistBatcher::new(16, 4);
+        let mut b = MnistBatcher::new(16, 4).unwrap();
         assert!(b.restore(vec![0; 16], 0, 1).is_err(), "not a permutation");
         assert!(b.restore((0..8).collect(), 0, 1).is_err(), "wrong length");
         assert!(b.restore((0..16).collect(), 17, 1).is_err(), "bad cursor");
@@ -272,13 +295,13 @@ mod tests {
     #[test]
     fn bptt_snapshot_restore_resumes_identically() {
         let tokens: Vec<i32> = (0..217).collect();
-        let mut a = BpttBatcher::new(&tokens, 3, 7);
+        let mut a = BpttBatcher::new(&tokens, 3, 7).unwrap();
         for _ in 0..4 {
             bptt_next(&mut a);
         }
         let (pos, epoch) = a.snapshot();
         let ahead: Vec<_> = (0..9).map(|_| bptt_next(&mut a)).collect();
-        let mut b = BpttBatcher::new(&tokens, 3, 7);
+        let mut b = BpttBatcher::new(&tokens, 3, 7).unwrap();
         b.restore(pos, epoch).unwrap();
         let resumed: Vec<_> = (0..9).map(|_| bptt_next(&mut b)).collect();
         assert_eq!(ahead, resumed);
@@ -288,7 +311,7 @@ mod tests {
     #[test]
     fn bptt_windows_are_contiguous_and_shifted() {
         let tokens: Vec<i32> = (0..103).collect();
-        let mut b = BpttBatcher::new(&tokens, 2, 5);
+        let mut b = BpttBatcher::new(&tokens, 2, 5).unwrap();
         let (x, y) = bptt_next(&mut b);
         // Track 0 starts at 0, track 1 at track_len = 51.
         assert_eq!(&x[..5], &[0, 1, 2, 3, 4]);
@@ -299,9 +322,31 @@ mod tests {
     }
 
     #[test]
+    fn construction_rejects_oversized_batch_loudly() {
+        // Regression: batch > n used to pass an `assert!` panic (or, in
+        // its absence, surface as an out-of-range slice in the reshuffle
+        // branch of next_batch_into). It is a config error and must say
+        // so.
+        let err = MnistBatcher::new(16, 32).unwrap_err();
+        assert!(err.to_string().contains("batch size 32"),
+                "unhelpful error: {err}");
+        assert!(MnistBatcher::new(16, 0).is_err());
+        assert!(MnistBatcher::new(16, 16).is_ok(), "batch == n is legal");
+
+        let tokens: Vec<i32> = (0..64).collect();
+        // 64 tokens / batch 8 = 8 per track: too short for seq 8.
+        let err = BpttBatcher::new(&tokens, 8, 8).unwrap_err();
+        assert!(err.to_string().contains("too small"),
+                "unhelpful error: {err}");
+        assert!(BpttBatcher::new(&tokens, 0, 4).is_err());
+        assert!(BpttBatcher::new(&tokens, 4, 0).is_err());
+        assert!(BpttBatcher::new(&tokens, 8, 7).is_ok());
+    }
+
+    #[test]
     fn bptt_epoch_wraps() {
         let tokens: Vec<i32> = (0..40).collect();
-        let mut b = BpttBatcher::new(&tokens, 2, 6);
+        let mut b = BpttBatcher::new(&tokens, 2, 6).unwrap();
         let per_epoch = b.windows_per_epoch();
         assert_eq!(per_epoch, (20 - 1) / 6);
         for _ in 0..per_epoch {

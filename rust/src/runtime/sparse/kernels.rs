@@ -7,6 +7,18 @@
 //! zero), and dropped weight tiles are never read (the *raw* weight is
 //! passed in; see [`Kernels::prep_weight`]).
 //!
+//! ## Microkernels
+//!
+//! Every inner loop runs through the [`simd::Microkernel`] primitives
+//! (`axpy` / `axpy2` / `dot_acc`): runtime-detected AVX2+FMA or NEON
+//! vector code when the CPU has it, a portable unrolled scalar fallback
+//! otherwise, `AD_SIMD=off` to force scalar (see `sparse::simd`). The
+//! scalar microkernels are bit-compatible with the dense loops; the SIMD
+//! ones differ in float rounding only (FMA + fixed-order lane
+//! reductions) and stay inside the 1e-5 relative contract the parity
+//! suites enforce. [`SparseKernels::auto`] picks up the process-wide
+//! selection; [`SparseKernels::scalar`] pins the portable path.
+//!
 //! ## Blocking and parallelism
 //!
 //! Every kernel partitions its **output** into disjoint ranges — row
@@ -15,20 +27,22 @@
 //! (`sparse::pool`, sized by `AD_THREADS`). Each output element is
 //! computed entirely within one chunk with the shared dimension streamed
 //! in ascending index order ([`KBLOCK`]-sized panels keep the B operand
-//! L1/L2-resident), so results are bit-identical across thread counts
-//! *and* bit-compatible with the dense kernels: skipping an exactly-zero
-//! contribution is an IEEE no-op, and the surviving contributions are
-//! accumulated in the same order the dense loops use. Calls below
-//! [`MIN_PAR_WORK`] multiply-accumulates run inline on the caller — the
-//! pool round-trip costs more than the math at tiny sizes.
+//! L1/L2-resident), so results are bit-identical across thread counts.
+//! With scalar microkernels they are additionally bit-compatible with
+//! the dense kernels: skipping an exactly-zero contribution is an IEEE
+//! no-op, and the surviving contributions are accumulated in the same
+//! order the dense loops use. Calls below [`MIN_PAR_WORK`]
+//! multiply-accumulates run inline on the caller — the pool round-trip
+//! costs more than the math at tiny sizes.
 //!
 //! Contract details (which operand a [`Skip`] describes per method) live
 //! on the [`Kernels`] trait; the property suite
 //! (`rust/tests/sparse_kernels.rs`) pins sparse == dense-under-mask for
-//! randomized shapes, skips, and tilings.
+//! randomized shapes, skips, and tilings, plus SIMD-vs-scalar agreement.
 
 use crate::patterns::{RowPattern, TilePattern};
 use crate::runtime::sparse::pool::{self, ThreadPool};
+use crate::runtime::sparse::simd::{self, Microkernel};
 use crate::runtime::step::kernels::{Kernels, Skip};
 
 /// Output rows per parallel chunk. Fixed (not derived from the thread
@@ -44,10 +58,52 @@ const KBLOCK: usize = 64;
 /// to the worker pool.
 const MIN_PAR_WORK: usize = 32 * 1024;
 
-/// The structure-exploiting kernel set. Stateless; dispatches through the
-/// process-wide `AD_THREADS` pool.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct SparseKernels;
+/// The structure-exploiting kernel set over one pinned microkernel
+/// implementation; dispatches through the process-wide `AD_THREADS`
+/// pool.
+#[derive(Clone, Copy)]
+pub struct SparseKernels {
+    mk: &'static Microkernel,
+}
+
+impl SparseKernels {
+    /// The process-wide microkernel selection (`AD_SIMD` + CPU feature
+    /// detection) — what `SparseBackend::new` uses.
+    pub fn auto() -> Self {
+        SparseKernels { mk: simd::active() }
+    }
+
+    /// Force the portable scalar microkernels: the `AD_SIMD=off`
+    /// configuration, bit-compatible with `DenseKernels` accumulation.
+    pub fn scalar() -> Self {
+        SparseKernels { mk: simd::scalar() }
+    }
+
+    /// The detected SIMD microkernels, if this CPU has any — `None`
+    /// otherwise (callers print a loud skip, never a silent pass).
+    pub fn simd() -> Option<Self> {
+        simd::detected().map(|mk| SparseKernels { mk })
+    }
+
+    /// Name of the pinned microkernel ("avx2" | "neon" | "scalar").
+    pub fn microkernel(&self) -> &'static str {
+        self.mk.name
+    }
+}
+
+impl Default for SparseKernels {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+impl std::fmt::Debug for SparseKernels {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SparseKernels")
+            .field("microkernel", &self.mk.name)
+            .finish()
+    }
+}
 
 #[derive(Clone, Copy)]
 struct SendPtr(*mut f32);
@@ -55,10 +111,6 @@ struct SendPtr(*mut f32);
 // output range its chunk index selects.
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
-
-fn ceil_div(a: usize, b: usize) -> usize {
-    (a + b - 1) / b
-}
 
 fn all_indices(dim: usize) -> Vec<usize> {
     (0..dim).collect()
@@ -77,6 +129,31 @@ fn run_chunks(p: &ThreadPool, work: usize, n_chunks: usize,
     }
 }
 
+/// `y += Σ a_i * x_i` over a panel of (coefficient, row) pairs: zero
+/// coefficients are skipped (an IEEE no-op on these exact-zero
+/// activations, and dropped/poisoned rows are never loaded), and nonzero
+/// terms are paired into rank-2 `axpy2` calls — which every microkernel
+/// implements as the exact result of two sequential `axpy` passes, so
+/// the pairing can never change a result bit.
+fn axpy_panel<'a, I>(mk: &Microkernel, rows: I, y: &mut [f32])
+where
+    I: Iterator<Item = (f32, &'a [f32])>,
+{
+    let mut pending: Option<(f32, &[f32])> = None;
+    for (a, x) in rows {
+        if a == 0.0 {
+            continue;
+        }
+        match pending.take() {
+            None => pending = Some((a, x)),
+            Some((a0, x0)) => mk.axpy2(a0, x0, a, x, y),
+        }
+    }
+    if let Some((a, x)) = pending {
+        mk.axpy(a, x, y);
+    }
+}
+
 impl Kernels for SparseKernels {
     fn name(&self) -> &'static str {
         "sparse"
@@ -90,7 +167,7 @@ impl Kernels for SparseKernels {
         let mut out = vec![0f32; m * n];
         match k_skip {
             Skip::Tiles(pat) => {
-                gemm_tiles(p, a, b, m, k, n, pat, &mut out);
+                gemm_tiles(p, self.mk, a, b, m, k, n, pat, &mut out);
             }
             _ => {
                 let kidx = k_skip.kept(k)
@@ -100,10 +177,11 @@ impl Kernels for SparseKernels {
                     // dropped; a keep-everything pattern (dp=1 draws)
                     // would pay a full copy of B for zero skipped work.
                     Skip::Rows(q) if q.kept_count() < q.m => {
-                        gemm_rows_cols(p, a, b, m, k, n, &kidx, q,
-                                       &mut out);
+                        gemm_rows_cols(p, self.mk, a, b, m, k, n, &kidx,
+                                       q, &mut out);
                     }
-                    _ => gemm_rows(p, a, b, m, k, n, &kidx, &mut out),
+                    _ => gemm_rows(p, self.mk, a, b, m, k, n, &kidx,
+                                   &mut out),
                 }
             }
         }
@@ -117,10 +195,12 @@ impl Kernels for SparseKernels {
         let p = pool::global();
         let mut out = vec![0f32; m * k];
         match skip {
-            Skip::Tiles(pat) => nt_tiles(p, a, b, m, n, k, pat, &mut out),
+            Skip::Tiles(pat) => {
+                nt_tiles(p, self.mk, a, b, m, n, k, pat, &mut out);
+            }
             _ => {
                 let jidx = skip.kept(k).unwrap_or_else(|| all_indices(k));
-                nt_rows(p, a, b, m, n, k, &jidx, &mut out);
+                nt_rows(p, self.mk, a, b, m, n, k, &jidx, &mut out);
             }
         }
         out
@@ -134,7 +214,8 @@ impl Kernels for SparseKernels {
         debug_assert_eq!(out.len(), k * n);
         let p = pool::global();
         match row_skip {
-            Skip::Tiles(pat) => tn_tiles(p, a, b, m, k, n, pat, out),
+            Skip::Tiles(pat) => tn_tiles(p, self.mk, a, b, m, k, n, pat,
+                                         out),
             _ => {
                 let pidx =
                     row_skip.kept(k).unwrap_or_else(|| all_indices(k));
@@ -142,7 +223,8 @@ impl Kernels for SparseKernels {
                     Skip::Rows(q) => Some(q.kept_indices()),
                     _ => None,
                 };
-                tn_rows(p, a, b, m, k, n, &pidx, cidx.as_deref(), out);
+                tn_rows(p, self.mk, a, b, m, k, n, &pidx, cidx.as_deref(),
+                        out);
             }
         }
     }
@@ -161,9 +243,10 @@ impl Kernels for SparseKernels {
 
 /// Row-skip GEMM: only the shared-dimension indices in `kidx` are
 /// touched. Chunks over output rows; KBLOCK-panel over `kidx`.
-fn gemm_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
-             n: usize, kidx: &[usize], out: &mut [f32]) {
-    let n_chunks = ceil_div(m, CHUNK_ROWS);
+fn gemm_rows(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+             b: &[f32], m: usize, k: usize, n: usize, kidx: &[usize],
+             out: &mut [f32]) {
+    let n_chunks = m.div_ceil(CHUNK_ROWS);
     let ptr = SendPtr(out.as_mut_ptr());
     let task = move |c: usize| {
         let r0 = c * CHUNK_ROWS;
@@ -177,16 +260,13 @@ fn gemm_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
             for (ri, i) in (r0..r1).enumerate() {
                 let arow = &a[i * k..(i + 1) * k];
                 let orow = &mut seg[ri * n..(ri + 1) * n];
-                for &pi in kb {
-                    let av = arow[pi];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[pi * n..(pi + 1) * n];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
+                axpy_panel(
+                    mk,
+                    kb.iter().map(|&pi| {
+                        (arow[pi], &b[pi * n..(pi + 1) * n])
+                    }),
+                    orow,
+                );
             }
         }
     };
@@ -198,9 +278,9 @@ fn gemm_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
 /// are never read), the product is computed compactly, and the result is
 /// scattered to the kept output columns — the paper's "smaller dense
 /// matmul" in one call.
-fn gemm_rows_cols(p: &ThreadPool, a: &[f32], b: &[f32], m: usize,
-                  k: usize, n: usize, kidx: &[usize], cols: &RowPattern,
-                  out: &mut [f32]) {
+fn gemm_rows_cols(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+                  b: &[f32], m: usize, k: usize, n: usize,
+                  kidx: &[usize], cols: &RowPattern, out: &mut [f32]) {
     debug_assert_eq!(cols.m, n);
     let cidx = cols.kept_indices();
     let (kk, nc) = (kidx.len(), cidx.len());
@@ -217,8 +297,9 @@ fn gemm_rows_cols(p: &ThreadPool, a: &[f32], b: &[f32], m: usize,
     }
     let mut cp = vec![0f32; m * nc];
     {
-        let n_chunks = ceil_div(m, CHUNK_ROWS);
+        let n_chunks = m.div_ceil(CHUNK_ROWS);
         let ptr = SendPtr(cp.as_mut_ptr());
+        let bp_ref: &[f32] = &bp;
         let task = move |c: usize| {
             let r0 = c * CHUNK_ROWS;
             let r1 = (r0 + CHUNK_ROWS).min(m);
@@ -232,16 +313,14 @@ fn gemm_rows_cols(p: &ThreadPool, a: &[f32], b: &[f32], m: usize,
                 for (ri, i) in (r0..r1).enumerate() {
                     let arow = &a[i * k..(i + 1) * k];
                     let orow = &mut seg[ri * nc..(ri + 1) * nc];
-                    for pi in p0..p1 {
-                        let av = arow[kidx[pi]];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &bp[pi * nc..(pi + 1) * nc];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
-                        }
-                    }
+                    axpy_panel(
+                        mk,
+                        (p0..p1).map(|pi| {
+                            (arow[kidx[pi]],
+                             &bp_ref[pi * nc..(pi + 1) * nc])
+                        }),
+                        orow,
+                    );
                 }
                 p0 = p1;
             }
@@ -260,12 +339,13 @@ fn gemm_rows_cols(p: &ThreadPool, a: &[f32], b: &[f32], m: usize,
 /// Tile-skip GEMM: B is a `[k, n]` weight under a tile pattern; only
 /// kept tiles are loaded. Kept tiles are visited in row-major grid order,
 /// so each output element accumulates its k-contributions ascending.
-fn gemm_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
-              n: usize, pat: &TilePattern, out: &mut [f32]) {
+fn gemm_tiles(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+              b: &[f32], m: usize, k: usize, n: usize, pat: &TilePattern,
+              out: &mut [f32]) {
     debug_assert_eq!((pat.k, pat.n), (k, n));
     let (tr, tc) = (pat.tr, pat.tc);
     let kept = pat.kept_tiles();
-    let n_chunks = ceil_div(m, CHUNK_ROWS);
+    let n_chunks = m.div_ceil(CHUNK_ROWS);
     let ptr = SendPtr(out.as_mut_ptr());
     let kept_ref: &[(usize, usize)] = &kept;
     let task = move |c: usize| {
@@ -281,15 +361,13 @@ fn gemm_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
             for (ri, i) in (r0..r1).enumerate() {
                 let arow = &a[i * k + k0..i * k + k0 + tr];
                 let orow = &mut seg[ri * n + j0..ri * n + j0 + tc];
-                for (p0, &av) in arow.iter().enumerate() {
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[(k0 + p0) * n + j0..][..tc];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
+                axpy_panel(
+                    mk,
+                    arow.iter().enumerate().map(|(p0, &av)| {
+                        (av, &b[(k0 + p0) * n + j0..][..tc])
+                    }),
+                    orow,
+                );
             }
         }
     };
@@ -302,9 +380,10 @@ fn gemm_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
 
 /// Output-column-restricted NT: only output columns in `jidx` are
 /// computed (B rows outside it are never loaded); the rest stay zero.
-fn nt_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
-           k: usize, jidx: &[usize], out: &mut [f32]) {
-    let n_chunks = ceil_div(m, CHUNK_ROWS);
+fn nt_rows(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+           b: &[f32], m: usize, n: usize, k: usize, jidx: &[usize],
+           out: &mut [f32]) {
+    let n_chunks = m.div_ceil(CHUNK_ROWS);
     let ptr = SendPtr(out.as_mut_ptr());
     let task = move |c: usize| {
         let r0 = c * CHUNK_ROWS;
@@ -318,11 +397,7 @@ fn nt_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
             let orow = &mut seg[ri * k..(ri + 1) * k];
             for &j in jidx {
                 let brow = &b[j * n..(j + 1) * n];
-                let mut acc = 0f32;
-                for (&av, &bv) in arow.iter().zip(brow) {
-                    acc += av * bv;
-                }
-                orow[j] = acc;
+                orow[j] = mk.dot_acc(0.0, arow, brow);
             }
         }
     };
@@ -333,13 +408,14 @@ fn nt_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
 /// output column j (a B row) sums only over that row's kept tiles, in
 /// ascending column order (value-equal to the dense dot against the
 /// masked weight).
-fn nt_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
-            k: usize, pat: &TilePattern, out: &mut [f32]) {
+fn nt_tiles(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+            b: &[f32], m: usize, n: usize, k: usize, pat: &TilePattern,
+            out: &mut [f32]) {
     debug_assert_eq!((pat.k, pat.n), (k, n));
     let (tr, tc) = (pat.tr, pat.tc);
     let (tk, tn) = pat.grid();
     let kept = pat.kept_count();
-    let n_chunks = ceil_div(m, CHUNK_ROWS);
+    let n_chunks = m.div_ceil(CHUNK_ROWS);
     let ptr = SendPtr(out.as_mut_ptr());
     let task = move |c: usize| {
         let r0 = c * CHUNK_ROWS;
@@ -361,9 +437,8 @@ fn nt_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, n: usize,
                             continue;
                         }
                         let c0 = gc * tc;
-                        for t in 0..tc {
-                            acc += arow[c0 + t] * brow[c0 + t];
-                        }
+                        acc = mk.dot_acc(acc, &arow[c0..c0 + tc],
+                                         &brow[c0..c0 + tc]);
                     }
                     orow[j] = acc;
                 }
@@ -382,11 +457,13 @@ const CHUNK_GROWS: usize = 8;
 
 /// Row/column-restricted TN accumulation: only output rows in `pidx`
 /// (and, when `cidx` is given, columns in it) receive updates; A's
-/// dropped columns and B's dropped columns are never loaded.
-fn tn_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
-           n: usize, pidx: &[usize], cidx: Option<&[usize]>,
-           out: &mut [f32]) {
-    let n_chunks = ceil_div(pidx.len(), CHUNK_GROWS);
+/// dropped columns and B's dropped columns are never loaded. The
+/// column-restricted arm stays on scalar gathers — the kept columns are
+/// strided, not contiguous, so there is no microkernel run to hand off.
+fn tn_rows(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+           b: &[f32], m: usize, k: usize, n: usize, pidx: &[usize],
+           cidx: Option<&[usize]>, out: &mut [f32]) {
+    let n_chunks = pidx.len().div_ceil(CHUNK_GROWS);
     let ptr = SendPtr(out.as_mut_ptr());
     let task = move |c: usize| {
         let g0 = c * CHUNK_GROWS;
@@ -398,16 +475,13 @@ fn tn_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
             };
             match cidx {
                 None => {
-                    for i in 0..m {
-                        let av = a[i * k + pr];
-                        if av == 0.0 {
-                            continue;
-                        }
-                        let brow = &b[i * n..(i + 1) * n];
-                        for (o, &bv) in orow.iter_mut().zip(brow) {
-                            *o += av * bv;
-                        }
-                    }
+                    axpy_panel(
+                        mk,
+                        (0..m).map(|i| {
+                            (a[i * k + pr], &b[i * n..(i + 1) * n])
+                        }),
+                        orow,
+                    );
                 }
                 Some(cs) => {
                     for i in 0..m {
@@ -430,8 +504,9 @@ fn tn_rows(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
 
 /// Tile-restricted TN accumulation: only C's kept tiles receive updates.
 /// Chunks over tile-rows (disjoint output row ranges).
-fn tn_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
-            n: usize, pat: &TilePattern, out: &mut [f32]) {
+fn tn_tiles(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+            b: &[f32], m: usize, k: usize, n: usize, pat: &TilePattern,
+            out: &mut [f32]) {
     debug_assert_eq!((pat.k, pat.n), (k, n));
     let (tr, tc) = (pat.tr, pat.tc);
     let (tk, tn) = pat.grid();
@@ -449,16 +524,13 @@ fn tn_tiles(p: &ThreadPool, a: &[f32], b: &[f32], m: usize, k: usize,
                     std::slice::from_raw_parts_mut(
                         ptr.0.add(pr * n + c0), tc)
                 };
-                for i in 0..m {
-                    let av = a[i * k + pr];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[i * n + c0..][..tc];
-                    for (o, &bv) in oseg.iter_mut().zip(brow) {
-                        *o += av * bv;
-                    }
-                }
+                axpy_panel(
+                    mk,
+                    (0..m).map(|i| {
+                        (a[i * k + pr], &b[i * n + c0..][..tc])
+                    }),
+                    oseg,
+                );
             }
         }
     };
@@ -490,7 +562,8 @@ mod tests {
                              testkit::gen_range(rng, 1, 40));
             let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
             let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
-            let s = SparseKernels;
+            // Scalar microkernels: bit-compatible with the dense loops.
+            let s = SparseKernels::scalar();
             let d = DenseKernels;
             assert_eq!(s.gemm(&a, &b, m, k, n, &D, &D),
                        d.gemm(&a, &b, m, k, n, &D, &D));
@@ -507,7 +580,8 @@ mod tests {
     #[test]
     fn row_skip_never_needs_dropped_rows() {
         // Poison the dropped rows of B with NaN: a correct row-skip GEMM
-        // never loads them.
+        // never loads them. Run under BOTH microkernel modes — the SIMD
+        // panels must also never touch a dropped row.
         let mut rng = Rng::new(11);
         let (m, k, n) = (6, 32, 24);
         let pat = RowPattern::new(k, 4, 1);
@@ -529,11 +603,17 @@ mod tests {
                 }
             }
         }
-        let s = SparseKernels;
-        let got = s.gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
         let want = DenseKernels.gemm(&a, &clean, m, k, n, &D, &D);
+        let got = SparseKernels::scalar()
+            .gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
         assert_eq!(got, want);
         assert!(got.iter().all(|v| v.is_finite()));
+        if let Some(s) = SparseKernels::simd() {
+            let got = s.gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
+            close(&got, &want);
+            assert!(got.iter().all(|v| v.is_finite()),
+                    "SIMD panel loaded a poisoned dropped row");
+        }
     }
 
     #[test]
@@ -551,17 +631,29 @@ mod tests {
                 *v = f32::NAN;
             }
         }
-        let s = SparseKernels;
         let skip = Skip::Tiles(pat);
-        let got = s.gemm(&a, &w, m, k, n, &skip, &D);
         let want = DenseKernels.gemm(&a, &masked, m, k, n, &D, &D);
-        assert_eq!(got, want);
-        // NT against the same tiled weight.
+        let want_nt;
         let a2 = gen_vec_f32(&mut rng, m * n, -1.0, 1.0);
-        let got = s.gemm_nt(&a2, &w, m, n, k, &skip);
-        let want = DenseKernels.gemm_nt(&a2, &masked, m, n, k, &D);
-        close(&got, &want);
-        assert!(got.iter().all(|v| v.is_finite()));
+        {
+            let s = SparseKernels::scalar();
+            let got = s.gemm(&a, &w, m, k, n, &skip, &D);
+            assert_eq!(got, want);
+            // NT against the same tiled weight.
+            want_nt = DenseKernels.gemm_nt(&a2, &masked, m, n, k, &D);
+            let got = s.gemm_nt(&a2, &w, m, n, k, &skip);
+            close(&got, &want_nt);
+            assert!(got.iter().all(|v| v.is_finite()));
+        }
+        if let Some(s) = SparseKernels::simd() {
+            let got = s.gemm(&a, &w, m, k, n, &skip, &D);
+            close(&got, &want);
+            assert!(got.iter().all(|v| v.is_finite()),
+                    "SIMD tile walk loaded a poisoned dropped tile");
+            let got = s.gemm_nt(&a2, &w, m, n, k, &skip);
+            close(&got, &want_nt);
+            assert!(got.iter().all(|v| v.is_finite()));
+        }
     }
 
     #[test]
@@ -573,10 +665,13 @@ mod tests {
         let kidx: Vec<usize> = (0..k).step_by(2).collect();
         let pools = [ThreadPool::new(1), ThreadPool::new(2),
                      ThreadPool::new(5)];
+        // Whatever microkernel is active: thread-count bit-stability is
+        // a property of the disjoint-output partition, not of the math.
+        let mk = simd::active();
         let mut outs: Vec<Vec<f32>> = Vec::new();
         for p in &pools {
             let mut out = vec![0f32; m * n];
-            gemm_rows(p, &a, &b, m, k, n, &kidx, &mut out);
+            gemm_rows(p, mk, &a, &b, m, k, n, &kidx, &mut out);
             outs.push(out);
         }
         assert_eq!(outs[0], outs[1]);
@@ -587,7 +682,7 @@ mod tests {
         let mut outs: Vec<Vec<f32>> = Vec::new();
         for p in &pools {
             let mut out = vec![0.5f32; k * n];
-            tn_rows(p, &a, &b2, m, k, n, &pidx, None, &mut out);
+            tn_rows(p, mk, &a, &b2, m, k, n, &pidx, None, &mut out);
             outs.push(out);
         }
         assert_eq!(outs[0], outs[1]);
@@ -605,7 +700,7 @@ mod tests {
             let q = RowPattern::new(n, dp, b0);
             let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
             let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
-            let s = SparseKernels;
+            let s = SparseKernels::auto();
             let got = s.gemm(&a, &b, m, k, n, &D, &Skip::Rows(q));
             let full = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
             for i in 0..m {
@@ -628,7 +723,7 @@ mod tests {
         let x = gen_vec_f32(&mut rng, k, -1.0, 1.0);
         let b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
         let pat = RowPattern::new(k, 4, 2);
-        let s = SparseKernels;
+        let s = SparseKernels::scalar();
         let y = s.gemv(&x, &b, k, n, &Skip::Rows(pat), &D);
         // Equals the masked-dense product.
         let xm: Vec<f32> = x.iter().enumerate()
@@ -637,4 +732,9 @@ mod tests {
         let want = DenseKernels.gemm(&xm, &b, 1, k, n, &D, &D);
         assert_eq!(y, want);
     }
+
+    // SIMD-vs-scalar kernel agreement lives in the integration property
+    // suite (rust/tests/sparse_kernels.rs:
+    // simd_matches_scalar_on_randomized_shapes_skips_tilings) — one
+    // copy, all four entry points, all skip families.
 }

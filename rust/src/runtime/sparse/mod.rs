@@ -1,7 +1,8 @@
 //! Structured-sparse execution backend (`AD_BACKEND=sparse`): the shared
 //! step interpreter (`runtime::step::StepProgram`) over the row-/tile-
-//! skipping kernel library ([`kernels::SparseKernels`]) and its worker
-//! pool ([`pool`], sized by `AD_THREADS`).
+//! skipping kernel library ([`kernels::SparseKernels`]), its SIMD
+//! microkernel layer ([`simd`], selected by `AD_SIMD` + CPU feature
+//! detection), and its worker pool ([`pool`], sized by `AD_THREADS`).
 //!
 //! This subsystem is the in-repo realization of the paper's performance
 //! claim: because RDP/TDP patterns are *regular*, the surviving
@@ -23,10 +24,12 @@
 //!   suite pins for the reference backend.
 //! * **Determinism** — results are bit-stable across `AD_THREADS`
 //!   settings (disjoint-output partitioning, fixed accumulation order;
-//!   see `pool` and `kernels` docs).
+//!   see `pool` and `kernels` docs) and across repetitions (the
+//!   microkernel selection is pinned once per process; see `simd`).
 
 pub mod kernels;
 pub mod pool;
+pub mod simd;
 
 use std::sync::Arc;
 
@@ -41,12 +44,33 @@ pub use pool::{threads_from_env, ThreadPool};
 
 /// The structured-sparse CPU backend. Values stay host-side (like the
 /// reference backend); only the element math differs.
-#[derive(Clone, Debug, Default)]
-pub struct SparseBackend;
+#[derive(Clone, Copy, Debug)]
+pub struct SparseBackend {
+    kernels: SparseKernels,
+}
 
 impl SparseBackend {
+    /// Backend over the process-wide microkernel selection (`AD_SIMD` +
+    /// CPU feature detection).
     pub fn new() -> Self {
-        SparseBackend
+        Self::with_kernels(SparseKernels::auto())
+    }
+
+    /// Backend over an explicitly chosen kernel set — how tests and the
+    /// speedup bench pin the scalar path without touching process env.
+    pub fn with_kernels(kernels: SparseKernels) -> Self {
+        SparseBackend { kernels }
+    }
+
+    /// The kernel set this backend compiles programs against.
+    pub fn kernels(&self) -> SparseKernels {
+        self.kernels
+    }
+}
+
+impl Default for SparseBackend {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
@@ -58,7 +82,7 @@ impl Backend for SparseBackend {
     fn compile(&self, manifest: &Manifest, name: &str)
                -> Result<Arc<dyn Executor>> {
         Ok(Arc::new(StepProgram::new(manifest, name,
-                                     Arc::new(SparseKernels))?))
+                                     Arc::new(self.kernels))?))
     }
 
     fn upload(&self, t: &HostTensor) -> Result<Value> {
@@ -79,6 +103,9 @@ mod tests {
         let m = Manifest::builtin_test();
         let be = SparseBackend::new();
         assert_eq!(be.name(), "sparse");
+        assert!(!be.kernels().microkernel().is_empty());
+        let scalar = SparseBackend::with_kernels(SparseKernels::scalar());
+        assert_eq!(scalar.kernels().microkernel(), "scalar");
         for name in ["mlpsyn_conv", "mlpsyn_rdp_2_2", "mlpsyn_tdp_2_2",
                      "lstmsyn_conv", "lstmsyn_rdp_2", "lstmsyn_tdp_2",
                      "mlpsyn_eval", "lstmsyn_eval"] {

@@ -13,10 +13,11 @@
 //!
 //! Kernels partition their **output** into disjoint index ranges, one per
 //! chunk, and every output element is computed entirely within its chunk
-//! with a fixed inner accumulation order. Which thread runs a chunk (and
-//! how many threads exist) therefore cannot change any result bit —
-//! `AD_THREADS=1` and `AD_THREADS=64` produce identical buffers, which
-//! `rust/tests/sparse_kernels.rs` pins.
+//! with a fixed inner accumulation order (fixed per process — the
+//! microkernel selection is pinned once; see `sparse::simd`). Which
+//! thread runs a chunk (and how many threads exist) therefore cannot
+//! change any result bit — `AD_THREADS=1` and `AD_THREADS=64` produce
+//! identical buffers, which `rust/tests/sparse_kernels.rs` pins.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};

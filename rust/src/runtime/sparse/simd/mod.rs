@@ -1,0 +1,286 @@
+//! SIMD microkernel layer under the structured-sparse kernel library.
+//!
+//! The sparse kernels (`sparse::kernels`) express every inner loop
+//! through three primitive operations on contiguous f32 runs — the
+//! [`Microkernel`] contract:
+//!
+//! * `axpy`      — `y[i] += a * x[i]` (rank-1 panel update),
+//! * `axpy2`     — `y[i] += a0 * x0[i] + a1 * x1[i]` (rank-2 fusion:
+//!   one load/store of `y` per two panel rows),
+//! * `dot_acc`   — `init + Σ x[i] * y[i]` (inner product with a carried
+//!   accumulator, so tile-segment walks keep one running sum).
+//!
+//! Three implementations ship, selected **once per process**:
+//!
+//! * **avx2** (`x86.rs`) — 8-lane AVX2 + FMA, 2x unrolled (16 floats per
+//!   iteration), runtime-detected via `is_x86_feature_detected!`.
+//! * **neon** (`neon.rs`) — 4-lane NEON FMA, 2x unrolled (8 floats per
+//!   iteration), on aarch64.
+//! * **scalar** (`scalar.rs`) — portable unrolled loops whose
+//!   accumulation order is **bit-compatible with `DenseKernels`**: plain
+//!   mul-then-add, strictly ascending index order, single accumulator.
+//!
+//! ## Determinism contract
+//!
+//! Selection happens once (env + CPUID) and never changes within a
+//! process, every implementation uses a fixed lane/unroll/reduction
+//! order, and the sparse kernels partition outputs disjointly — so
+//! results are bit-stable across repetitions, across `AD_THREADS`
+//! values, and across calls. Across *implementations* results differ in
+//! float rounding only (FMA fuses the multiply-add; vector dot products
+//! reduce lanes in a fixed but different association): the SIMD-vs-scalar
+//! property suite (`rust/tests/sparse_kernels.rs`) bounds the difference
+//! at 1e-5 relative, the same contractual tolerance the hermetic
+//! cross-backend parity tests enforce.
+//!
+//! ## The `AD_SIMD` knob
+//!
+//! * unset / `on` / `auto` / `1` — use the best microkernel this CPU
+//!   supports (AVX2+FMA on x86_64, NEON on aarch64), scalar otherwise.
+//! * `off` / `scalar` / `0` — force the portable scalar microkernels
+//!   (the escape hatch; also the bit-exact-vs-reference configuration).
+//! * anything else — loud warning, then the same default as unset.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+pub mod scalar;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+type AxpyFn = unsafe fn(a: f32, x: *const f32, y: *mut f32, n: usize);
+type Axpy2Fn = unsafe fn(a0: f32, x0: *const f32, a1: f32,
+                         x1: *const f32, y: *mut f32, n: usize);
+type DotAccFn = unsafe fn(init: f32, x: *const f32, y: *const f32,
+                          n: usize) -> f32;
+
+/// One microkernel implementation: raw-pointer primitives plus the name
+/// reports/logs carry. Constructed only by this module, and only for
+/// implementations whose CPU features were verified first — that check
+/// is what makes the safe wrapper methods sound.
+pub struct Microkernel {
+    pub name: &'static str,
+    axpy: AxpyFn,
+    axpy2: Axpy2Fn,
+    dot_acc: DotAccFn,
+}
+
+impl std::fmt::Debug for Microkernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Microkernel").field("name", &self.name).finish()
+    }
+}
+
+impl Microkernel {
+    /// `y[i] += a * x[i]` over `min(x.len(), y.len())` elements.
+    #[inline]
+    pub fn axpy(&self, a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: n is within both slices; the implementation's CPU
+        // features were runtime-verified before this value was built.
+        unsafe { (self.axpy)(a, x.as_ptr(), y.as_mut_ptr(), n) }
+    }
+
+    /// `y[i] += a0 * x0[i] + a1 * x1[i]` — bit-identical to
+    /// `axpy(a0, x0, y); axpy(a1, x1, y)` in every implementation (the
+    /// fusion only saves the intermediate load/store of `y`).
+    #[inline]
+    pub fn axpy2(&self, a0: f32, x0: &[f32], a1: f32, x1: &[f32],
+                 y: &mut [f32]) {
+        let n = x0.len().min(x1.len()).min(y.len());
+        debug_assert_eq!(x0.len(), y.len());
+        debug_assert_eq!(x1.len(), y.len());
+        // SAFETY: as in `axpy`.
+        unsafe {
+            (self.axpy2)(a0, x0.as_ptr(), a1, x1.as_ptr(),
+                         y.as_mut_ptr(), n)
+        }
+    }
+
+    /// `init + Σ x[i] * y[i]` over `min(x.len(), y.len())` elements.
+    #[inline]
+    pub fn dot_acc(&self, init: f32, x: &[f32], y: &[f32]) -> f32 {
+        let n = x.len().min(y.len());
+        debug_assert_eq!(x.len(), y.len());
+        // SAFETY: as in `axpy`.
+        unsafe { (self.dot_acc)(init, x.as_ptr(), y.as_ptr(), n) }
+    }
+}
+
+/// The portable scalar microkernels (always available; accumulation
+/// order bit-compatible with `DenseKernels`).
+pub fn scalar() -> &'static Microkernel {
+    &scalar::SCALAR
+}
+
+/// The best SIMD microkernel this CPU supports, if any. Runtime feature
+/// detection — a binary built for generic x86_64 still uses AVX2+FMA on
+/// CPUs that have them, and falls back to scalar on CPUs that don't.
+#[cfg(target_arch = "x86_64")]
+pub fn detected() -> Option<&'static Microkernel> {
+    if std::arch::is_x86_feature_detected!("avx2")
+        && std::arch::is_x86_feature_detected!("fma")
+    {
+        Some(&x86::AVX2)
+    } else {
+        None
+    }
+}
+
+/// The best SIMD microkernel this CPU supports, if any.
+#[cfg(target_arch = "aarch64")]
+pub fn detected() -> Option<&'static Microkernel> {
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        Some(&neon::NEON)
+    } else {
+        None
+    }
+}
+
+/// No SIMD microkernels on other architectures.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn detected() -> Option<&'static Microkernel> {
+    None
+}
+
+/// What an `AD_SIMD` value asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Use `detected()`, falling back to scalar.
+    Auto,
+    /// Force the scalar microkernels.
+    Off,
+}
+
+/// Parse one `AD_SIMD` value (`None` = unset). Unknown values warn
+/// loudly and behave like unset — a typo must not silently change which
+/// math runs.
+pub fn parse_mode(v: Option<&str>) -> SimdMode {
+    match v.map(str::trim) {
+        None | Some("") => SimdMode::Auto,
+        Some(s) => match s.to_ascii_lowercase().as_str() {
+            "on" | "auto" | "1" | "true" => SimdMode::Auto,
+            "off" | "scalar" | "0" | "false" => SimdMode::Off,
+            other => {
+                crate::warn_!("AD_SIMD='{other}' is not one of \
+                               on|auto|off|scalar; using auto-detection \
+                               (same as unset)");
+                SimdMode::Auto
+            }
+        },
+    }
+}
+
+/// The process-wide microkernel selection: `AD_SIMD` + CPU detection,
+/// resolved once on first use and cached — a process never mixes
+/// microkernels behind one backend, which is what keeps repeated steps
+/// bit-stable.
+pub fn active() -> &'static Microkernel {
+    static ACTIVE: OnceLock<&'static Microkernel> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let mk = match parse_mode(std::env::var("AD_SIMD").ok().as_deref())
+        {
+            SimdMode::Off => scalar(),
+            SimdMode::Auto => detected().unwrap_or_else(scalar),
+        };
+        crate::debug!("sparse microkernel: {}", mk.name);
+        mk
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(parse_mode(None), SimdMode::Auto);
+        assert_eq!(parse_mode(Some("")), SimdMode::Auto);
+        assert_eq!(parse_mode(Some("  ")), SimdMode::Auto);
+        assert_eq!(parse_mode(Some("on")), SimdMode::Auto);
+        assert_eq!(parse_mode(Some("AUTO")), SimdMode::Auto);
+        assert_eq!(parse_mode(Some("1")), SimdMode::Auto);
+        assert_eq!(parse_mode(Some("off")), SimdMode::Off);
+        assert_eq!(parse_mode(Some("Scalar")), SimdMode::Off);
+        assert_eq!(parse_mode(Some("0")), SimdMode::Off);
+        // Unknown values fall back to auto (with a warning).
+        assert_eq!(parse_mode(Some("fast")), SimdMode::Auto);
+    }
+
+    #[test]
+    fn scalar_always_available_and_active_is_stable() {
+        assert_eq!(scalar().name, "scalar");
+        // Whatever `active()` resolves to, it resolves to the same
+        // implementation every time (process-wide pin).
+        let a = active();
+        let b = active();
+        assert!(std::ptr::eq(a, b));
+    }
+
+    #[test]
+    fn scalar_ops_basics() {
+        let mk = scalar();
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [10.0f32, 20.0, 30.0];
+        mk.axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0, 36.0]);
+        let x1 = [1.0f32, 1.0, 1.0];
+        mk.axpy2(1.0, &x, -1.0, &x1, &mut y);
+        assert_eq!(y, [12.0, 25.0, 38.0]);
+        assert_eq!(mk.dot_acc(0.5, &x, &x1), 0.5 + 6.0);
+        // Empty runs are no-ops.
+        mk.axpy(3.0, &[], &mut []);
+        assert_eq!(mk.dot_acc(1.25, &[], &[]), 1.25);
+    }
+
+    #[test]
+    fn detected_simd_matches_scalar_on_small_cases() {
+        let Some(simd) = detected() else {
+            eprintln!("SKIP: no SIMD microkernel on this CPU");
+            return;
+        };
+        assert_ne!(simd.name, "scalar");
+        let n = 37; // crosses the vector width + leaves a scalar tail
+        let x: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let z: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let mut y0: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+        let mut y1 = y0.clone();
+        scalar::SCALAR.axpy(1.5, &x, &mut y0);
+        simd.axpy(1.5, &x, &mut y1);
+        for (a, b) in y0.iter().zip(&y1) {
+            assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0),
+                    "{a} vs {b}");
+        }
+        let d0 = scalar::SCALAR.dot_acc(0.25, &x, &z);
+        let d1 = simd.dot_acc(0.25, &x, &z);
+        assert!((d0 - d1).abs() <= 1e-5 * d0.abs().max(1.0),
+                "{d0} vs {d1}");
+        // axpy2 == two axpys, bit-identical, in every implementation.
+        let mut via_two = y1.clone();
+        simd.axpy(0.5, &x, &mut via_two);
+        simd.axpy(-0.25, &z, &mut via_two);
+        let mut fused = y1.clone();
+        simd.axpy2(0.5, &x, -0.25, &z, &mut fused);
+        assert_eq!(via_two, fused);
+    }
+
+    #[test]
+    fn simd_results_bit_stable_across_reps() {
+        let mk = active();
+        let n = 133;
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 0.7).sin()).collect();
+        let z: Vec<f32> = (0..n).map(|i| (i as f32 * 0.3).cos()).collect();
+        let runs: Vec<u32> = (0..3)
+            .map(|_| mk.dot_acc(1.0, &x, &z).to_bits())
+            .collect();
+        assert_eq!(runs[0], runs[1]);
+        assert_eq!(runs[0], runs[2]);
+        let mut y0 = vec![0.5f32; n];
+        let mut y1 = vec![0.5f32; n];
+        mk.axpy2(0.3, &x, 0.9, &z, &mut y0);
+        mk.axpy2(0.3, &x, 0.9, &z, &mut y1);
+        assert_eq!(y0, y1);
+    }
+}

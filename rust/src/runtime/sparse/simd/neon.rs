@@ -1,0 +1,133 @@
+//! NEON microkernels (aarch64). 4 f32 lanes, 2x unrolled — 8 elements
+//! per iteration — with `vfmaq` doing the multiply-add in one rounding.
+//! NEON is architecturally mandatory on aarch64, but selection still
+//! goes through `is_aarch64_feature_detected!` (see `simd::detected`)
+//! so the safety argument is uniform across arches.
+//!
+//! Determinism mirrors the AVX2 implementation: fixed lane/unroll
+//! order, fixed `dot_acc` reduction order, `mul_add` scalar tails.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::aarch64::{
+    vaddq_f32, vdupq_n_f32, vfmaq_f32, vld1q_f32, vst1q_f32,
+};
+
+use super::Microkernel;
+
+pub static NEON: Microkernel = Microkernel {
+    name: "neon",
+    axpy: axpy_shim,
+    axpy2: axpy2_shim,
+    dot_acc: dot_acc_shim,
+};
+
+// Plain `unsafe fn` shims — same rationale as in `x86.rs`.
+
+/// # Safety
+/// As [`axpy`].
+unsafe fn axpy_shim(a: f32, x: *const f32, y: *mut f32, n: usize) {
+    axpy(a, x, y, n)
+}
+
+/// # Safety
+/// As [`axpy2`].
+unsafe fn axpy2_shim(a0: f32, x0: *const f32, a1: f32, x1: *const f32,
+                     y: *mut f32, n: usize) {
+    axpy2(a0, x0, a1, x1, y, n)
+}
+
+/// # Safety
+/// As [`dot_acc`].
+unsafe fn dot_acc_shim(init: f32, x: *const f32, y: *const f32, n: usize)
+                       -> f32 {
+    dot_acc(init, x, y, n)
+}
+
+const W: usize = 4;
+
+/// `y[i] += a * x[i]` — each element gets `fma(a, x[i], y[i])`.
+///
+/// # Safety
+/// `x`/`y` valid for `n` reads / read-writes; NEON present.
+#[target_feature(enable = "neon")]
+unsafe fn axpy(a: f32, x: *const f32, y: *mut f32, n: usize) {
+    let va = vdupq_n_f32(a);
+    let mut i = 0;
+    while i + 2 * W <= n {
+        let y0 = vfmaq_f32(vld1q_f32(y.add(i)), va, vld1q_f32(x.add(i)));
+        let y1 = vfmaq_f32(vld1q_f32(y.add(i + W)), va,
+                           vld1q_f32(x.add(i + W)));
+        vst1q_f32(y.add(i), y0);
+        vst1q_f32(y.add(i + W), y1);
+        i += 2 * W;
+    }
+    if i + W <= n {
+        let y0 = vfmaq_f32(vld1q_f32(y.add(i)), va, vld1q_f32(x.add(i)));
+        vst1q_f32(y.add(i), y0);
+        i += W;
+    }
+    while i < n {
+        *y.add(i) = a.mul_add(*x.add(i), *y.add(i));
+        i += 1;
+    }
+}
+
+/// `y[i] += a0 * x0[i] + a1 * x1[i]` as nested FMAs — bit-identical to
+/// two sequential `axpy` passes.
+///
+/// # Safety
+/// `x0`/`x1`/`y` valid for `n` reads / read-writes; NEON present.
+#[target_feature(enable = "neon")]
+unsafe fn axpy2(a0: f32, x0: *const f32, a1: f32, x1: *const f32,
+                y: *mut f32, n: usize) {
+    let v0 = vdupq_n_f32(a0);
+    let v1 = vdupq_n_f32(a1);
+    let mut i = 0;
+    while i + W <= n {
+        let t = vfmaq_f32(vld1q_f32(y.add(i)), v0, vld1q_f32(x0.add(i)));
+        let t = vfmaq_f32(t, v1, vld1q_f32(x1.add(i)));
+        vst1q_f32(y.add(i), t);
+        i += W;
+    }
+    while i < n {
+        let t = a0.mul_add(*x0.add(i), *y.add(i));
+        *y.add(i) = a1.mul_add(*x1.add(i), t);
+        i += 1;
+    }
+}
+
+/// `init + Σ x[i] * y[i]`: two independent 4-lane FMA accumulators,
+/// fixed-order reduction (acc0 + acc1 elementwise, lanes 0..3 summed
+/// ascending onto `init`, scalar tail last).
+///
+/// # Safety
+/// `x`/`y` valid for `n` reads; NEON present.
+#[target_feature(enable = "neon")]
+unsafe fn dot_acc(init: f32, x: *const f32, y: *const f32, n: usize)
+                  -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut i = 0;
+    while i + 2 * W <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(x.add(i)), vld1q_f32(y.add(i)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(x.add(i + W)),
+                         vld1q_f32(y.add(i + W)));
+        i += 2 * W;
+    }
+    if i + W <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(x.add(i)), vld1q_f32(y.add(i)));
+        i += W;
+    }
+    let mut lanes = [0f32; W];
+    vst1q_f32(lanes.as_mut_ptr(), vaddq_f32(acc0, acc1));
+    let mut acc = init;
+    for l in lanes {
+        acc += l;
+    }
+    while i < n {
+        acc = (*x.add(i)).mul_add(*y.add(i), acc);
+        i += 1;
+    }
+    acc
+}

@@ -1,0 +1,114 @@
+//! Portable scalar microkernels — the fallback every build carries and
+//! the `AD_SIMD=off` escape hatch.
+//!
+//! Bit-compatibility contract: these loops perform exactly the
+//! operations the pre-SIMD sparse kernels (and `DenseKernels`) perform —
+//! plain multiply-then-add (never `mul_add`: fusing would change
+//! rounding), strictly ascending index order, one accumulator — so a
+//! scalar-microkernel sparse backend reproduces the reference backend
+//! bit-for-bit wherever it did before. The unrolling below is safe for
+//! that contract: `axpy`/`axpy2` touch each output element independently
+//! (unroll order cannot change any result bit), and `dot_acc` keeps a
+//! single accumulator chain.
+
+use super::Microkernel;
+
+pub static SCALAR: Microkernel = Microkernel {
+    name: "scalar",
+    axpy,
+    axpy2,
+    dot_acc,
+};
+
+const UNROLL: usize = 8;
+
+/// `y[i] += a * x[i]`.
+///
+/// # Safety
+/// `x` and `y` must be valid for `n` reads / read-writes.
+unsafe fn axpy(a: f32, x: *const f32, y: *mut f32, n: usize) {
+    let x = std::slice::from_raw_parts(x, n);
+    let y = std::slice::from_raw_parts_mut(y, n);
+    let mut chunks_x = x.chunks_exact(UNROLL);
+    let mut chunks_y = y.chunks_exact_mut(UNROLL);
+    for (cx, cy) in (&mut chunks_x).zip(&mut chunks_y) {
+        for (o, &v) in cy.iter_mut().zip(cx) {
+            *o += a * v;
+        }
+    }
+    for (o, &v) in chunks_y.into_remainder().iter_mut()
+        .zip(chunks_x.remainder())
+    {
+        *o += a * v;
+    }
+}
+
+/// `y[i] += a0 * x0[i] + a1 * x1[i]`, as two adds per element (the exact
+/// result of two sequential `axpy` passes).
+///
+/// # Safety
+/// `x0`, `x1`, `y` must be valid for `n` reads / read-writes.
+unsafe fn axpy2(a0: f32, x0: *const f32, a1: f32, x1: *const f32,
+                y: *mut f32, n: usize) {
+    let x0 = std::slice::from_raw_parts(x0, n);
+    let x1 = std::slice::from_raw_parts(x1, n);
+    let y = std::slice::from_raw_parts_mut(y, n);
+    for i in 0..n {
+        let v = y[i] + a0 * x0[i];
+        y[i] = v + a1 * x1[i];
+    }
+}
+
+/// `init + Σ x[i] * y[i]` with one sequential accumulator chain.
+///
+/// # Safety
+/// `x` and `y` must be valid for `n` reads.
+unsafe fn dot_acc(init: f32, x: *const f32, y: *const f32, n: usize)
+                  -> f32 {
+    let x = std::slice::from_raw_parts(x, n);
+    let y = std::slice::from_raw_parts(y, n);
+    let mut acc = init;
+    let mut cx = x.chunks_exact(UNROLL);
+    let mut cy = y.chunks_exact(UNROLL);
+    for (a, b) in (&mut cx).zip(&mut cy) {
+        for (&u, &v) in a.iter().zip(b) {
+            acc += u * v;
+        }
+    }
+    for (&u, &v) in cx.remainder().iter().zip(cy.remainder()) {
+        acc += u * v;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_naive_loops_bitwise() {
+        let n = 21; // crosses the unroll width + tail
+        let x: Vec<f32> = (0..n).map(|i| (i as f32 * 1.3).sin()).collect();
+        let z: Vec<f32> = (0..n).map(|i| (i as f32 * 0.9).cos()).collect();
+        let mut y: Vec<f32> = (0..n).map(|i| i as f32 * 0.1).collect();
+        let mut want = y.clone();
+        for (o, &v) in want.iter_mut().zip(&x) {
+            *o += 0.75 * v;
+        }
+        SCALAR.axpy(0.75, &x, &mut y);
+        assert_eq!(y, want);
+
+        let mut naive = 0.5f32;
+        for (&u, &v) in x.iter().zip(&z) {
+            naive += u * v;
+        }
+        assert_eq!(SCALAR.dot_acc(0.5, &x, &z), naive);
+
+        let mut via_two = y.clone();
+        SCALAR.axpy(0.2, &x, &mut via_two);
+        SCALAR.axpy(-0.4, &z, &mut via_two);
+        let mut fused = y.clone();
+        SCALAR.axpy2(0.2, &x, -0.4, &z, &mut fused);
+        assert_eq!(via_two, fused);
+    }
+}

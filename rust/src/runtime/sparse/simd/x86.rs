@@ -1,0 +1,146 @@
+//! AVX2 + FMA microkernels (x86_64). 8 f32 lanes, 2x unrolled — 16
+//! elements per iteration — with `vfmadd` doing the multiply-add in one
+//! rounding. Selected only after `is_x86_feature_detected!("avx2")` and
+//! `("fma")` both pass (see `simd::detected`), which is the safety
+//! argument for every `#[target_feature]` call below.
+//!
+//! Determinism: lane assignment, unroll factor, and the horizontal
+//! reduction order in `dot_acc` are fixed, so results are bit-stable
+//! across calls, repetitions, and thread counts. The scalar tails use
+//! `mul_add` so tail elements get the same fused rounding the vector
+//! body gets.
+
+#![allow(unsafe_op_in_unsafe_fn)]
+
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_set1_ps,
+    _mm256_setzero_ps, _mm256_storeu_ps,
+};
+
+use super::Microkernel;
+
+pub static AVX2: Microkernel = Microkernel {
+    name: "avx2",
+    axpy: axpy_shim,
+    axpy2: axpy2_shim,
+    dot_acc: dot_acc_shim,
+};
+
+// Plain `unsafe fn` shims: fn-pointer coercion rules for
+// `#[target_feature]` items vary across toolchains, so the statics point
+// here and these forward one call deeper (the pointer call already
+// prevents inlining; the shim adds a single direct jump).
+
+/// # Safety
+/// As [`axpy`].
+unsafe fn axpy_shim(a: f32, x: *const f32, y: *mut f32, n: usize) {
+    axpy(a, x, y, n)
+}
+
+/// # Safety
+/// As [`axpy2`].
+unsafe fn axpy2_shim(a0: f32, x0: *const f32, a1: f32, x1: *const f32,
+                     y: *mut f32, n: usize) {
+    axpy2(a0, x0, a1, x1, y, n)
+}
+
+/// # Safety
+/// As [`dot_acc`].
+unsafe fn dot_acc_shim(init: f32, x: *const f32, y: *const f32, n: usize)
+                       -> f32 {
+    dot_acc(init, x, y, n)
+}
+
+const W: usize = 8;
+
+/// `y[i] += a * x[i]` — each element gets `fma(a, x[i], y[i])`.
+///
+/// # Safety
+/// `x`/`y` valid for `n` reads / read-writes; AVX2+FMA present.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy(a: f32, x: *const f32, y: *mut f32, n: usize) {
+    let va = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + 2 * W <= n {
+        let y0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(x.add(i)),
+                                 _mm256_loadu_ps(y.add(i)));
+        let y1 = _mm256_fmadd_ps(va, _mm256_loadu_ps(x.add(i + W)),
+                                 _mm256_loadu_ps(y.add(i + W)));
+        _mm256_storeu_ps(y.add(i), y0);
+        _mm256_storeu_ps(y.add(i + W), y1);
+        i += 2 * W;
+    }
+    if i + W <= n {
+        let y0 = _mm256_fmadd_ps(va, _mm256_loadu_ps(x.add(i)),
+                                 _mm256_loadu_ps(y.add(i)));
+        _mm256_storeu_ps(y.add(i), y0);
+        i += W;
+    }
+    while i < n {
+        *y.add(i) = a.mul_add(*x.add(i), *y.add(i));
+        i += 1;
+    }
+}
+
+/// `y[i] += a0 * x0[i] + a1 * x1[i]` as nested FMAs — bit-identical to
+/// two sequential `axpy` passes.
+///
+/// # Safety
+/// `x0`/`x1`/`y` valid for `n` reads / read-writes; AVX2+FMA present.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn axpy2(a0: f32, x0: *const f32, a1: f32, x1: *const f32,
+                y: *mut f32, n: usize) {
+    let v0 = _mm256_set1_ps(a0);
+    let v1 = _mm256_set1_ps(a1);
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm256_fmadd_ps(v0, _mm256_loadu_ps(x0.add(i)),
+                                _mm256_loadu_ps(y.add(i)));
+        let t = _mm256_fmadd_ps(v1, _mm256_loadu_ps(x1.add(i)), t);
+        _mm256_storeu_ps(y.add(i), t);
+        i += W;
+    }
+    while i < n {
+        let t = a0.mul_add(*x0.add(i), *y.add(i));
+        *y.add(i) = a1.mul_add(*x1.add(i), t);
+        i += 1;
+    }
+}
+
+/// `init + Σ x[i] * y[i]`: two independent 8-lane FMA accumulators over
+/// the body, then a fixed-order reduction (acc0 + acc1 elementwise, lanes
+/// 0..7 summed ascending onto `init`, scalar tail last).
+///
+/// # Safety
+/// `x`/`y` valid for `n` reads; AVX2+FMA present.
+#[target_feature(enable = "avx2,fma")]
+unsafe fn dot_acc(init: f32, x: *const f32, y: *const f32, n: usize)
+                  -> f32 {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + 2 * W <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(x.add(i)),
+                               _mm256_loadu_ps(y.add(i)), acc0);
+        acc1 = _mm256_fmadd_ps(_mm256_loadu_ps(x.add(i + W)),
+                               _mm256_loadu_ps(y.add(i + W)), acc1);
+        i += 2 * W;
+    }
+    if i + W <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(x.add(i)),
+                               _mm256_loadu_ps(y.add(i)), acc0);
+        i += W;
+    }
+    let mut lanes = [0f32; W];
+    _mm256_storeu_ps(lanes.as_mut_ptr(),
+                     _mm256_add_ps(acc0, acc1));
+    let mut acc = init;
+    for l in lanes {
+        acc += l;
+    }
+    while i < n {
+        acc = (*x.add(i)).mul_add(*y.add(i), acc);
+        i += 1;
+    }
+    acc
+}

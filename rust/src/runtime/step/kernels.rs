@@ -27,10 +27,13 @@
 //!
 //! Exact-zero skipping is value-preserving: the dense path accumulates the
 //! dropped coordinates as `acc += x * 0.0`, an exact no-op in IEEE f32 (up
-//! to the sign of a zero total), and both shipped implementations
-//! accumulate the shared dimension in ascending index order — so reference
-//! and sparse agree far tighter than the 1e-5 relative tolerance the
-//! parity suite (`rust/tests/hermetic.rs`) enforces.
+//! to the sign of a zero total). With scalar microkernels
+//! (`AD_SIMD=off`) the sparse implementation accumulates the shared
+//! dimension in the same ascending order as the dense loops, so
+//! reference and sparse agree far tighter than the 1e-5 relative
+//! tolerance the parity suite (`rust/tests/hermetic.rs`) enforces; the
+//! SIMD microkernels (fused multiply-add, fixed-order lane reductions —
+//! see `runtime::sparse::simd`) stay within that same 1e-5 contract.
 
 use crate::patterns::{RowPattern, TilePattern};
 

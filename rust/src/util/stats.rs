@@ -21,12 +21,22 @@ pub fn stddev(xs: &[f64]) -> f64 {
 }
 
 /// p-th percentile (0..=100) by linear interpolation on a sorted copy.
+///
+/// NaN samples are dropped before ranking: one bad measurement (a failed
+/// timer read, a 0/0 rate) must not kill a whole bench run — this used
+/// to sort with `partial_cmp(..).unwrap()`, which panics on the first
+/// NaN comparison. All-NaN input returns NaN (the honest answer); empty
+/// input stays 0.0 for backwards compatibility.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    let mut s = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut s: Vec<f64> =
+        xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if s.is_empty() {
+        return f64::NAN;
+    }
+    s.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -42,7 +52,7 @@ pub fn median(xs: &[f64]) -> f64 {
 }
 
 /// Median absolute deviation (robust spread), scaled for normal
-/// consistency (x1.4826).
+/// consistency (x1.4826). NaN samples are ignored, like [`percentile`].
 pub fn mad(xs: &[f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
@@ -161,5 +171,23 @@ mod tests {
         assert_eq!(median(&[]), 0.0);
         assert_eq!(mad(&[]), 0.0);
         assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn nan_samples_do_not_panic_and_are_ignored() {
+        // Regression: the sort used `partial_cmp(..).unwrap()`, so a
+        // single NaN timing sample panicked the whole bench report.
+        let xs = [3.0, f64::NAN, 1.0, 2.0, f64::NAN, 4.0];
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        // MAD over the finite samples, NaNs dropped at both levels.
+        let clean = [3.0, 1.0, 2.0, 4.0];
+        assert_eq!(mad(&xs), mad(&clean));
+        // All-NaN input yields NaN, not a panic (and not a silent 0).
+        assert!(median(&[f64::NAN, f64::NAN]).is_nan());
+        // Infinities still rank (total order), no panic.
+        let inf = [1.0, f64::INFINITY, f64::NEG_INFINITY, 2.0];
+        assert_eq!(median(&inf), 1.5);
     }
 }

@@ -43,7 +43,7 @@ pub fn host_mlp_eval(params: &[Vec<f32>], x: &[f32], y: &[i32],
         let argmax = logits
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .unwrap()
             .0;
         if argmax == y[bi] as usize {

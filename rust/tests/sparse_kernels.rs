@@ -3,10 +3,16 @@
 //! kernel applied to the correspondingly *masked* operands — the contract
 //! that lets one step program (`runtime::step`) run on either backend.
 //!
-//! Tolerances: the sparse kernels accumulate the shared dimension in the
-//! same ascending order as the dense loops and only skip exactly-zero
-//! contributions, so most comparisons here are `assert_eq` (bitwise), not
-//! epsilon checks.
+//! Tolerances: with the **scalar** microkernels
+//! (`SparseKernels::scalar()`, the `AD_SIMD=off` configuration) the
+//! sparse kernels accumulate the shared dimension in the same ascending
+//! order as the dense loops and only skip exactly-zero contributions, so
+//! most dense-parity comparisons here are `assert_eq` (bitwise), not
+//! epsilon checks. The **SIMD** microkernels (AVX2+FMA / NEON) fuse the
+//! multiply-add and reduce vector lanes in a fixed but different order,
+//! so the SIMD suite at the bottom asserts agreement with the scalar
+//! kernels within the 1e-5 relative contract instead — plus bitwise
+//! stability of the SIMD results across repetitions.
 
 use approx_dropout::patterns::{RowPattern, TilePattern};
 use approx_dropout::runtime::{DenseKernels, Kernels, Skip, SparseKernels};
@@ -39,6 +45,16 @@ fn gen_tile_dims(rng: &mut Rng) -> (usize, usize) {
                        (128, 32)])
 }
 
+/// Relative-tolerance comparison for the SIMD suite (and the tile-NT
+/// paths, whose segment reductions reassociate even in scalar mode).
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&x, &y)) in got.iter().zip(want).enumerate() {
+        assert!((x - y).abs() <= tol * x.abs().max(y.abs()).max(1.0),
+                "{what}[{i}]: {x} vs {y}");
+    }
+}
+
 #[test]
 fn gemm_row_skip_equals_dense_on_masked_activations() {
     testkit::quickcheck("gemm row-skip", |rng| {
@@ -51,8 +67,8 @@ fn gemm_row_skip_equals_dense_on_masked_activations() {
         let mut a = gen_vec_f32(rng, m * k, -1.0, 1.0);
         mask_cols(&mut a, m, k, &pat);
         let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
-        let got = SparseKernels.gemm(&a, &b, m, k, n, &Skip::Rows(pat),
-                                     &D);
+        let got = SparseKernels::scalar()
+            .gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
         let want = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
         assert_eq!(got, want, "m={m} k={k} n={n} dp={dp} b0={b0}");
     });
@@ -69,12 +85,13 @@ fn gemm_tile_skip_equals_dense_on_masked_weight() {
         let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
         let w = gen_vec_f32(rng, k * n, -1.0, 1.0);
         let skip = Skip::Tiles(pat);
+        let s = SparseKernels::scalar();
         // Dense kernels require the prepared (masked) weight; sparse
         // kernels take the raw one — that asymmetry IS the contract.
         let wm = DenseKernels.prep_weight(&w, k, n, &skip).unwrap();
         assert_eq!(wm, mask_tiles(&w, &pat));
-        assert!(SparseKernels.prep_weight(&w, k, n, &skip).is_none());
-        let got = SparseKernels.gemm(&a, &w, m, k, n, &skip, &D);
+        assert!(s.prep_weight(&w, k, n, &skip).is_none());
+        let got = s.gemm(&a, &w, m, k, n, &skip, &D);
         let want = DenseKernels.gemm(&a, &wm, m, k, n, &skip, &D);
         assert_eq!(got, want, "k={k} n={n} dp={dp} b0={b0}");
     });
@@ -91,7 +108,8 @@ fn gemm_out_skip_computes_kept_columns_only() {
         let q = RowPattern::new(n, dp, b0);
         let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
         let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
-        let got = SparseKernels.gemm(&a, &b, m, k, n, &D, &Skip::Rows(q));
+        let got = SparseKernels::scalar()
+            .gemm(&a, &b, m, k, n, &D, &Skip::Rows(q));
         let full = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
         for i in 0..m {
             for j in 0..n {
@@ -118,7 +136,8 @@ fn gemm_nt_row_and_tile_skips_match_dense() {
         let q = RowPattern::new(k, dp, b0);
         let a = gen_vec_f32(rng, m * n, -1.0, 1.0);
         let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
-        let got = SparseKernels.gemm_nt(&a, &b, m, n, k, &Skip::Rows(q));
+        let s = SparseKernels::scalar();
+        let got = s.gemm_nt(&a, &b, m, n, k, &Skip::Rows(q));
         let full = DenseKernels.gemm_nt(&a, &b, m, n, k, &D);
         for i in 0..m {
             for j in 0..k {
@@ -135,14 +154,10 @@ fn gemm_nt_row_and_tile_skips_match_dense() {
         let pat = TilePattern::new(tk2, tn2, dp, b0, 16);
         let a2 = gen_vec_f32(rng, m * tn2, -1.0, 1.0);
         let w = gen_vec_f32(rng, tk2 * tn2, -1.0, 1.0);
-        let got = SparseKernels.gemm_nt(&a2, &w, m, tn2, tk2,
-                                        &Skip::Tiles(pat));
+        let got = s.gemm_nt(&a2, &w, m, tn2, tk2, &Skip::Tiles(pat));
         let want = DenseKernels.gemm_nt(&a2, &mask_tiles(&w, &pat), m,
                                         tn2, tk2, &D);
-        for (i, (&x, &y)) in got.iter().zip(&want).enumerate() {
-            assert!((x - y).abs() <= 1e-6 * x.abs().max(y.abs()).max(1.0),
-                    "nt tiles elem {i}: {x} vs {y}");
-        }
+        assert_close(&got, &want, 1e-6, "nt tiles");
     });
 }
 
@@ -162,17 +177,30 @@ fn gemm_tn_acc_freezes_dropped_rows_cols_and_tiles() {
         mask_cols(&mut b, m, n, &qc);
         let prior = 0.25f32;
         let mut got = vec![prior; k * n];
-        SparseKernels.gemm_tn_acc(&a, &b, m, k, n, &Skip::Rows(pr),
-                                  &Skip::Rows(qc), &mut got);
+        SparseKernels::scalar().gemm_tn_acc(&a, &b, m, k, n,
+                                            &Skip::Rows(pr),
+                                            &Skip::Rows(qc), &mut got);
         let mut want = vec![prior; k * n];
         DenseKernels.gemm_tn_acc(&a, &b, m, k, n, &D, &D, &mut want);
         assert_eq!(got, want);
         // Dropped gradient rows keep their prior value bit-for-bit (the
-        // momentum/param freeze invariant).
+        // momentum/param freeze invariant) — under EVERY microkernel:
+        // the SIMD panels must never write a dropped row either.
+        let mut simd_out = None;
+        if let Some(s) = SparseKernels::simd() {
+            let mut out = vec![prior; k * n];
+            s.gemm_tn_acc(&a, &b, m, k, n, &Skip::Rows(pr),
+                          &Skip::Rows(qc), &mut out);
+            simd_out = Some(out);
+        }
         for p in 0..k {
             if !pr.keeps(p) {
                 for j in 0..n {
                     assert_eq!(got[p * n + j], prior);
+                    if let Some(out) = &simd_out {
+                        assert_eq!(out[p * n + j], prior,
+                                   "SIMD wrote dropped row {p}");
+                    }
                 }
             }
         }
@@ -191,7 +219,8 @@ fn gemm_tn_acc_tiles_matches_dense_masked_accumulation() {
         let b = gen_vec_f32(rng, m * n, -1.0, 1.0);
         let skip = Skip::Tiles(pat);
         let mut got = vec![1.5f32; k * n];
-        SparseKernels.gemm_tn_acc(&a, &b, m, k, n, &skip, &D, &mut got);
+        SparseKernels::scalar().gemm_tn_acc(&a, &b, m, k, n, &skip, &D,
+                                            &mut got);
         let mut want = vec![1.5f32; k * n];
         DenseKernels.gemm_tn_acc(&a, &b, m, k, n, &skip, &D, &mut want);
         assert_eq!(got, want);
@@ -218,7 +247,7 @@ fn gemv_is_the_single_row_gemm() {
         mask_cols(&mut x, 1, k, &pat);
         let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
         let skip = Skip::Rows(pat);
-        let got = SparseKernels.gemv(&x, &b, k, n, &skip, &D);
+        let got = SparseKernels::scalar().gemv(&x, &b, k, n, &skip, &D);
         let want = DenseKernels.gemm(&x, &b, 1, k, n, &D, &D);
         assert_eq!(got, want);
     });
@@ -235,15 +264,135 @@ fn parallel_path_matches_dense() {
     let mut a = gen_vec_f32(&mut rng, m * k, -1.0, 1.0);
     mask_cols(&mut a, m, k, &pat);
     let b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
-    let got = SparseKernels.gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
+    let s = SparseKernels::scalar();
+    let got = s.gemm(&a, &b, m, k, n, &Skip::Rows(pat), &D);
     let want = DenseKernels.gemm(&a, &b, m, k, n, &D, &D);
     assert_eq!(got, want);
 
     let b2 = gen_vec_f32(&mut rng, m * n, -1.0, 1.0);
     let mut got = vec![0f32; k * n];
-    SparseKernels.gemm_tn_acc(&a, &b2, m, k, n, &Skip::Rows(pat), &D,
-                              &mut got);
+    s.gemm_tn_acc(&a, &b2, m, k, n, &Skip::Rows(pat), &D, &mut got);
     let mut want = vec![0f32; k * n];
     DenseKernels.gemm_tn_acc(&a, &b2, m, k, n, &D, &D, &mut want);
     assert_eq!(got, want);
+}
+
+// ---------------------------------------------------------------------------
+// SIMD microkernel suite (skips loudly when the CPU has no SIMD)
+// ---------------------------------------------------------------------------
+
+/// The tentpole property: for randomized shapes, skips, and tilings,
+/// every kernel under the SIMD microkernels agrees with the scalar
+/// kernels within the 1e-5 relative contract, covering all four kernel
+/// entry points and all three skip families.
+#[test]
+fn simd_matches_scalar_on_randomized_shapes_skips_tilings() {
+    let Some(s) = SparseKernels::simd() else {
+        eprintln!("SKIP: no SIMD microkernel on this CPU \
+                   (simd_matches_scalar_on_randomized_shapes_skips_tilings)");
+        return;
+    };
+    let sc = SparseKernels::scalar();
+    assert_ne!(s.microkernel(), sc.microkernel());
+    testkit::quickcheck("simd vs scalar, all kernels", |rng| {
+        let m = gen_range(rng, 1, 12);
+        let dp = *gen_choice(rng, &[1usize, 2, 3, 4]);
+        let k = dp * gen_range(rng, 1, 20);
+        let n = gen_range(rng, 1, 48);
+        let b0 = gen_range(rng, 0, dp);
+        let pat = RowPattern::new(k, dp, b0);
+        let row_skip = Skip::Rows(pat);
+        let mut a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+        mask_cols(&mut a, m, k, &pat);
+        let b = gen_vec_f32(rng, k * n, -1.0, 1.0);
+
+        // GEMM, row-skip on the shared dim.
+        assert_close(&s.gemm(&a, &b, m, k, n, &row_skip, &D),
+                     &sc.gemm(&a, &b, m, k, n, &row_skip, &D),
+                     1e-5, "gemm rows");
+
+        // GEMM with kept-column packing on the output.
+        let dpo = *gen_choice(rng, &[2usize, 4]);
+        let no = dpo * gen_range(rng, 1, 12);
+        let q = RowPattern::new(no, dpo, gen_range(rng, 0, dpo));
+        let bo = gen_vec_f32(rng, k * no, -1.0, 1.0);
+        assert_close(
+            &s.gemm(&a, &bo, m, k, no, &row_skip, &Skip::Rows(q)),
+            &sc.gemm(&a, &bo, m, k, no, &row_skip, &Skip::Rows(q)),
+            1e-5, "gemm rows+cols");
+
+        // NT, output columns restricted.
+        let a2 = gen_vec_f32(rng, m * n, -1.0, 1.0);
+        let bt = gen_vec_f32(rng, k * n, -1.0, 1.0);
+        assert_close(&s.gemm_nt(&a2, &bt, m, n, k, &row_skip),
+                     &sc.gemm_nt(&a2, &bt, m, n, k, &row_skip),
+                     1e-5, "nt rows");
+
+        // TN accumulation onto a nonzero prior.
+        let b2 = gen_vec_f32(rng, m * n, -1.0, 1.0);
+        let mut got = vec![0.125f32; k * n];
+        let mut want = got.clone();
+        s.gemm_tn_acc(&a, &b2, m, k, n, &row_skip, &D, &mut got);
+        sc.gemm_tn_acc(&a, &b2, m, k, n, &row_skip, &D, &mut want);
+        assert_close(&got, &want, 1e-5, "tn rows");
+
+        // Tile-skip GEMM / NT / TN on a random tiling.
+        let (tk, tn) = gen_tile_dims(rng);
+        let dpt = *gen_choice(rng, &[2usize, 4]);
+        let tpat = TilePattern::new(tk, tn, dpt,
+                                    gen_range(rng, 0, dpt), 16);
+        let tskip = Skip::Tiles(tpat);
+        let at = gen_vec_f32(rng, m * tk, -1.0, 1.0);
+        let w = gen_vec_f32(rng, tk * tn, -1.0, 1.0);
+        assert_close(&s.gemm(&at, &w, m, tk, tn, &tskip, &D),
+                     &sc.gemm(&at, &w, m, tk, tn, &tskip, &D),
+                     1e-5, "gemm tiles");
+        let an = gen_vec_f32(rng, m * tn, -1.0, 1.0);
+        assert_close(&s.gemm_nt(&an, &w, m, tn, tk, &tskip),
+                     &sc.gemm_nt(&an, &w, m, tn, tk, &tskip),
+                     1e-5, "nt tiles");
+        let bn = gen_vec_f32(rng, m * tn, -1.0, 1.0);
+        let mut got = vec![0.5f32; tk * tn];
+        let mut want = got.clone();
+        s.gemm_tn_acc(&at, &bn, m, tk, tn, &tskip, &D, &mut got);
+        sc.gemm_tn_acc(&at, &bn, m, tk, tn, &tskip, &D, &mut want);
+        assert_close(&got, &want, 1e-5, "tn tiles");
+
+        // GEMV rides the same row-skip path.
+        let x1 = &a[..k];
+        assert_close(&s.gemv(x1, &b, k, n, &row_skip, &D),
+                     &sc.gemv(x1, &b, k, n, &row_skip, &D),
+                     1e-5, "gemv");
+    });
+}
+
+/// SIMD results are bit-stable across repetitions (the bench harness's
+/// precondition: rep-to-rep variance is time, never values).
+#[test]
+fn simd_results_bit_stable_across_reps() {
+    let Some(s) = SparseKernels::simd() else {
+        eprintln!("SKIP: no SIMD microkernel on this CPU \
+                   (simd_results_bit_stable_across_reps)");
+        return;
+    };
+    let mut rng = Rng::new(99);
+    let (m, k, n) = (16, 128, 96);
+    let pat = RowPattern::new(k, 2, 0);
+    let mut a = gen_vec_f32(&mut rng, m * k, -1.0, 1.0);
+    mask_cols(&mut a, m, k, &pat);
+    let b = gen_vec_f32(&mut rng, k * n, -1.0, 1.0);
+    let skip = Skip::Rows(pat);
+    let first = s.gemm(&a, &b, m, k, n, &skip, &D);
+    for rep in 0..3 {
+        let again = s.gemm(&a, &b, m, k, n, &skip, &D);
+        assert_eq!(first, again, "rep {rep} differed");
+    }
+    let tpat = TilePattern::new(128, 96, 2, 1, 16);
+    let w = gen_vec_f32(&mut rng, 128 * 96, -1.0, 1.0);
+    let a2 = gen_vec_f32(&mut rng, m * 96, -1.0, 1.0);
+    let first = s.gemm_nt(&a2, &w, m, 96, 128, &Skip::Tiles(tpat));
+    for rep in 0..3 {
+        let again = s.gemm_nt(&a2, &w, m, 96, 128, &Skip::Tiles(tpat));
+        assert_eq!(first, again, "nt rep {rep} differed");
+    }
 }

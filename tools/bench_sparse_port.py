@@ -495,11 +495,13 @@ def bench(out_path, steps, warm, seed=7):
         "provenance": (
             "tools/bench_sparse_port.py — numpy scale-model port of "
             "rust/benches/sparse_speedup.rs (loop iterations proportional "
-            "to touched MACs; no cargo toolchain in this container). "
-            "Regenerate natively with: cargo run --release --bin "
-            "sparse_speedup"),
+            "to touched MACs, modeling the SCALAR microkernels; no cargo "
+            "toolchain in this container). Regenerate natively with: "
+            "cargo run --release --bin sparse_speedup, then install via "
+            "tools/check_bench_regression.py --refresh-baseline"),
         "backend": "sparse",
         "threads": 1,
+        "microkernel": "scalar",
         "smoke": False,
         "reps": steps,
         "support": [1, 2, 4],
@@ -571,6 +573,7 @@ def bench(out_path, steps, warm, seed=7):
                     "rate": rate,
                     "config": label,
                     "variant": variant,
+                    "microkernel": "scalar",
                     "reps": steps,
                     "speedup_vs_dense": round(speedup, 4),
                 }
