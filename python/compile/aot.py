@@ -177,7 +177,12 @@ def lstm_artifacts(arch: model.LstmArch, dps, variants=("conv", "eval",
         out.append(ArtifactSpec(f"{tag}_eval", model.lstm_eval(arch), ins,
                                 outs, {**meta, "variant": "eval", "dp": []}))
     for dp in dps:
-        extras = ([_b0(i) for i in range(L)]
+        # LSTM bias extras are [seq] int32 *tracks* (one bias per
+        # timestep), unlike the MLP's scalars: the coordinator re-draws
+        # the bias every AD_TIME_WINDOW timesteps and a constant track
+        # reproduces the legacy per-step behaviour bit-for-bit.
+        extras = ([TensorSpec(f"b0_{i}", (arch.seq,), "i32", "bias")
+                   for i in range(L)]
                   + [TensorSpec(f"scale{i}", (), "f32", "scale")
                      for i in range(L)])
         if "rdp" in variants:

@@ -17,11 +17,15 @@ Variant extras:
 * ``conv`` — per-dropout-site Bernoulli 0/1 masks (generated host-side by
   the Rust coordinator, exactly like Caffe's cuRAND masks) followed by
   their 1/keep scales (f32 scalars).
-* ``rdp``  — one int32 bias scalar ``b0`` per dropout site; the divisor
-  ``dp`` is baked into the graph (it determines the compact shapes, which
-  is the whole point: a *regular* pattern makes the smaller static graph
-  legal — see DESIGN.md section 2).
-* ``tdp``  — one int32 bias scalar per dropped weight matrix.
+* ``rdp``  — int32 bias ``b0`` per dropout site; the divisor ``dp`` is
+  baked into the graph (it determines the compact shapes, which is the
+  whole point: a *regular* pattern makes the smaller static graph legal —
+  see DESIGN.md section 2). MLP sites take a scalar; LSTM sites take a
+  ``[seq]`` track (one bias per timestep) so the coordinator can re-draw
+  the bias every ``AD_TIME_WINDOW`` timesteps. A constant track reproduces
+  the per-step behaviour bit-for-bit.
+* ``tdp``  — int32 bias per dropped weight matrix, same scalar-vs-track
+  split as ``rdp``.
 """
 
 from __future__ import annotations
@@ -265,9 +269,12 @@ def _unpack_lstm(params, layers):
 def _lstm_loss(arch: LstmArch, params, x, y, input_mms, soft_fn):
     """Shared scan skeleton.
 
-    input_mms[l](inp) -> [B, 4H]: the layer-l *input* contribution to the
-    gates (this is where each dropout variant plugs in its transform of the
-    previous layer's output — masked, row-compacted, or tile-sparse).
+    input_mms[l](inp, t) -> [B, 4H]: the layer-l *input* contribution to
+    the gates (this is where each dropout variant plugs in its transform of
+    the previous layer's output — masked, row-compacted, or tile-sparse).
+    ``t`` is the traced timestep index, so variants with per-timestep
+    pattern tracks (rdp/tdp time windows) can index their ``[seq]`` bias
+    inside the scan; variants with per-step state ignore it.
     soft_fn(flat, wsoft) -> logits for the top-layer outputs.
     """
     emb, cells, wsoft, bsoft = _unpack_lstm(params, arch.layers)
@@ -277,12 +284,13 @@ def _lstm_loss(arch: LstmArch, params, x, y, input_mms, soft_fn):
     h0 = jnp.zeros((arch.layers, b, arch.hidden), e.dtype)
     c0 = jnp.zeros((arch.layers, b, arch.hidden), e.dtype)
 
-    def step(carry, x_t):
+    def step(carry, xs_t):
+        x_t, t_idx = xs_t
         hs, cs = carry
         new_h, new_c = [], []
         inp = x_t
         for l, (wx, wh, bg) in enumerate(cells):
-            gates = input_mms[l](inp) + matmul(hs[l], wh) + bg
+            gates = input_mms[l](inp, t_idx) + matmul(hs[l], wh) + bg
             i, f, g, o = jnp.split(gates, 4, axis=-1)
             c2 = (jax.nn.sigmoid(f + FORGET_BIAS) * cs[l]
                   + jax.nn.sigmoid(i) * jnp.tanh(g))
@@ -292,7 +300,8 @@ def _lstm_loss(arch: LstmArch, params, x, y, input_mms, soft_fn):
             inp = h2
         return (jnp.stack(new_h), jnp.stack(new_c)), new_h[-1]
 
-    (_, _), tops = lax.scan(step, (h0, c0), e)   # [T, B, H]
+    (_, _), tops = lax.scan(
+        step, (h0, c0), (e, jnp.arange(t, dtype=jnp.int32)))  # [T, B, H]
     flat = tops.reshape(t * b, arch.hidden)
     logits = soft_fn(flat, wsoft) + bsoft        # [T*B, V]
     targets = jnp.transpose(y, (1, 0)).reshape(t * b)
@@ -329,11 +338,11 @@ def lstm_train_step_conv(arch: LstmArch):
     def build(ps, extras):
         _, cells, _, _ = _unpack_lstm(ps, L)
         masks, scales = extras[:L], extras[L:2 * L]
-        mms = [lambda inp, wx=cells[0][0]: matmul(inp, wx)]
+        mms = [lambda inp, t, wx=cells[0][0]: matmul(inp, wx)]
         for l in range(1, L):
             mms.append(
-                lambda inp, wx=cells[l][0], m=masks[l - 1], s=scales[l - 1]:
-                masked_matmul(inp, m, wx, s))
+                lambda inp, t, wx=cells[l][0], m=masks[l - 1],
+                s=scales[l - 1]: masked_matmul(inp, m, wx, s))
 
         def soft(f, w, m=masks[L - 1], s=scales[L - 1]):
             mm = jnp.tile(m, (f.shape[0] // m.shape[0], 1))
@@ -349,20 +358,31 @@ def lstm_train_step_rdp(arch: LstmArch, dp: int):
 
     def build(ps, extras):
         _, cells, _, _ = _unpack_lstm(ps, L)
-        b0s = extras[:L]        # one int32 scalar per site
+        b0s = extras[:L]        # one int32 [seq] bias track per site
         scales = extras[L:2 * L]  # runtime 1/(1-p) per site
-        mms = [lambda inp, wx=cells[0][0]: matmul(inp, wx)]
+        mms = [lambda inp, t, wx=cells[0][0]: matmul(inp, wx)]
         for l in range(1, L):
-            # Pre-gather kept rows of wx once per iteration (outside scan):
-            # the compacted input then multiplies a compacted weight.
-            wxc = patterns.gather_rows(cells[l][0], dp, b0s[l - 1])
+            # The kept set may change every timestep (time-windowed
+            # draws), so the weight-row gather lives inside the scan,
+            # keyed by the site's bias track at t. XLA hoists it when
+            # the track is constant across the window.
             mms.append(
-                lambda inp, wxc=wxc, b0=b0s[l - 1], s=scales[l - 1]:
-                matmul(patterns.gather_cols(inp, dp, b0) * s, wxc))
+                lambda inp, t, wx=cells[l][0], tr=b0s[l - 1],
+                s=scales[l - 1]:
+                matmul(patterns.gather_cols(inp, dp, jnp.take(tr, t)) * s,
+                       patterns.gather_rows(wx, dp, jnp.take(tr, t))))
 
-        def soft(f, w, b0=b0s[L - 1], s=scales[L - 1]):
-            fc = patterns.gather_cols(f, dp, b0) * s
-            return matmul(fc, patterns.gather_rows(w, dp, b0))
+        def soft(f, w, tr=b0s[L - 1], s=scales[L - 1]):
+            # f is the flattened [T*B, H] top-layer output; each
+            # timestep's rows project through its own bias, so map the
+            # gathers over the leading (time) axis.
+            ft = f.reshape(arch.seq, f.shape[0] // arch.seq, H)
+
+            def per_t(f_t, b0):
+                fc = patterns.gather_cols(f_t, dp, b0) * s
+                return matmul(fc, patterns.gather_rows(w, dp, b0))
+
+            return jax.vmap(per_t)(ft, tr).reshape(f.shape[0], -1)
 
         return mms, soft
 
@@ -375,16 +395,21 @@ def lstm_train_step_tdp(arch: LstmArch, dp: int):
 
     def build(ps, extras):
         _, cells, wsoft, _ = _unpack_lstm(ps, L)
-        b0s = extras[:L]
+        b0s = extras[:L]        # one int32 [seq] bias track per site
         scales = extras[L:2 * L]  # runtime 1/(1-p) per site
-        mms = [lambda inp, wx=cells[0][0]: matmul(inp, wx)]
+        mms = [lambda inp, t, wx=cells[0][0]: matmul(inp, wx)]
         for l in range(1, L):
             mms.append(
-                lambda inp, wx=cells[l][0], b0=b0s[l - 1], s=scales[l - 1]:
-                patterns.tdp_matmul(inp, wx, dp, b0, tile) * s)
+                lambda inp, t, wx=cells[l][0], tr=b0s[l - 1],
+                s=scales[l - 1]:
+                patterns.tdp_matmul(inp, wx, dp, jnp.take(tr, t), tile) * s)
 
-        def soft(f, w, b0=b0s[L - 1], s=scales[L - 1]):
-            return patterns.tdp_matmul(f, w, dp, b0, tile) * s
+        def soft(f, w, tr=b0s[L - 1], s=scales[L - 1]):
+            ft = f.reshape(arch.seq, f.shape[0] // arch.seq, H)
+            return jax.vmap(
+                lambda f_t, b0:
+                patterns.tdp_matmul(f_t, w, dp, b0, tile) * s
+            )(ft, tr).reshape(f.shape[0], -1)
 
         return mms, soft
 
@@ -399,7 +424,8 @@ def lstm_eval(arch: LstmArch):
         params = list(args[:n_params])
         x, y = args[n_params], args[n_params + 1]
         _, cells, _, _ = _unpack_lstm(params, L)
-        mms = [lambda inp, wx=cells[l][0]: matmul(inp, wx) for l in range(L)]
+        mms = [lambda inp, t, wx=cells[l][0]: matmul(inp, wx)
+               for l in range(L)]
         return _lstm_loss(arch, params, x, y, mms, matmul)
 
     return fn

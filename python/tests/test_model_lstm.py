@@ -22,15 +22,23 @@ def setup():
     return params, moms, x, y
 
 
+def trk(b0):
+    """Constant [seq] bias track (the legacy per-step case)."""
+    return jnp.full((ARCH.seq,), b0, jnp.int32)
+
+
 def ref_loss(ps, x, y, variant, dp=2, b0s=None, masks=None, scales=None):
+    """Mask-based reference. ``b0s`` are [seq] int32 bias *tracks* (one
+    bias per timestep, matching the time-window manifest schema); masks
+    are rebuilt per timestep so windowed tracks are covered too."""
     emb, cells, wsoft, bsoft = model._unpack_lstm(ps, 2)
     H = ARCH.hidden
     e = jnp.transpose(jnp.take(emb, x, axis=0), (1, 0, 2))
     hs = [jnp.zeros((4, H))] * 2
     cs = [jnp.zeros((4, H))] * 2
     tops = []
-    if variant == "rdp":
-        rm = [patterns.row_mask(H, dp, b0s[i]) * 2.0 for i in range(2)]
+    if variant in ("rdp", "tdp"):
+        trks = [np.asarray(b).reshape(-1) for b in b0s]
     for t in range(ARCH.seq):
         inp = e[t]
         for l, (wx, wh, bg) in enumerate(cells):
@@ -39,12 +47,13 @@ def ref_loss(ps, x, y, variant, dp=2, b0s=None, masks=None, scales=None):
             s_extra = 1.0
             if l > 0:
                 if variant == "rdp":
-                    win = inp * rm[0]
+                    rm0 = patterns.row_mask(H, dp, int(trks[0][t])) * 2.0
+                    win = inp * rm0
                 elif variant == "conv":
                     win = inp * masks[0] * scales[0]
                 elif variant == "tdp":
-                    wx_eff = wx * patterns.tile_mask(H, 4 * H, dp, b0s[0],
-                                                     ARCH.tile)
+                    wx_eff = wx * patterns.tile_mask(
+                        H, 4 * H, dp, int(trks[0][t]), ARCH.tile)
                     s_extra = 2.0
             gates = (win @ wx_eff) * s_extra + hs[l] @ wh + bg
             i_, f_, g_, o_ = jnp.split(gates, 4, -1)
@@ -56,14 +65,20 @@ def ref_loss(ps, x, y, variant, dp=2, b0s=None, masks=None, scales=None):
         tops.append(hs[1])
     flat = jnp.stack(tops).reshape(ARCH.seq * 4, H)
     if variant == "rdp":
-        logits = (flat * rm[1]) @ wsoft + bsoft
+        rm1 = jnp.concatenate(
+            [jnp.broadcast_to(patterns.row_mask(H, dp, int(trks[1][t]))
+                              * 2.0, (4, H)) for t in range(ARCH.seq)], 0)
+        logits = (flat * rm1) @ wsoft + bsoft
     elif variant == "conv":
         mm = jnp.tile(masks[1], (ARCH.seq, 1))
         logits = (flat * mm * scales[1]) @ wsoft + bsoft
     elif variant == "tdp":
-        tms = patterns.tile_mask(H, ARCH.vocab, dp, b0s[1], ARCH.tile)
         ss = 2.0
-        logits = (flat @ (wsoft * tms)) * ss + bsoft
+        logits = jnp.concatenate(
+            [(flat[4 * t: 4 * (t + 1)]
+              @ (wsoft * patterns.tile_mask(H, ARCH.vocab, dp,
+                                            int(trks[1][t]), ARCH.tile)))
+             * ss for t in range(ARCH.seq)], 0) + bsoft
     else:
         logits = flat @ wsoft + bsoft
     targets = jnp.transpose(y, (1, 0)).reshape(ARCH.seq * 4)
@@ -75,7 +90,7 @@ def test_rdp_matches_masked_reference(setup, b0s):
     params, moms, x, y = setup
     n = len(params)
     lr = jnp.float32(0.1)
-    b0s_j = [jnp.int32(b) for b in b0s]
+    b0s_j = [trk(b) for b in b0s]
     sc = [jnp.float32(2.0)] * 2
     out = model.lstm_train_step_rdp(ARCH, 2)(*params, *moms, x, y, *b0s_j,
                                              *sc, lr)
@@ -92,12 +107,50 @@ def test_tdp_matches_masked_reference(setup):
     params, moms, x, y = setup
     n = len(params)
     lr = jnp.float32(0.1)
-    b0s = [jnp.int32(1), jnp.int32(0)]
+    b0s = [trk(1), trk(0)]
     sc = [jnp.float32(2.0)] * 2
     out = model.lstm_train_step_tdp(ARCH, 2)(*params, *moms, x, y, *b0s,
                                              *sc, lr)
     (loss_r, _), grads = jax.value_and_grad(
         lambda ps: ref_loss(ps, x, y, "tdp", 2, b0s), has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[2 * n], loss_r, rtol=1e-5, atol=1e-6)
+    for a, b in zip(out[:n], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_rdp_windowed_track_matches_per_timestep_reference(setup):
+    # Time-windowed draw: the bias changes mid-sequence (AD_TIME_WINDOW <
+    # seq). The graph must apply each timestep's own kept-set in forward
+    # AND backward — compared against a per-timestep masked reference.
+    params, moms, x, y = setup
+    n = len(params)
+    lr = jnp.float32(0.1)
+    trks = [jnp.array([0, 0, 1, 1, 0], jnp.int32),
+            jnp.array([1, 0, 0, 1, 1], jnp.int32)]
+    sc = [jnp.float32(2.0)] * 2
+    out = model.lstm_train_step_rdp(ARCH, 2)(*params, *moms, x, y, *trks,
+                                             *sc, lr)
+    (loss_r, corr_r), grads = jax.value_and_grad(
+        lambda ps: ref_loss(ps, x, y, "rdp", 2, trks), has_aux=True)(params)
+    new_p, _ = model.sgd_momentum(params, moms, grads, lr)
+    np.testing.assert_allclose(out[2 * n], loss_r, rtol=1e-5, atol=1e-6)
+    assert float(out[2 * n + 1]) == float(corr_r)
+    for a, b in zip(out[:n], new_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_tdp_windowed_track_matches_per_timestep_reference(setup):
+    params, moms, x, y = setup
+    n = len(params)
+    lr = jnp.float32(0.1)
+    trks = [jnp.array([1, 1, 0, 0, 1], jnp.int32),
+            jnp.array([0, 1, 1, 0, 0], jnp.int32)]
+    sc = [jnp.float32(2.0)] * 2
+    out = model.lstm_train_step_tdp(ARCH, 2)(*params, *moms, x, y, *trks,
+                                             *sc, lr)
+    (loss_r, _), grads = jax.value_and_grad(
+        lambda ps: ref_loss(ps, x, y, "tdp", 2, trks), has_aux=True)(params)
     new_p, _ = model.sgd_momentum(params, moms, grads, lr)
     np.testing.assert_allclose(out[2 * n], loss_r, rtol=1e-5, atol=1e-6)
     for a, b in zip(out[:n], new_p):
@@ -137,7 +190,7 @@ def test_recurrent_weights_fully_trained_under_rdp(setup):
     params, moms, x, y = setup
     n = len(params)
     out = model.lstm_train_step_rdp(ARCH, 2)(
-        *params, *moms, x, y, jnp.int32(0), jnp.int32(0), jnp.float32(2.0),
+        *params, *moms, x, y, trk(0), trk(0), jnp.float32(2.0),
         jnp.float32(2.0), jnp.float32(0.1))
     wh0_before = params[2]  # wx0, wh0 order: emb, wx0, wh0, bg0, ...
     wh0_after = out[2]
@@ -155,8 +208,9 @@ def test_three_layer_arch_builds_and_steps():
     moms = [jnp.zeros(s) for _, s in specs]
     x = jnp.zeros((2, 4), jnp.int32)
     y = jnp.ones((2, 4), jnp.int32)
+    t4 = lambda b: jnp.full((4,), b, jnp.int32)
     out = model.lstm_train_step_rdp(arch3, 2)(
-        *params, *moms, x, y, jnp.int32(0), jnp.int32(1), jnp.int32(0),
+        *params, *moms, x, y, t4(0), t4(1), t4(0),
         jnp.float32(2.0), jnp.float32(2.0), jnp.float32(2.0),
         jnp.float32(0.1))
     assert np.isfinite(float(out[2 * len(params)]))

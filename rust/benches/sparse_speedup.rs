@@ -10,6 +10,12 @@
 //! structure, so its steps pay full dense math plus per-step mask
 //! generation, exactly the baseline the paper measures against.
 //!
+//! A windowed section re-times the structured lstmsyn configurations
+//! with the dropout pattern re-drawn every `W` timesteps
+//! (`row-skip@w1` / `tile-skip@w16` rows, the `AD_TIME_WINDOW` runtime
+//! knob) against the same dense baseline; larger windows amortize the
+//! cached kept-row weight panels over more timesteps.
+//!
 //! When the CPU has SIMD microkernels (AVX2+FMA / NEON; see
 //! `runtime::sparse::simd`), a second section re-times the GEMM-dominated
 //! `mlpsyn` configurations on the scalar microkernels (`<config>@scalar`
@@ -37,11 +43,19 @@ use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::runtime::sparse::threads_from_env;
-use approx_dropout::runtime::{Manifest, SparseKernels};
+use approx_dropout::runtime::{ArchMeta, Manifest, SparseKernels};
 use approx_dropout::util::json::Json;
 
 const SUPPORT: &[usize] = &[1, 2, 4];
 const RATES: &[f64] = &[0.3, 0.5, 0.7];
+
+/// Time-window sizes (timesteps per pattern draw) for the windowed
+/// lstmsyn section. The unannotated lstmsyn rows are `W = seq` — one
+/// draw per step, the paper's per-iteration policy; `W = 16` holds one
+/// draw across two steps (seq is 8), `W < seq` re-draws within the
+/// step. Larger windows amortize the per-window weight-panel prep over
+/// more timesteps, which is where the LSTM speedup gap closes.
+const WINDOWS: &[usize] = &[1, 4, 16];
 
 /// Rates re-timed on the scalar microkernels for the SIMD-vs-scalar
 /// section (the regression gate's operating points).
@@ -80,18 +94,24 @@ impl Bencher {
                 bench(cfg.label, self.warm, self.reps,
                       || tr.step(&self.mnist).unwrap())
             }
-            _ => {
-                let shared = cfg.variant != Variant::Conv;
-                let schedule = Schedule::new(cfg.variant, &[rate, rate],
-                                             SUPPORT, shared)?;
-                let mut tr = LstmTrainer::new(cache, arch, schedule,
-                                              &self.corpus.train, 0.1,
-                                              13)?;
-                tr.warmup()?;
-                bench(cfg.label, self.warm, self.reps,
-                      || tr.step().unwrap())
-            }
+            _ => self.run_lstm(cache, arch, rate, cfg, None)?,
         })
+    }
+
+    /// One timed LSTM measurement at an explicit time window. `None`
+    /// pins the default per-step policy (W = seq) so the report stays
+    /// self-describing no matter what `AD_TIME_WINDOW` is set to in the
+    /// environment — every row's window is in the row itself.
+    fn run_lstm(&self, cache: &ExecutorCache, arch: &str, rate: f64,
+                cfg: &Cfg, window: Option<usize>) -> Result<BenchResult> {
+        let shared = cfg.variant != Variant::Conv;
+        let schedule = Schedule::new(cfg.variant, &[rate, rate], SUPPORT,
+                                     shared)?;
+        let mut tr = LstmTrainer::new_with_window(cache, arch, schedule,
+                                                  &self.corpus.train, 0.1,
+                                                  13, window)?;
+        tr.warmup()?;
+        Ok(bench(cfg.label, self.warm, self.reps, || tr.step().unwrap()))
     }
 }
 
@@ -102,6 +122,9 @@ struct RowCtx<'a> {
     label: &'a str,
     variant: Variant,
     microkernel: &'a str,
+    /// Timesteps per pattern draw (LSTM rows only; `None` for MLP rows,
+    /// where there is no time axis to window).
+    window: Option<usize>,
 }
 
 /// The two output surfaces every row lands on.
@@ -119,7 +142,7 @@ impl Sink {
                          fmt_time(r.median_s),
                          format!("{:.1}", r.per_sec()),
                          format!("{speedup:.2}x")]);
-        self.report.row(vec![
+        let mut row = vec![
             ("arch", Json::str(ctx.arch)),
             ("rate", Json::num(ctx.rate)),
             ("config", Json::str(ctx.label)),
@@ -130,7 +153,11 @@ impl Sink {
             ("mean_step_s", Json::num(r.mean_s)),
             ("reps", Json::num(r.reps as f64)),
             ("speedup_vs_dense", Json::num(speedup)),
-        ]);
+        ];
+        if let Some(w) = ctx.window {
+            row.push(("window", Json::num(w as f64)));
+        }
+        self.report.row(row);
     }
 }
 
@@ -141,7 +168,12 @@ fn main() -> Result<()> {
     let threads = threads_from_env();
     let mk = SparseKernels::auto().microkernel();
 
-    let cache = ExecutorCache::sparse(Manifest::builtin_test());
+    let manifest = Manifest::builtin_test();
+    let lstm_seq = match &manifest.get("lstmsyn_conv")?.arch {
+        ArchMeta::Lstm { seq, .. } => *seq,
+        _ => unreachable!("lstmsyn is an LSTM arch"),
+    };
+    let cache = ExecutorCache::sparse(manifest);
     let (mnist, _) = MnistSyn::train_test(512, 64, 42);
     let bencher = Bencher {
         mnist,
@@ -162,13 +194,20 @@ fn main() -> Result<()> {
         .set("smoke", Json::Bool(smoke))
         .set("reps", Json::num(reps as f64))
         .set("support", Json::Arr(
-            SUPPORT.iter().map(|&d| Json::num(d as f64)).collect()));
+            SUPPORT.iter().map(|&d| Json::num(d as f64)).collect()))
+        .set("windows", Json::Arr(
+            WINDOWS.iter().map(|&w| Json::num(w as f64)).collect()))
+        .set("lstm_seq", Json::num(lstm_seq as f64));
     let mut sink = Sink {
         report,
         table: Table::new(&["arch", "rate", "config", "microkernel",
                             "median step", "steps/s", "speedup"]),
     };
 
+    // Dense lstmsyn medians per rate, reused as the baseline for the
+    // windowed section (conventional dropout has no time-window axis —
+    // re-timing it per window would only duplicate its gate key).
+    let mut lstm_dense: Vec<(f64, f64)> = Vec::new();
     for arch in ["mlpsyn", "lstmsyn"] {
         for &rate in RATES {
             let mut dense_s = f64::NAN;
@@ -176,10 +215,40 @@ fn main() -> Result<()> {
                 let r = bencher.run(&cache, arch, rate, cfg)?;
                 if cfg.label == "dense" {
                     dense_s = r.median_s;
+                    if arch == "lstmsyn" {
+                        lstm_dense.push((rate, dense_s));
+                    }
                 }
+                let window =
+                    (arch == "lstmsyn").then_some(lstm_seq);
                 sink.push(&RowCtx { arch, rate, label: cfg.label,
                                     variant: cfg.variant,
-                                    microkernel: mk },
+                                    microkernel: mk, window },
+                          &r, dense_s);
+            }
+        }
+    }
+
+    // Windowed lstmsyn section: the rows the paper's LSTM speedup gap
+    // closes on. `row-skip@wN` / `tile-skip@wN` re-time the structured
+    // configurations with the pattern re-drawn every N timesteps; the
+    // per-(site, window) prepped weight panels amortize over N steps of
+    // forward+backward, so speedup should grow with N. W = seq rows are
+    // the unannotated `row-skip` / `tile-skip` rows above.
+    for &rate in RATES {
+        let dense_s = lstm_dense
+            .iter()
+            .find(|&&(r0, _)| r0 == rate)
+            .map(|&(_, d)| d)
+            .unwrap_or(f64::NAN);
+        for &w in WINDOWS {
+            for cfg in CFGS.iter().filter(|c| c.label != "dense") {
+                let r = bencher.run_lstm(&cache, "lstmsyn", rate, cfg,
+                                         Some(w))?;
+                let label = format!("{}@w{w}", cfg.label);
+                sink.push(&RowCtx { arch: "lstmsyn", rate, label: &label,
+                                    variant: cfg.variant,
+                                    microkernel: mk, window: Some(w) },
                           &r, dense_s);
             }
         }
@@ -201,7 +270,8 @@ fn main() -> Result<()> {
                 let label = format!("{}@scalar", cfg.label);
                 sink.push(&RowCtx { arch: "mlpsyn", rate, label: &label,
                                     variant: cfg.variant,
-                                    microkernel: "scalar" },
+                                    microkernel: "scalar",
+                                    window: None },
                           &r, dense_s);
             }
         }
@@ -216,7 +286,10 @@ fn main() -> Result<()> {
     println!("interpretation: the paper's claim is that regular dropout \
               patterns turn dropped rows/tiles into *skipped* work; \
               speedup should grow with the dropout rate and tile-skip \
-              should track row-skip (fig. 7/8). The @scalar rows isolate \
+              should track row-skip (fig. 7/8). The @wN rows re-draw the \
+              LSTM pattern every N timesteps (AD_TIME_WINDOW equivalent) \
+              — larger windows amortize the cached weight panels and \
+              should widen the LSTM speedup. The @scalar rows isolate \
               the SIMD microkernel contribution on the GEMM-dominated \
               mlpsyn configs (AD_SIMD=off equivalent).");
     Ok(())

@@ -117,6 +117,17 @@ pub fn push_bias_scalars(tail: &mut Vec<HostTensor>, choices: &[Choice]) {
     }
 }
 
+/// Push one `[seq]` b0 bias track per site (LSTM approximate-dropout
+/// variants): entry `t` is the kept residue class for timestep `t`,
+/// constant within each time window. The step interpreter re-derives the
+/// window boundaries by run-grouping equal consecutive entries, so the
+/// runtime needs no window knob of its own.
+pub fn push_bias_tracks(tail: &mut Vec<HostTensor>, tracks: &[Vec<i32>]) {
+    for t in tracks {
+        tail.push(HostTensor::i32(&[t.len()], t.clone()));
+    }
+}
+
 /// Push the inverted-dropout correction scalars: constant 1/(1-p) of each
 /// site's long-run rate (Caffe semantics), NOT the per-iteration 1/dp —
 /// see model.py `_mlp_logits_rdp`.

@@ -8,12 +8,13 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::coordinator::driver::{push_bias_scalars, push_scale_scalars,
+use crate::coordinator::driver::{push_bias_tracks, push_scale_scalars,
                                  ModelFront, StepInput, Trainer};
 use crate::coordinator::metrics::perplexity;
 use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::data::BpttBatcher;
+use crate::patterns::{Choice, TimeWindow};
 use crate::runtime::{ArchMeta, HostTensor, Manifest, TrainState};
 use crate::service::checkpoint::{rng_state_from_json, rng_state_to_json};
 use crate::util::json::Json;
@@ -33,6 +34,14 @@ pub struct LstmFront {
     /// regenerate the corpus from it (see `MlpFront::seed`).
     seed: u64,
     rng: Rng,
+    /// Time-window draw policy (`AD_TIME_WINDOW`); the default `W = seq`
+    /// reproduces the pre-windowing stream bit for bit.
+    window: TimeWindow,
+    /// Multi-step window carry (`W = k * seq`): the choices held from the
+    /// window-start step, and how many more steps reuse them. Both are
+    /// checkpointed so a resume mid-window stays bit-exact.
+    held_choices: Vec<Choice>,
+    held_left: usize,
 }
 
 impl ModelFront for LstmFront {
@@ -56,7 +65,24 @@ impl ModelFront for LstmFront {
     }
 
     fn assemble(&mut self, _data: &()) -> Result<StepInput> {
-        let choices = self.schedule.sample(&mut self.rng);
+        // Multi-step windows (W = k * seq) hold one (dp, b0) draw for k
+        // consecutive steps; on held steps `Schedule::sample` is skipped
+        // entirely, so the RNG stream advances only at window starts.
+        // With steps_per_draw == 1 (the default and all W <= seq) this is
+        // exactly today's one-sample-per-step stream.
+        let choices = if self.window.steps_per_draw() > 1
+            && self.held_left > 0
+        {
+            self.held_left -= 1;
+            self.held_choices.clone()
+        } else {
+            let c = self.schedule.sample(&mut self.rng);
+            if self.window.steps_per_draw() > 1 {
+                self.held_choices = c.clone();
+                self.held_left = self.window.steps_per_draw() - 1;
+            }
+            c
+        };
         let prev_epoch = self.batcher.epoch;
         // Owned buffers (the pipelined path ships them across a thread);
         // same copy count as building literals from borrowed slices.
@@ -81,7 +107,12 @@ impl ModelFront for LstmFront {
                 format!("{}_conv", self.tag)
             }
             _ => {
-                push_bias_scalars(&mut tail, &choices);
+                // Per-site [seq] b0 tracks: window 0 reuses the sampled
+                // b0, extra windows draw fresh ones (no extra draws at
+                // the default W = seq — see patterns::window docs).
+                let tracks =
+                    self.window.expand_b0_tracks(&choices, &mut self.rng);
+                push_bias_tracks(&mut tail, &tracks);
                 push_scale_scalars(&mut tail, &self.schedule.rates);
                 self.artifact_for(&[choices[0].dp])
             }
@@ -126,23 +157,44 @@ impl ModelFront for LstmFront {
     }
 
     fn config_line(&self) -> String {
-        format!("lstm tag={} variant={} rates={:?} shared_dp={} \
-                 combos={:?} batch={} seq={} hidden={} seed={}",
-                self.tag, self.schedule.variant.as_str(),
-                self.schedule.rates, self.schedule.shared_dp,
-                self.schedule.dp_combos(), self.batch, self.seq,
-                self.hidden, self.seed)
+        let base = format!(
+            "lstm tag={} variant={} rates={:?} shared_dp={} \
+             combos={:?} batch={} seq={} hidden={} seed={}",
+            self.tag, self.schedule.variant.as_str(),
+            self.schedule.rates, self.schedule.shared_dp,
+            self.schedule.dp_combos(), self.batch, self.seq,
+            self.hidden, self.seed);
+        // The window term is appended ONLY off the default so that
+        // checkpoints written before time-windowing existed keep their
+        // config hash and stay resumable.
+        if self.window.is_per_step() {
+            base
+        } else {
+            format!("{base} window={}", self.window.w())
+        }
     }
 
     fn snapshot(&self) -> Json {
         let (pos, epoch) = self.batcher.snapshot();
-        Json::obj(vec![
+        let mut fields = vec![
             ("kind", Json::str("lstm")),
             ("rng", rng_state_to_json(self.rng.state())),
             ("pos", Json::num(pos as f64)),
             ("epoch", Json::num(epoch as f64)),
             ("track_len", Json::num(self.batcher.track_len() as f64)),
-        ])
+        ];
+        // Multi-step window carry: present only when a hold is live, so
+        // default-window snapshots are byte-identical to the old format.
+        if self.held_left > 0 {
+            fields.push(("held_left", Json::num(self.held_left as f64)));
+            fields.push(("held_dp", Json::Arr(
+                self.held_choices.iter()
+                    .map(|c| Json::num(c.dp as f64)).collect())));
+            fields.push(("held_b0", Json::Arr(
+                self.held_choices.iter()
+                    .map(|c| Json::num(c.b0 as f64)).collect())));
+        }
+        Json::obj(fields)
     }
 
     fn restore(&mut self, snap: &Json) -> Result<()> {
@@ -163,16 +215,75 @@ impl ModelFront for LstmFront {
                        token stream would differ", self.batcher.track_len());
             }
         }
+        // Window carry (absent in pre-windowing snapshots → no hold).
+        let held_left = snap.get("held_left").and_then(Json::as_usize)
+            .unwrap_or(0);
+        let held_choices = if held_left > 0 {
+            let dps = snap.get("held_dp").and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("snapshot: held_left without \
+                                        held_dp"))?;
+            let b0s = snap.get("held_b0").and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("snapshot: held_left without \
+                                        held_b0"))?;
+            if dps.len() != b0s.len() || dps.len() != self.schedule.sites() {
+                bail!("snapshot: held choice arrays have {} / {} entries, \
+                       schedule has {} sites",
+                      dps.len(), b0s.len(), self.schedule.sites());
+            }
+            dps.iter().zip(b0s)
+                .map(|(d, b)| -> Result<Choice> {
+                    let dp = d.as_usize()
+                        .ok_or_else(|| anyhow!("snapshot: bad held_dp"))?;
+                    let b0 = b.as_usize()
+                        .ok_or_else(|| anyhow!("snapshot: bad held_b0"))?;
+                    if dp == 0 || b0 >= dp {
+                        bail!("snapshot: held choice dp={dp} b0={b0} \
+                               out of range");
+                    }
+                    Ok(Choice { dp, b0 })
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            Vec::new()
+        };
+        if held_left >= self.window.steps_per_draw() {
+            bail!("snapshot: held_left={held_left} exceeds this window's \
+                   steps_per_draw={} — checkpoint was written under a \
+                   different AD_TIME_WINDOW", self.window.steps_per_draw());
+        }
         self.batcher.restore(pos, epoch)?;
         self.rng = rng;
+        self.held_left = held_left;
+        self.held_choices = held_choices;
         Ok(())
     }
 }
 
 impl Trainer<LstmFront> {
+    /// Construct with the time-window policy taken from `AD_TIME_WINDOW`
+    /// (read once, here — the runtime never consults the environment).
     pub fn new(cache: &ExecutorCache, tag: &str, schedule: Schedule,
                train_tokens: &[i32], lr: f32, seed: u64)
                -> Result<LstmTrainer> {
+        Trainer::build(cache, tag, schedule, train_tokens, lr, seed, None,
+                       true)
+    }
+
+    /// Construct with an explicit window override (`None` = per-step
+    /// default). Benches and tests use this instead of mutating the
+    /// process environment, which is racy under parallel test threads.
+    pub fn new_with_window(cache: &ExecutorCache, tag: &str,
+                           schedule: Schedule, train_tokens: &[i32],
+                           lr: f32, seed: u64, window: Option<usize>)
+                           -> Result<LstmTrainer> {
+        Trainer::build(cache, tag, schedule, train_tokens, lr, seed,
+                       window, false)
+    }
+
+    fn build(cache: &ExecutorCache, tag: &str, schedule: Schedule,
+             train_tokens: &[i32], lr: f32, seed: u64,
+             window: Option<usize>, from_env: bool)
+             -> Result<LstmTrainer> {
         let conv = cache.manifest().get(&format!("{tag}_conv"))?;
         let (hidden, layers, batch, seq) = match &conv.arch {
             ArchMeta::Lstm { hidden, layers, batch, seq, .. } =>
@@ -186,6 +297,11 @@ impl Trainer<LstmFront> {
         let mut rng = Rng::new(seed);
         let state = TrainState::init(conv, &mut rng,
                                      cache.backend().as_ref())?;
+        let win = if from_env {
+            TimeWindow::from_env(seq)
+        } else {
+            TimeWindow::resolve(window, seq)
+        };
         let front = LstmFront {
             tag: tag.to_string(),
             schedule,
@@ -195,6 +311,9 @@ impl Trainer<LstmFront> {
             seq,
             seed,
             rng,
+            window: win,
+            held_choices: Vec::new(),
+            held_left: 0,
         };
         Ok(Trainer::from_parts(cache, front, state, lr))
     }

@@ -55,7 +55,11 @@ ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
      masked-dense interpreter, sparse = multithreaded row/tile-skipping
      compute engine — both run with no artifacts, e.g. train-mlp
      --tag mlpsyn on the built-in synthetic registry),
-     AD_THREADS (sparse backend worker count; default = all cores)";
+     AD_THREADS (sparse backend worker count; default = all cores),
+     AD_TIME_WINDOW (LSTM pattern window in timesteps; default \"seq\" =
+     one draw per step; W dividing seq re-draws the pattern bias within
+     the step, W = k*seq holds one draw across k steps — incompatible
+     values warn and fall back; see rust/DESIGN.md section 3e)";
 
 fn main() -> Result<()> {
     log::init_from_env();

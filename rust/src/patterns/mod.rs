@@ -13,11 +13,13 @@ pub mod distribution;
 pub mod mask;
 pub mod row;
 pub mod tile;
+pub mod window;
 
 pub use distribution::PatternDistribution;
 pub use mask::MaskGen;
 pub use row::RowPattern;
 pub use tile::TilePattern;
+pub use window::TimeWindow;
 
 /// Largest divisor of `dim` that is <= cap (mirrors python `pick_block`).
 pub fn pick_block(dim: usize, cap: usize) -> usize {

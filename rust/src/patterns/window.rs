@@ -1,0 +1,261 @@
+//! Time-windowed pattern draws (ROADMAP item 4; cf. *Structured in Space,
+//! Randomized in Time*, arXiv 2106.12089): instead of one structured
+//! pattern per dropout site per *training step* (today's behavior), draw
+//! one pattern per site per **window of `W` timesteps** and hold it fixed
+//! inside the window. Randomization moves across time instead of within
+//! it, which keeps the per-unit long-run drop rate at `p` (each window is
+//! an i.i.d. draw from the same searched distribution K) while making the
+//! sparsity exploitable: kept-row sets — and therefore packed weight
+//! panels — stay valid for a whole window of GEMMs.
+//!
+//! Window semantics. `W` counts timesteps of the unrolled sequence:
+//!
+//! * `W == seq` (the **default**): one draw per step, bit-exact with the
+//!   pre-windowing behavior — the RNG stream is identical because no extra
+//!   draws are made.
+//! * `W < seq` (requires `seq % W == 0`): the step's `dp` is fixed (it is
+//!   baked into the dispatched artifact name), but `b0` is re-drawn per
+//!   window *within* the step. `W = 1` is true per-timestep
+//!   randomization.
+//! * `W > seq` (requires `W % seq == 0`): the step's `(dp, b0)` choices
+//!   are held for `W / seq` consecutive steps. The coordinator front owns
+//!   that carry (and checkpoints it); this module only reports
+//!   `steps_per_draw`.
+//!
+//! Incompatible requests (neither divisibility holds, or `W == 0`) fall
+//! back **loudly** to `W = seq` — the `AD_TIME_WINDOW` env knob is global,
+//! and a mismatch against one arch's `seq` must not break unrelated archs.
+//!
+//! RNG contract (checkpoint bit-exactness): the window schedule is folded
+//! into the front's existing `Rng` stream, not a side generator. Order per
+//! step: `Schedule::sample` first (unchanged — dp draw(s) plus one `b0`
+//! per site), then extra-window draws with **sites outer, windows inner**,
+//! one `rng.next_usize(dp)` per (site, extra window) — including `dp = 1`
+//! sites, where the draw is consumed and trivially returns 0, so the
+//! stream shape never depends on the sampled dp. With one window per step
+//! there are no extra draws, which is what makes the default bit-exact.
+
+use crate::patterns::Choice;
+use crate::util::rng::Rng;
+
+/// Resolved time-window policy for one arch (a `(seq, W)` pair that
+/// already satisfies the divisibility rule). Construct via
+/// [`TimeWindow::resolve`] or [`TimeWindow::from_env`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TimeWindow {
+    seq: usize,
+    w: usize,
+}
+
+impl TimeWindow {
+    /// The default policy: one draw per step (`W = seq`), bit-exact with
+    /// the pre-windowing behavior.
+    pub fn per_step(seq: usize) -> TimeWindow {
+        TimeWindow { seq, w: seq.max(1) }
+    }
+
+    /// Resolve an explicit request against this arch's `seq`. `None`
+    /// means default. Invalid or incompatible requests warn on stderr and
+    /// fall back to the default rather than erroring — the knob is
+    /// process-global and must not take down archs it cannot divide.
+    pub fn resolve(requested: Option<usize>, seq: usize) -> TimeWindow {
+        let seq = seq.max(1);
+        match requested {
+            None => TimeWindow::per_step(seq),
+            Some(w) if w == seq => TimeWindow::per_step(seq),
+            Some(w) if w >= 1 && (seq % w == 0 || w % seq == 0) => {
+                TimeWindow { seq, w }
+            }
+            Some(w) => {
+                eprintln!(
+                    "[patterns::window] AD_TIME_WINDOW={w} is incompatible \
+                     with seq={seq} (need seq % W == 0 or W % seq == 0); \
+                     falling back to the per-step default W={seq}");
+                TimeWindow::per_step(seq)
+            }
+        }
+    }
+
+    /// Resolve from the `AD_TIME_WINDOW` env knob. Unset, empty, or the
+    /// literal `"seq"` select the default; anything unparsable warns and
+    /// falls back. Read once at front construction — the runtime itself
+    /// never consults the environment (it derives windows from the data).
+    pub fn from_env(seq: usize) -> TimeWindow {
+        match std::env::var("AD_TIME_WINDOW") {
+            Err(_) => TimeWindow::per_step(seq),
+            Ok(v) => {
+                let v = v.trim();
+                if v.is_empty() || v.eq_ignore_ascii_case("seq") {
+                    return TimeWindow::per_step(seq);
+                }
+                match v.parse::<usize>() {
+                    Ok(w) if w >= 1 => TimeWindow::resolve(Some(w), seq),
+                    _ => {
+                        eprintln!(
+                            "[patterns::window] AD_TIME_WINDOW={v:?} is not \
+                             a positive integer or \"seq\"; using the \
+                             per-step default W={seq}");
+                        TimeWindow::per_step(seq)
+                    }
+                }
+            }
+        }
+    }
+
+    /// Window length in timesteps (clamped into `[1, ..]`, `seq`-aligned).
+    pub fn w(&self) -> usize {
+        self.w
+    }
+
+    /// True when this policy is the bit-exact pre-windowing default
+    /// (exactly one draw per step, no multi-step hold).
+    pub fn is_per_step(&self) -> bool {
+        self.w == self.seq
+    }
+
+    /// Number of pattern windows inside one training step (>= 1).
+    pub fn windows_per_step(&self) -> usize {
+        if self.w >= self.seq { 1 } else { self.seq / self.w }
+    }
+
+    /// Number of consecutive steps sharing one `(dp, b0)` draw (>= 1;
+    /// > 1 only when `W` spans multiple steps).
+    pub fn steps_per_draw(&self) -> usize {
+        if self.w > self.seq { self.w / self.seq } else { 1 }
+    }
+
+    /// Expand per-site step choices into per-site `[seq]` b0 tracks:
+    /// entry `t` is the kept residue class for timestep `t`. Window 0
+    /// reuses the `b0` already drawn by `Schedule::sample`; each extra
+    /// window draws a fresh `rng.next_usize(dp)` (sites outer, windows
+    /// inner — see module docs). With one window per step this makes no
+    /// RNG draws and the track is constant, preserving today's stream.
+    pub fn expand_b0_tracks(&self, choices: &[Choice], rng: &mut Rng)
+                            -> Vec<Vec<i32>> {
+        let nw = self.windows_per_step();
+        let wlen = self.seq / nw;
+        choices.iter()
+            .map(|c| {
+                let mut track = Vec::with_capacity(self.seq);
+                track.resize(wlen, c.b0 as i32);
+                for _ in 1..nw {
+                    let b0 = rng.next_usize(c.dp) as i32;
+                    track.resize(track.len() + wlen, b0);
+                }
+                track
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_per_step() {
+        let tw = TimeWindow::resolve(None, 8);
+        assert!(tw.is_per_step());
+        assert_eq!(tw.windows_per_step(), 1);
+        assert_eq!(tw.steps_per_draw(), 1);
+        assert_eq!(tw.w(), 8);
+    }
+
+    #[test]
+    fn divisors_and_multiples_accepted() {
+        let tw = TimeWindow::resolve(Some(4), 8);
+        assert_eq!((tw.windows_per_step(), tw.steps_per_draw()), (2, 1));
+        let tw = TimeWindow::resolve(Some(1), 8);
+        assert_eq!((tw.windows_per_step(), tw.steps_per_draw()), (8, 1));
+        let tw = TimeWindow::resolve(Some(16), 8);
+        assert_eq!((tw.windows_per_step(), tw.steps_per_draw()), (1, 2));
+        assert!(!tw.is_per_step(), "multi-step hold is not the default");
+    }
+
+    #[test]
+    fn incompatible_falls_back_to_default() {
+        // seq=5 (the lstmtest arch) under W=4: neither divides.
+        let tw = TimeWindow::resolve(Some(4), 5);
+        assert!(tw.is_per_step());
+        assert_eq!(tw.w(), 5);
+        let tw = TimeWindow::resolve(Some(0), 8);
+        assert!(tw.is_per_step());
+    }
+
+    #[test]
+    fn per_step_expansion_draws_nothing() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let tw = TimeWindow::per_step(8);
+        let choices = vec![Choice { dp: 2, b0: 1 }, Choice { dp: 4, b0: 3 }];
+        let tracks = tw.expand_b0_tracks(&choices, &mut a);
+        assert_eq!(tracks, vec![vec![1i32; 8], vec![3i32; 8]]);
+        // Stream untouched — bit-exact with the pre-windowing behavior.
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn windowed_expansion_is_constant_per_window_and_in_range() {
+        let mut rng = Rng::new(7);
+        let tw = TimeWindow::resolve(Some(4), 16);
+        let choices = vec![Choice { dp: 4, b0: 2 }];
+        let tracks = tw.expand_b0_tracks(&choices, &mut rng);
+        assert_eq!(tracks.len(), 1);
+        let t = &tracks[0];
+        assert_eq!(t.len(), 16);
+        assert_eq!(&t[..4], &[2, 2, 2, 2], "window 0 reuses the step b0");
+        for win in t.chunks(4) {
+            assert!(win.iter().all(|&b| b == win[0]), "constant per window");
+            assert!((0..4).contains(&win[0]), "b0 in [0, dp)");
+        }
+    }
+
+    #[test]
+    fn draw_order_is_sites_outer_windows_inner() {
+        // Reconstruct the expected stream by hand and compare.
+        let choices = vec![Choice { dp: 4, b0 : 0 }, Choice { dp: 2, b0: 1 }];
+        let mut a = Rng::new(99);
+        let mut b = Rng::new(99);
+        let tw = TimeWindow::resolve(Some(2), 8);
+        let tracks = tw.expand_b0_tracks(&choices, &mut a);
+        let mut expect = Vec::new();
+        for c in &choices {
+            let mut track = vec![c.b0 as i32; 2];
+            for _ in 1..4 {
+                let b0 = b.next_usize(c.dp) as i32;
+                track.extend([b0, b0]);
+            }
+            expect.push(track);
+        }
+        assert_eq!(tracks, expect);
+        assert_eq!(a.next_u64(), b.next_u64(), "streams advanced equally");
+    }
+
+    #[test]
+    fn dp1_sites_still_consume_draws() {
+        // The stream shape must not depend on the sampled dp, so dp=1
+        // sites burn one draw per extra window like everyone else.
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let tw = TimeWindow::resolve(Some(2), 4);
+        let tracks =
+            tw.expand_b0_tracks(&[Choice { dp: 1, b0: 0 }], &mut a);
+        assert_eq!(tracks, vec![vec![0i32; 4]]);
+        b.next_usize(1); // the one extra-window draw
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn env_parsing() {
+        // from_env reads the process env, which is racy to mutate in
+        // parallel tests — so only exercise the no-knob path here plus
+        // the pure `resolve` equivalents of each parse outcome.
+        // (Explicit-window constructors exist precisely so tests and
+        // benches never need to set AD_TIME_WINDOW.)
+        if std::env::var("AD_TIME_WINDOW").is_err() {
+            assert!(TimeWindow::from_env(8).is_per_step());
+        }
+        assert_eq!(TimeWindow::resolve(Some(8), 8),
+                   TimeWindow::per_step(8));
+    }
+}

@@ -486,7 +486,15 @@ pub fn lstm_artifacts(spec: &LstmArchSpec, dps: &[usize])
                   eval_io(&param_specs, xs(), ys())));
     for &dp in dps {
         let extras = || {
-            let mut e: Vec<TensorMeta> = (0..l).map(b0_spec).collect();
+            // LSTM b0 biases are per-timestep tracks of shape [seq] (one
+            // kept-residue per timestep, constant within each time
+            // window) rather than the MLP's scalars — the step
+            // interpreter groups equal consecutive entries into pattern
+            // windows, so W=seq degenerates to a constant track and the
+            // per-step behavior is unchanged.
+            let mut e: Vec<TensorMeta> = (0..l)
+                .map(|i| t_i32(&format!("b0_{i}"), &[spec.seq], Kind::Bias))
+                .collect();
             for i in 0..l {
                 e.push(t_f32(&format!("scale{i}"), &[], Kind::Scale));
             }

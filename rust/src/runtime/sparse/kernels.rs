@@ -43,7 +43,7 @@
 use crate::patterns::{RowPattern, TilePattern};
 use crate::runtime::sparse::pool::{self, ThreadPool};
 use crate::runtime::sparse::simd::{self, Microkernel};
-use crate::runtime::step::kernels::{Kernels, Skip};
+use crate::runtime::step::kernels::{Kernels, PreppedWeight, Skip};
 
 /// Output rows per parallel chunk. Fixed (not derived from the thread
 /// count) so the partition is reproducible; correctness never depends on
@@ -235,6 +235,65 @@ impl Kernels for SparseKernels {
         // tiles themselves, off the raw buffer.
         None
     }
+
+    fn prep(&self, w: &[f32], k: usize, n: usize, skip: &Skip)
+            -> PreppedWeight {
+        match skip {
+            // Row skips: cache the kept-index set and pack the kept rows
+            // of `w` into a contiguous `[kk, n]` panel, paid once per
+            // (site, window) instead of once per GEMM. Dropped rows are
+            // never read (the poison test below pins that).
+            Skip::Rows(pat) if pat.kept_count() < pat.m => {
+                debug_assert_eq!(pat.m, k, "Rows skip width mismatch");
+                debug_assert_eq!(w.len(), k * n);
+                let kept = pat.kept_indices();
+                let mut panel = vec![0f32; kept.len() * n];
+                for (pi, &ki) in kept.iter().enumerate() {
+                    panel[pi * n..(pi + 1) * n]
+                        .copy_from_slice(&w[ki * n..(ki + 1) * n]);
+                }
+                PreppedWeight::packed(kept, panel)
+            }
+            // Tiles: the tile walks skip off the raw buffer already;
+            // Dense (and keep-everything Rows): no-op by contract.
+            _ => PreppedWeight::dense(),
+        }
+    }
+
+    fn gemm_pw(&self, a: &[f32], w: &[f32], pw: &PreppedWeight, m: usize,
+               k: usize, n: usize, k_skip: &Skip, out_skip: &Skip)
+               -> Vec<f32> {
+        if let (Some(kept), Some(panel)) = (&pw.kept, &pw.panel) {
+            // The panel fast path covers exactly the gemm_rows shape
+            // (k restricted, output dense). Column-restricted outputs
+            // keep the gemm_rows_cols packing, which also compacts the
+            // n axis.
+            if matches!(k_skip, Skip::Rows(_)) && out_skip.is_dense() {
+                debug_assert_eq!(panel.len(), kept.len() * n);
+                debug_assert_eq!(a.len(), m * k);
+                let mut out = vec![0f32; m * n];
+                gemm_rows_packed(pool::global(), self.mk, a, panel, kept,
+                                 m, k, n, &mut out);
+                return out;
+            }
+        }
+        self.gemm(a, pw.weight(w), m, k, n, k_skip, out_skip)
+    }
+
+    fn gemm_nt_pw(&self, a: &[f32], w: &[f32], pw: &PreppedWeight,
+                  m: usize, n: usize, k: usize, skip: &Skip) -> Vec<f32> {
+        if let (Some(kept), Some(panel)) = (&pw.kept, &pw.panel) {
+            if matches!(skip, Skip::Rows(_)) {
+                debug_assert_eq!(panel.len(), kept.len() * n);
+                debug_assert_eq!(a.len(), m * n);
+                let mut out = vec![0f32; m * k];
+                nt_rows_packed(pool::global(), self.mk, a, panel, kept,
+                               m, n, k, &mut out);
+                return out;
+            }
+        }
+        self.gemm_nt(a, pw.weight(w), m, n, k, skip)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -271,6 +330,49 @@ fn gemm_rows(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
         }
     };
     run_chunks(p, m * kidx.len() * n, n_chunks, &task);
+}
+
+/// Row-skip GEMM against a prepacked kept-row panel (`panel[pi] ==
+/// b[kidx[pi]]`): the per-call kept-set derivation and the strided walks
+/// over B disappear, which is the per-window amortization the
+/// time-window work buys. **Bit-identical to [`gemm_rows`]**: panel
+/// positions are chunked by [`KBLOCK`] exactly like `kidx.chunks`, the
+/// coefficient stream `arow[kidx[pi]]` matches `gemm_rows`' `arow[pi]`
+/// pair for pair, and `axpy_panel` sees the same (coefficient, row)
+/// sequence — only the row storage is contiguous now.
+fn gemm_rows_packed(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+                    panel: &[f32], kidx: &[usize], m: usize, k: usize,
+                    n: usize, out: &mut [f32]) {
+    let kk = kidx.len();
+    let n_chunks = m.div_ceil(CHUNK_ROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |c: usize| {
+        let r0 = c * CHUNK_ROWS;
+        let r1 = (r0 + CHUNK_ROWS).min(m);
+        // SAFETY: rows r0..r1 belong to this chunk alone.
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * n),
+                                           (r1 - r0) * n)
+        };
+        let mut p0 = 0;
+        while p0 < kk {
+            let p1 = (p0 + KBLOCK).min(kk);
+            for (ri, i) in (r0..r1).enumerate() {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut seg[ri * n..(ri + 1) * n];
+                axpy_panel(
+                    mk,
+                    (p0..p1).map(|pi| {
+                        (arow[kidx[pi]],
+                         &panel[pi * n..(pi + 1) * n])
+                    }),
+                    orow,
+                );
+            }
+            p0 = p1;
+        }
+    };
+    run_chunks(p, m * kk * n, n_chunks, &task);
 }
 
 /// Row-skip + column-restricted GEMM: the kept columns of the kept rows
@@ -397,6 +499,34 @@ fn nt_rows(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
             let orow = &mut seg[ri * k..(ri + 1) * k];
             for &j in jidx {
                 let brow = &b[j * n..(j + 1) * n];
+                orow[j] = mk.dot_acc(0.0, arow, brow);
+            }
+        }
+    };
+    run_chunks(p, m * jidx.len() * n, n_chunks, &task);
+}
+
+/// Output-column-restricted NT against a prepacked kept-row panel
+/// (`panel[pi] == b[jidx[pi]]`). **Bit-identical to [`nt_rows`]**: each
+/// kept output column is one `dot_acc` over the same values in the same
+/// order — the B row just comes from the contiguous panel.
+fn nt_rows_packed(p: &ThreadPool, mk: &'static Microkernel, a: &[f32],
+                  panel: &[f32], jidx: &[usize], m: usize, n: usize,
+                  k: usize, out: &mut [f32]) {
+    let n_chunks = m.div_ceil(CHUNK_ROWS);
+    let ptr = SendPtr(out.as_mut_ptr());
+    let task = move |c: usize| {
+        let r0 = c * CHUNK_ROWS;
+        let r1 = (r0 + CHUNK_ROWS).min(m);
+        let seg = unsafe {
+            std::slice::from_raw_parts_mut(ptr.0.add(r0 * k),
+                                           (r1 - r0) * k)
+        };
+        for (ri, i) in (r0..r1).enumerate() {
+            let arow = &a[i * n..(i + 1) * n];
+            let orow = &mut seg[ri * k..(ri + 1) * k];
+            for (pi, &j) in jidx.iter().enumerate() {
+                let brow = &panel[pi * n..(pi + 1) * n];
                 orow[j] = mk.dot_acc(0.0, arow, brow);
             }
         }
@@ -714,6 +844,59 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn packed_panel_paths_bit_match_unpacked() {
+        // The per-window PreppedWeight fast paths must be bit-identical
+        // to the per-call gemm/gemm_nt they replace, under every
+        // microkernel — same pairing, same accumulation order, only the
+        // row storage differs.
+        testkit::quickcheck("packed panel parity", |rng| {
+            let m = testkit::gen_range(rng, 1, 12);
+            let k = 8 * testkit::gen_range(rng, 1, 8);
+            let n = 8 * testkit::gen_range(rng, 1, 8);
+            let dp = *gen_choice(rng, &[2usize, 4]);
+            let b0 = testkit::gen_range(rng, 0, dp);
+            let skip = Skip::Rows(RowPattern::new(k, dp, b0));
+            let a = gen_vec_f32(rng, m * k, -1.0, 1.0);
+            let w = gen_vec_f32(rng, k * n, -1.0, 1.0);
+            for s in [SparseKernels::scalar(), SparseKernels::auto()] {
+                let pw = s.prep(&w, k, n, &skip);
+                assert!(pw.has_panel());
+                assert_eq!(s.gemm_pw(&a, &w, &pw, m, k, n, &skip, &D),
+                           s.gemm(&a, &w, m, k, n, &skip, &D));
+                let a2 = gen_vec_f32(rng, m * n, -1.0, 1.0);
+                assert_eq!(s.gemm_nt_pw(&a2, &w, &pw, m, n, k, &skip),
+                           s.gemm_nt(&a2, &w, m, n, k, &skip));
+            }
+        });
+    }
+
+    #[test]
+    fn prep_never_reads_dropped_rows_and_dense_is_noop() {
+        let (k, n) = (32, 24);
+        let pat = RowPattern::new(k, 4, 1);
+        let mut w = gen_vec_f32(&mut Rng::new(21), k * n, -1.0, 1.0);
+        for r in 0..k {
+            if !pat.keeps(r) {
+                for v in &mut w[r * n..(r + 1) * n] {
+                    *v = f32::NAN;
+                }
+            }
+        }
+        let s = SparseKernels::scalar();
+        let pw = s.prep(&w, k, n, &Skip::Rows(pat));
+        assert!(pw.panel.as_ref().unwrap().iter().all(|v| v.is_finite()),
+                "panel packing loaded a poisoned dropped row");
+        assert_eq!(pw.kept.as_ref().unwrap().len(), pat.kept_count());
+        // Dense and keep-everything skips prepare nothing.
+        assert!(!s.prep(&w, k, n, &D).has_panel());
+        let keep_all = Skip::Rows(RowPattern::new(k, 1, 0));
+        assert!(!s.prep(&w, k, n, &keep_all).has_panel());
+        // Tiles: the tile walks run off the raw buffer — no handle state.
+        let tiles = Skip::Tiles(TilePattern::new(32, 24, 2, 0, 8));
+        assert!(!s.prep(&w, 32, 24, &tiles).has_panel());
     }
 
     #[test]

@@ -129,6 +129,95 @@ pub trait Kernels: Send + Sync + std::fmt::Debug {
     /// `Dense`/`Rows` skips never need preparation.
     fn prep_weight(&self, w: &[f32], k: usize, n: usize, skip: &Skip)
                    -> Option<Vec<f32>>;
+
+    /// Prepare a reusable [`PreppedWeight`] handle for a `[k, n]` weight
+    /// that will serve *many* GEMMs under the same `skip` (one time
+    /// window of an unrolled sequence: forward, backward, and the softmax
+    /// projection all hit the same preparation). The handle is valid only
+    /// while the weight bits are unchanged — SGD invalidates it, so it
+    /// never outlives one step.
+    ///
+    /// Contract: `Skip::Dense` MUST be an allocation-free no-op
+    /// ([`PreppedWeight::dense`]), so callers can prep unconditionally.
+    /// The default covers masked-dense implementations by delegating to
+    /// [`Self::prep_weight`]; structure-exploiting implementations
+    /// override it to cache kept sets / packed panels.
+    fn prep(&self, w: &[f32], k: usize, n: usize, skip: &Skip)
+            -> PreppedWeight {
+        match skip {
+            Skip::Dense => PreppedWeight::dense(),
+            _ => PreppedWeight::masked(self.prep_weight(w, k, n, skip)),
+        }
+    }
+
+    /// [`Self::gemm`] against a prepared weight. `w` is the raw weight
+    /// the handle was prepared from (handles don't carry it — passing it
+    /// explicitly keeps the borrow story trivial). Implementations may
+    /// hit packed panels when the skip shape allows; the result must be
+    /// bit-identical to `gemm` over the same skips.
+    fn gemm_pw(&self, a: &[f32], w: &[f32], pw: &PreppedWeight, m: usize,
+               k: usize, n: usize, k_skip: &Skip, out_skip: &Skip)
+               -> Vec<f32> {
+        self.gemm(a, pw.weight(w), m, k, n, k_skip, out_skip)
+    }
+
+    /// [`Self::gemm_nt`] against a prepared weight (same contract as
+    /// [`Self::gemm_pw`]).
+    fn gemm_nt_pw(&self, a: &[f32], w: &[f32], pw: &PreppedWeight,
+                  m: usize, n: usize, k: usize, skip: &Skip) -> Vec<f32> {
+        self.gemm_nt(a, pw.weight(w), m, n, k, skip)
+    }
+}
+
+/// A weight prepared once per (site, window) and reused across every GEMM
+/// in the window (tentpole (c) of the time-window work). What it holds
+/// depends on the backend and skip:
+///
+/// * masked-dense backends under `Tiles` → `masked` (`w ∘ mask`);
+/// * structure-exploiting backends under `Rows` → `kept` + `panel`
+///   (kept-row indices and the packed `[kept.len(), n]` row panel);
+/// * everything else → empty (use the raw weight), and `Skip::Dense`
+///   preparation is an allocation-free no-op by contract.
+#[derive(Clone, Debug, Default)]
+pub struct PreppedWeight {
+    masked: Option<Vec<f32>>,
+    /// Kept indices along the k axis, ascending.
+    pub kept: Option<Vec<usize>>,
+    /// Packed kept rows of the weight, `[kept.len(), n]`, aligned with
+    /// `kept` (row `pi` of the panel is weight row `kept[pi]`).
+    pub panel: Option<Vec<f32>>,
+}
+
+impl PreppedWeight {
+    /// The no-op preparation: every accessor falls through to the raw
+    /// weight. No allocation.
+    pub fn dense() -> PreppedWeight {
+        PreppedWeight::default()
+    }
+
+    /// Wrap a [`Kernels::prep_weight`] result (masked-dense backends).
+    pub fn masked(masked: Option<Vec<f32>>) -> PreppedWeight {
+        PreppedWeight { masked, kept: None, panel: None }
+    }
+
+    /// A packed kept-row panel (structure-exploiting backends under
+    /// `Rows` skips): `panel` must hold `kept.len()` rows of `n` floats,
+    /// row `pi` being weight row `kept[pi]`.
+    pub fn packed(kept: Vec<usize>, panel: Vec<f32>) -> PreppedWeight {
+        PreppedWeight { masked: None, kept: Some(kept),
+                        panel: Some(panel) }
+    }
+
+    /// The weight view plain `gemm`/`gemm_nt` should run against: the
+    /// masked copy when one was materialized, else the raw weight.
+    pub fn weight<'a>(&'a self, raw: &'a [f32]) -> &'a [f32] {
+        self.masked.as_deref().unwrap_or(raw)
+    }
+
+    /// True when this handle carries a packed kept-row panel.
+    pub fn has_panel(&self) -> bool {
+        self.kept.is_some() && self.panel.is_some()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -300,6 +389,35 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn prep_dense_is_noop_and_pw_gemms_match_plain() {
+        let kern = DenseKernels;
+        let w: Vec<f32> = (0..32 * 64).map(|i| i as f32 * 0.01).collect();
+        let a: Vec<f32> = (0..4 * 32).map(|i| (i % 7) as f32).collect();
+        // Dense prep carries nothing and falls through to the raw weight.
+        let pw = kern.prep(&w, 32, 64, &D);
+        assert!(pw.weight(&w).as_ptr() == w.as_ptr());
+        assert!(!pw.has_panel());
+        assert_eq!(kern.gemm_pw(&a, &w, &pw, 4, 32, 64, &D, &D),
+                   kern.gemm(&a, &w, 4, 32, 64, &D, &D));
+        // Tile prep materializes the mask, exactly like prep_weight.
+        let tiles = Skip::Tiles(TilePattern::new(32, 64, 2, 0, 16));
+        let pw = kern.prep(&w, 32, 64, &tiles);
+        assert_eq!(pw.weight(&w),
+                   kern.prep_weight(&w, 32, 64, &tiles).unwrap());
+        assert_eq!(kern.gemm_pw(&a, &w, &pw, 4, 32, 64, &tiles, &D),
+                   kern.gemm(&a, pw.weight(&w), 4, 32, 64, &tiles, &D));
+        // Row skips need no masked copy on the dense backend (the zeroed
+        // activations already produce the right result).
+        let rows = Skip::Rows(RowPattern::new(32, 2, 1));
+        let pw = kern.prep(&w, 32, 64, &rows);
+        assert!(pw.weight(&w).as_ptr() == w.as_ptr());
+        // gemm_nt_pw: b is [k, n] = [32, 64], a is [m, n].
+        let an: Vec<f32> = (0..4 * 64).map(|i| (i % 5) as f32).collect();
+        assert_eq!(kern.gemm_nt_pw(&an, &w, &pw, 4, 64, 32, &rows),
+                   kern.gemm_nt(&an, &w, 4, 64, 32, &rows));
     }
 
     #[test]

@@ -38,7 +38,7 @@ use crate::patterns::{RowPattern, TilePattern};
 use crate::runtime::backend::{Executor, HostTensor, Value};
 use crate::runtime::manifest::{ArchMeta, ArtifactMeta, Manifest};
 
-pub use kernels::{DenseKernels, Kernels, Skip};
+pub use kernels::{DenseKernels, Kernels, PreppedWeight, Skip};
 
 const FORGET_BIAS: f32 = 1.0;
 
@@ -230,6 +230,34 @@ impl Feed {
     }
 }
 
+/// One contiguous run of timesteps sharing a single pattern draw — a
+/// *time window* of the unrolled sequence. Timesteps `t0..t1` of the
+/// owning site all use `feed`, so weight preparation for the run is paid
+/// once and reused across the window's forward, backward, and softmax
+/// GEMMs. The per-step default degenerates to one run per site covering
+/// `0..seq`.
+struct FeedRun {
+    t0: usize,
+    t1: usize,
+    feed: Feed,
+}
+
+/// `out[site][t]` -> index of the run covering timestep `t` (runs are
+/// contiguous and cover `0..seq` by construction in `site_feed_runs`).
+fn run_lookup(runs: &[Vec<FeedRun>], seq: usize) -> Vec<Vec<usize>> {
+    runs.iter()
+        .map(|rs| {
+            let mut v = vec![0usize; seq];
+            for (ri, r) in rs.iter().enumerate() {
+                for t in r.t0..r.t1 {
+                    v[t] = ri;
+                }
+            }
+            v
+        })
+        .collect()
+}
+
 /// Row pattern with input validation (bail, not panic).
 fn row_pattern_checked(m: usize, dp: usize, b0: usize)
                        -> Result<RowPattern> {
@@ -314,40 +342,9 @@ impl StepProgram {
                     s,
                     skip: Skip::Dense,
                 },
-                "rdp" => {
+                "rdp" | "tdp" => {
                     let b0 = extras[i].as_i32()?[0];
-                    if b0 < 0 {
-                        bail!("rdp: negative bias {b0}");
-                    }
-                    let dp = self.meta.dp[i];
-                    let pat =
-                        row_pattern_checked(widths[i], dp, b0 as usize)?;
-                    // dp=1 keeps every unit: no structure for the
-                    // kernels to exploit (the 1/(1-p) scale still
-                    // applies through the mask).
-                    let skip = if dp == 1 {
-                        Skip::Dense
-                    } else {
-                        Skip::Rows(pat)
-                    };
-                    Feed::Act { m: pat.mask(), rows: 1, s, skip }
-                }
-                "tdp" => {
-                    let b0 = extras[i].as_i32()?[0];
-                    if b0 < 0 {
-                        bail!("tdp: negative bias {b0}");
-                    }
-                    let dp = self.meta.dp[i];
-                    let (k, n) = wdims[i];
-                    let pat = tile_pattern_checked(k, n, dp, b0 as usize,
-                                                   self.meta.tile)?;
-                    // dp=1 keeps every tile: skip the mask/tile walks.
-                    let skip = if dp == 1 {
-                        Skip::Dense
-                    } else {
-                        Skip::Tiles(pat)
-                    };
-                    Feed::Weight { s, skip }
+                    self.pattern_feed(i, b0, widths[i], wdims[i], s)?
                 }
                 other => bail!("step interpreter: unknown variant \
                                 '{other}'"),
@@ -355,6 +352,109 @@ impl StepProgram {
             feeds.push(feed);
         }
         Ok(feeds)
+    }
+
+    /// Build one rdp/tdp [`Feed`] for site `i` from a single `(dp, b0)`
+    /// draw — shared by the MLP's per-step path ([`Self::site_feeds`])
+    /// and the LSTM's per-window path ([`Self::site_feed_runs`]).
+    fn pattern_feed(&self, i: usize, b0: i32, width: usize,
+                    wdim: (usize, usize), s: f32) -> Result<Feed> {
+        if b0 < 0 {
+            bail!("{}: negative bias {b0}", self.meta.variant);
+        }
+        let dp = self.meta.dp[i];
+        match self.meta.variant.as_str() {
+            "rdp" => {
+                let pat = row_pattern_checked(width, dp, b0 as usize)?;
+                // dp=1 keeps every unit: no structure for the kernels to
+                // exploit (the 1/(1-p) scale still applies through the
+                // mask).
+                let skip = if dp == 1 {
+                    Skip::Dense
+                } else {
+                    Skip::Rows(pat)
+                };
+                Ok(Feed::Act { m: pat.mask(), rows: 1, s, skip })
+            }
+            "tdp" => {
+                let (k, n) = wdim;
+                let pat = tile_pattern_checked(k, n, dp, b0 as usize,
+                                               self.meta.tile)?;
+                // dp=1 keeps every tile: skip the mask/tile walks.
+                let skip = if dp == 1 {
+                    Skip::Dense
+                } else {
+                    Skip::Tiles(pat)
+                };
+                Ok(Feed::Weight { s, skip })
+            }
+            other => bail!("step interpreter: unknown variant '{other}'"),
+        }
+    }
+
+    /// Per-site windowed feeds for the LSTM. rdp/tdp extras are `[seq]`
+    /// i32 b0 tracks — entry `t` is the kept residue for timestep `t`,
+    /// constant within each time window — and consecutive equal entries
+    /// group into one [`FeedRun`]. The interpreter is thus entirely
+    /// data-driven: the per-step default arrives as a constant track and
+    /// produces exactly one run per site (today's behavior), while a
+    /// windowed coordinator produces one run per window with no runtime
+    /// knob involved. Conv masks are per-step: one run covering the
+    /// sequence.
+    fn site_feed_runs(&self, extras: &[&HostTensor], sites: usize,
+                      seq: usize, widths: &[usize],
+                      wdims: &[(usize, usize)])
+                      -> Result<Vec<Vec<FeedRun>>> {
+        if extras.len() != 2 * sites {
+            bail!("{}: expected {} variant extras, got {}", self.meta.name,
+                  2 * sites, extras.len());
+        }
+        if self.meta.variant != "conv" && self.meta.dp.len() != sites {
+            bail!("{}: manifest dp {:?} does not cover {} sites",
+                  self.meta.name, self.meta.dp, sites);
+        }
+        let mut out = Vec::with_capacity(sites);
+        for i in 0..sites {
+            let s = extras[sites + i].as_f32()?[0];
+            match self.meta.variant.as_str() {
+                "conv" => {
+                    out.push(vec![FeedRun {
+                        t0: 0,
+                        t1: seq,
+                        feed: Feed::Act {
+                            m: extras[i].as_f32()?.to_vec(),
+                            rows: extras[i].shape()[0],
+                            s,
+                            skip: Skip::Dense,
+                        },
+                    }]);
+                }
+                "rdp" | "tdp" => {
+                    let track = extras[i].as_i32()?;
+                    if track.len() != seq {
+                        bail!("{}: b0 track for site {i} has {} entries, \
+                               seq is {seq}", self.meta.name, track.len());
+                    }
+                    let mut runs = Vec::new();
+                    let mut t0 = 0;
+                    while t0 < seq {
+                        let b0 = track[t0];
+                        let mut t1 = t0 + 1;
+                        while t1 < seq && track[t1] == b0 {
+                            t1 += 1;
+                        }
+                        let feed = self.pattern_feed(i, b0, widths[i],
+                                                     wdims[i], s)?;
+                        runs.push(FeedRun { t0, t1, feed });
+                        t0 = t1;
+                    }
+                    out.push(runs);
+                }
+                other => bail!("step interpreter: unknown variant \
+                                '{other}'"),
+            }
+        }
+        Ok(out)
     }
 
     /// Pack `(new params, new momenta, loss, correct)` in manifest output
@@ -611,7 +711,8 @@ impl StepProgram {
             wdims.push((h, 4 * h)); // tdp masks wx of the consuming layer
         }
         wdims.push((h, vocab)); // last site masks wsoft
-        let feeds = self.site_feeds(&extras, layers, &widths, &wdims)?;
+        let feeds = self.site_feed_runs(&extras, layers, seq, &widths,
+                                        &wdims)?;
 
         let fwd = self.lstm_forward(&params, x, Some(feeds.as_slice()),
                                     true)?;
@@ -654,7 +755,7 @@ impl StepProgram {
     }
 
     fn lstm_forward(&self, params: &[&[f32]], x: &[i32],
-                    feeds: Option<&[Feed]>, keep_caches: bool)
+                    feeds: Option<&[Vec<FeedRun>]>, keep_caches: bool)
                     -> Result<LstmFwd> {
         let kern = self.kern.as_ref();
         let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
@@ -667,16 +768,23 @@ impl StepProgram {
         let wsoft = params[params.len() - 2];
         let bsoft = params[params.len() - 1];
 
-        // Per-layer prepared (tdp-masked for dense kernels) wx, built once
-        // per step (b0 is fixed for the iteration). prepped_wx[l] guards
-        // layer l's input (l >= 1). `None` = use the raw weight.
-        let mut prepped_wx: Vec<Option<Vec<f32>>> = vec![None; layers];
+        // Timestep -> run index per site, and per-(layer, run) prepared
+        // input weights: prep is hoisted out of the timestep loop and
+        // paid once per (site, window) — dense backends materialize
+        // tdp-masked copies, the sparse backend packs kept-row panels for
+        // rdp, and `Skip::Dense` prep is an allocation-free no-op.
+        // prepped_wx[l][ri] guards layer l's input (l >= 1) during run
+        // ri of site l-1; the handles are reused by the backward pass.
+        let run_of = feeds.map(|fs| run_lookup(fs, seq))
+            .unwrap_or_default();
+        let mut prepped_wx: Vec<Vec<PreppedWeight>> =
+            (0..layers).map(|_| Vec::new()).collect();
         if let Some(fs) = feeds {
             for l in 1..layers {
-                if let Feed::Weight { skip, .. } = &fs[l - 1] {
-                    prepped_wx[l] =
-                        kern.prep_weight(cells[l].0, h, 4 * h, skip);
-                }
+                prepped_wx[l] = fs[l - 1].iter()
+                    .map(|r| kern.prep(cells[l].0, h, 4 * h,
+                                       &r.feed.skip()))
+                    .collect();
             }
         }
 
@@ -704,21 +812,22 @@ impl StepProgram {
                                       &DENSE);
                     (inp.clone(), g)
                 } else {
-                    match feeds.map(|fs| &fs[l - 1]) {
-                        Some(f @ Feed::Act { .. }) => {
+                    let site = feeds.map(|fs| {
+                        let ri = run_of[l - 1][t];
+                        (&fs[l - 1][ri].feed, &prepped_wx[l][ri])
+                    });
+                    match site {
+                        Some((f @ Feed::Act { .. }, pw)) => {
                             let mi = f.mask_act(&inp, batch, h);
                             let sk = f.skip();
-                            let g = kern.gemm(&mi, wx, batch, h, 4 * h,
-                                              &sk, &DENSE);
+                            let g = kern.gemm_pw(&mi, wx, pw, batch, h,
+                                                 4 * h, &sk, &DENSE);
                             (mi, g)
                         }
-                        Some(Feed::Weight { s, skip }) => {
-                            let wxv: &[f32] = prepped_wx[l]
-                                .as_deref()
-                                .unwrap_or(wx);
+                        Some((Feed::Weight { s, skip }, pw)) => {
                             let g = scale_vec(
-                                &kern.gemm(&inp, wxv, batch, h, 4 * h,
-                                           skip, &DENSE),
+                                &kern.gemm_pw(&inp, wx, pw, batch, h,
+                                              4 * h, skip, &DENSE),
                                 *s);
                             (inp.clone(), g)
                         }
@@ -785,38 +894,73 @@ impl StepProgram {
             }
         }
 
-        // Softmax projection per the last site's feed.
+        // Softmax projection per run of the last site: each window's
+        // flat rows are contiguous (`t0*batch .. t1*batch`), so the
+        // projection runs one GEMM per window against that window's
+        // prepared wsoft. The per-step default is a single run covering
+        // every row — exactly the old single-GEMM shape.
         let rows = seq * batch;
-        let (mflat, mut logits, prepped_wsoft) =
-            match feeds.map(|fs| &fs[layers - 1]) {
-                Some(f @ Feed::Act { .. }) => {
-                    let mf = f.mask_act(&flat, rows, h);
-                    let sk = f.skip();
-                    let lg = kern.gemm(&mf, wsoft, rows, h, vocab, &sk,
-                                       &DENSE);
-                    (Some(mf), lg, None)
+        let (mflat, logits, prepped_wsoft);
+        match feeds.map(|fs| &fs[layers - 1]) {
+            Some(runs) => {
+                let pws: Vec<PreppedWeight> = runs.iter()
+                    .map(|r| kern.prep(wsoft, h, vocab, &r.feed.skip()))
+                    .collect();
+                let mut lg = vec![0f32; rows * vocab];
+                // dp is fixed per step, so run feeds share one shape;
+                // mflat is cached iff the site is activation-masked.
+                let mut mf_buf =
+                    if matches!(runs.first().map(|r| &r.feed),
+                                Some(Feed::Act { .. })) {
+                        Some(vec![0f32; rows * h])
+                    } else {
+                        None
+                    };
+                for (ri, r) in runs.iter().enumerate() {
+                    let (r0, r1) = (r.t0 * batch, r.t1 * batch);
+                    let nrows = r1 - r0;
+                    let fslice = &flat[r0 * h..r1 * h];
+                    let seg = match &r.feed {
+                        f @ Feed::Act { .. } => {
+                            let mf = f.mask_act(fslice, nrows, h);
+                            let sk = f.skip();
+                            let g = kern.gemm_pw(&mf, wsoft, &pws[ri],
+                                                 nrows, h, vocab, &sk,
+                                                 &DENSE);
+                            mf_buf.as_mut().expect("act run set")
+                                [r0 * h..r1 * h]
+                                .copy_from_slice(&mf);
+                            g
+                        }
+                        Feed::Weight { s, skip } => scale_vec(
+                            &kern.gemm_pw(fslice, wsoft, &pws[ri], nrows,
+                                          h, vocab, skip, &DENSE),
+                            *s),
+                        Feed::Plain => kern.gemm(fslice, wsoft, nrows, h,
+                                                 vocab, &DENSE, &DENSE),
+                    };
+                    lg[r0 * vocab..r1 * vocab].copy_from_slice(&seg);
                 }
-                Some(Feed::Weight { s, skip }) => {
-                    let wp = kern.prep_weight(wsoft, h, vocab, skip);
-                    let wsv: &[f32] = wp.as_deref().unwrap_or(wsoft);
-                    let lg = scale_vec(
-                        &kern.gemm(&flat, wsv, rows, h, vocab, skip,
-                                   &DENSE),
-                        *s);
-                    (None, lg, wp)
-                }
-                _ => (None,
-                      kern.gemm(&flat, wsoft, rows, h, vocab, &DENSE,
-                                &DENSE),
-                      None),
-            };
+                mflat = mf_buf;
+                logits = lg;
+                prepped_wsoft = pws;
+            }
+            None => {
+                mflat = None;
+                logits = kern.gemm(&flat, wsoft, rows, h, vocab, &DENSE,
+                                   &DENSE);
+                prepped_wsoft = Vec::new();
+            }
+        }
+        let mut logits = logits;
         add_row_bias(&mut logits, bsoft);
         Ok(LstmFwd { caches, flat, mflat, prepped_wx, prepped_wsoft,
                      logits })
     }
 
-    fn lstm_backward(&self, params: &[&[f32]], x: &[i32], feeds: &[Feed],
-                     fwd: &LstmFwd, dlogits: &[f32])
+    fn lstm_backward(&self, params: &[&[f32]], x: &[i32],
+                     feeds: &[Vec<FeedRun>], fwd: &LstmFwd,
+                     dlogits: &[f32])
                      -> Result<Vec<Vec<f32>>> {
         let kern = self.kern.as_ref();
         let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
@@ -827,6 +971,7 @@ impl StepProgram {
             .collect();
         let wsoft = params[params.len() - 2];
         let rows = seq * batch;
+        let run_of = run_lookup(feeds, seq);
 
         let mut demb = vec![0f32; vocab * h];
         let mut dwx: Vec<Vec<f32>> =
@@ -838,35 +983,47 @@ impl StepProgram {
         let mut dbsoft = vec![0f32; vocab];
         colsum_acc(dlogits, vocab, &mut dbsoft);
 
-        // Softmax projection backward.
-        let (dwsoft, dflat) = match &feeds[layers - 1] {
-            f @ Feed::Act { .. } => {
-                let mf = fwd.mflat.as_ref().expect("mflat cached");
-                let sk = f.skip();
-                let dws = kern.gemm_tn(mf, dlogits, rows, h, vocab, &sk,
-                                       &DENSE);
-                let df_pre = kern.gemm_nt(dlogits, wsoft, rows, vocab, h,
-                                          &sk);
-                let df = f.mask_act(&df_pre, rows, h);
-                (dws, df)
-            }
-            Feed::Weight { s, skip } => {
-                let ds = scale_vec(dlogits, *s);
-                let dws = kern.gemm_tn(&fwd.flat, &ds, rows, h, vocab,
-                                       skip, &DENSE);
-                let wsv: &[f32] =
-                    fwd.prepped_wsoft.as_deref().unwrap_or(wsoft);
-                let df = kern.gemm_nt(&ds, wsv, rows, vocab, h, skip);
-                (dws, df)
-            }
-            Feed::Plain => {
-                let dws = kern.gemm_tn(&fwd.flat, dlogits, rows, h, vocab,
-                                       &DENSE, &DENSE);
-                let df = kern.gemm_nt(dlogits, wsoft, rows, vocab, h,
-                                      &DENSE);
-                (dws, df)
-            }
-        };
+        // Softmax projection backward, one segment per window run.
+        // `dwsoft` accumulates across runs, so a unit dropped in one
+        // window still collects gradient from windows that kept it —
+        // matching the masked-dense reference exactly. With a single
+        // run this is bit-identical to the old whole-sequence GEMMs
+        // (gemm_tn is zero-init + gemm_tn_acc).
+        let mut dwsoft = vec![0f32; h * vocab];
+        let mut dflat = vec![0f32; rows * h];
+        for (ri, r) in feeds[layers - 1].iter().enumerate() {
+            let (r0, r1) = (r.t0 * batch, r.t1 * batch);
+            let nrows = r1 - r0;
+            let dl = &dlogits[r0 * vocab..r1 * vocab];
+            let seg = match &r.feed {
+                f @ Feed::Act { .. } => {
+                    let mf = &fwd.mflat.as_ref().expect("mflat cached")
+                        [r0 * h..r1 * h];
+                    let sk = f.skip();
+                    kern.gemm_tn_acc(mf, dl, nrows, h, vocab, &sk,
+                                     &DENSE, &mut dwsoft);
+                    let df_pre = kern.gemm_nt_pw(
+                        dl, wsoft, &fwd.prepped_wsoft[ri], nrows, vocab,
+                        h, &sk);
+                    f.mask_act(&df_pre, nrows, h)
+                }
+                Feed::Weight { s, skip } => {
+                    let ds = scale_vec(dl, *s);
+                    kern.gemm_tn_acc(&fwd.flat[r0 * h..r1 * h], &ds,
+                                     nrows, h, vocab, skip, &DENSE,
+                                     &mut dwsoft);
+                    kern.gemm_nt_pw(&ds, wsoft, &fwd.prepped_wsoft[ri],
+                                    nrows, vocab, h, skip)
+                }
+                Feed::Plain => {
+                    kern.gemm_tn_acc(&fwd.flat[r0 * h..r1 * h], dl,
+                                     nrows, h, vocab, &DENSE, &DENSE,
+                                     &mut dwsoft);
+                    kern.gemm_nt(dl, wsoft, nrows, vocab, h, &DENSE)
+                }
+            };
+            dflat[r0 * h..r1 * h].copy_from_slice(&seg);
+        }
 
         // BPTT over the cached cells.
         let mut dh_next = vec![vec![0f32; batch * h]; layers];
@@ -931,14 +1088,16 @@ impl StepProgram {
                         }
                     }
                 } else {
-                    match &feeds[l - 1] {
+                    let ri = run_of[l - 1][t];
+                    let pw = &fwd.prepped_wx[l][ri];
+                    match &feeds[l - 1][ri].feed {
                         f @ Feed::Act { .. } => {
                             let sk = f.skip();
                             kern.gemm_tn_acc(&cache.minp, &da, batch, h,
                                              4 * h, &sk, &DENSE,
                                              &mut dwx[l]);
-                            let dmi = kern.gemm_nt(&da, wx, batch, 4 * h,
-                                                   h, &sk);
+                            let dmi = kern.gemm_nt_pw(&da, wx, pw, batch,
+                                                      4 * h, h, &sk);
                             let dinp = f.mask_act(&dmi, batch, h);
                             for (d, &s) in
                                 dh_cur[l - 1].iter_mut().zip(&dinp)
@@ -951,11 +1110,9 @@ impl StepProgram {
                             kern.gemm_tn_acc(&cache.minp, &dgs, batch, h,
                                              4 * h, skip, &DENSE,
                                              &mut dwx[l]);
-                            let wxv: &[f32] = fwd.prepped_wx[l]
-                                .as_deref()
-                                .unwrap_or(wx);
-                            let dinp = kern.gemm_nt(&dgs, wxv, batch,
-                                                    4 * h, h, skip);
+                            let dinp = kern.gemm_nt_pw(&dgs, wx, pw,
+                                                       batch, 4 * h, h,
+                                                       skip);
                             for (d, &s2) in
                                 dh_cur[l - 1].iter_mut().zip(&dinp)
                             {
@@ -1013,13 +1170,16 @@ struct LstmFwd {
     caches: Vec<CellCache>,
     /// Top-layer outputs [seq*batch, h], row t*batch + b.
     flat: Vec<f32>,
-    /// Masked+scaled flat (act-mask softmax sites only).
+    /// Masked+scaled flat (act-mask softmax sites only). Each window
+    /// run's rows are masked with that run's pattern.
     mflat: Option<Vec<f32>>,
-    /// Per-layer prepared wx (`Some` = masked copy for dense kernels;
-    /// `None` = raw weight, for other feeds / layer 0 / sparse kernels).
-    prepped_wx: Vec<Option<Vec<f32>>>,
-    /// Prepared wsoft (same convention).
-    prepped_wsoft: Option<Vec<f32>>,
+    /// Per-layer, per-run prepared wx: prepped once per (site, window)
+    /// and reused across every timestep in the window, for forward and
+    /// backward. Empty per-layer vec for layer 0 / feed-less runs.
+    prepped_wx: Vec<Vec<PreppedWeight>>,
+    /// Per-run prepared wsoft (same convention; empty when feeds are
+    /// absent, i.e. eval).
+    prepped_wsoft: Vec<PreppedWeight>,
     /// [seq*batch, vocab] including bsoft.
     logits: Vec<f32>,
 }

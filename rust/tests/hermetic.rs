@@ -387,7 +387,16 @@ fn synth_tail(meta: &ArtifactMeta, rng: &mut Rng) -> Vec<HostTensor> {
             Kind::Bias => {
                 let dp = meta.dp[site];
                 site += 1;
-                HostTensor::scalar_i32(rng.next_usize(dp) as i32)
+                // MLP b0 extras are scalars; LSTM b0 extras are [seq]
+                // per-timestep tracks. Drawing every entry independently
+                // deliberately produces mixed tracks, so this parity
+                // suite also exercises the interpreter's window-run
+                // grouping (both backends see the identical track).
+                HostTensor::i32(
+                    &t.shape,
+                    (0..t.elements())
+                        .map(|_| rng.next_usize(dp) as i32)
+                        .collect())
             }
             Kind::Scale => HostTensor::scalar_f32(2.0),
             Kind::Lr => HostTensor::scalar_f32(0.05),
@@ -465,7 +474,17 @@ fn sparse_matches_reference_on_one_full_step_all_six_cases() {
 #[test]
 fn sparse_dispatch_sequences_match_reference() {
     let rc = reference_cache();
-    let sc = sparse_cache();
+    // Pinned to scalar microkernels: these two loops compare 10-step
+    // loss *trajectories* at 1e-4 relative, and trajectory comparisons
+    // compound per-step kernel rounding differences through the
+    // parameters. The SIMD microkernels' FMA/reassociation noise is
+    // within the single-step 1e-5 contract (covered by
+    // `sparse_matches_reference_on_one_full_step_all_six_cases` and the
+    // AD_SIMD CI matrix) but can drift a compounded trajectory past
+    // 1e-4; the scalar kernels share the reference's summation order, so
+    // this test stays about *structure* (skip handling, dispatch), not
+    // about floating-point reassociation.
+    let sc = ExecutorCache::sparse_scalar(Manifest::builtin_test());
     let (mnist, _) = MnistSyn::train_test(256, 64, 21);
     let corpus = Corpus::generate(64, 6000, 600, 600, 5);
     let steps = 10;
@@ -516,6 +535,86 @@ fn sparse_dispatch_sequences_match_reference() {
                     "{variant:?}: lstm step {i} loss {a} vs {b}");
         }
     }
+}
+
+/// Time-windowed dropout parity: with `AD_TIME_WINDOW`-style per-window
+/// draws (passed explicitly — env mutation is racy under parallel test
+/// threads), the structured-sparse backend must track the masked-dense
+/// reference trajectory for every window the bench grid exercises:
+/// W=1 (fresh pattern every timestep), W=4 (two windows per seq=8 step),
+/// and W=16 (one pattern held across two steps). Both backends draw the
+/// identical window schedule from the checkpointable RNG, so dispatch
+/// sequences must also agree exactly.
+#[test]
+fn windowed_sparse_matches_reference_trajectories() {
+    let rc = reference_cache();
+    // Scalar kernels for the same trajectory-compounding reason as
+    // `sparse_dispatch_sequences_match_reference` above; the windowed
+    // packed-panel SIMD paths are pinned bit-exact against the unpacked
+    // kernels in the sparse unit suite instead.
+    let sc = ExecutorCache::sparse_scalar(Manifest::builtin_test());
+    let corpus = Corpus::generate(64, 6000, 600, 600, 41);
+    let steps = 8;
+    for window in [Some(1usize), Some(4), Some(16)] {
+        for variant in [Variant::Rdp, Variant::Tdp] {
+            let run = |cache: &ExecutorCache| {
+                let schedule =
+                    Schedule::new(variant, &[0.5, 0.5], &[1, 2], true)
+                        .unwrap();
+                let mut tr = LstmTrainer::new_with_window(
+                    cache, "lstmsyn", schedule, &corpus.train, 0.1, 53,
+                    window)
+                    .unwrap();
+                for _ in 0..steps {
+                    tr.step().unwrap();
+                }
+                (tr.metrics.dispatched.clone(),
+                 tr.metrics.curve.iter().map(|p| p.loss)
+                     .collect::<Vec<_>>())
+            };
+            let (ref_names, ref_losses) = run(&rc);
+            let (sp_names, sp_losses) = run(&sc);
+            assert_eq!(ref_names, sp_names,
+                       "{variant:?} W={window:?}: dispatch");
+            for (i, (a, b)) in
+                ref_losses.iter().zip(&sp_losses).enumerate()
+            {
+                assert!((a - b).abs() <= 1e-4 * a.abs().max(1.0),
+                        "{variant:?} W={window:?} step {i}: \
+                         loss {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// The default window (per-step, `W = seq`) must reproduce the
+/// pre-windowing behavior bit for bit: same RNG draw count, same
+/// dispatch, same losses. Pinned by running the explicit `Some(seq)`
+/// override against the `None` default on the reference backend.
+#[test]
+fn default_window_is_bit_identical_to_per_step() {
+    let cache = reference_cache();
+    let corpus = Corpus::generate(64, 6000, 600, 600, 43);
+    let steps = 6;
+    let run = |window: Option<usize>| {
+        let schedule =
+            Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], true)
+                .unwrap();
+        let mut tr = LstmTrainer::new_with_window(
+            &cache, "lstmsyn", schedule, &corpus.train, 0.1, 59, window)
+            .unwrap();
+        for _ in 0..steps {
+            tr.step().unwrap();
+        }
+        (tr.metrics.dispatched.clone(),
+         tr.metrics.curve.iter().map(|p| p.loss).collect::<Vec<_>>())
+    };
+    // lstmsyn has seq=8; Some(8) and None must be the same policy.
+    let (names_a, losses_a) = run(None);
+    let (names_b, losses_b) = run(Some(8));
+    assert_eq!(names_a, names_b);
+    assert_eq!(losses_a, losses_b,
+               "explicit W=seq must be bit-identical to the default");
 }
 
 /// `AD_SIMD=off` hermetic smoke: the scalar-microkernel sparse backend

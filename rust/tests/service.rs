@@ -149,6 +149,64 @@ fn curve(m: &approx_dropout::coordinator::TrainMetrics)
     m.curve.iter().map(|p| (p.step, p.loss, p.acc)).collect()
 }
 
+/// Mid-window checkpoint round-trip: with a multi-step pattern hold
+/// (`W = 2*seq`), a checkpoint taken while a carry is live
+/// (`held_left > 0`) must resume bit-exactly — the held (dp, b0)
+/// choices and the remaining hold count are trainer state. Also pins
+/// that windowed runs are a distinct experiment: their checkpoint is
+/// rejected by a default per-step trainer via the config hash.
+#[test]
+fn mid_window_checkpoint_roundtrip_is_bit_exact() {
+    let dir = tmp_dir("midwin");
+    let corpus = Corpus::generate(64, 4000, 400, 400, 19);
+    for (bname, cache) in caches() {
+        let mk = || {
+            let schedule =
+                Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true)
+                    .unwrap();
+            // lstmtest has seq=5; W=10 holds one (dp, b0) draw across
+            // two consecutive steps.
+            LstmTrainer::new_with_window(&cache, "lstmtest", schedule,
+                                         &corpus.train, 0.5, 23,
+                                         Some(10))
+                .unwrap()
+        };
+        let mut a = mk();
+        a.warmup().unwrap();
+        a.train(8).unwrap();
+        let full = curve(&a.metrics);
+
+        let path = dir.join(format!("{bname}.ckpt"));
+        let mut b = mk();
+        b.warmup().unwrap();
+        // 3 steps: the window opened at step 2 still owes one held
+        // step, so this checkpoint carries a live mid-window hold.
+        b.train(3).unwrap();
+        b.save_checkpoint(&path).unwrap();
+
+        let mut c = mk();
+        c.resume_from(&path).unwrap();
+        c.warmup().unwrap();
+        assert_eq!(c.state.step, 3);
+        c.train(5).unwrap();
+        let tail = curve(&c.metrics);
+        assert_eq!(&full[3..], &tail[..],
+                   "{bname}: mid-window resume must be bit-identical");
+        assert_eq!(param_bits(&a), param_bits(&c),
+                   "{bname}: final params must be bit-identical");
+
+        // Cross-policy resume is a config mismatch, not silent drift.
+        let schedule =
+            Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+        let mut plain = LstmTrainer::new_with_window(
+            &cache, "lstmtest", schedule, &corpus.train, 0.5, 23, None)
+            .unwrap();
+        assert!(plain.resume_from(&path).is_err(),
+                "{bname}: windowed ckpt must not resume per-step");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// lr-decay driver state (lr, epochs_done) survives a checkpoint: an
 /// interrupted run crossing epoch boundaries decays on the same steps as
 /// an uninterrupted one.

@@ -9,10 +9,19 @@ Usage:
 Gate mode (default) fails (exit 1) if any gated row's native
 `speedup_vs_dense` falls more than `tolerance` (fraction) below the
 checked-in value. Gated rows are the paper-relevant operating points:
-rate in {0.5, 0.7} for the row-skip and tile-skip configs, on every arch
-present in the baseline. Dense rows (speedup 1.0 by construction),
-low-rate smoke points, and `<config>@scalar` rows are reported but not
-gated against the baseline.
+rate in {0.5, 0.7} for the row-skip and tile-skip configs — including
+their time-windowed `<config>@wN` variants — on every arch present in
+the baseline. Dense rows (speedup 1.0 by construction), low-rate smoke
+points, and `<config>@scalar` rows are reported but not gated against
+the baseline.
+
+The windowed LSTM rows additionally carry an *absolute* floor: the
+time-window feature exists to close the paper's LSTM speedup gap, so
+`lstmsyn` row-skip at rate 0.5 with a 16-timestep window must beat
+dense by at least 1.6x. The floor is a ratchet — advisory until a
+reviewed native baseline demonstrating the bar is landed via
+`--refresh-baseline`, a hard gate on native candidates afterwards.
+Smoke runs and reports predating the windowed rows skip it.
 
 Additionally, when the native report was produced by a SIMD microkernel
 (meta `microkernel` != "scalar") and carries `@scalar` comparison rows,
@@ -40,6 +49,22 @@ GATED_RATES = (0.5, 0.7)
 GATED_CONFIGS = ("row-skip", "tile-skip")
 NATIVE_TOLERANCE = 0.25
 SCALE_MODEL_TOLERANCE = 0.40
+# Absolute floor on the windowed LSTM operating point (the acceptance
+# bar for the time-window feature), independent of any baseline.
+WINDOWED_FLOOR_KEY = ("lstmsyn", 0.5, "row-skip@w16")
+WINDOWED_FLOOR = 1.6
+
+
+def is_gated_config(config):
+    """Gated: row/tile-skip, including their `@wN` windowed variants.
+
+    `@scalar` rows (and any other suffix) stay ungated — they exist as
+    intra-report comparisons, not baseline-tracked operating points.
+    """
+    if config in GATED_CONFIGS:
+        return True
+    base, sep, suffix = config.partition("@w")
+    return bool(sep) and base in GATED_CONFIGS and suffix.isdigit()
 
 
 def load_doc(path):
@@ -73,7 +98,7 @@ def check_baseline_floor(native, checked, tolerance):
         arch, rate, config = key
         base = checked[key]["speedup_vs_dense"]
         nat = native.get(key)
-        gated = rate in GATED_RATES and config in GATED_CONFIGS
+        gated = rate in GATED_RATES and is_gated_config(config)
         if nat is None:
             verdict = "MISSING" if gated else "missing (ungated)"
             if gated:
@@ -135,6 +160,59 @@ def check_simd_beats_scalar(native_doc, native):
     return failures, lines
 
 
+def check_windowed_floor(native_doc, native, checked_doc, checked):
+    """Absolute speedup floor for the windowed LSTM operating point.
+
+    The time-window feature's acceptance bar is >= 1.6x on lstmsyn
+    row-skip at rate 0.5 with a 16-timestep window, measured natively.
+    The floor is a *ratchet*: it arms once a reviewed native baseline
+    demonstrates the bar (so landing that baseline is what turns the
+    bar into a hard gate), and from then on a native candidate may not
+    fall below the absolute bar even if the relative tolerance would
+    let it. Until a native windowed baseline is landed — or against
+    scale-model candidates, which model scalar MAC ratios and cannot
+    see the panel-locality win the floor measures — the line is
+    advisory. Smoke runs are skipped outright (rep counts too small to
+    time honestly).
+    """
+    failures, lines = [], []
+    arch, rate, config = WINDOWED_FLOOR_KEY
+    if not any("@w" in key[2] for key in native):
+        lines.append("(no @wN rows in candidate report; windowed floor "
+                     "skipped — report predates time-window support)")
+        return failures, lines
+    if native_doc.get("smoke"):
+        lines.append("(smoke run; absolute windowed floor skipped)")
+        return failures, lines
+    base_row = checked.get(WINDOWED_FLOOR_KEY)
+    armed = (is_native(native_doc) and is_native(checked_doc)
+             and base_row is not None
+             and base_row["speedup_vs_dense"] >= WINDOWED_FLOOR)
+    row = native.get(WINDOWED_FLOOR_KEY)
+    if row is None:
+        msg = (f"{WINDOWED_FLOOR_KEY}: windowed rows present but the "
+               f"floor's operating point is missing")
+        if armed:
+            failures.append(msg)
+        lines.append(f"  {msg}")
+        return failures, lines
+    speedup = row["speedup_vs_dense"]
+    ok = speedup >= WINDOWED_FLOOR
+    if armed:
+        verdict = "ok" if ok else "BELOW WINDOWED FLOOR"
+        if not ok:
+            failures.append(
+                f"{WINDOWED_FLOOR_KEY}: native {speedup:.2f} < armed "
+                f"absolute floor {WINDOWED_FLOOR:.2f}")
+    else:
+        status = "meets bar" if ok else "below bar"
+        verdict = (f"advisory ({status}; arms when a native baseline "
+                   f">= {WINDOWED_FLOOR} is landed)")
+    lines.append(f"{arch:8} {rate:5} {config:>16} {speedup:8.2f}  "
+                 f"floor {WINDOWED_FLOOR:.2f}  {verdict}")
+    return failures, lines
+
+
 def run_gate(native_path, checked_path, tolerance):
     native_doc = load_doc(native_path)
     checked_doc = load_doc(checked_path)
@@ -157,6 +235,12 @@ def run_gate(native_path, checked_path, tolerance):
     for ln in lines:
         print(ln)
     failures += simd_failures
+    print("\nwindowed LSTM absolute floor (ratchet):")
+    win_failures, lines = check_windowed_floor(native_doc, native,
+                                               checked_doc, checked)
+    for ln in lines:
+        print(ln)
+    failures += win_failures
 
     if failures:
         print(f"\nFAIL: {len(failures)} gated check(s) failed:")
@@ -291,7 +375,57 @@ def self_test():
     rc, _ = gate_with(scalar_run, checked_doc)
     assert rc == 0, "scalar-microkernel run skips the simd gate"
 
-    # 6. refresh-baseline installs native reports and refuses junk.
+    # 6. Windowed rows: baseline-tracked like their base configs, plus
+    #    the absolute lstmsyn row-skip@w16 floor ratchet at rate 0.5.
+    win_rows = list(base_rows) + [
+        _row("lstmsyn", 0.5, "row-skip", 1.3),
+        _row("lstmsyn", 0.5, "row-skip@w1", 1.2),
+        _row("lstmsyn", 0.5, "row-skip@w16", 2.5),
+    ]
+    win_native = _doc("native: bench", [dict(r) for r in win_rows])
+    win_checked = _doc("native: bench", [dict(r) for r in win_rows])
+    rc, _ = gate_with(win_native, win_checked)
+    assert rc == 0, "healthy windowed rows must pass"
+    # A >25% drop on a @wN row regresses like any gated config (1.7 still
+    # clears the 1.6 absolute floor, so this isolates the relative gate).
+    degraded = _doc("native: bench", [dict(r) for r in win_rows])
+    degraded["rows"][-1] = _row("lstmsyn", 0.5, "row-skip@w16", 1.7)
+    rc, out = gate_with(degraded, win_checked)
+    assert rc == 1 and "REGRESSION" in out, "@w16 relative drop must fail"
+    # Armed floor (native baseline >= 1.6): a candidate below the bar
+    # fails absolutely even if the baseline itself had regressed…
+    low = [dict(r) for r in win_rows]
+    low[-1] = _row("lstmsyn", 0.5, "row-skip@w16", 1.4)
+    rc, out = gate_with(_doc("native: bench", low), win_checked)
+    assert rc == 1 and "BELOW WINDOWED FLOOR" in out, \
+        "sub-1.6x w16 vs an armed native baseline must fail the floor"
+    # …but the same candidate against a baseline that never demonstrated
+    # the bar (here: both sides at 1.4) is advisory, not fatal — the
+    # ratchet only arms once a reviewed native baseline meets the bar.
+    rc, out = gate_with(_doc("native: bench", [dict(r) for r in low]),
+                        _doc("native: bench", [dict(r) for r in low]))
+    assert rc == 0 and "advisory" in out, "unarmed floor is advisory"
+    # Scale-model baselines never arm the floor either.
+    rc, out = gate_with(win_native,
+                        _doc("tools/bench_sparse_port.py scale model",
+                             [dict(r) for r in win_rows]))
+    assert rc == 0 and "advisory" in out, \
+        "scale-model baseline leaves the floor advisory"
+    # Smoke runs skip the floor entirely (still gate relatively); a
+    # report with no @wN rows at all skips it too.
+    smoke_low = _doc("native: bench", [dict(r) for r in low], smoke=True)
+    rc, out = gate_with(smoke_low, win_checked)
+    assert rc == 1 and "smoke run" in out and "REGRESSION" in out, \
+        "smoke skips the floor but still gates relatively"
+    rc, out = gate_with(native_doc, checked_doc)
+    assert rc == 0 and "predates time-window" in out, \
+        "pre-window reports skip the floor"
+    # @scalar rows must never be swept into the gated set.
+    assert is_gated_config("row-skip@w4")
+    assert not is_gated_config("row-skip@scalar")
+    assert not is_gated_config("dense")
+
+    # 7. refresh-baseline installs native reports and refuses junk.
     with tempfile.TemporaryDirectory() as d:
         np, cp = os.path.join(d, "n.json"), os.path.join(d, "c.json")
         with open(cp, "w") as f:
@@ -313,7 +447,7 @@ def self_test():
         with contextlib.redirect_stdout(out):
             assert refresh_baseline(np, cp) == 1
 
-    print("self-test OK (6 scenarios)")
+    print("self-test OK (7 scenarios)")
     return 0
 
 
