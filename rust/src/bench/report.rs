@@ -24,6 +24,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{Context, Result};
 
 use crate::util::json::Json;
+use crate::{info, warn_};
 
 pub struct BenchReport {
     name: String,
@@ -76,21 +77,44 @@ impl BenchReport {
     }
 
     /// Default location of `file_name`: `$AD_BENCH_OUT/` when set, else
-    /// the repo root (one level above the cargo manifest).
+    /// the repo root (one level above the cargo manifest) — but only if
+    /// that baked build-machine path exists *at run time*. A relocated
+    /// binary (CI artifact, another checkout, a container without the
+    /// build tree) falls back to the current directory instead of trying
+    /// to write into a directory that is not there.
     pub fn default_path(file_name: &str) -> PathBuf {
-        match std::env::var_os("AD_BENCH_OUT") {
-            Some(dir) => PathBuf::from(dir).join(file_name),
-            None => PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-                .join("..")
-                .join(file_name),
+        let baked = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/.."));
+        let (dir, fell_back) = resolve_out_dir(
+            std::env::var_os("AD_BENCH_OUT").map(PathBuf::from), baked);
+        if fell_back {
+            warn_!("bench report: baked repo root {} is absent on this \
+                    machine — writing {file_name} to the current \
+                    directory (set AD_BENCH_OUT to choose)",
+                   baked.display());
         }
+        dir.join(file_name)
     }
 
     /// Write to [`Self::default_path`] and return where it landed.
     pub fn write_default(&self, file_name: &str) -> Result<PathBuf> {
         let path = Self::default_path(file_name);
         self.write(&path)?;
+        info!("bench report: wrote {}", path.display());
         Ok(path)
+    }
+}
+
+/// The report-directory policy, pure so the relocated-binary behavior is
+/// unit-testable: explicit `AD_BENCH_OUT` wins unconditionally; the
+/// baked repo root is used only when it exists on the running machine;
+/// otherwise the current directory (second element reports the
+/// fallback, for the loud log).
+fn resolve_out_dir(env_out: Option<PathBuf>, baked: &Path)
+                   -> (PathBuf, bool) {
+    match env_out {
+        Some(d) => (d, false),
+        None if baked.is_dir() => (baked.to_path_buf(), false),
+        None => (PathBuf::from("."), true),
     }
 }
 
@@ -115,6 +139,31 @@ mod tests {
         let rows = v.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0].path("arch").unwrap().as_str(), Some("mlpsyn"));
+    }
+
+    #[test]
+    fn out_dir_resolution_survives_relocated_binaries() {
+        // Explicit override always wins, even over an existing baked dir.
+        let tmp = std::env::temp_dir();
+        let (d, fell) = resolve_out_dir(Some(PathBuf::from("/x/y")), &tmp);
+        assert_eq!(d, PathBuf::from("/x/y"));
+        assert!(!fell);
+        // Baked path exists (build machine): use it.
+        let (d, fell) = resolve_out_dir(None, &tmp);
+        assert_eq!(d, tmp);
+        assert!(!fell);
+        // Baked path is gone (binary relocated): fall back to cwd — the
+        // pre-fix behavior was to return the dead build-machine path.
+        let dead = tmp.join(format!("ad-gone-{}", std::process::id()));
+        let (d, fell) = resolve_out_dir(None, &dead);
+        assert_eq!(d, PathBuf::from("."));
+        assert!(fell, "fallback must be loud");
+        // A *file* at the baked path is not a usable directory either.
+        let f = tmp.join(format!("ad-file-{}", std::process::id()));
+        std::fs::write(&f, b"x").unwrap();
+        let (d, _) = resolve_out_dir(None, &f);
+        assert_eq!(d, PathBuf::from("."));
+        std::fs::remove_file(&f).ok();
     }
 
     #[test]

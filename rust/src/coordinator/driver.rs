@@ -110,6 +110,48 @@ pub trait ModelFront {
     fn restore(&mut self, snap: &Json) -> Result<()>;
 }
 
+/// Params-only eval entry: restore just the parameter tensors of a
+/// checkpoint into an eval-only [`TrainState`] for `tag`, without
+/// constructing a `Trainer` (no schedule, batcher, RNG or dataset — none
+/// of which the dropout-free `<tag>_eval` graph consumes). The inference
+/// registry holds one of these per served model.
+///
+/// Validates every checkpoint tensor against the manifest's parameter
+/// schema for `tag` (name and shape, in order) — serving an MLP
+/// checkpoint under an LSTM tag, or a checkpoint from a different
+/// geometry, is rejected here rather than surfacing as a kernel shape
+/// panic mid-request. Momenta are deliberately not ingested: inference
+/// never steps, and skipping them halves the resident bytes per model.
+pub fn eval_state_from_checkpoint(cache: &ExecutorCache, tag: &str,
+                                  ckpt: &Checkpoint) -> Result<TrainState> {
+    if ckpt.version != CKPT_VERSION {
+        bail!("checkpoint version {} unsupported (expected {CKPT_VERSION})",
+              ckpt.version);
+    }
+    let meta = cache.manifest().get(&format!("{tag}_conv"))
+        .with_context(|| format!("tag {tag} has no conv artifact in the \
+                                  manifest"))?;
+    let param_metas: Vec<_> = meta.inputs.iter()
+        .filter(|t| t.kind == crate::runtime::manifest::Kind::Param)
+        .cloned()
+        .collect();
+    if ckpt.params.len() != param_metas.len() {
+        bail!("checkpoint has {} param tensors, tag {tag} declares {}",
+              ckpt.params.len(), param_metas.len());
+    }
+    let backend = cache.backend();
+    let mut params = Vec::with_capacity(param_metas.len());
+    for (t, m) in ckpt.params.iter().zip(&param_metas) {
+        if t.name != m.name || t.shape != m.shape {
+            bail!("checkpoint tensor {}:{:?} does not match tag {tag}'s \
+                   parameter {}:{:?}", t.name, t.shape, m.name, m.shape);
+        }
+        params.push(backend.ingest(HostTensor::f32(&t.shape,
+                                                   t.data.clone()))?);
+    }
+    TrainState::eval_only(param_metas, params, ckpt.step)
+}
+
 /// Push one `b0` bias scalar per site (approximate-dropout variants).
 pub fn push_bias_scalars(tail: &mut Vec<HostTensor>, choices: &[Choice]) {
     for c in choices {

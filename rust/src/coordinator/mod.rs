@@ -24,7 +24,8 @@ pub mod mlp;
 pub mod pool;
 pub mod schedule;
 
-pub use driver::{ModelFront, StepInput, Trainer};
+pub use driver::{eval_state_from_checkpoint, ModelFront, StepInput,
+                 Trainer};
 pub use lstm::{LstmFront, LstmTrainer};
 pub use metrics::{perplexity, speedup, TrainMetrics};
 pub use mlp::{MlpFront, MlpTrainer};

@@ -17,6 +17,7 @@ use approx_dropout::service;
 use approx_dropout::util::argparse::Args;
 use approx_dropout::util::json::Json;
 use approx_dropout::util::log;
+use approx_dropout::util::Timer;
 
 const HELP: &str = "\
 approx-dropout — Approximate Random Dropout (Song et al. 2018) repro
@@ -41,6 +42,18 @@ COMMANDS:
                [--checkpoint-every N] [--ckpt-dir DIR] [--out DIR]
                (jobs with an existing <ckpt-dir>/<name>.ckpt resume from
                 it; per-job REPORT_<name>.json lands in --out)
+  infer        Serve checkpointed models with dynamic micro-batching and
+               benchmark request latency
+               --ckpt FILE [--tag mlpsyn] [--model default]
+               [--requests 64] [--clients 8] [--slots 2] [--max-batch 0]
+               [--seed 42] [--tokens 20000] [--expect-hash HEX]
+               [--check-parity]
+               (hermetic backends only: per-example eval outputs are an
+                interpreter extension. Concurrent requests coalesce into
+                one padded eval dispatch per slot turn; --check-parity
+                proves coalesced results bit-identical to sequential
+                ones; --expect-hash pins the checkpoint's config hash.
+                Writes BENCH_infer.json: p50/p99 latency + QPS)
   info         List artifacts in the manifest [--filter substr]
   help         This message
 
@@ -70,6 +83,7 @@ fn main() -> Result<()> {
         Some("train-lstm") => train_lstm(&args),
         Some("search") => run_search(&args),
         Some("serve") => serve(&args),
+        Some("infer") => infer(&args),
         Some("info") => info_cmd(&args),
         Some("help") | None => {
             println!("{HELP}");
@@ -296,6 +310,206 @@ fn serve(args: &Args) -> Result<()> {
     let report = service::run_jobs(&cache, &specs, &cfg)?;
     print!("{}", service::summarize(&report));
     service::ensure_all_ok(&report)
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let ckpt = args.get("ckpt").ok_or_else(
+        || anyhow::anyhow!("infer requires --ckpt <file.ckpt> (write one \
+                            with train-mlp/train-lstm --ckpt-out or a \
+                            serve --ckpt-dir)"))?;
+    let tag = args.str_or("tag", "mlpsyn");
+    let model = args.str_or("model", "default");
+    let requests = args.usize_or("requests", 64).max(1);
+    let clients = args.usize_or("clients", 8).max(1);
+    let slots = args.usize_or("slots", 2).max(1);
+    let max_batch = args.usize_or("max-batch", 0);
+    let seed = args.u64_or("seed", 42);
+    let expect_hash = args.get("expect-hash")
+        .map(service::checkpoint::parse_hex_u64)
+        .transpose()?;
+    let manifest = approx_dropout::manifest_or_builtin()?;
+    let cache = ExecutorCache::from_env(manifest)?;
+    info!("backend: {}", cache.backend().name());
+    let examples = example_pool(&cache, &tag, requests, seed,
+                                args.usize_or("tokens", 20_000))?;
+    let spec = service::ModelSpec {
+        name: model.clone(),
+        tag: tag.clone(),
+        ckpt: ckpt.into(),
+        expect_hash,
+    };
+
+    if args.has_flag("check-parity") {
+        check_parity(&cache, &spec, &examples)?;
+        println!("parity: coalesced results bit-identical to sequential \
+                  dispatches ({} requests)", examples.len());
+    }
+
+    let server = service::InferServer::start(
+        &cache, std::slice::from_ref(&spec),
+        &service::InferConfig { slots, max_batch })?;
+    let wall = Timer::start();
+    let lat_ms = std::thread::scope(|scope| -> Result<Vec<f64>> {
+        let server = &server;
+        let model = &model;
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                // Interleaved split so every client sees the same mix.
+                let chunk: Vec<service::Example> = examples.iter().cloned()
+                    .skip(c).step_by(clients).collect();
+                scope.spawn(move || -> Result<Vec<f64>> {
+                    let mut out = Vec::with_capacity(chunk.len());
+                    for ex in chunk {
+                        let r = recv_response(
+                            server.submit(service::InferRequest {
+                                model: model.clone(),
+                                example: ex,
+                            })?)?;
+                        out.push(r.latency_s * 1e3);
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        let mut all = Vec::with_capacity(requests);
+        for h in handles {
+            all.extend(h.join().map_err(
+                |_| anyhow::anyhow!("client thread panicked"))??);
+        }
+        Ok(all)
+    })?;
+    let wall_s = wall.elapsed_s();
+    let st = server.stats().into_iter().next()
+        .expect("one model was registered");
+    let qps = requests as f64 / wall_s.max(1e-9);
+    let p50 = approx_dropout::util::stats::percentile(&lat_ms, 50.0);
+    let p99 = approx_dropout::util::stats::percentile(&lat_ms, 99.0);
+    println!("served {requests} request(s) from {clients} client(s) in \
+              {wall_s:.3}s: {qps:.1} req/s, p50 {p50:.3} ms, p99 \
+              {p99:.3} ms, max coalesced batch {}",
+             st.max_batch_observed);
+
+    let mut r = BenchReport::new("infer", "approx-dropout infer");
+    r.set("backend", Json::str(cache.backend().name()));
+    r.set("tag", Json::str(&tag));
+    r.set("slots", Json::num(slots as f64));
+    r.set("step", Json::num(st.step as f64));
+    r.set("config_hash",
+          Json::str(&service::checkpoint::hex_u64(st.config_hash)));
+    r.row(vec![
+        ("model", Json::str(&st.name)),
+        ("requests", Json::num(requests as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("qps", Json::num(qps)),
+        ("p50_ms", Json::num(p50)),
+        ("p99_ms", Json::num(p99)),
+        ("mean_ms", Json::num(
+            approx_dropout::util::stats::mean(&lat_ms))),
+        ("max_batch_observed", Json::num(st.max_batch_observed as f64)),
+    ]);
+    let path = r.write_default("BENCH_infer.json")?;
+    println!("report: {}", path.display());
+    Ok(())
+}
+
+/// Deterministic request pool for `infer`: MLP tags get synthetic
+/// images (any `n_in`, the toy test archs included), LSTM tags get
+/// consecutive windows of the synthetic corpus' validation split — the
+/// same generator the trainers evaluate on.
+fn example_pool(cache: &ExecutorCache, tag: &str, requests: usize,
+                seed: u64, tokens: usize)
+                -> Result<Vec<service::Example>> {
+    use approx_dropout::runtime::ArchMeta;
+    use approx_dropout::util::rng::Rng;
+    let conv = cache.manifest().get(&format!("{tag}_conv"))?;
+    Ok(match &conv.arch {
+        ArchMeta::Mlp { n_in, n_out, .. } => {
+            let mut rng = Rng::new(seed);
+            (0..requests)
+                .map(|i| {
+                    let x: Vec<f32> = (0..*n_in)
+                        .map(|_| rng.uniform(0.0, 1.0) as f32)
+                        .collect();
+                    service::Example::Mlp { x, y: (i % n_out) as i32 }
+                })
+                .collect()
+        }
+        ArchMeta::Lstm { vocab, seq, .. } => {
+            let corpus = Corpus::generate(*vocab, tokens, tokens / 10,
+                                          tokens / 10, seed);
+            let v = &corpus.valid;
+            if v.len() < seq + 1 {
+                bail!("--tokens {tokens} leaves a validation split of {} \
+                       tokens — too small for one {seq}-token window",
+                      v.len());
+            }
+            (0..requests)
+                .map(|i| {
+                    let start = (i * seq) % (v.len() - seq);
+                    service::Example::Lstm {
+                        x: v[start..start + seq].to_vec(),
+                        y: v[start + 1..start + seq + 1].to_vec(),
+                    }
+                })
+                .collect()
+        }
+    })
+}
+
+/// `--check-parity`: per-request results from coalesced dispatches must
+/// be bit-identical to a server that dispatches every request alone
+/// (`max_batch = 1`) — the correctness contract of micro-batching.
+fn check_parity(cache: &ExecutorCache, spec: &service::ModelSpec,
+                examples: &[service::Example]) -> Result<()> {
+    let solo = service::InferServer::start(
+        cache, std::slice::from_ref(spec),
+        &service::InferConfig { slots: 1, max_batch: 1 })?;
+    let mut seq = Vec::with_capacity(examples.len());
+    for ex in examples {
+        let r = recv_response(solo.submit(service::InferRequest {
+            model: spec.name.clone(),
+            example: ex.clone(),
+        })?)?;
+        seq.push((r.loss, r.correct));
+    }
+    drop(solo);
+
+    let srv = service::InferServer::start(
+        cache, std::slice::from_ref(spec),
+        &service::InferConfig { slots: 1, max_batch: 0 })?;
+    // Hold the only slot while every request queues: the worker wakes
+    // with a full queue and coalesces maximally.
+    let hold = srv.gate().acquire();
+    let tickets: Vec<service::Ticket> = examples.iter()
+        .map(|ex| srv.submit(service::InferRequest {
+            model: spec.name.clone(),
+            example: ex.clone(),
+        }))
+        .collect::<Result<_>>()?;
+    drop(hold);
+    let mut max_seen = 0;
+    for (i, t) in tickets.into_iter().enumerate() {
+        let r = recv_response(t)?;
+        max_seen = max_seen.max(r.batch);
+        if r.loss.to_bits() != seq[i].0.to_bits()
+            || r.correct.to_bits() != seq[i].1.to_bits()
+        {
+            bail!("parity violation at request {i}: coalesced (loss {}, \
+                   correct {}) != sequential (loss {}, correct {})",
+                  r.loss, r.correct, seq[i].0, seq[i].1);
+        }
+    }
+    if examples.len() > 1 && max_seen < 2 {
+        bail!("parity run never coalesced (max batch {max_seen} over {} \
+               requests)", examples.len());
+    }
+    Ok(())
+}
+
+fn recv_response(t: service::Ticket) -> Result<service::InferResponse> {
+    t.recv()
+        .map_err(|_| anyhow::anyhow!("inference worker hung up"))?
+        .map_err(|e| anyhow::anyhow!(e))
 }
 
 fn run_search(args: &Args) -> Result<()> {

@@ -29,5 +29,5 @@ pub use manifest::{lstm_artifacts, mlp_artifacts, ArchMeta, ArtifactMeta,
                    TensorMeta};
 pub use reference::ReferenceBackend;
 pub use sparse::{SparseBackend, SparseKernels};
-pub use state::TrainState;
+pub use state::{InferOut, TrainState};
 pub use step::{DenseKernels, Kernels, Skip, StepProgram};

@@ -15,6 +15,21 @@ use crate::runtime::backend::{Backend, Executor, HostTensor, Value};
 use crate::runtime::manifest::{ArtifactMeta, Kind, TensorMeta};
 use crate::util::rng::Rng;
 
+/// One eval dispatch's full result set: the batch aggregates plus the
+/// per-example vectors (see [`TrainState::infer_step`]).
+#[derive(Clone, Debug)]
+pub struct InferOut {
+    /// Mean loss over the batch (same scalar `eval_step` returns).
+    pub loss: f64,
+    /// Correct count over the batch.
+    pub correct: f64,
+    /// Per-example loss, `[batch]`.
+    pub ex_loss: Vec<f32>,
+    /// Per-example correct count (MLP: 0/1 flag; LSTM: correct tokens in
+    /// the track), `[batch]`.
+    pub ex_correct: Vec<f32>,
+}
+
 pub struct TrainState {
     pub params: Vec<Value>,
     pub momenta: Vec<Value>,
@@ -64,6 +79,21 @@ impl TrainState {
         Ok(TrainState { params, momenta, metas, step: 0 })
     }
 
+    /// Eval-only state from already-materialized parameter tensors (the
+    /// inference registry's restore path: checkpoint params, no schedule,
+    /// no RNG). `momenta` is left empty — [`TrainState::step`] on such a
+    /// state fails its output-count check loudly; only the eval entry
+    /// points ([`TrainState::eval_step`], [`TrainState::infer_step`]) are
+    /// meaningful.
+    pub fn eval_only(metas: Vec<TensorMeta>, params: Vec<Value>, step: u64)
+                     -> Result<TrainState> {
+        if metas.len() != params.len() {
+            bail!("eval-only state: {} metas for {} params", metas.len(),
+                  params.len());
+        }
+        Ok(TrainState { params, momenta: Vec::new(), metas, step })
+    }
+
     /// Run one train step: inputs are `params ++ momenta ++ tail` (tail =
     /// x, y, variant extras, lr in manifest order). The output values
     /// replace the state in place. Returns (loss, correct).
@@ -105,9 +135,39 @@ impl TrainState {
         }
         let out = exe.run_raw(&refs)?;
         if out.len() < 2 {
-            bail!("eval graph returned {} outputs, expected 2", out.len());
+            bail!("eval graph returned {} outputs, expected at least 2",
+                  out.len());
         }
         Ok((out[0].scalar_f64()?, out[1].scalar_f64()?))
+    }
+
+    /// Run one eval-graph batch and return the per-example results the
+    /// hermetic interpreters emit alongside the aggregates: `ex_loss[i]` /
+    /// `ex_correct[i]` describe example `i` of the batch (MLP: one image;
+    /// LSTM: one seq-token track, loss = mean nll over the track). Fails
+    /// loudly on backends whose eval graphs return aggregates only (the
+    /// AOT PJRT graphs) — the inference service requires per-example
+    /// outputs and must not fake them by splitting aggregates.
+    pub fn infer_step(&self, exe: &dyn Executor, extra: &[Value])
+                      -> Result<InferOut> {
+        let mut refs = self.param_refs();
+        for v in extra {
+            refs.push(v);
+        }
+        let out = exe.run_raw(&refs)?;
+        if out.len() < 4 {
+            bail!("eval graph returned {} outputs, but per-example \
+                   inference needs 4 (loss, correct, ex_loss, ex_correct) \
+                   — this backend's eval graphs expose batch aggregates \
+                   only; run the inference service on a hermetic backend \
+                   (AD_BACKEND=reference|sparse)", out.len());
+        }
+        Ok(InferOut {
+            loss: out[0].scalar_f64()?,
+            correct: out[1].scalar_f64()?,
+            ex_loss: out[2].to_f32()?,
+            ex_correct: out[3].to_f32()?,
+        })
     }
 
     /// References to the parameter values (eval-graph inputs).

@@ -176,6 +176,56 @@ fn softmax_xent_grad(logits: &[f32], targets: &[i32], rows: usize,
     Ok(((loss / rows as f64) as f32, correct, grad))
 }
 
+/// Per-row softmax cross-entropy: one `(nll, correct-flag)` pair per row,
+/// no gradient. The eval paths derive their batch aggregates from these
+/// values (f64 accumulation in row order), which reproduces the fused
+/// [`softmax_xent_grad`] aggregates bit for bit — and additionally exposes
+/// per-example results. Every row of the eval forward pass depends only on
+/// its own input row, so the inference service can pack unrelated requests
+/// into one padded batch and hand each caller exactly the numbers a solo
+/// dispatch would have produced.
+fn softmax_xent_rows(logits: &[f32], targets: &[i32], rows: usize,
+                     cols: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    debug_assert_eq!(logits.len(), rows * cols);
+    let mut nll = Vec::with_capacity(rows);
+    let mut hit = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let y = targets[r];
+        if y < 0 || y as usize >= cols {
+            bail!("label {y} out of range [0, {cols})");
+        }
+        let row = &logits[r * cols..(r + 1) * cols];
+        let mut mx = f32::NEG_INFINITY;
+        let mut argmax = 0;
+        for (j, &v) in row.iter().enumerate() {
+            if v > mx {
+                mx = v;
+                argmax = j;
+            }
+        }
+        let mut sum = 0f32;
+        for &v in row {
+            sum += (v - mx).exp();
+        }
+        let lse = sum.ln() + mx;
+        nll.push(lse - row[y as usize]);
+        hit.push(if argmax == y as usize { 1.0 } else { 0.0 });
+    }
+    Ok((nll, hit))
+}
+
+/// Batch aggregates from per-row values: (mean nll, correct count), with
+/// the exact accumulation order/types of the historical fused computation.
+fn xent_aggregate(nll: &[f32], hit: &[f32]) -> (f32, f32) {
+    let mut loss = 0f64;
+    let mut correct = 0f32;
+    for (&l, &h) in nll.iter().zip(hit) {
+        loss += l as f64;
+        correct += h;
+    }
+    ((loss / nll.len().max(1) as f64) as f32, correct)
+}
+
 // ---------------------------------------------------------------------------
 // Dropout-site transforms (the masked-dense form of the compact graphs)
 // ---------------------------------------------------------------------------
@@ -681,11 +731,18 @@ impl StepProgram {
         let mut logits = kern.gemm(&a2, params[4], batch, h2, n_out,
                                    &DENSE, &DENSE);
         add_row_bias(&mut logits, params[5]);
-        let (loss, correct, _) =
-            softmax_xent_grad(&logits, y, batch, n_out)?;
+        // Eval outputs: the 2 aggregate scalars of the manifest contract,
+        // plus per-example vectors ([batch] nll, [batch] correct flags)
+        // the hermetic backends expose for the inference service. Extra
+        // outputs are backward compatible: `TrainState::eval_step` reads
+        // the first two only.
+        let (nll, hit) = softmax_xent_rows(&logits, y, batch, n_out)?;
+        let (loss, correct) = xent_aggregate(&nll, &hit);
         Ok(vec![
             Value::Host(HostTensor::scalar_f32(loss)),
             Value::Host(HostTensor::scalar_f32(correct)),
+            Value::Host(HostTensor::f32(&[batch], nll)),
+            Value::Host(HostTensor::f32(&[batch], hit)),
         ])
     }
 
@@ -746,11 +803,31 @@ impl StepProgram {
                 targets[t * batch + b] = y[b * seq + t];
             }
         }
-        let (loss, correct, _) =
-            softmax_xent_grad(&fwd.logits, &targets, rows, vocab)?;
+        let (nll, hit) =
+            softmax_xent_rows(&fwd.logits, &targets, rows, vocab)?;
+        let (loss, correct) = xent_aggregate(&nll, &hit);
+        // Per-track results (logit row t*batch + b belongs to track b):
+        // mean nll over the track's seq targets plus its correct-token
+        // count — the per-example outputs behind the inference service.
+        // Tracks evolve independently through the recurrence, so these
+        // are invariant to what the other batch rows hold.
+        let mut ex_loss = vec![0f32; batch];
+        let mut ex_hit = vec![0f32; batch];
+        for b in 0..batch {
+            let mut s = 0f64;
+            let mut c = 0f32;
+            for t in 0..seq {
+                s += nll[t * batch + b] as f64;
+                c += hit[t * batch + b];
+            }
+            ex_loss[b] = (s / seq as f64) as f32;
+            ex_hit[b] = c;
+        }
         Ok(vec![
             Value::Host(HostTensor::scalar_f32(loss)),
             Value::Host(HostTensor::scalar_f32(correct)),
+            Value::Host(HostTensor::f32(&[batch], ex_loss)),
+            Value::Host(HostTensor::f32(&[batch], ex_hit)),
         ])
     }
 

@@ -1,0 +1,570 @@
+//! Inference serving: a checkpoint-backed model registry, an mpsc
+//! request front, and dynamic micro-batching over the shared executor
+//! fleet.
+//!
+//! Model of operation:
+//! * **Registry.** [`InferServer::start`] loads one `*.ckpt` per
+//!   [`ModelSpec`], validates it — format version, parameter schema
+//!   against the manifest tag, and (when pinned) the checkpoint's config
+//!   hash — and hands the restored parameters to a dedicated worker
+//!   thread as an eval-only `TrainState`
+//!   (`coordinator::eval_state_from_checkpoint`). A mismatch is rejected
+//!   at load, never discovered as a kernel shape panic mid-request.
+//! * **Request front.** [`InferServer::submit`] routes one [`Example`]
+//!   to its model's worker over an mpsc channel and returns a [`Ticket`]
+//!   (a oneshot-style receiver) for the [`InferResponse`]. HTTP can sit
+//!   on top of this later; the channel API is the contract.
+//! * **Dynamic micro-batching.** A worker that receives a request first
+//!   acquires a fleet slot ([`SlotGate`] — the same gate type the
+//!   training scheduler uses, shareable via
+//!   [`InferServer::start_with_gate`] so inference and training jobs
+//!   queue fairly against each other), and only *then* drains its queue:
+//!   every request that arrived while the worker waited in the FIFO
+//!   coalesces into one padded batched eval dispatch. Padding replicates
+//!   the last real example; because the eval forward pass is
+//!   row-independent (see `runtime::step::softmax_xent_rows`), each
+//!   request's per-example result is bit-identical to what a solo
+//!   dispatch would produce — `tests/infer.rs` pins this on both
+//!   hermetic backends.
+//!
+//! The per-example outputs only exist on the hermetic backends (the AOT
+//! PJRT eval graphs return batch aggregates), so `start` fails fast on
+//! PJRT instead of failing the first request.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::{eval_state_from_checkpoint, ExecutorCache};
+use crate::runtime::{ArchMeta, Executor, HostTensor, InferOut, Kind,
+                     TrainState, Value};
+use crate::service::checkpoint::{hex_u64, Checkpoint, CKPT_VERSION};
+use crate::service::scheduler::SlotGate;
+use crate::util::Timer;
+use crate::{info, warn_};
+
+// ---------------------------------------------------------------------------
+// Registry specs
+
+/// One model the registry serves: a name, the manifest tag whose eval
+/// graph runs it, and the checkpoint holding its weights.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub tag: String,
+    pub ckpt: PathBuf,
+    /// When set, the checkpoint's `config_hash` must equal this value —
+    /// pins the served weights to one exact training configuration
+    /// (tag/variant/rates/seed/lr-policy), same fingerprint
+    /// `Trainer::restore` enforces on resume.
+    pub expect_hash: Option<u64>,
+}
+
+/// Serving configuration.
+#[derive(Clone, Debug)]
+pub struct InferConfig {
+    /// Backend slots shared by all model workers (ignored by
+    /// [`InferServer::start_with_gate`], which inherits the gate).
+    pub slots: usize,
+    /// Cap on requests coalesced per dispatch; 0 = the model's graph
+    /// batch (the natural maximum — a dispatch can never carry more
+    /// examples than the compiled eval graph's fixed batch dimension).
+    pub max_batch: usize,
+}
+
+impl Default for InferConfig {
+    fn default() -> Self {
+        InferConfig { slots: 2, max_batch: 0 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Requests and responses
+
+/// One inference example — the unit a request carries.
+#[derive(Clone, Debug)]
+pub enum Example {
+    /// One image: `x` is `[n_in]` pixels, `y` the label.
+    Mlp { x: Vec<f32>, y: i32 },
+    /// One token track: `x` is `[seq]` tokens, `y` the `[seq]` shifted
+    /// targets.
+    Lstm { x: Vec<i32>, y: Vec<i32> },
+}
+
+#[derive(Clone, Debug)]
+pub struct InferRequest {
+    pub model: String,
+    pub example: Example,
+}
+
+#[derive(Clone, Debug)]
+pub struct InferResponse {
+    pub model: String,
+    /// Per-example loss (MLP: the image's nll; LSTM: mean nll over the
+    /// track's targets).
+    pub loss: f64,
+    /// Per-example correct count (MLP: 0/1; LSTM: correct tokens).
+    pub correct: f64,
+    /// Requests coalesced into the dispatch that served this one.
+    pub batch: usize,
+    /// Submit-to-response wall time (queueing + slot wait + dispatch).
+    pub latency_s: f64,
+}
+
+/// Response handle: blocks on `recv()` until the worker answers. The
+/// error arm carries a rendered message (a failed dispatch answers every
+/// coalesced request with the same cause).
+pub type Ticket = mpsc::Receiver<std::result::Result<InferResponse,
+                                                     String>>;
+
+// ---------------------------------------------------------------------------
+// Internals
+
+/// Geometry of a served model, extracted from the manifest tag.
+#[derive(Clone, Copy, Debug)]
+enum Geometry {
+    Mlp { n_in: usize, n_out: usize, batch: usize },
+    Lstm { seq: usize, vocab: usize, batch: usize },
+}
+
+impl Geometry {
+    fn batch(&self) -> usize {
+        match self {
+            Geometry::Mlp { batch, .. } | Geometry::Lstm { batch, .. } =>
+                *batch,
+        }
+    }
+
+    /// Reject a malformed example at submit time, so one bad request can
+    /// never fail the dispatch it would have coalesced into.
+    fn validate(&self, ex: &Example) -> Result<()> {
+        match (self, ex) {
+            (Geometry::Mlp { n_in, n_out, .. }, Example::Mlp { x, y }) => {
+                if x.len() != *n_in {
+                    bail!("mlp example has {} pixels, model takes {n_in}",
+                          x.len());
+                }
+                if *y < 0 || *y as usize >= *n_out {
+                    bail!("label {y} out of range [0, {n_out})");
+                }
+            }
+            (Geometry::Lstm { seq, vocab, .. }, Example::Lstm { x, y }) => {
+                if x.len() != *seq || y.len() != *seq {
+                    bail!("lstm example has {}/{} tokens/targets, model \
+                           takes {seq}", x.len(), y.len());
+                }
+                if let Some(&t) = x.iter().chain(y.iter())
+                    .find(|&&t| t < 0 || t as usize >= *vocab)
+                {
+                    bail!("token {t} out of range [0, {vocab})");
+                }
+            }
+            (Geometry::Mlp { .. }, Example::Lstm { .. }) =>
+                bail!("lstm example submitted to an mlp model"),
+            (Geometry::Lstm { .. }, Example::Mlp { .. }) =>
+                bail!("mlp example submitted to an lstm model"),
+        }
+        Ok(())
+    }
+}
+
+/// One in-flight request inside a worker queue.
+struct Queued {
+    example: Example,
+    tx: mpsc::Sender<std::result::Result<InferResponse, String>>,
+    t0: Timer,
+}
+
+struct ModelHandle {
+    /// Mutex rather than a bare sender: clients submit through `&self`
+    /// from many threads, and `mpsc::Sender` is not `Sync` on older
+    /// toolchains. The hold is a single `send` — contention-free next to
+    /// a dispatch.
+    tx: Mutex<mpsc::Sender<Queued>>,
+    geometry: Geometry,
+    tag: String,
+    step: u64,
+    config_hash: u64,
+    served: Arc<AtomicUsize>,
+    max_batch_observed: Arc<AtomicUsize>,
+}
+
+/// Per-model serving counters (observability + the coalescing tests).
+#[derive(Clone, Debug)]
+pub struct ModelStats {
+    pub name: String,
+    pub tag: String,
+    /// Training step the served checkpoint captured.
+    pub step: u64,
+    pub config_hash: u64,
+    pub served: usize,
+    pub max_batch_observed: usize,
+}
+
+// ---------------------------------------------------------------------------
+// The server
+
+/// Registry + request front + per-model micro-batching workers. Dropping
+/// the server closes the submit channels and joins every worker.
+pub struct InferServer {
+    handles: HashMap<String, ModelHandle>,
+    workers: Vec<JoinHandle<()>>,
+    gate: Arc<SlotGate>,
+}
+
+impl InferServer {
+    /// Load every model and start its worker; fails fast (no server, no
+    /// threads left behind) if any checkpoint is missing, malformed,
+    /// hash-pinned to a different config, or schema-incompatible with
+    /// its tag.
+    pub fn start(cache: &ExecutorCache, specs: &[ModelSpec],
+                 cfg: &InferConfig) -> Result<InferServer> {
+        let gate = Arc::new(SlotGate::new(cfg.slots.max(1)));
+        Self::start_with_gate(cache, specs, cfg, gate)
+    }
+
+    /// Like [`InferServer::start`] but over a caller-provided gate —
+    /// pass the training fleet's gate to make inference dispatches and
+    /// training ticks queue FIFO against each other on the same slots.
+    pub fn start_with_gate(cache: &ExecutorCache, specs: &[ModelSpec],
+                           cfg: &InferConfig, gate: Arc<SlotGate>)
+                           -> Result<InferServer> {
+        if specs.is_empty() {
+            bail!("inference registry: no models to serve");
+        }
+        if cache.backend().name() == "pjrt" {
+            bail!("inference serving requires per-example eval outputs, \
+                   which the AOT PJRT eval graphs do not expose (batch \
+                   aggregates only) — run with \
+                   AD_BACKEND=reference|sparse");
+        }
+        let mut server = InferServer {
+            handles: HashMap::new(),
+            workers: Vec::new(),
+            gate,
+        };
+        for spec in specs {
+            if server.handles.contains_key(&spec.name) {
+                bail!("inference registry: duplicate model name '{}'",
+                      spec.name);
+            }
+            // Validate on the caller thread so start() is the fail-fast
+            // boundary; the worker re-ingests (values stay pinned to the
+            // thread that serves them).
+            let ckpt = Checkpoint::load(&spec.ckpt)
+                .with_context(|| format!("model '{}'", spec.name))?;
+            validate_registry_entry(cache, spec, &ckpt)?;
+            let geometry = geometry_of(cache, &spec.tag)?;
+            let max_batch = match cfg.max_batch {
+                0 => geometry.batch(),
+                m => m.min(geometry.batch()),
+            };
+            let (tx, rx) = mpsc::channel::<Queued>();
+            let (ready_tx, ready_rx) = mpsc::channel();
+            let served = Arc::new(AtomicUsize::new(0));
+            let observed = Arc::new(AtomicUsize::new(0));
+            let worker = WorkerCtx {
+                cache: cache.clone(),
+                gate: Arc::clone(&server.gate),
+                name: spec.name.clone(),
+                tag: spec.tag.clone(),
+                geometry,
+                max_batch,
+                served: Arc::clone(&served),
+                observed: Arc::clone(&observed),
+            };
+            let handle = std::thread::Builder::new()
+                .name(format!("infer-{}", spec.name))
+                .spawn(move || worker.run(ckpt, rx, ready_tx))
+                .context("spawning inference worker")?;
+            server.workers.push(handle);
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => bail!("model '{}': {msg}", spec.name),
+                Err(_) => bail!("model '{}': worker died during setup",
+                                spec.name),
+            }
+            info!("infer: serving '{}' (tag {}, step {}, config \
+                   {}, max batch {max_batch})", spec.name, spec.tag,
+                  ckpt.step, hex_u64(ckpt.config_hash));
+            server.handles.insert(spec.name.clone(), ModelHandle {
+                tx: Mutex::new(tx),
+                geometry,
+                tag: spec.tag.clone(),
+                step: ckpt.step,
+                config_hash: ckpt.config_hash,
+                served,
+                max_batch_observed: observed,
+            });
+        }
+        Ok(server)
+    }
+
+    /// Enqueue one request; returns immediately with a [`Ticket`].
+    /// Errors here are *caller* errors (unknown model, malformed
+    /// example) — dispatch errors arrive through the ticket.
+    pub fn submit(&self, req: InferRequest) -> Result<Ticket> {
+        let h = self.handles.get(&req.model).ok_or_else(|| {
+            let mut known: Vec<&str> =
+                self.handles.keys().map(String::as_str).collect();
+            known.sort_unstable();
+            anyhow!("no model '{}' in the registry (serving: {})",
+                    req.model, known.join(", "))
+        })?;
+        h.geometry.validate(&req.example)
+            .with_context(|| format!("model '{}'", req.model))?;
+        let (tx, rx) = mpsc::channel();
+        h.tx.lock().unwrap_or_else(|p| p.into_inner())
+            .send(Queued { example: req.example, tx, t0: Timer::start() })
+            .map_err(|_| anyhow!("model '{}': worker is gone",
+                                 req.model))?;
+        Ok(rx)
+    }
+
+    /// The slot gate inference dispatches queue on (shared with training
+    /// when started via [`InferServer::start_with_gate`]).
+    pub fn gate(&self) -> &Arc<SlotGate> {
+        &self.gate
+    }
+
+    /// Per-model counters, sorted by model name.
+    pub fn stats(&self) -> Vec<ModelStats> {
+        let mut out: Vec<ModelStats> = self.handles.iter()
+            .map(|(name, h)| ModelStats {
+                name: name.clone(),
+                tag: h.tag.clone(),
+                step: h.step,
+                config_hash: h.config_hash,
+                served: h.served.load(Ordering::Relaxed),
+                max_batch_observed:
+                    h.max_batch_observed.load(Ordering::Relaxed),
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(&b.name));
+        out
+    }
+}
+
+impl Drop for InferServer {
+    fn drop(&mut self) {
+        // Closing the submit channels ends every worker loop; join so no
+        // worker outlives the server (tests rely on this for determinism).
+        self.handles.clear();
+        for w in self.workers.drain(..) {
+            w.join().ok();
+        }
+    }
+}
+
+/// Registry-load validation: format version, optional pinned config
+/// hash, and the parameter schema (names + shapes against the tag).
+fn validate_registry_entry(cache: &ExecutorCache, spec: &ModelSpec,
+                           ckpt: &Checkpoint) -> Result<()> {
+    if ckpt.version != CKPT_VERSION {
+        bail!("model '{}': checkpoint version {} unsupported (expected \
+               {CKPT_VERSION})", spec.name, ckpt.version);
+    }
+    if let Some(want) = spec.expect_hash {
+        if ckpt.config_hash != want {
+            bail!("model '{}': checkpoint config hash {} does not match \
+                   the pinned hash {} — refusing to serve a different \
+                   experiment's weights", spec.name,
+                  hex_u64(ckpt.config_hash), hex_u64(want));
+        }
+    }
+    let meta = cache.manifest().get(&format!("{}_conv", spec.tag))
+        .with_context(|| format!("model '{}': tag {} not in the \
+                                  manifest", spec.name, spec.tag))?;
+    let param_metas: Vec<_> = meta.inputs.iter()
+        .filter(|t| t.kind == Kind::Param)
+        .collect();
+    if ckpt.params.len() != param_metas.len() {
+        bail!("model '{}': checkpoint has {} param tensors, tag {} \
+               declares {}", spec.name, ckpt.params.len(), spec.tag,
+              param_metas.len());
+    }
+    for (t, m) in ckpt.params.iter().zip(&param_metas) {
+        if t.name != m.name || t.shape != m.shape {
+            bail!("model '{}': checkpoint tensor {}:{:?} does not match \
+                   tag {}'s parameter {}:{:?}", spec.name, t.name,
+                  t.shape, spec.tag, m.name, m.shape);
+        }
+    }
+    Ok(())
+}
+
+fn geometry_of(cache: &ExecutorCache, tag: &str) -> Result<Geometry> {
+    let meta = cache.manifest().get(&format!("{tag}_conv"))?;
+    Ok(match &meta.arch {
+        ArchMeta::Mlp { n_in, n_out, batch, .. } =>
+            Geometry::Mlp { n_in: *n_in, n_out: *n_out, batch: *batch },
+        ArchMeta::Lstm { seq, vocab, batch, .. } =>
+            Geometry::Lstm { seq: *seq, vocab: *vocab, batch: *batch },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Worker
+
+struct WorkerCtx {
+    cache: ExecutorCache,
+    gate: Arc<SlotGate>,
+    name: String,
+    tag: String,
+    geometry: Geometry,
+    max_batch: usize,
+    served: Arc<AtomicUsize>,
+    observed: Arc<AtomicUsize>,
+}
+
+impl WorkerCtx {
+    fn run(self, ckpt: Checkpoint,
+           rx: mpsc::Receiver<Queued>,
+           ready: mpsc::Sender<std::result::Result<(), String>>) {
+        // Setup under a slot: checkpoint ingest and eval-graph compile
+        // are backend work like any training tick.
+        let hold = self.gate.acquire();
+        let built = catch_unwind(AssertUnwindSafe(|| -> Result<_> {
+            let state =
+                eval_state_from_checkpoint(&self.cache, &self.tag, &ckpt)?;
+            let exe = self.cache.get(&format!("{}_eval", self.tag))?;
+            Ok((state, exe))
+        }));
+        drop(hold);
+        let (state, exe) = match built {
+            Ok(Ok(v)) => {
+                ready.send(Ok(())).ok();
+                v
+            }
+            Ok(Err(e)) => {
+                ready.send(Err(format!("{e:#}"))).ok();
+                return;
+            }
+            Err(p) => {
+                ready.send(Err(format!("panic: {}", panic_msg(&p)))).ok();
+                return;
+            }
+        };
+
+        while let Ok(first) = rx.recv() {
+            // Acquire the slot *before* draining: everything that queues
+            // while this worker waits its FIFO turn coalesces into the
+            // same dispatch. This is the dynamic part of the batching —
+            // idle fleets serve singles at minimum latency, saturated
+            // fleets batch up to the graph's batch dimension.
+            let hold = self.gate.acquire();
+            let mut batch = vec![first];
+            while batch.len() < self.max_batch {
+                match rx.try_recv() {
+                    Ok(q) => batch.push(q),
+                    Err(_) => break,
+                }
+            }
+            let n = batch.len();
+            self.observed.fetch_max(n, Ordering::Relaxed);
+            let r = catch_unwind(AssertUnwindSafe(
+                || self.dispatch(&state, exe.as_ref(), &batch)));
+            drop(hold);
+            match r {
+                Ok(Ok(out)) => {
+                    for (i, q) in batch.into_iter().enumerate() {
+                        self.served.fetch_add(1, Ordering::Relaxed);
+                        q.tx.send(Ok(InferResponse {
+                            model: self.name.clone(),
+                            loss: f64::from(out.ex_loss[i]),
+                            correct: f64::from(out.ex_correct[i]),
+                            batch: n,
+                            latency_s: q.t0.elapsed_s(),
+                        })).ok();
+                    }
+                }
+                Ok(Err(e)) => self.fail_batch(batch, format!("{e:#}")),
+                Err(p) => self.fail_batch(
+                    batch, format!("panic: {}", panic_msg(&p))),
+            }
+        }
+    }
+
+    /// Pack up to `max_batch` queued examples into the eval graph's
+    /// fixed-batch tensors, padding the tail with copies of the last
+    /// real example (valid inputs whose results are simply dropped), and
+    /// dispatch through the per-example eval entry.
+    fn dispatch(&self, state: &TrainState, exe: &dyn Executor,
+                batch: &[Queued]) -> Result<InferOut> {
+        let backend = self.cache.backend();
+        let extra: Vec<Value> = match self.geometry {
+            Geometry::Mlp { n_in, batch: b, .. } => {
+                let mut x = Vec::with_capacity(b * n_in);
+                let mut y = Vec::with_capacity(b);
+                for q in batch {
+                    match &q.example {
+                        Example::Mlp { x: xi, y: yi } => {
+                            x.extend_from_slice(xi);
+                            y.push(*yi);
+                        }
+                        Example::Lstm { .. } =>
+                            bail!("lstm example in an mlp worker queue"),
+                    }
+                }
+                let (px, py) = (x[x.len() - n_in..].to_vec(),
+                                y[y.len() - 1]);
+                while y.len() < b {
+                    x.extend_from_slice(&px);
+                    y.push(py);
+                }
+                vec![
+                    backend.ingest(HostTensor::f32(&[b, n_in], x))?,
+                    backend.ingest(HostTensor::i32(&[b], y))?,
+                ]
+            }
+            Geometry::Lstm { seq, batch: b, .. } => {
+                let mut x = Vec::with_capacity(b * seq);
+                let mut y = Vec::with_capacity(b * seq);
+                for q in batch {
+                    match &q.example {
+                        Example::Lstm { x: xi, y: yi } => {
+                            x.extend_from_slice(xi);
+                            y.extend_from_slice(yi);
+                        }
+                        Example::Mlp { .. } =>
+                            bail!("mlp example in an lstm worker queue"),
+                    }
+                }
+                let (px, py) = (x[x.len() - seq..].to_vec(),
+                                y[y.len() - seq..].to_vec());
+                while y.len() < b * seq {
+                    x.extend_from_slice(&px);
+                    y.extend_from_slice(&py);
+                }
+                vec![
+                    backend.ingest(HostTensor::i32(&[b, seq], x))?,
+                    backend.ingest(HostTensor::i32(&[b, seq], y))?,
+                ]
+            }
+        };
+        state.infer_step(exe, &extra)
+    }
+
+    fn fail_batch(&self, batch: Vec<Queued>, msg: String) {
+        warn_!("infer: model '{}' dispatch of {} request(s) failed: \
+                {msg}", self.name, batch.len());
+        for q in batch {
+            q.tx.send(Err(msg.clone())).ok();
+        }
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}

@@ -38,6 +38,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::schedule::Variant;
+use crate::runtime::{ArchMeta, Manifest};
 use crate::util::toml::{self, TomlDoc};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -133,6 +134,62 @@ impl JobSpec {
         }
         if self.steps == 0 {
             bail!("job '{}': steps must be positive", self.name);
+        }
+        Ok(())
+    }
+
+    /// Second-phase validation against the tag's compiled geometry:
+    /// dataset sizing the batchers and the eval loop require. Without
+    /// this, an undersized `n_test` or `tokens` passes [`JobSpec::validate`]
+    /// and only surfaces as a setup quarantine (or an eval-time
+    /// "zero eval batches" failure) deep inside the fleet run.
+    pub fn validate_sizing(&self, manifest: &Manifest) -> Result<()> {
+        let meta = manifest.get(&format!("{}_conv", self.tag))?;
+        let arch_name = match &meta.arch {
+            ArchMeta::Mlp { .. } => "mlp",
+            ArchMeta::Lstm { .. } => "lstm",
+        };
+        if arch_name != self.model.as_str() {
+            bail!("job '{}': model = {} but tag '{}' is an {} \
+                   architecture", self.name, self.model.as_str(),
+                  self.tag, arch_name);
+        }
+        match &meta.arch {
+            ArchMeta::Mlp { batch, .. } => {
+                if self.n_train < *batch {
+                    bail!("job '{}': n_train = {} is smaller than tag \
+                           '{}'s batch {} — training needs at least one \
+                           full batch of images", self.name, self.n_train,
+                          self.tag, batch);
+                }
+                if self.n_test < *batch {
+                    bail!("job '{}': n_test = {} is smaller than tag \
+                           '{}'s batch {} — evaluation needs at least \
+                           one full batch of images", self.name,
+                          self.n_test, self.tag, batch);
+                }
+            }
+            ArchMeta::Lstm { seq, batch, .. } => {
+                // Train split: `tokens` tokens over `batch` tracks; BPTT
+                // needs each track longer than one unroll window.
+                let track = self.tokens / batch;
+                if track <= *seq {
+                    bail!("job '{}': tokens = {} gives {}-token tracks \
+                           over tag '{}'s batch {}, but BPTT unrolls seq \
+                           = {} — need tokens > batch * seq", self.name,
+                          self.tokens, track, self.tag, batch, seq);
+                }
+                // Validation split is tokens/10; the eval loop needs at
+                // least one full (seq + 1)-token window per track.
+                let valid = self.tokens / 10;
+                if valid < batch * (seq + 1) {
+                    bail!("job '{}': the validation split (tokens/10 = \
+                           {}) yields zero eval batches for tag '{}' \
+                           (needs at least batch {} * (seq {} + 1) = {} \
+                           tokens)", self.name, valid, self.tag, batch,
+                          seq, batch * (seq + 1));
+                }
+            }
         }
         Ok(())
     }
@@ -349,6 +406,38 @@ tokens = 9000
         let typo =
             toml::parse("[jobs.a]\nrates = [0.5, \"0.7\"]\n").unwrap();
         assert!(jobs_from_doc(&typo).is_err(), "typo'd rate must fail");
+    }
+
+    #[test]
+    fn sizing_is_validated_against_the_tag() {
+        let m = Manifest::builtin_test();
+        // mlptest batch is 8: an undersized eval set must be rejected up
+        // front, not discovered as a batcher failure mid-fleet.
+        let mut j = JobSpec::named("tiny");
+        j.tag = "mlptest".into();
+        j.n_test = 4;
+        let err = j.validate_sizing(&m).unwrap_err().to_string();
+        assert!(err.contains("n_test"), "names the bad field: {err}");
+        j.n_test = 8;
+        j.validate_sizing(&m).unwrap();
+        j.n_train = 7;
+        assert!(j.validate_sizing(&m).is_err(), "n_train below batch");
+        // Model/tag architecture mismatch is a spec error.
+        j.n_train = 256;
+        j.model = ModelKind::Lstm;
+        assert!(j.validate_sizing(&m).is_err(), "lstm model, mlp tag");
+
+        // lstmtest: batch 4, seq 5.
+        let mut l = JobSpec::named("corpus");
+        l.model = ModelKind::Lstm;
+        l.tag = "lstmtest".into();
+        l.tokens = 16; // 4-token tracks, seq 5: BPTT can't unroll.
+        assert!(l.validate_sizing(&m).is_err(), "tracks shorter than seq");
+        l.tokens = 100; // tracks ok, but valid split 10 < 4 * (5 + 1).
+        let err = l.validate_sizing(&m).unwrap_err().to_string();
+        assert!(err.contains("zero eval batches"), "{err}");
+        l.tokens = 400; // valid split 40 >= 24.
+        l.validate_sizing(&m).unwrap();
     }
 
     #[test]

@@ -12,15 +12,25 @@
 //! * [`scheduler`] — the fleet loop: FIFO backend-slot gate, per-job
 //!   runner threads, `catch_unwind` crash quarantine, periodic
 //!   checkpoint ticks, per-job JSON reports via `bench::report`.
+//! * [`infer`] — inference serving over the same fleet: a
+//!   checkpoint-backed model registry, an mpsc request front, and
+//!   per-model workers that coalesce concurrent requests into dynamic
+//!   micro-batches (one padded eval dispatch per slot acquisition),
+//!   with per-request results bit-identical to solo dispatches.
 //!
-//! DESIGN.md section 10 documents the format and the scheduling model.
+//! DESIGN.md sections 10-11 document the formats and the scheduling /
+//! serving models.
 
 pub mod checkpoint;
+pub mod infer;
 pub mod jobs;
 pub mod scheduler;
 
 pub use checkpoint::{Checkpoint, CKPT_VERSION};
+pub use infer::{Example, InferConfig, InferRequest, InferResponse,
+                InferServer, ModelSpec, ModelStats, Ticket};
 pub use jobs::{jobs_from_doc, load_jobs_manifest, JobSpec, ModelKind,
                ServiceConfig};
-pub use scheduler::{run_jobs, summarize, ensure_all_ok, JobOutcome,
-                    JobStatus, ServiceReport, SlotGate};
+pub use scheduler::{run_jobs, run_jobs_with_gate, summarize,
+                    ensure_all_ok, JobOutcome, JobStatus, ServiceReport,
+                    SlotGate};

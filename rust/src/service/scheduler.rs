@@ -32,7 +32,7 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -357,13 +357,6 @@ impl ServiceReport {
 /// in `specs` order. See the module docs for the scheduling model.
 pub fn run_jobs(cache: &ExecutorCache, specs: &[JobSpec],
                 cfg: &ServiceConfig) -> Result<ServiceReport> {
-    for s in specs {
-        s.validate()?;
-    }
-    if let Some(dir) = &cfg.out_dir {
-        std::fs::create_dir_all(dir)
-            .with_context(|| format!("creating {}", dir.display()))?;
-    }
     // PJRT: serialize all backend access through a single slot. The C
     // API is thread-safe, but the offline `xla` crate's wrapper types
     // have not been audited for concurrent use from multiple sessions
@@ -376,7 +369,26 @@ pub fn run_jobs(cache: &ExecutorCache, specs: &[JobSpec],
     } else {
         cfg.slots
     };
-    let gate = SlotGate::new(slots);
+    run_jobs_with_gate(cache, specs, cfg, Arc::new(SlotGate::new(slots)))
+}
+
+/// [`run_jobs`] over a caller-provided gate, so training jobs can share
+/// backend slots FIFO with other fleet users (the inference servers from
+/// `service::infer`). The caller owns the slot count — including the
+/// PJRT single-slot rule when it applies.
+pub fn run_jobs_with_gate(cache: &ExecutorCache, specs: &[JobSpec],
+                          cfg: &ServiceConfig, gate: Arc<SlotGate>)
+                          -> Result<ServiceReport> {
+    for s in specs {
+        s.validate()?;
+        // Fail the whole manifest up front on sizing that would only
+        // surface as a mid-fleet setup quarantine (or a batcher panic).
+        s.validate_sizing(cache.manifest())?;
+    }
+    if let Some(dir) = &cfg.out_dir {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+    }
     let outcomes: Vec<JobOutcome> = std::thread::scope(|scope| {
         let handles: Vec<_> = specs
             .iter()
@@ -506,12 +518,33 @@ fn run_one(cache: &ExecutorCache, spec: &JobSpec, cfg: &ServiceConfig,
                                            panic_msg(&p)), &timer),
     }
     out.final_loss = session.last_loss();
+    // A rerun that resumed an already-complete checkpoint trains zero
+    // new steps: `Trainer::restore` starts metrics empty, so the curve
+    // has no points and `last_loss()` is NaN. The eval above still ran —
+    // its loss is the honest final loss for the restored parameters.
+    if !out.final_loss.is_finite() {
+        if let Some((el, _)) = out.eval {
+            out.final_loss = el;
+        }
+    }
     out.wall_s = timer.elapsed_s();
     if let Some(dir) = &cfg.out_dir {
-        match write_report(dir, spec, &session, &out) {
-            Ok(p) => out.report_path = Some(p),
-            Err(e) => warn_!("job '{}': report write failed ({e:#})",
-                             spec.name),
+        let path = dir.join(format!("REPORT_{}.json", spec.name));
+        let new_steps = out.steps_done - out.resumed_at.unwrap_or(0);
+        if new_steps == 0 && path.exists() {
+            // Zero new steps means this process observed no training
+            // curve; rewriting would clobber the completed run's report
+            // (rows and all) with an empty one. Keep the original.
+            info!("job '{}': resumed already complete ({} steps) — \
+                   keeping the existing report at {}", spec.name,
+                  out.steps_done, path.display());
+            out.report_path = Some(path);
+        } else {
+            match write_report(dir, spec, &session, &out) {
+                Ok(p) => out.report_path = Some(p),
+                Err(e) => warn_!("job '{}': report write failed ({e:#})",
+                                 spec.name),
+            }
         }
     }
     info!("job '{}' done: {} steps, final loss {:.4}, {:.1}s wall",
@@ -523,6 +556,19 @@ fn run_one(cache: &ExecutorCache, spec: &JobSpec, cfg: &ServiceConfig,
 /// (same schema family as `BENCH_*.json`: meta + rows).
 fn write_report(dir: &Path, spec: &JobSpec, session: &Session,
                 out: &JobOutcome) -> Result<PathBuf> {
+    let r = build_report(spec, &session.curve(), session.median_step_s(),
+                         session.dispatched(), out);
+    let path = dir.join(format!("REPORT_{}.json", spec.name));
+    r.write(&path)?;
+    Ok(path)
+}
+
+/// Assemble the report document from plain values (separated from the
+/// session so non-finite-metric rendering is unit-testable: `Json::num`
+/// serializes NaN/inf as `null`, keeping the file parseable).
+fn build_report(spec: &JobSpec, curve: &[(u64, f64, f64)],
+                median_step_s: f64, dispatched: usize,
+                out: &JobOutcome) -> BenchReport {
     let mut r = BenchReport::new("serve", "service::scheduler");
     r.set("job", Json::str(&spec.name));
     r.set("model", Json::str(spec.model.as_str()));
@@ -543,19 +589,17 @@ fn write_report(dir: &Path, spec: &JobSpec, session: &Session,
             r.set("eval_ppl", Json::num(el.exp()));
         }
     }
-    r.set("median_step_s", Json::num(session.median_step_s()));
-    r.set("dispatched", Json::num(session.dispatched() as f64));
+    r.set("median_step_s", Json::num(median_step_s));
+    r.set("dispatched", Json::num(dispatched as f64));
     r.set("wall_s", Json::num(out.wall_s));
-    for (step, loss, acc) in session.curve() {
+    for &(step, loss, acc) in curve {
         r.row(vec![
             ("step", Json::num(step as f64)),
             ("loss", Json::num(loss)),
             ("acc", Json::num(acc)),
         ]);
     }
-    let path = dir.join(format!("REPORT_{}.json", spec.name));
-    r.write(&path)?;
-    Ok(path)
+    r
 }
 
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
@@ -568,20 +612,32 @@ fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
+/// One numeric table cell: fixed-point when finite, "-" otherwise.
+fn fmt_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.4}")
+    } else {
+        "-".into()
+    }
+}
+
 /// Human summary printed by the `serve` CLI.
 pub fn summarize(report: &ServiceReport) -> String {
     let mut s = format!("{:<16} {:>8} {:>7} {:>10} {:>10} {:>8}  status\n",
                         "job", "steps", "ticks", "final", "eval", "wall_s");
     for o in &report.outcomes {
-        let eval = o.eval.map(|(l, _)| format!("{l:.4}"))
+        // Non-finite metrics (quarantined jobs, NaN losses) print as "-"
+        // instead of leaking "NaN"/"inf" into the table.
+        let fin = fmt_cell(o.final_loss);
+        let eval = o.eval.map(|(l, _)| fmt_cell(l))
             .unwrap_or_else(|| "-".into());
         let status = match &o.status {
             JobStatus::Done => "done".to_string(),
             JobStatus::Failed(why) => format!("FAILED: {why}"),
         };
-        s.push_str(&format!("{:<16} {:>8} {:>7} {:>10.4} {:>10} {:>8.1}  \
+        s.push_str(&format!("{:<16} {:>8} {:>7} {:>10} {:>10} {:>8.1}  \
                              {}\n",
-                            o.name, o.steps_done, o.ticks, o.final_loss,
+                            o.name, o.steps_done, o.ticks, fin,
                             eval, o.wall_s, status));
     }
     s.push_str(&format!("peak concurrent slots: {}\n", report.peak_slots));
@@ -601,4 +657,66 @@ pub fn ensure_all_ok(report: &ServiceReport) -> Result<()> {
     Err(anyhow!("{} job(s) failed: {}", failed.len(),
                 failed.iter().map(|o| o.name.as_str())
                     .collect::<Vec<_>>().join(", ")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn outcome(final_loss: f64, eval: Option<(f64, f64)>) -> JobOutcome {
+        JobOutcome {
+            name: "j".into(),
+            status: JobStatus::Done,
+            steps_done: 3,
+            resumed_at: None,
+            ticks: 5,
+            final_loss,
+            eval,
+            wall_s: 0.25,
+            report_path: None,
+        }
+    }
+
+    #[test]
+    fn report_with_nonfinite_metrics_stays_parseable() {
+        // NaN final loss (quarantine mid-run) and an eval loss large
+        // enough that eval_ppl = exp(loss) overflows to +inf: both must
+        // land as JSON null, not bare NaN/inf tokens no parser accepts.
+        let mut spec = JobSpec::named("j");
+        spec.model = ModelKind::Lstm;
+        let out = outcome(f64::NAN, Some((800.0, 0.0)));
+        let r = build_report(&spec, &[(1, 2.5, 0.1), (2, f64::NAN, 0.2)],
+                             f64::INFINITY, 7, &out);
+        let text = r.to_json().pretty();
+        assert!(!text.contains("NaN") && !text.contains("inf"),
+                "non-finite leaked into JSON: {text}");
+        let v = json::parse(&text).expect("report must parse");
+        let is_null = |key: &str| matches!(v.get(key), Some(Json::Null));
+        assert!(is_null("final_loss"));
+        assert!(is_null("eval_ppl"),
+                "exp(800) overflows; must serialize as null");
+        assert!(is_null("median_step_s"));
+        // Finite neighbors are untouched.
+        assert_eq!(v.get("dispatched").unwrap().as_f64(), Some(7.0));
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(matches!(rows[1].get("loss"), Some(Json::Null)));
+    }
+
+    #[test]
+    fn summarize_prints_placeholder_for_nonfinite_losses() {
+        let report = ServiceReport {
+            outcomes: vec![
+                outcome(f64::NAN, None),
+                outcome(1.2345, Some((f64::INFINITY, 0.5))),
+            ],
+            peak_slots: 1,
+        };
+        let s = summarize(&report);
+        assert!(!s.contains("NaN") && !s.contains("inf"),
+                "table must not print raw non-finite values:\n{s}");
+        assert!(s.contains("1.2345"), "finite values still print:\n{s}");
+        assert!(s.contains('-'), "placeholder shown:\n{s}");
+    }
 }

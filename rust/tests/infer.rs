@@ -1,0 +1,265 @@
+//! Inference-serving tests: dynamic micro-batching parity, registry
+//! validation, and the request-front error contract.
+//!
+//! Hermetic: runs on the in-process backends (reference and
+//! structured-sparse) over the built-in synthetic manifest. The central
+//! property pinned here is the micro-batching correctness contract —
+//! a request answered from a coalesced multi-request dispatch carries
+//! the exact bits a solo dispatch of that request would produce.
+
+use std::path::{Path, PathBuf};
+
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::Manifest;
+use approx_dropout::service::checkpoint::Checkpoint;
+use approx_dropout::service::{Example, InferConfig, InferRequest,
+                              InferServer, ModelSpec};
+
+fn caches() -> Vec<(&'static str, ExecutorCache)> {
+    vec![
+        ("reference", ExecutorCache::reference(Manifest::builtin_test())),
+        ("sparse", ExecutorCache::sparse(Manifest::builtin_test())),
+    ]
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("ad-infer-{}-{tag}",
+                                              std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Train a few mlpsyn steps and checkpoint — the weights the registry
+/// serves. Short on purpose: serving correctness does not depend on
+/// model quality.
+fn mlp_ckpt(cache: &ExecutorCache, dir: &Path, name: &str) -> PathBuf {
+    let data = MnistSyn::generate(64, 3);
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.25, 0.25], &[1, 2], true).unwrap();
+    let mut tr =
+        MlpTrainer::new(cache, "mlpsyn", schedule, data.n, 0.01, 7)
+            .unwrap();
+    tr.warmup().unwrap();
+    tr.train_with(&data, 3).unwrap();
+    let p = dir.join(format!("{name}.ckpt"));
+    tr.save_checkpoint(&p).unwrap();
+    p
+}
+
+fn lstm_ckpt(cache: &ExecutorCache, corpus: &Corpus, dir: &Path,
+             name: &str) -> PathBuf {
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+    let mut tr =
+        LstmTrainer::new(cache, "lstmtest", schedule, &corpus.train, 0.5, 7)
+            .unwrap();
+    tr.warmup().unwrap();
+    tr.train(3).unwrap();
+    let p = dir.join(format!("{name}.ckpt"));
+    tr.save_checkpoint(&p).unwrap();
+    p
+}
+
+/// Distinct single-image requests (mlpsyn: 784 pixels, 10 classes).
+fn mlp_examples(n: usize) -> Vec<Example> {
+    let d = MnistSyn::generate(n, 5);
+    (0..n)
+        .map(|i| Example::Mlp {
+            x: d.image(i).to_vec(),
+            y: d.labels[i] as i32,
+        })
+        .collect()
+}
+
+/// Consecutive 5-token windows of the validation split (lstmtest).
+fn lstm_examples(corpus: &Corpus, n: usize) -> Vec<Example> {
+    let seq = 5;
+    (0..n)
+        .map(|i| {
+            let s = i * seq;
+            Example::Lstm {
+                x: corpus.valid[s..s + seq].to_vec(),
+                y: corpus.valid[s + 1..s + seq + 1].to_vec(),
+            }
+        })
+        .collect()
+}
+
+fn request(ex: &Example) -> InferRequest {
+    InferRequest { model: "m".into(), example: ex.clone() }
+}
+
+fn spec(tag: &str, ckpt: &Path) -> ModelSpec {
+    ModelSpec {
+        name: "m".into(),
+        tag: tag.into(),
+        ckpt: ckpt.to_path_buf(),
+        expect_hash: None,
+    }
+}
+
+/// The acceptance property: results from coalesced dispatches are
+/// bit-identical to sequential single-request serving, on both hermetic
+/// backends, for both architectures — and the coalesced server actually
+/// batched (observed max batch > 1).
+#[test]
+fn coalesced_results_match_sequential_bit_for_bit() {
+    let dir = tmp_dir("parity");
+    let corpus = Corpus::generate(64, 4000, 400, 400, 9);
+    for (bname, cache) in caches() {
+        for model in ["mlp", "lstm"] {
+            let (ckpt, tag, examples) = if model == "mlp" {
+                (mlp_ckpt(&cache, &dir, &format!("{bname}-mlp")),
+                 "mlpsyn", mlp_examples(6))
+            } else {
+                (lstm_ckpt(&cache, &corpus, &dir,
+                           &format!("{bname}-lstm")),
+                 "lstmtest", lstm_examples(&corpus, 6))
+            };
+            let sp = spec(tag, &ckpt);
+
+            // Sequential truth: max_batch = 1, one dispatch per request.
+            let solo = InferServer::start(
+                &cache, std::slice::from_ref(&sp),
+                &InferConfig { slots: 1, max_batch: 1 }).unwrap();
+            let mut seq = Vec::new();
+            for ex in &examples {
+                let r = solo.submit(request(ex)).unwrap()
+                    .recv().unwrap().unwrap();
+                assert_eq!(r.batch, 1, "{bname}/{model}: solo dispatch");
+                seq.push((r.loss, r.correct));
+            }
+            let st = solo.stats().into_iter().next().unwrap();
+            assert_eq!(st.served, examples.len());
+            assert_eq!(st.max_batch_observed, 1);
+            drop(solo);
+
+            // Coalesced: hold the server's only slot while every request
+            // queues, so the worker wakes with a full queue — the
+            // concurrent-load shape, made deterministic.
+            let srv = InferServer::start(
+                &cache, std::slice::from_ref(&sp),
+                &InferConfig { slots: 1, max_batch: 0 }).unwrap();
+            let hold = srv.gate().acquire();
+            let tickets: Vec<_> = examples.iter()
+                .map(|ex| srv.submit(request(ex)).unwrap())
+                .collect();
+            drop(hold);
+            let mut max_batch = 0;
+            for (i, t) in tickets.into_iter().enumerate() {
+                let r = t.recv().unwrap().unwrap();
+                max_batch = max_batch.max(r.batch);
+                assert!(r.latency_s >= 0.0);
+                assert_eq!(r.loss.to_bits(), seq[i].0.to_bits(),
+                           "{bname}/{model} request {i}: loss changed \
+                            under batching ({} vs {})", r.loss, seq[i].0);
+                assert_eq!(r.correct.to_bits(), seq[i].1.to_bits(),
+                           "{bname}/{model} request {i}: correct changed \
+                            under batching");
+            }
+            assert!(max_batch > 1,
+                    "{bname}/{model}: queued requests never coalesced");
+            assert_eq!(srv.stats()[0].max_batch_observed, max_batch);
+            assert_eq!(srv.stats()[0].served, examples.len());
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Registry load is the fail-fast boundary: pinned-hash mismatches and
+/// tag/checkpoint schema mismatches reject at `start`, never as a shape
+/// panic on the first request.
+#[test]
+fn registry_rejects_mismatched_checkpoints() {
+    let dir = tmp_dir("registry");
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let ckpt = mlp_ckpt(&cache, &dir, "reg");
+    let loaded = Checkpoint::load(&ckpt).unwrap();
+
+    // Pinned to the right config hash: serves.
+    let mut ok = spec("mlpsyn", &ckpt);
+    ok.expect_hash = Some(loaded.config_hash);
+    let srv = InferServer::start(&cache, std::slice::from_ref(&ok),
+                                 &InferConfig::default()).unwrap();
+    assert_eq!(srv.stats()[0].config_hash, loaded.config_hash);
+    assert_eq!(srv.stats()[0].step, 3);
+    drop(srv);
+
+    // Pinned to a different config: rejected with the hashes named.
+    let mut bad = spec("mlpsyn", &ckpt);
+    bad.expect_hash = Some(loaded.config_hash ^ 1);
+    let err = InferServer::start(&cache, std::slice::from_ref(&bad),
+                                 &InferConfig::default())
+        .unwrap_err().to_string();
+    assert!(err.contains("does not match the pinned hash"), "{err}");
+
+    // An MLP checkpoint cannot serve an LSTM tag (schema mismatch).
+    let cross = spec("lstmtest", &ckpt);
+    let err = format!("{:#}", InferServer::start(
+        &cache, std::slice::from_ref(&cross),
+        &InferConfig::default()).unwrap_err());
+    assert!(err.to_lowercase().contains("param"), "{err}");
+
+    // A future-format checkpoint is rejected by version, not parsed on
+    // hope.
+    let mut future = loaded.clone();
+    future.version = 99;
+    let fpath = dir.join("future.ckpt");
+    future.save(&fpath).unwrap();
+    let err = format!("{:#}", InferServer::start(
+        &cache, std::slice::from_ref(&spec("mlpsyn", &fpath)),
+        &InferConfig::default()).unwrap_err());
+    assert!(err.contains("version 99"), "{err}");
+
+    // Duplicate model names cannot both register.
+    let err = InferServer::start(
+        &cache, &[spec("mlpsyn", &ckpt), spec("mlpsyn", &ckpt)],
+        &InferConfig::default()).unwrap_err().to_string();
+    assert!(err.contains("duplicate"), "{err}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Submit-time validation: malformed requests are caller errors and
+/// never reach (or poison) a worker's batch.
+#[test]
+fn submit_rejects_malformed_requests() {
+    let dir = tmp_dir("submit");
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let ckpt = mlp_ckpt(&cache, &dir, "sub");
+    let srv = InferServer::start(&cache, &[spec("mlpsyn", &ckpt)],
+                                 &InferConfig::default()).unwrap();
+
+    // Unknown model names the registry contents.
+    let err = srv.submit(InferRequest {
+        model: "nope".into(),
+        example: Example::Mlp { x: vec![0.0; 784], y: 0 },
+    }).unwrap_err().to_string();
+    assert!(err.contains("no model 'nope'") && err.contains("serving: m"),
+            "{err}");
+
+    // Wrong pixel count.
+    assert!(srv.submit(request(&Example::Mlp { x: vec![0.0; 3], y: 0 }))
+        .is_err());
+    // Label out of range (mlpsyn has 10 classes).
+    assert!(srv.submit(request(&Example::Mlp { x: vec![0.0; 784], y: 10 }))
+        .is_err());
+    assert!(srv.submit(request(&Example::Mlp { x: vec![0.0; 784], y: -1 }))
+        .is_err());
+    // Architecture mismatch.
+    assert!(srv.submit(request(&Example::Lstm { x: vec![0; 5],
+                                                y: vec![0; 5] }))
+        .is_err());
+
+    // The server is still healthy after every rejection.
+    let r = srv.submit(request(&mlp_examples(1)[0])).unwrap()
+        .recv().unwrap().unwrap();
+    assert_eq!(r.model, "m");
+    assert!(r.loss.is_finite());
+    assert_eq!(srv.stats()[0].served, 1,
+               "rejected submits must not count as served");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

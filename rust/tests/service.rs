@@ -568,3 +568,52 @@ fn rerunning_the_fleet_resumes_from_checkpoints() {
     assert!(r3.all_ok());
     std::fs::remove_dir_all(&dir).ok();
 }
+
+/// Regression: rerunning an already-complete fleet used to clobber
+/// REPORT_<name>.json with an empty curve and a NaN (-> null) final
+/// loss, because the resumed session's metrics start empty and zero new
+/// steps run. The rerun must preserve the completed report byte for
+/// byte and still report an honest (finite) final loss.
+#[test]
+fn rerun_of_completed_fleet_preserves_report() {
+    let dir = tmp_dir("rerun-report");
+    let cache = ExecutorCache::reference(Manifest::builtin_test());
+    let mk = || {
+        let mut j = JobSpec::named("keeper");
+        j.rates = vec![0.25, 0.25];
+        j.steps = 4;
+        j.seed = 6;
+        j.n_train = 128;
+        j.n_test = 64;
+        j
+    };
+    let cfg = ServiceConfig {
+        slots: 1,
+        tick_steps: 2,
+        checkpoint_every: 0,
+        ckpt_dir: Some(dir.clone()),
+        out_dir: Some(dir.clone()),
+    };
+    let r1 = run_jobs(&cache, &[mk()], &cfg).unwrap();
+    assert!(r1.all_ok());
+    let path = r1.outcomes[0].report_path.clone().expect("report written");
+    let before = std::fs::read_to_string(&path).unwrap();
+    let v = json::parse(before.trim()).unwrap();
+    assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 4,
+               "first run records the full curve");
+    assert!(v.get("final_loss").unwrap().as_f64().is_some());
+
+    // Rerun the same manifest: resumes complete, trains zero new steps.
+    let r2 = run_jobs(&cache, &[mk()], &cfg).unwrap();
+    assert!(r2.all_ok());
+    let o = &r2.outcomes[0];
+    assert_eq!(o.resumed_at, Some(4));
+    assert_eq!(o.steps_done, 4);
+    assert!(o.final_loss.is_finite(),
+            "rerun reports the eval loss, not NaN");
+    assert_eq!(o.report_path.as_deref(), Some(path.as_path()),
+               "rerun still points at the (preserved) report");
+    let after = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(before, after, "rerun must not clobber the report");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -4,6 +4,7 @@
 Usage:
     check_bench_regression.py NATIVE.json CHECKED_IN.json [--tolerance T]
     check_bench_regression.py --refresh-baseline NATIVE.json CHECKED_IN.json
+    check_bench_regression.py --infer-advisory BENCH_infer.json
     check_bench_regression.py --self-test
 
 Gate mode (default) fails (exit 1) if any gated row's native
@@ -29,6 +30,14 @@ the gate requires the SIMD path to beat the scalar sparse path on the
 GEMM-dominated mlpsyn row/tile-skip configs (median step time strictly
 lower) — the microkernel layer must actually pay for itself.
 
+`--infer-advisory` validates and prints an inference-serving latency
+report (`BENCH_infer.json` from `approx-dropout infer`). Latency on a
+shared CI runner is too noisy to gate on an absolute threshold, so the
+numbers are advisory rows in the job log — but a *malformed* report
+(wrong bench name, no rows, NaN/missing qps or percentile fields) is a
+broken measurement path and fails with exit 1, so the serving bench
+cannot silently rot.
+
 Tolerance calibration: when --tolerance is not given it is derived from
 the baseline's provenance — 0.25 against a *native* baseline (same
 harness, same math; a >25% drop is a real regression), 0.40 against a
@@ -41,6 +50,7 @@ diff, never hand-edited JSON.
 
 import argparse
 import json
+import math
 import os
 import sys
 import tempfile
@@ -251,6 +261,64 @@ def run_gate(native_path, checked_path, tolerance):
     return 0
 
 
+INFER_ROW_FIELDS = ("qps", "p50_ms", "p99_ms")
+
+
+def infer_advisory(path):
+    """Validate + print a BENCH_infer.json latency report, advisory-only.
+
+    Serving latency on a shared runner is too noisy for an absolute
+    gate, so healthy numbers always exit 0 — but a structurally broken
+    report (missing file, wrong bench name, zero rows, NaN or missing
+    latency fields) means the measurement path itself regressed, and
+    that exits 1.
+    """
+    try:
+        doc = load_doc(path)
+    except (OSError, ValueError) as e:
+        print(f"infer advisory: cannot read {path}: {e}")
+        return 1
+    failures = []
+    if doc.get("bench") != "infer":
+        failures.append(f"bench is {doc.get('bench')!r}, expected 'infer'")
+    rows = doc.get("rows") or []
+    if not rows:
+        failures.append("no rows — the serving bench measured nothing")
+    print(f"infer advisory: backend={doc.get('backend', '?')} "
+          f"tag={doc.get('tag', '?')} slots={doc.get('slots', '?')} "
+          f"config_hash={doc.get('config_hash', '?')}")
+    print(f"{'model':10} {'reqs':>6} {'clients':>7} {'qps':>9} "
+          f"{'p50_ms':>8} {'p99_ms':>8} {'max_batch':>9}")
+    for i, row in enumerate(rows):
+        for field in INFER_ROW_FIELDS:
+            v = row.get(field)
+            if (not isinstance(v, (int, float))
+                    or not math.isfinite(v) or v < 0):
+                failures.append(f"row {i} ({row.get('model', '?')}): "
+                                f"{field} is {v!r}, expected a finite "
+                                f"non-negative number")
+        print(f"{str(row.get('model', '?')):10} "
+              f"{row.get('requests', '-'):>6} "
+              f"{row.get('clients', '-'):>7} "
+              f"{_num(row.get('qps')):>9} "
+              f"{_num(row.get('p50_ms')):>8} "
+              f"{_num(row.get('p99_ms')):>8} "
+              f"{row.get('max_batch_observed', '-'):>9}")
+    if failures:
+        print(f"\nFAIL: BENCH_infer.json is malformed "
+              f"({len(failures)} problem(s)):")
+        for f in failures:
+            print(f"  - {f}")
+        return 1
+    print("\nOK: infer report well-formed "
+          "(latency numbers are advisory, not gated)")
+    return 0
+
+
+def _num(v):
+    return f"{v:.2f}" if isinstance(v, (int, float)) else "-"
+
+
 def refresh_baseline(native_path, checked_path):
     """Replace the checked-in baseline with the native report, atomically."""
     doc = load_doc(native_path)  # parse first: never install junk
@@ -425,7 +493,52 @@ def self_test():
     assert not is_gated_config("row-skip@scalar")
     assert not is_gated_config("dense")
 
-    # 7. refresh-baseline installs native reports and refuses junk.
+    # 7. --infer-advisory: well-formed reports pass (numbers advisory),
+    #    structural damage fails.
+    def advisory_with(doc):
+        with tempfile.TemporaryDirectory() as d:
+            p = os.path.join(d, "BENCH_infer.json")
+            with open(p, "w") as f:
+                json.dump(doc, f)
+            out = io.StringIO()
+            with contextlib.redirect_stdout(out):
+                rc = infer_advisory(p)
+            return rc, out.getvalue()
+
+    infer_row = {"model": "m", "requests": 64, "clients": 8,
+                 "qps": 410.5, "p50_ms": 1.2, "p99_ms": 9.8,
+                 "mean_ms": 2.0, "max_batch_observed": 6}
+    infer_doc = {"bench": "infer", "version": 1,
+                 "provenance": "approx-dropout infer",
+                 "backend": "sparse", "tag": "mlpsyn", "slots": 2,
+                 "config_hash": "00000000deadbeef",
+                 "rows": [dict(infer_row)]}
+    rc, out = advisory_with(infer_doc)
+    assert rc == 0 and "advisory" in out, "healthy infer report passes"
+    # Even absurdly slow numbers stay advisory: exit 0.
+    slow_infer = dict(infer_doc)
+    slow_infer["rows"] = [dict(infer_row, qps=0.01, p99_ms=9000.0)]
+    assert advisory_with(slow_infer)[0] == 0, "latency is never gated"
+    # Structural damage fails: wrong bench name, empty rows, NaN/null
+    # latency fields, missing file.
+    wrong = dict(infer_doc, bench="sparse_speedup")
+    assert advisory_with(wrong)[0] == 1, "wrong bench name fails"
+    empty = dict(infer_doc, rows=[])
+    rc, out = advisory_with(empty)
+    assert rc == 1 and "no rows" in out, "empty rows fail"
+    nan_doc = dict(infer_doc)
+    nan_doc["rows"] = [dict(infer_row, p99_ms=None)]
+    rc, out = advisory_with(nan_doc)
+    assert rc == 1 and "p99_ms" in out, "null latency field fails"
+    nan_doc["rows"] = [dict(infer_row, qps=float("nan"))]
+    assert advisory_with(nan_doc)[0] == 1, "NaN qps fails"
+    out = io.StringIO()
+    with contextlib.redirect_stdout(out):
+        rc = infer_advisory(os.path.join(
+            tempfile.gettempdir(), "ad-no-such-report.json"))
+    assert rc == 1, "missing report file fails"
+
+    # 8. refresh-baseline installs native reports and refuses junk.
     with tempfile.TemporaryDirectory() as d:
         np, cp = os.path.join(d, "n.json"), os.path.join(d, "c.json")
         with open(cp, "w") as f:
@@ -447,7 +560,7 @@ def self_test():
         with contextlib.redirect_stdout(out):
             assert refresh_baseline(np, cp) == 1
 
-    print("self-test OK (7 scenarios)")
+    print("self-test OK (8 scenarios)")
     return 0
 
 
@@ -462,12 +575,18 @@ def main():
     ap.add_argument("--refresh-baseline", action="store_true",
                     help="replace CHECKED_IN.json with NATIVE.json "
                          "(atomic; refuses non-native or smoke reports)")
+    ap.add_argument("--infer-advisory", metavar="BENCH_infer.json",
+                    help="validate + print an inference-serving latency "
+                         "report; numbers are advisory, structural "
+                         "damage exits 1")
     ap.add_argument("--self-test", action="store_true",
                     help="run the checker's own scenario tests and exit")
     args = ap.parse_args()
 
     if args.self_test:
         return self_test()
+    if args.infer_advisory:
+        return infer_advisory(args.infer_advisory)
     if not args.native or not args.checked_in:
         ap.error("NATIVE.json and CHECKED_IN.json are required "
                  "(or use --self-test)")
