@@ -42,6 +42,7 @@ use approx_dropout::bench::{bench, fmt_time, BenchReport, BenchResult,
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::obs::trace;
 use approx_dropout::runtime::sparse::threads_from_env;
 use approx_dropout::runtime::{ArchMeta, Manifest, SparseKernels};
 use approx_dropout::util::json::Json;
@@ -133,6 +134,22 @@ struct Sink {
     table: Table,
 }
 
+/// Per-config phase breakdown: drain the span aggregator (so each
+/// config's rows cover only its own warmup+timed reps) and fold into
+/// `{phase: total_s}`. Warmup reps are included — the breakdown is for
+/// *proportions* (where does a step's time go), not absolute medians.
+fn drain_phases() -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    for row in trace::take_phases() {
+        let e = m.entry(row.phase.to_string())
+            .or_insert(Json::Num(0.0));
+        if let Json::Num(v) = e {
+            *v += row.agg.total_s;
+        }
+    }
+    Json::Obj(m)
+}
+
 impl Sink {
     fn push(&mut self, ctx: &RowCtx<'_>, r: &BenchResult, dense_s: f64) {
         let speedup = dense_s / r.median_s;
@@ -157,11 +174,16 @@ impl Sink {
         if let Some(w) = ctx.window {
             row.push(("window", Json::num(w as f64)));
         }
+        row.push(("phase_s", drain_phases()));
         self.report.row(row);
     }
 }
 
 fn main() -> Result<()> {
+    // Phase spans on for every measurement: the breakdown rides along in
+    // each row's `phase_s`. Tracing is a pure observer (pinned by the
+    // bit-identity test in tests/obs.rs), so the timings stay honest.
+    trace::force_enabled(true);
     let smoke = env_usize("AD_BENCH_SMOKE", 0) == 1;
     let reps = env_usize("AD_BENCH_REPS", if smoke { 3 } else { 40 });
     let warm = if smoke { 1 } else { 5 };

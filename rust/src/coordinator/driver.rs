@@ -33,6 +33,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::pool::ExecutorCache;
 use crate::coordinator::schedule::{Schedule, Variant};
+use crate::obs::{registry, trace};
 use crate::patterns::Choice;
 use crate::runtime::{HostTensor, TrainState, Value};
 use crate::service::checkpoint::{fnv1a64, Checkpoint, TensorCkpt,
@@ -200,12 +201,20 @@ impl LoopCtx<'_> {
         let StepInput { name, tail, examples, epoch_boundary } = input;
         let backend = self.cache.backend();
         let mut vals: Vec<Value> = Vec::with_capacity(tail.len() + 1);
-        for t in tail {
-            vals.push(backend.ingest(t)?);
+        {
+            let _sp = trace::span("marshal");
+            for t in tail {
+                vals.push(backend.ingest(t)?);
+            }
+            vals.push(backend.ingest(HostTensor::scalar_f32(*self.lr))?);
         }
-        vals.push(backend.ingest(HostTensor::scalar_f32(*self.lr))?);
         let exe = self.cache.get(&name)?;
-        let (loss, correct) = self.state.step(exe.as_ref(), &vals)?;
+        let (loss, correct) = {
+            let _sp = trace::span("execute");
+            self.state.step(exe.as_ref(), &vals)?
+        };
+        registry::DISPATCH_TOTAL
+            .inc(&format!("{}/{name}", backend.name()));
         self.metrics.record(self.state.step, loss, correct, examples,
                             timer.elapsed_s());
         self.metrics.dispatched.push(name);
@@ -307,9 +316,21 @@ impl<F: ModelFront> Trainer<F> {
     /// Hot path: host buffers are uploaded through the backend once and
     /// the parameter state stays backend-resident (see runtime::state).
     pub fn step_with(&mut self, data: &F::Data) -> Result<(f64, f64)> {
+        if trace::enabled() {
+            trace::set_scope(&self.scope_label());
+        }
         let timer = Timer::start();
-        let input = self.front.assemble(data)?;
+        let input = {
+            let _sp = trace::span("assemble");
+            self.front.assemble(data)?
+        };
         self.loop_ctx().dispatch(input, timer)
+    }
+
+    /// Label traced spans aggregate under: `<tag>/<variant>`.
+    fn scope_label(&self) -> String {
+        format!("{}/{}", self.front.tag(),
+                self.front.schedule().variant.as_str())
     }
 
     /// Run `n` sequential steps; returns mean loss over the window.
@@ -338,6 +359,12 @@ impl<F: ModelFront> Trainer<F> {
         if n == 0 {
             return Ok(0.0);
         }
+        let scope_label = if trace::enabled() {
+            trace::set_scope(&self.scope_label());
+            Some(self.scope_label())
+        } else {
+            None
+        };
         let Trainer { front, cache, state, metrics, lr, lr_decay,
                       decay_after, epochs_done, .. } = self;
         let mut ctx = LoopCtx {
@@ -354,8 +381,16 @@ impl<F: ModelFront> Trainer<F> {
             let (tx, rx) =
                 std::sync::mpsc::sync_channel::<Result<StepInput>>(1);
             scope.spawn(move || {
+                // Spans fire on this thread too; tag them with the same
+                // config label as the dispatching thread.
+                if let Some(s) = &scope_label {
+                    trace::set_scope(s);
+                }
                 for _ in 0..n {
-                    let input = front.assemble(data);
+                    let input = {
+                        let _sp = trace::span("assemble");
+                        front.assemble(data)
+                    };
                     let stop = input.is_err();
                     // Receiver gone (dispatch error) or assembly error:
                     // stop producing; the scope joins us either way.

@@ -70,18 +70,19 @@ impl ModelFront for LstmFront {
         // entirely, so the RNG stream advances only at window starts.
         // With steps_per_draw == 1 (the default and all W <= seq) this is
         // exactly today's one-sample-per-step stream.
-        let choices = if self.window.steps_per_draw() > 1
-            && self.held_left > 0
-        {
-            self.held_left -= 1;
-            self.held_choices.clone()
-        } else {
-            let c = self.schedule.sample(&mut self.rng);
-            if self.window.steps_per_draw() > 1 {
-                self.held_choices = c.clone();
-                self.held_left = self.window.steps_per_draw() - 1;
+        let choices = {
+            let _sp = crate::obs::trace::span("sample");
+            if self.window.steps_per_draw() > 1 && self.held_left > 0 {
+                self.held_left -= 1;
+                self.held_choices.clone()
+            } else {
+                let c = self.schedule.sample(&mut self.rng);
+                if self.window.steps_per_draw() > 1 {
+                    self.held_choices = c.clone();
+                    self.held_left = self.window.steps_per_draw() - 1;
+                }
+                c
             }
-            c
         };
         let prev_epoch = self.batcher.epoch;
         // Owned buffers (the pipelined path ships them across a thread);

@@ -43,12 +43,22 @@ impl TrainMetrics {
     }
 
     /// Median step time — robust against compile/warmup outliers.
+    /// A run with zero recorded steps has no step time: explicitly NaN
+    /// (rendered as JSON `null` by the report writer, `-` in summary
+    /// tables), never a silent 0.0 that reads as infinitely fast.
     pub fn median_step_s(&self) -> f64 {
+        if self.step_times_s.is_empty() {
+            return f64::NAN;
+        }
         stats::median(&self.step_times_s)
     }
 
     /// Mean step time excluding the first `skip` (warmup) iterations.
+    /// NaN on an empty run, like [`Self::median_step_s`].
     pub fn steady_mean_step_s(&self, skip: usize) -> f64 {
+        if self.step_times_s.is_empty() {
+            return f64::NAN;
+        }
         if self.step_times_s.len() <= skip {
             return stats::mean(&self.step_times_s);
         }
@@ -114,6 +124,20 @@ mod tests {
         assert!((m.running_train_acc() - (280.0 / 384.0)).abs() < 1e-12);
         assert_eq!(m.last_loss(), 1.0);
         assert!((m.total_time_s() - 0.33).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_step_times_are_explicitly_nan() {
+        // Regression: stats::median/mean return 0.0 on empty input, so
+        // a zero-step run used to report a 0.0s median step — which
+        // reads as infinitely fast. NaN flows through the PR 7
+        // non-finite path to JSON null / table `-`.
+        let m = TrainMetrics::default();
+        assert!(m.median_step_s().is_nan());
+        assert!(m.steady_mean_step_s(0).is_nan());
+        assert!(m.steady_mean_step_s(5).is_nan());
+        assert_eq!(crate::util::json::Json::num(m.median_step_s()).dumps(),
+                   "null");
     }
 
     #[test]

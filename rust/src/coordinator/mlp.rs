@@ -54,7 +54,10 @@ impl ModelFront for MlpFront {
     }
 
     fn assemble(&mut self, data: &MnistSyn) -> Result<StepInput> {
-        let choices = self.schedule.sample(&mut self.rng);
+        let choices = {
+            let _sp = crate::obs::trace::span("sample");
+            self.schedule.sample(&mut self.rng)
+        };
         let prev_epoch = self.batcher.epoch;
         // Tail tensors own their buffers (the pipelined path ships them
         // across a thread), so the batcher/masks fill owned Vecs directly

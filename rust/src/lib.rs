@@ -18,6 +18,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod obs;
 pub mod patterns;
 pub mod runtime;
 pub mod search;

@@ -11,13 +11,14 @@ use approx_dropout::config::TrainConfig;
 use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
                                   Schedule, TrainMetrics, Variant};
 use approx_dropout::data::{Corpus, MnistSyn};
-use approx_dropout::info;
+use approx_dropout::obs;
 use approx_dropout::search::{self, SearchConfig};
 use approx_dropout::service;
 use approx_dropout::util::argparse::Args;
 use approx_dropout::util::json::Json;
 use approx_dropout::util::log;
 use approx_dropout::util::Timer;
+use approx_dropout::{info, warn_};
 
 const HELP: &str = "\
 approx-dropout — Approximate Random Dropout (Song et al. 2018) repro
@@ -62,8 +63,19 @@ CHECKPOINTS (train-mlp / train-lstm):
   --resume-from FILE  restore a *.ckpt before training (--steps then run
                       on top; the trajectory continues bit-exactly)
   --curve-out FILE    write the recorded loss curve as JSON
+  --trace-out FILE    write a Chrome trace-event JSON of phase spans
+                      (implies AD_TRACE=on; open in chrome://tracing
+                      or Perfetto)
+
+OBSERVABILITY: every train-mlp/train-lstm/serve/infer run exports the
+     process metrics registry as METRICS_<run>.json (validate with
+     tools/check_metrics.py); with AD_TRACE=on, per-phase timing rows
+     (sample/assemble/marshal/execute, prep/fwd/softmax/bptt/sgd) are
+     included. Tracing never perturbs trajectories — runs are
+     bit-identical with it on or off.
 
 ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
+     AD_TRACE (on|off; default off — phase-scoped span timing),
      AD_BACKEND (pjrt|reference|sparse; reference = pure-Rust
      masked-dense interpreter, sparse = multithreaded row/tile-skipping
      compute engine — both run with no artifacts, e.g. train-mlp
@@ -76,8 +88,16 @@ ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
 
 fn main() -> Result<()> {
     log::init_from_env();
+    obs::trace::init_from_env();
     let args = Args::parse(std::env::args().skip(1))
         .map_err(|e| anyhow::anyhow!(e))?;
+    // --trace-out implies tracing (and event collection): asking for a
+    // trace file with AD_TRACE unset should produce a trace, not an
+    // empty JSON array.
+    if args.get("trace-out").is_some() {
+        obs::trace::force_enabled(true);
+        obs::trace::collect_events(true);
+    }
     match args.subcommand.as_deref() {
         Some("train-mlp") => train_mlp(&args),
         Some("train-lstm") => train_lstm(&args),
@@ -172,12 +192,14 @@ fn train_mlp(args: &Args) -> Result<()> {
     println!("final: test loss {eval_loss:.4}, test accuracy \
               {:.2}%, median step {:.1} ms",
              eval_acc * 100.0, tr.metrics.median_step_s() * 1e3);
-    finish_run(args, &tr.metrics, &cfg.tag, |p| tr.save_checkpoint(p))
+    finish_run(args, &tr.metrics, &cfg.tag, "train-mlp",
+               |p| tr.save_checkpoint(p))
 }
 
-/// Shared `--curve-out` / `--ckpt-out` epilogue for the train commands.
+/// Shared `--curve-out` / `--ckpt-out` / telemetry epilogue for the
+/// train commands. `run` names the METRICS_<run>.json export.
 fn finish_run<F>(args: &Args, metrics: &TrainMetrics, tag: &str,
-                 save: F) -> Result<()>
+                 run: &str, save: F) -> Result<()>
 where
     F: FnOnce(&Path) -> Result<()>,
 {
@@ -189,7 +211,21 @@ where
         save(Path::new(p))?;
         info!("checkpoint written to {p}");
     }
+    if let Some(p) = args.get("trace-out") {
+        let n = obs::trace::write_chrome_trace(Path::new(p))?;
+        info!("chrome trace ({n} events) written to {p}");
+    }
+    write_metrics_logged(run);
     Ok(())
+}
+
+/// Export the process metrics registry; a failed write warns loudly but
+/// never fails a run that already trained successfully.
+fn write_metrics_logged(run: &str) {
+    match obs::write_metrics(run) {
+        Ok(p) => info!("metrics written to {}", p.display()),
+        Err(e) => warn_!("metrics export failed ({e:#})"),
+    }
 }
 
 /// Loss curve as JSON (absolute step numbers — a resumed run's curve
@@ -272,7 +308,8 @@ fn train_lstm(args: &Args) -> Result<()> {
               (unigram baseline ppl {:.1})",
              acc * 100.0, tr.metrics.median_step_s() * 1e3,
              corpus.unigram_xent(&corpus.valid).exp());
-    finish_run(args, &tr.metrics, &cfg.tag, |p| tr.save_checkpoint(p))
+    finish_run(args, &tr.metrics, &cfg.tag, "train-lstm",
+               |p| tr.save_checkpoint(p))
 }
 
 fn serve(args: &Args) -> Result<()> {
@@ -309,6 +346,7 @@ fn serve(args: &Args) -> Result<()> {
           cache.backend().name());
     let report = service::run_jobs(&cache, &specs, &cfg)?;
     print!("{}", service::summarize(&report));
+    write_metrics_logged("serve");
     service::ensure_all_ok(&report)
 }
 
@@ -409,6 +447,7 @@ fn infer(args: &Args) -> Result<()> {
     ]);
     let path = r.write_default("BENCH_infer.json")?;
     println!("report: {}", path.display());
+    write_metrics_logged("infer");
     Ok(())
 }
 

@@ -1,0 +1,154 @@
+//! Zero-dependency observability layer: a process-wide metrics
+//! [`registry`] (atomic counters/gauges/fixed-bucket histograms),
+//! phase-scoped [`trace`] spans gated by `AD_TRACE`, and the
+//! `METRICS_<run>.json` export every `train-*`/`serve`/`infer` run
+//! writes through `bench/report.rs`.
+//!
+//! Layer map — where each named instrument is fed:
+//!
+//! | instrument                  | fed by                                |
+//! |-----------------------------|---------------------------------------|
+//! | `dispatch_total`            | `coordinator/driver.rs` per step      |
+//! | `sparse_{rows,tiles}_*`     | `runtime/sparse/kernels.rs` per GEMM  |
+//! | `sparse_panel_bytes`        | sparse `prep` panel packing           |
+//! | `gate_{wait,hold}_s`, depth | `service/scheduler.rs` `SlotGate`     |
+//! | `infer_*`                   | `service/infer.rs` worker loop        |
+//! | `phase_time_s` rows         | `trace` spans (trainer + interpreter) |
+//!
+//! Naming scheme: `snake_case`, `<subsystem>_<what>[_<unit>]`; units in
+//! the name (`_s`, `_bytes`). Schema of the export (validated by
+//! `tools/check_metrics.py`) is documented on [`metrics_report`].
+
+pub mod registry;
+pub mod trace;
+
+use crate::bench::report::BenchReport;
+use crate::util::json::Json;
+use registry::InstrumentSnapshot;
+
+/// Snapshot the whole registry + phase-aggregation table into one
+/// report, named `metrics`, tagged with the run kind (`train-mlp`,
+/// `serve`, `infer`, ...).
+///
+/// Row schema (one row per instrument cell):
+///
+/// * counters — `{instrument, kind:"counter", value}` plus an optional
+///   `label` for labeled cells (`dispatch_total`);
+/// * gauges — `{instrument, kind:"gauge", value, peak}`;
+/// * histograms — `{instrument, kind:"histogram", bounds:[..],
+///   counts:[..], total, sum}` where `counts` has one trailing overflow
+///   cell and `sum(counts) == total` by construction;
+/// * phases — `{instrument:"phase_time_s", kind:"phase", scope, phase,
+///   count, total_s, max_s}` (present only after traced spans fired).
+pub fn metrics_report(run: &str) -> BenchReport {
+    let mut r = BenchReport::new("metrics", "rust/src/obs/mod.rs");
+    r.set("run", Json::str(run));
+    r.set("trace", Json::Bool(trace::enabled()));
+    for snap in registry::snapshot_all() {
+        match snap {
+            InstrumentSnapshot::Counter { name, value } => {
+                r.row(vec![
+                    ("instrument", Json::str(name)),
+                    ("kind", Json::str("counter")),
+                    ("value", Json::num(value as f64)),
+                ]);
+            }
+            InstrumentSnapshot::Labeled { name, cells } => {
+                // Always emit the aggregate row so required-instrument
+                // checks hold even before the first dispatch.
+                let total: u64 = cells.iter().map(|(_, v)| v).sum();
+                r.row(vec![
+                    ("instrument", Json::str(name)),
+                    ("kind", Json::str("counter")),
+                    ("value", Json::num(total as f64)),
+                ]);
+                for (label, value) in cells {
+                    r.row(vec![
+                        ("instrument", Json::str(name)),
+                        ("kind", Json::str("counter")),
+                        ("label", Json::str(&label)),
+                        ("value", Json::num(value as f64)),
+                    ]);
+                }
+            }
+            InstrumentSnapshot::Gauge { name, value, peak } => {
+                r.row(vec![
+                    ("instrument", Json::str(name)),
+                    ("kind", Json::str("gauge")),
+                    ("value", Json::num(value as f64)),
+                    ("peak", Json::num(peak as f64)),
+                ]);
+            }
+            InstrumentSnapshot::Histogram { name, h } => {
+                r.row(vec![
+                    ("instrument", Json::str(name)),
+                    ("kind", Json::str("histogram")),
+                    ("bounds",
+                     Json::Arr(h.bounds.iter().copied().map(Json::num)
+                               .collect())),
+                    ("counts",
+                     Json::Arr(h.counts.iter().map(|&c| Json::num(c as f64))
+                               .collect())),
+                    ("total", Json::num(h.total as f64)),
+                    ("sum", Json::num(h.sum)),
+                ]);
+            }
+        }
+    }
+    for p in trace::phase_snapshot() {
+        r.row(vec![
+            ("instrument", Json::str("phase_time_s")),
+            ("kind", Json::str("phase")),
+            ("scope", Json::str(&p.scope)),
+            ("phase", Json::str(p.phase)),
+            ("count", Json::num(p.agg.count as f64)),
+            ("total_s", Json::num(p.agg.total_s)),
+            ("max_s", Json::num(p.agg.max_s)),
+        ]);
+    }
+    r
+}
+
+/// Write `METRICS_<run>.json` next to the `BENCH_*`/`REPORT_*` files
+/// (`AD_BENCH_OUT` redirects) and return where it landed. Called at the
+/// end of every CLI run; failures are the caller's to report loudly —
+/// metrics must never abort a run that already trained.
+pub fn write_metrics(run: &str) -> anyhow::Result<std::path::PathBuf> {
+    metrics_report(run).write_default(&format!("METRICS_{run}.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn metrics_report_shape_parses_and_has_catalog() {
+        let r = metrics_report("unit");
+        let v = json::parse(&r.to_json().pretty()).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str(), Some("metrics"));
+        assert_eq!(v.get("run").unwrap().as_str(), Some("unit"));
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        let has = |name: &str| {
+            rows.iter().any(|r| {
+                r.get("instrument").and_then(|i| i.as_str()) == Some(name)
+            })
+        };
+        for name in ["dispatch_total", "sparse_rows_kept", "gate_wait_s",
+                     "gate_queue_depth", "infer_latency_s",
+                     "infer_batch_occupancy"] {
+            assert!(has(name), "missing instrument {name}");
+        }
+        // Histogram rows: counts sum to total (the checker invariant).
+        for row in rows {
+            if row.get("kind").and_then(|k| k.as_str()) == Some("histogram")
+            {
+                let counts: u64 = row.get("counts").unwrap().as_arr()
+                    .unwrap().iter()
+                    .map(|c| c.as_f64().unwrap() as u64).sum();
+                assert_eq!(row.get("total").unwrap().as_f64(),
+                           Some(counts as f64));
+            }
+        }
+    }
+}

@@ -1,0 +1,411 @@
+//! Process-wide metrics registry: atomic counters, gauges, and
+//! fixed-bucket histograms behind a static named-instrument catalog.
+//!
+//! Design constraints (see DESIGN.md section 12):
+//!
+//! * **Lock-free on the hot path.** Every instrument that sits inside a
+//!   kernel, gate, or request loop is a plain static whose update is one
+//!   (or two) `Relaxed` atomic RMWs — no allocation, no locking, no
+//!   branching on configuration. The only locked instrument is
+//!   [`LabeledCounter`] (dynamic label set), used once per *training
+//!   step* — milliseconds of GEMM per lock, never per-element.
+//! * **Snapshot-consistent on read.** A histogram snapshot derives its
+//!   `total` from the bucket counts it just read, so `sum(counts) ==
+//!   total` holds by construction even while writers race the reader
+//!   (`tools/check_metrics.py` pins the invariant on every exported
+//!   file). Counters/gauges are single-word reads and need no protocol.
+//! * **Observers only.** Nothing here draws RNG, takes time-dependent
+//!   branches, or reorders caller work — metrics stay enabled always and
+//!   cannot perturb trajectories (the `AD_TRACE` bit-identity test in
+//!   `rust/tests/obs.rs` covers the span layer; this layer has no off
+//!   switch to diverge under).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous level (queue depth, jobs running) with a
+/// high-watermark. `add` is a single RMW; the peak is maintained with
+/// `fetch_max`, so concurrent movers never lose a watermark.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+    peak: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Self {
+        Gauge { v: AtomicI64::new(0), peak: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, d: i64) {
+        let now = self.v.fetch_add(d, Ordering::Relaxed) + d;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.v.store(v, Ordering::Relaxed);
+        self.peak.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> i64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper cap on histogram bucket-bound count, so the bucket array can be
+/// a fixed-size field of a `const`-constructible static (bounds.len()
+/// finite buckets + 1 overflow bucket).
+pub const MAX_BOUNDS: usize = 15;
+
+/// Fixed-bucket histogram: bucket `i` counts observations `v <=
+/// bounds[i]` (first match, ascending bounds), the last bucket counts
+/// the overflow `v > bounds[last]`. Observation is a short linear scan
+/// plus two `Relaxed` RMWs — no float-to-bucket division, no locks.
+///
+/// The running value sum is kept in integer micro-units so it can live
+/// in one `AtomicU64` (f64 has no portable atomic add); at microsecond
+/// granularity the sums this repo records (seconds, batch rows) lose
+/// nothing that matters for a mean.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    buckets: [AtomicU64; MAX_BOUNDS + 1],
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new(bounds: &'static [f64]) -> Self {
+        assert!(bounds.len() <= MAX_BOUNDS,
+                "histogram bounds exceed MAX_BOUNDS");
+        // No array-repeat for non-Copy AtomicU64 in const fn; spell the
+        // 16 zero cells out once here instead of at every static.
+        const Z: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            bounds,
+            buckets: [Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z],
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        let mut idx = self.bounds.len();
+        for (i, &b) in self.bounds.iter().enumerate() {
+            if v <= b {
+                idx = i;
+                break;
+            }
+        }
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() && v > 0.0 {
+            self.sum_micros
+                .fetch_add((v * 1e6) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Consistent snapshot: `total` is the sum of the `counts` read
+    /// here, never a separately-raced cell.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let counts: Vec<u64> = self.buckets[..=self.bounds.len()]
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect();
+        let total = counts.iter().sum();
+        HistSnapshot {
+            bounds: self.bounds.to_vec(),
+            counts,
+            total,
+            sum: self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}
+
+/// One consistent histogram read: `counts.len() == bounds.len() + 1`
+/// (the extra cell is the overflow bucket) and `total == sum(counts)`.
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub bounds: Vec<f64>,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    /// Sum of observed values (microsecond-granular), for means.
+    pub sum: f64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        self.sum / self.total as f64
+    }
+}
+
+/// Counter keyed by a dynamic label (backend/artifact names are only
+/// known at dispatch time). Mutex-guarded — used at step granularity
+/// only; never put one inside a kernel loop.
+#[derive(Debug)]
+pub struct LabeledCounter {
+    cells: Mutex<BTreeMap<String, u64>>,
+}
+
+impl LabeledCounter {
+    pub const fn new() -> Self {
+        LabeledCounter { cells: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn add(&self, label: &str, n: u64) {
+        let mut m = self.cells.lock().unwrap_or_else(|e| e.into_inner());
+        *m.entry(label.to_string()).or_insert(0) += n;
+    }
+
+    pub fn inc(&self, label: &str) {
+        self.add(label, 1);
+    }
+
+    pub fn snapshot(&self) -> Vec<(String, u64)> {
+        let m = self.cells.lock().unwrap_or_else(|e| e.into_inner());
+        m.iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// Total across all labels.
+    pub fn total(&self) -> u64 {
+        let m = self.cells.lock().unwrap_or_else(|e| e.into_inner());
+        m.values().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Named instrument catalog (the registry)
+// ---------------------------------------------------------------------------
+
+const TIME_BOUNDS_S: [f64; 8] =
+    [1e-5, 1e-4, 1e-3, 3e-3, 1e-2, 0.1, 1.0, 10.0];
+const OCCUPANCY_BOUNDS: [f64; 8] =
+    [1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+
+/// Executed dispatches, labeled `<backend>/<artifact>` — the
+/// observable the paper's pattern->executable mapping produces.
+pub static DISPATCH_TOTAL: LabeledCounter = LabeledCounter::new();
+
+/// Shared-dimension rows the sparse engine actually touched / skipped
+/// (TensorDash-style touched-vs-skipped work accounting).
+pub static SPARSE_ROWS_KEPT: Counter = Counter::new();
+pub static SPARSE_ROWS_DROPPED: Counter = Counter::new();
+/// Weight tiles walked / skipped by the tile kernels.
+pub static SPARSE_TILES_KEPT: Counter = Counter::new();
+pub static SPARSE_TILES_DROPPED: Counter = Counter::new();
+/// Bytes packed into per-(site, window) kept-row weight panels.
+pub static SPARSE_PANEL_BYTES: Counter = Counter::new();
+
+/// Backend-slot gate: time spent waiting for a slot, time a slot was
+/// held, and the live waiter-queue depth (+peak).
+pub static GATE_WAIT_S: Histogram = Histogram::new(&TIME_BOUNDS_S);
+pub static GATE_HOLD_S: Histogram = Histogram::new(&TIME_BOUNDS_S);
+pub static GATE_QUEUE_DEPTH: Gauge = Gauge::new();
+
+/// Inference: requests served, coalesced-batch occupancy, and
+/// per-request latency (submit -> response).
+pub static INFER_REQUESTS: Counter = Counter::new();
+pub static INFER_BATCHES: Counter = Counter::new();
+pub static INFER_BATCH_OCCUPANCY: Histogram =
+    Histogram::new(&OCCUPANCY_BOUNDS);
+pub static INFER_LATENCY_S: Histogram = Histogram::new(&TIME_BOUNDS_S);
+
+/// One instrument read, tagged for export (`obs::metrics_report`).
+#[derive(Clone, Debug)]
+pub enum InstrumentSnapshot {
+    Counter { name: &'static str, value: u64 },
+    Labeled { name: &'static str, cells: Vec<(String, u64)> },
+    Gauge { name: &'static str, value: i64, peak: i64 },
+    Histogram { name: &'static str, h: HistSnapshot },
+}
+
+/// Read the whole catalog. Each instrument is internally consistent;
+/// cross-instrument skew is inherent (and harmless) while writers run.
+pub fn snapshot_all() -> Vec<InstrumentSnapshot> {
+    use InstrumentSnapshot as S;
+    vec![
+        S::Labeled { name: "dispatch_total",
+                     cells: DISPATCH_TOTAL.snapshot() },
+        S::Counter { name: "sparse_rows_kept",
+                     value: SPARSE_ROWS_KEPT.get() },
+        S::Counter { name: "sparse_rows_dropped",
+                     value: SPARSE_ROWS_DROPPED.get() },
+        S::Counter { name: "sparse_tiles_kept",
+                     value: SPARSE_TILES_KEPT.get() },
+        S::Counter { name: "sparse_tiles_dropped",
+                     value: SPARSE_TILES_DROPPED.get() },
+        S::Counter { name: "sparse_panel_bytes",
+                     value: SPARSE_PANEL_BYTES.get() },
+        S::Histogram { name: "gate_wait_s", h: GATE_WAIT_S.snapshot() },
+        S::Histogram { name: "gate_hold_s", h: GATE_HOLD_S.snapshot() },
+        S::Gauge { name: "gate_queue_depth",
+                   value: GATE_QUEUE_DEPTH.get(),
+                   peak: GATE_QUEUE_DEPTH.peak() },
+        S::Counter { name: "infer_requests", value: INFER_REQUESTS.get() },
+        S::Counter { name: "infer_batches", value: INFER_BATCHES.get() },
+        S::Histogram { name: "infer_batch_occupancy",
+                       h: INFER_BATCH_OCCUPANCY.snapshot() },
+        S::Histogram { name: "infer_latency_s",
+                       h: INFER_LATENCY_S.snapshot() },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.add(3);
+        g.add(2);
+        g.add(-4);
+        assert_eq!(g.get(), 1);
+        assert_eq!(g.peak(), 5);
+        g.set(7);
+        assert_eq!((g.get(), g.peak()), (7, 7));
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        static BOUNDS: [f64; 3] = [1.0, 2.0, 4.0];
+        let h = Histogram::new(&BOUNDS);
+        h.observe(0.5); // <= 1.0      -> bucket 0
+        h.observe(1.0); // == bound    -> bucket 0 (le semantics)
+        h.observe(1.5); // <= 2.0      -> bucket 1
+        h.observe(4.0); // == last     -> bucket 2
+        h.observe(9.0); // overflow    -> bucket 3
+        let s = h.snapshot();
+        assert_eq!(s.counts, vec![2, 1, 1, 1]);
+        assert_eq!(s.total, 5);
+        assert_eq!(s.counts.iter().sum::<u64>(), s.total);
+        assert!((s.sum - 16.0).abs() < 1e-3);
+        assert!((s.mean() - 3.2).abs() < 1e-3);
+    }
+
+    #[test]
+    fn histogram_ignores_nonpositive_in_sum_but_counts_them() {
+        static BOUNDS: [f64; 1] = [1.0];
+        let h = Histogram::new(&BOUNDS);
+        h.observe(0.0);
+        h.observe(-3.0);
+        h.observe(f64::NAN); // NaN compares false -> overflow bucket
+        let s = h.snapshot();
+        assert_eq!(s.total, 3);
+        assert_eq!(s.counts, vec![2, 1]);
+        assert_eq!(s.sum, 0.0);
+    }
+
+    #[test]
+    fn empty_histogram_mean_is_nan() {
+        static BOUNDS: [f64; 1] = [1.0];
+        let h = Histogram::new(&BOUNDS);
+        assert!(h.snapshot().mean().is_nan());
+    }
+
+    #[test]
+    fn labeled_counter_accumulates_per_label() {
+        let c = LabeledCounter::new();
+        c.inc("a");
+        c.add("b", 2);
+        c.inc("a");
+        assert_eq!(c.snapshot(), vec![("a".to_string(), 2),
+                                      ("b".to_string(), 2)]);
+        assert_eq!(c.total(), 4);
+    }
+
+    #[test]
+    fn concurrent_increments_never_lose_updates() {
+        // AD_THREADS-style contention: N threads x M ops on one counter
+        // and one histogram; relaxed RMWs must still account for every
+        // update.
+        static BOUNDS: [f64; 4] = [0.25, 0.5, 0.75, 1.0];
+        let c = Counter::new();
+        let g = Gauge::new();
+        let h = Histogram::new(&BOUNDS);
+        let (n_threads, per_thread) = (8, 2000);
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                s.spawn(|| {
+                    for i in 0..per_thread {
+                        c.inc();
+                        g.add(1);
+                        h.observe((i % 5) as f64 * 0.25);
+                    }
+                    let _ = t;
+                });
+            }
+        });
+        let n = (n_threads * per_thread) as u64;
+        assert_eq!(c.get(), n);
+        assert_eq!(g.get(), n as i64);
+        assert_eq!(g.peak(), n as i64);
+        let s = h.snapshot();
+        assert_eq!(s.total, n);
+        assert_eq!(s.counts.iter().sum::<u64>(), s.total);
+        // 0.0 and 0.25 both land in bucket 0.
+        assert_eq!(s.counts[0], n / 5 * 2);
+    }
+
+    #[test]
+    fn snapshots_are_monotonic_under_writers() {
+        // Totals observed by a racing reader never decrease, and every
+        // snapshot independently satisfies sum(counts) == total.
+        static BOUNDS: [f64; 2] = [1.0, 2.0];
+        let h = Histogram::new(&BOUNDS);
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..20_000 {
+                    h.observe((i % 3) as f64);
+                }
+                stop.store(true, Ordering::Relaxed);
+            });
+            let mut last = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let snap = h.snapshot();
+                assert!(snap.total >= last,
+                        "total went backwards: {last} -> {}", snap.total);
+                assert_eq!(snap.counts.iter().sum::<u64>(), snap.total);
+                last = snap.total;
+            }
+        });
+        assert_eq!(h.snapshot().total, 20_000);
+    }
+}

@@ -1,0 +1,303 @@
+//! Phase-scoped tracing: cheap RAII span timers around the trainer and
+//! step-interpreter phases (sample, marshal, prep, fwd, softmax, bptt,
+//! sgd, execute), aggregated per (scope, phase) and optionally exported
+//! as Chrome trace-event JSON (`--trace-out`).
+//!
+//! Cost model: when `AD_TRACE` is off, [`span`] is a single `Relaxed`
+//! atomic load returning `None` — no clock read, no allocation, no
+//! lock. When on, a span reads the monotonic clock twice and takes one
+//! short mutex on drop (per *phase*, a handful per step — never per
+//! element).
+//!
+//! Hard contract, pinned by `rust/tests/obs.rs`: spans are pure
+//! observers. They never draw from an RNG stream, never reorder or gate
+//! caller work, and never branch the traced code path — so
+//! trajectories, dispatch sequences, and final parameter bits are
+//! bit-identical with tracing on or off. Scopes are thread-local
+//! because spans fire on runner/assembly threads (fleet jobs, the
+//! pipelined trainer's worker); a thread that never set one reports
+//! under `"-"`.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static COLLECT_EVENTS: AtomicBool = AtomicBool::new(false);
+static INIT: Once = Once::new();
+
+/// Read `AD_TRACE` once per process (on|1|true => on; off|0|false|unset
+/// => off; anything else warns loudly and stays off — same policy as
+/// `AD_SIMD`/`AD_LOG`).
+pub fn init_from_env() {
+    INIT.call_once(|| match std::env::var("AD_TRACE").as_deref() {
+        Ok("on" | "1" | "true") => ENABLED.store(true, Ordering::Relaxed),
+        Ok("off" | "0" | "false" | "") | Err(_) => {}
+        Ok(v) => {
+            crate::warn_!("AD_TRACE={v:?} is not a recognized value \
+                           (use on|off); tracing stays OFF");
+        }
+    });
+}
+
+/// Explicit switch for tests and benches — avoids racy process-env
+/// mutation under parallel test threads (same reason
+/// `LstmTrainer::new_with_window` exists).
+pub fn force_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// The hot-path gate: one relaxed load.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Scopes: which (config) a span aggregates under
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    static SCOPE: RefCell<String> = const { RefCell::new(String::new()) };
+}
+
+/// Tag this thread's subsequent spans with a config label (e.g.
+/// `"mlpsyn/rdp"`). The trainer sets it on the stepping thread and the
+/// pipelined assembly worker; fleet runner threads set their job name.
+pub fn set_scope(scope: &str) {
+    SCOPE.with(|s| {
+        let mut s = s.borrow_mut();
+        s.clear();
+        s.push_str(scope);
+    });
+}
+
+fn current_scope() -> String {
+    SCOPE.with(|s| {
+        let s = s.borrow();
+        if s.is_empty() { "-".to_string() } else { s.clone() }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Spans + aggregation
+// ---------------------------------------------------------------------------
+
+/// RAII phase timer; records on drop. Hold it in a `let _sp = ...;`
+/// binding around the phase body.
+pub struct Span {
+    phase: &'static str,
+    t0: Instant,
+}
+
+/// Start a span for `phase` — `None` (and nothing else) when tracing is
+/// off.
+#[inline]
+pub fn span(phase: &'static str) -> Option<Span> {
+    if !enabled() {
+        return None;
+    }
+    Some(Span { phase, t0: Instant::now() })
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur_s = self.t0.elapsed().as_secs_f64();
+        record(self.phase, self.t0, dur_s);
+    }
+}
+
+/// Aggregated wall-clock for one (scope, phase).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseAgg {
+    pub count: u64,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// One exported aggregation row.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub scope: String,
+    pub phase: &'static str,
+    pub agg: PhaseAgg,
+}
+
+static AGG: Mutex<BTreeMap<(String, &'static str), PhaseAgg>> =
+    Mutex::new(BTreeMap::new());
+
+fn record(phase: &'static str, t0: Instant, dur_s: f64) {
+    let scope = current_scope();
+    {
+        let mut agg = AGG.lock().unwrap_or_else(|e| e.into_inner());
+        let a = agg.entry((scope, phase)).or_default();
+        a.count += 1;
+        a.total_s += dur_s;
+        a.max_s = a.max_s.max(dur_s);
+    }
+    if COLLECT_EVENTS.load(Ordering::Relaxed) {
+        push_event(phase, t0, dur_s);
+    }
+}
+
+/// Read the aggregation table (sorted by scope then phase).
+pub fn phase_snapshot() -> Vec<PhaseRow> {
+    let agg = AGG.lock().unwrap_or_else(|e| e.into_inner());
+    agg.iter()
+        .map(|((scope, phase), a)| PhaseRow {
+            scope: scope.clone(),
+            phase,
+            agg: *a,
+        })
+        .collect()
+}
+
+/// Drain the aggregation table — benches snapshot per-config deltas by
+/// draining between configs.
+pub fn take_phases() -> Vec<PhaseRow> {
+    let mut agg = AGG.lock().unwrap_or_else(|e| e.into_inner());
+    std::mem::take(&mut *agg)
+        .into_iter()
+        .map(|((scope, phase), a)| PhaseRow { scope, phase, agg: a })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export (--trace-out)
+// ---------------------------------------------------------------------------
+
+/// Cap on buffered events so a long traced run cannot grow without
+/// bound; past it, aggregation keeps counting but the flamegraph stops.
+const MAX_EVENTS: usize = 200_000;
+
+struct Event {
+    phase: &'static str,
+    scope: String,
+    ts_us: u64,
+    dur_us: u64,
+    tid: u64,
+}
+
+static EVENTS: Mutex<Vec<Event>> = Mutex::new(Vec::new());
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Also buffer individual span events for [`write_chrome_trace`]
+/// (requires tracing to be enabled to have any effect).
+pub fn collect_events(on: bool) {
+    if on {
+        // Pin the timeline origin before the first event.
+        let _ = EPOCH.get_or_init(Instant::now);
+    }
+    COLLECT_EVENTS.store(on, Ordering::Relaxed);
+}
+
+fn push_event(phase: &'static str, t0: Instant, dur_s: f64) {
+    let epoch = *EPOCH.get_or_init(Instant::now);
+    let ts_us = t0.saturating_duration_since(epoch).as_micros() as u64;
+    let tid = TID.with(|t| *t);
+    let mut ev = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    if ev.len() >= MAX_EVENTS {
+        return;
+    }
+    ev.push(Event {
+        phase,
+        scope: current_scope(),
+        ts_us,
+        dur_us: (dur_s * 1e6) as u64,
+        tid,
+    });
+}
+
+/// Write buffered events as a Chrome trace-event JSON array
+/// (`chrome://tracing` / Perfetto "X" complete events). Returns the
+/// number of events written.
+pub fn write_chrome_trace(path: &Path) -> anyhow::Result<usize> {
+    use anyhow::Context;
+    let ev = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    writeln!(w, "[")?;
+    for (i, e) in ev.iter().enumerate() {
+        let comma = if i + 1 < ev.len() { "," } else { "" };
+        // Names are static phase idents + config tags we generate: no
+        // JSON-escaping hazards beyond quotes, which neither contains.
+        writeln!(
+            w,
+            "  {{\"name\": \"{}\", \"cat\": \"{}\", \"ph\": \"X\", \
+             \"pid\": 1, \"tid\": {}, \"ts\": {}, \"dur\": {}}}{comma}",
+            e.phase, e.scope, e.tid, e.ts_us, e.dur_us
+        )?;
+    }
+    writeln!(w, "]")?;
+    w.flush()?;
+    Ok(ev.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The global ENABLED flag is shared across the parallel test
+    // harness, so every path through this test restores "off" before
+    // asserting anything that other tests could observe.
+    #[test]
+    fn spans_aggregate_only_when_enabled() {
+        force_enabled(false);
+        assert!(span("unit_test_phase_off").is_none());
+
+        force_enabled(true);
+        set_scope("obs-unit");
+        {
+            let _sp = span("unit_test_phase_on");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        force_enabled(false);
+
+        let rows = phase_snapshot();
+        let row = rows
+            .iter()
+            .find(|r| r.phase == "unit_test_phase_on"
+                  && r.scope == "obs-unit")
+            .expect("span recorded");
+        assert!(row.agg.count >= 1);
+        assert!(row.agg.total_s > 0.0);
+        assert!(row.agg.max_s <= row.agg.total_s + 1e-12);
+        assert!(!rows.iter().any(|r| r.phase == "unit_test_phase_off"));
+    }
+
+    #[test]
+    fn chrome_trace_writes_parseable_json() {
+        force_enabled(true);
+        collect_events(true);
+        set_scope("obs-chrome");
+        {
+            let _sp = span("unit_test_chrome_event");
+        }
+        collect_events(false);
+        force_enabled(false);
+
+        let path = std::env::temp_dir()
+            .join(format!("ad-trace-{}.json", std::process::id()));
+        let n = write_chrome_trace(&path).unwrap();
+        assert!(n >= 1);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let v = crate::util::json::parse(text.trim()).unwrap();
+        let arr = v.as_arr().expect("top-level array");
+        assert!(arr.iter().any(|e| {
+            e.get("name").and_then(|n| n.as_str())
+                == Some("unit_test_chrome_event")
+                && e.get("ph").and_then(|p| p.as_str()) == Some("X")
+        }));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -40,6 +40,7 @@
 //! (`rust/tests/sparse_kernels.rs`) pins sparse == dense-under-mask for
 //! randomized shapes, skips, and tilings, plus SIMD-vs-scalar agreement.
 
+use crate::obs::registry;
 use crate::patterns::{RowPattern, TilePattern};
 use crate::runtime::sparse::pool::{self, ThreadPool};
 use crate::runtime::sparse::simd::{self, Microkernel};
@@ -116,6 +117,28 @@ fn all_indices(dim: usize) -> Vec<usize> {
     (0..dim).collect()
 }
 
+/// Registry notes for the shared-dimension structure a GEMM is about to
+/// exploit. Pure observers on the always-on process registry (relaxed
+/// atomic adds): they never branch the compute path and never read
+/// pattern state the kernel doesn't already use, so enabling export can
+/// not perturb results.
+#[inline]
+fn note_rows(skip: &Skip) {
+    if let Skip::Rows(p) = skip {
+        let kept = p.kept_count() as u64;
+        registry::SPARSE_ROWS_KEPT.add(kept);
+        registry::SPARSE_ROWS_DROPPED.add(p.m as u64 - kept);
+    }
+}
+
+#[inline]
+fn note_tiles(pat: &TilePattern) {
+    let (tk, tn) = pat.grid();
+    let kept = pat.kept_count() as u64;
+    registry::SPARSE_TILES_KEPT.add(kept);
+    registry::SPARSE_TILES_DROPPED.add((tk * tn) as u64 - kept);
+}
+
 /// Run `task` over `n_chunks` chunks, inline when the call is too small
 /// to amortize the pool handshake.
 fn run_chunks(p: &ThreadPool, work: usize, n_chunks: usize,
@@ -167,9 +190,11 @@ impl Kernels for SparseKernels {
         let mut out = vec![0f32; m * n];
         match k_skip {
             Skip::Tiles(pat) => {
+                note_tiles(pat);
                 gemm_tiles(p, self.mk, a, b, m, k, n, pat, &mut out);
             }
             _ => {
+                note_rows(k_skip);
                 let kidx = k_skip.kept(k)
                     .unwrap_or_else(|| all_indices(k));
                 match out_skip {
@@ -196,9 +221,11 @@ impl Kernels for SparseKernels {
         let mut out = vec![0f32; m * k];
         match skip {
             Skip::Tiles(pat) => {
+                note_tiles(pat);
                 nt_tiles(p, self.mk, a, b, m, n, k, pat, &mut out);
             }
             _ => {
+                note_rows(skip);
                 let jidx = skip.kept(k).unwrap_or_else(|| all_indices(k));
                 nt_rows(p, self.mk, a, b, m, n, k, &jidx, &mut out);
             }
@@ -214,9 +241,12 @@ impl Kernels for SparseKernels {
         debug_assert_eq!(out.len(), k * n);
         let p = pool::global();
         match row_skip {
-            Skip::Tiles(pat) => tn_tiles(p, self.mk, a, b, m, k, n, pat,
-                                         out),
+            Skip::Tiles(pat) => {
+                note_tiles(pat);
+                tn_tiles(p, self.mk, a, b, m, k, n, pat, out)
+            }
             _ => {
+                note_rows(row_skip);
                 let pidx =
                     row_skip.kept(k).unwrap_or_else(|| all_indices(k));
                 let cidx = match col_skip {
@@ -252,6 +282,8 @@ impl Kernels for SparseKernels {
                     panel[pi * n..(pi + 1) * n]
                         .copy_from_slice(&w[ki * n..(ki + 1) * n]);
                 }
+                registry::SPARSE_PANEL_BYTES
+                    .add((panel.len() * std::mem::size_of::<f32>()) as u64);
                 PreppedWeight::packed(kept, panel)
             }
             // Tiles: the tile walks skip off the raw buffer already;
@@ -269,6 +301,7 @@ impl Kernels for SparseKernels {
             // keep the gemm_rows_cols packing, which also compacts the
             // n axis.
             if matches!(k_skip, Skip::Rows(_)) && out_skip.is_dense() {
+                note_rows(k_skip);
                 debug_assert_eq!(panel.len(), kept.len() * n);
                 debug_assert_eq!(a.len(), m * k);
                 let mut out = vec![0f32; m * n];
@@ -284,6 +317,7 @@ impl Kernels for SparseKernels {
                   m: usize, n: usize, k: usize, skip: &Skip) -> Vec<f32> {
         if let (Some(kept), Some(panel)) = (&pw.kept, &pw.panel) {
             if matches!(skip, Skip::Rows(_)) {
+                note_rows(skip);
                 debug_assert_eq!(panel.len(), kept.len() * n);
                 debug_assert_eq!(a.len(), m * n);
                 let mut out = vec![0f32; m * k];

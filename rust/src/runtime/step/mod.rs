@@ -34,6 +34,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
+use crate::obs::trace;
 use crate::patterns::{RowPattern, TilePattern};
 use crate::runtime::backend::{Executor, HostTensor, Value};
 use crate::runtime::manifest::{ArchMeta, ArtifactMeta, Manifest};
@@ -576,6 +577,7 @@ impl StepProgram {
         // Forward. Two shapes: activation-masked (conv/rdp) applies the
         // site mask after relu; weight-masked (tdp) masks w and scales the
         // product before the bias (mirrors _mlp_logits_tdp).
+        let sp_fwd = trace::span("fwd");
         let weight_masked = matches!(feeds[0], Feed::Weight { .. });
         // Activation-space structure per site: for weight-masked (tdp)
         // sites the activations are dense — only the w1/w2 matmuls carry
@@ -634,8 +636,10 @@ impl StepProgram {
         add_row_bias(&mut logits, b3);
         let (loss, correct, dlogits) =
             softmax_xent_grad(&logits, y, batch, n_out)?;
+        drop(sp_fwd);
 
         // Backward.
+        let sp_bwd = trace::span("bptt");
         let dw3 = kern.gemm_tn(&out1, &dlogits, batch, h2, n_out, &ask1,
                                &DENSE);
         let mut db3 = vec![0f32; n_out];
@@ -706,8 +710,13 @@ impl StepProgram {
             db2 = db2v;
         }
 
+        drop(sp_bwd);
+
         let grads = vec![dw1, db1, dw2, db2, dw3, db3];
-        let (new_p, new_m) = self.sgd(&params, &momenta, &grads, lr);
+        let (new_p, new_m) = {
+            let _sp = trace::span("sgd");
+            self.sgd(&params, &momenta, &grads, lr)
+        };
         self.pack(new_p, new_m, loss, correct)
     }
 
@@ -784,7 +793,10 @@ impl StepProgram {
             softmax_xent_grad(&fwd.logits, &targets, rows, vocab)?;
         let grads = self.lstm_backward(&params, x, &feeds, &fwd,
                                        &dlogits)?;
-        let (new_p, new_m) = self.sgd(&params, &momenta, &grads, lr);
+        let (new_p, new_m) = {
+            let _sp = trace::span("sgd");
+            self.sgd(&params, &momenta, &grads, lr)
+        };
         self.pack(new_p, new_m, loss, correct)
     }
 
@@ -857,6 +869,7 @@ impl StepProgram {
         let mut prepped_wx: Vec<Vec<PreppedWeight>> =
             (0..layers).map(|_| Vec::new()).collect();
         if let Some(fs) = feeds {
+            let _sp = trace::span("prep");
             for l in 1..layers {
                 prepped_wx[l] = fs[l - 1].iter()
                     .map(|r| kern.prep(cells[l].0, h, 4 * h,
@@ -870,6 +883,7 @@ impl StepProgram {
         let mut caches: Vec<CellCache> = Vec::new();
         let mut flat = vec![0f32; seq * batch * h];
 
+        let sp_fwd = trace::span("fwd");
         for t in 0..seq {
             // Embedding rows for timestep t: e_t [batch, h].
             let mut inp = vec![0f32; batch * h];
@@ -971,11 +985,14 @@ impl StepProgram {
             }
         }
 
+        drop(sp_fwd);
+
         // Softmax projection per run of the last site: each window's
         // flat rows are contiguous (`t0*batch .. t1*batch`), so the
         // projection runs one GEMM per window against that window's
         // prepared wsoft. The per-step default is a single run covering
         // every row — exactly the old single-GEMM shape.
+        let _sp_soft = trace::span("softmax");
         let rows = seq * batch;
         let (mflat, logits, prepped_wsoft);
         match feeds.map(|fs| &fs[layers - 1]) {
@@ -1040,6 +1057,7 @@ impl StepProgram {
                      dlogits: &[f32])
                      -> Result<Vec<Vec<f32>>> {
         let kern = self.kern.as_ref();
+        let _sp = trace::span("bptt");
         let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
         const DENSE: Skip = Skip::Dense;
         let cells: Vec<(&[f32], &[f32], &[f32])> = (0..layers)

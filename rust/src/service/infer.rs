@@ -41,6 +41,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::{eval_state_from_checkpoint, ExecutorCache};
+use crate::obs::registry;
 use crate::runtime::{ArchMeta, Executor, HostTensor, InferOut, Kind,
                      TrainState, Value};
 use crate::service::checkpoint::{hex_u64, Checkpoint, CKPT_VERSION};
@@ -467,6 +468,8 @@ impl WorkerCtx {
             }
             let n = batch.len();
             self.observed.fetch_max(n, Ordering::Relaxed);
+            registry::INFER_BATCHES.inc();
+            registry::INFER_BATCH_OCCUPANCY.observe(n as f64);
             let r = catch_unwind(AssertUnwindSafe(
                 || self.dispatch(&state, exe.as_ref(), &batch)));
             drop(hold);
@@ -474,12 +477,15 @@ impl WorkerCtx {
                 Ok(Ok(out)) => {
                     for (i, q) in batch.into_iter().enumerate() {
                         self.served.fetch_add(1, Ordering::Relaxed);
+                        let latency_s = q.t0.elapsed_s();
+                        registry::INFER_REQUESTS.inc();
+                        registry::INFER_LATENCY_S.observe(latency_s);
                         q.tx.send(Ok(InferResponse {
                             model: self.name.clone(),
                             loss: f64::from(out.ex_loss[i]),
                             correct: f64::from(out.ex_correct[i]),
                             batch: n,
-                            latency_s: q.t0.elapsed_s(),
+                            latency_s,
                         })).ok();
                     }
                 }

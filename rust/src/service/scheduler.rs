@@ -32,7 +32,9 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -40,6 +42,7 @@ use crate::bench::report::BenchReport;
 use crate::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer, Schedule,
                          Variant};
 use crate::data::{Corpus, MnistSyn, IMG_PIXELS};
+use crate::obs::registry;
 use crate::runtime::ArchMeta;
 use crate::service::jobs::{JobSpec, ModelKind, ServiceConfig};
 use crate::util::json::Json;
@@ -69,6 +72,8 @@ struct GateState {
 /// the unwind path, so a panicking job can never leak its slot.
 pub struct SlotHold<'a> {
     gate: &'a SlotGate,
+    /// Started at acquisition; drop observes it into `GATE_HOLD_S`.
+    held: Timer,
 }
 
 impl SlotGate {
@@ -88,10 +93,12 @@ impl SlotGate {
     /// Block until this caller reaches the head of the queue and a slot
     /// is free.
     pub fn acquire(&self) -> SlotHold<'_> {
+        let waited = Timer::start();
         let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
         let ticket = g.next_ticket;
         g.next_ticket += 1;
         g.queue.push_back(ticket);
+        registry::GATE_QUEUE_DEPTH.set(g.queue.len() as i64);
         while !(g.available > 0 && g.queue.front() == Some(&ticket)) {
             g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
         }
@@ -99,6 +106,8 @@ impl SlotGate {
         g.available -= 1;
         g.in_use += 1;
         g.peak = g.peak.max(g.in_use);
+        registry::GATE_QUEUE_DEPTH.set(g.queue.len() as i64);
+        registry::GATE_WAIT_S.observe(waited.elapsed_s());
         // With >1 slot the *new* head may have woken on the same release
         // burst we did, observed itself mid-queue, and gone back to
         // sleep — if a slot is still free, wake the queue again or it
@@ -108,17 +117,24 @@ impl SlotGate {
         if wake_next {
             self.cv.notify_all();
         }
-        SlotHold { gate: self }
+        SlotHold { gate: self, held: Timer::start() }
     }
 
     /// Highest concurrent-hold count observed (fairness accounting).
     pub fn peak(&self) -> usize {
         self.state.lock().unwrap_or_else(|p| p.into_inner()).peak
     }
+
+    /// Instantaneous (holds in use, callers queued) — heartbeat fodder.
+    pub fn depth(&self) -> (usize, usize) {
+        let g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        (g.in_use, g.queue.len())
+    }
 }
 
 impl Drop for SlotHold<'_> {
     fn drop(&mut self) {
+        registry::GATE_HOLD_S.observe(self.held.elapsed_s());
         let mut g = self.gate.state.lock()
             .unwrap_or_else(|p| p.into_inner());
         g.available += 1;
@@ -389,15 +405,28 @@ pub fn run_jobs_with_gate(cache: &ExecutorCache, specs: &[JobSpec],
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
     }
+    let stop = AtomicBool::new(false);
+    let done_ct = AtomicUsize::new(0);
+    let failed_ct = AtomicUsize::new(0);
     let outcomes: Vec<JobOutcome> = std::thread::scope(|scope| {
         let handles: Vec<_> = specs
             .iter()
             .map(|spec| {
                 let gate = &gate;
-                scope.spawn(move || run_one(cache, spec, cfg, gate))
+                let (done_ct, failed_ct) = (&done_ct, &failed_ct);
+                scope.spawn(move || {
+                    let o = run_one(cache, spec, cfg, gate);
+                    let ct = if o.ok() { done_ct } else { failed_ct };
+                    ct.fetch_add(1, Ordering::Relaxed);
+                    o
+                })
             })
             .collect();
-        handles
+        // Periodic one-line fleet status while runners work; stops (and
+        // joins, via the scope) once every outcome is collected.
+        scope.spawn(|| heartbeat_loop(&stop, &done_ct, &failed_ct,
+                                      specs.len(), &gate));
+        let outs = handles
             .into_iter()
             .zip(specs)
             .map(|(h, spec)| h.join().unwrap_or_else(|_| JobOutcome {
@@ -412,7 +441,9 @@ pub fn run_jobs_with_gate(cache: &ExecutorCache, specs: &[JobSpec],
                 wall_s: 0.0,
                 report_path: None,
             }))
-            .collect()
+            .collect();
+        stop.store(true, Ordering::Relaxed);
+        outs
     });
     Ok(ServiceReport { outcomes, peak_slots: gate.peak() })
 }
@@ -421,10 +452,47 @@ fn ckpt_path(cfg: &ServiceConfig, spec: &JobSpec) -> Option<PathBuf> {
     cfg.ckpt_dir.as_ref().map(|d| d.join(format!("{}.ckpt", spec.name)))
 }
 
+/// Heartbeat cadence — long enough that a healthy fleet log is mostly
+/// job progress, short enough that a wedged gate is visible in seconds.
+const HEARTBEAT_EVERY_S: f64 = 5.0;
+
+/// Emit a one-line fleet status every [`HEARTBEAT_EVERY_S`] until `stop`:
+/// jobs running / queued-at-gate / done / quarantined, slot occupancy,
+/// and the dispatch rate (steps/s fleet-wide, from the process registry)
+/// since the previous beat. Pure observer — reads shared counters only.
+fn heartbeat_loop(stop: &AtomicBool, done: &AtomicUsize,
+                  failed: &AtomicUsize, total: usize, gate: &SlotGate) {
+    let mut last_dispatch = registry::DISPATCH_TOTAL.total();
+    let mut t = Timer::start();
+    loop {
+        // Sleep in short slices so shutdown never waits a full beat.
+        while t.elapsed_s() < HEARTBEAT_EVERY_S {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        let dt = t.elapsed_s();
+        t.restart();
+        let d = done.load(Ordering::Relaxed);
+        let f = failed.load(Ordering::Relaxed);
+        let dispatch = registry::DISPATCH_TOTAL.total();
+        let qps = (dispatch - last_dispatch) as f64 / dt.max(1e-9);
+        last_dispatch = dispatch;
+        let (in_use, queued) = gate.depth();
+        info!("fleet: {} running, {queued} queued, {d}/{total} done, \
+               {f} quarantined, {in_use} slot(s) busy, {qps:.1} steps/s",
+              total - d - f);
+    }
+}
+
 /// Drive one job to its terminal state. Never panics: backend work is
 /// wrapped in `catch_unwind`, and a panic quarantines this job only.
 fn run_one(cache: &ExecutorCache, spec: &JobSpec, cfg: &ServiceConfig,
            gate: &SlotGate) -> JobOutcome {
+    // Every log line from this runner thread carries the job name; the
+    // prefix is thread-local and this thread is pinned to this job.
+    crate::util::log::set_job_prefix(&spec.name);
     let timer = Timer::start();
     let mut out = JobOutcome {
         name: spec.name.clone(),

@@ -1,6 +1,9 @@
 //! Leveled stderr logger with wall-clock timestamps. Controlled by the
-//! `AD_LOG` env var (error|warn|info|debug|trace; default info).
+//! `AD_LOG` env var (error|warn|info|debug|trace; default info —
+//! unrecognized values warn loudly). Fleet runner threads tag their
+//! lines with [`set_job_prefix`].
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicU8, Ordering};
 use std::time::{SystemTime, UNIX_EPOCH};
 
@@ -19,14 +22,46 @@ static INIT: std::sync::Once = std::sync::Once::new();
 
 pub fn init_from_env() {
     INIT.call_once(|| {
-        let lvl = match std::env::var("AD_LOG").as_deref() {
-            Ok("error") => Level::Error,
-            Ok("warn") => Level::Warn,
-            Ok("debug") => Level::Debug,
-            Ok("trace") => Level::Trace,
-            _ => Level::Info,
+        let (lvl, unknown) = match std::env::var("AD_LOG").as_deref() {
+            Ok("error") => (Level::Error, None),
+            Ok("warn") => (Level::Warn, None),
+            Ok("info") => (Level::Info, None),
+            Ok("debug") => (Level::Debug, None),
+            Ok("trace") => (Level::Trace, None),
+            // Unset: the documented default, silently.
+            Err(_) => (Level::Info, None),
+            // A *set but unrecognized* value is a typo'd config, not a
+            // default — warn loudly (same policy as AD_SIMD) instead of
+            // silently running at info.
+            Ok(v) => (Level::Info, Some(v.to_string())),
         };
         MAX_LEVEL.store(lvl as u8, Ordering::Relaxed);
+        if let Some(v) = unknown {
+            log(Level::Warn,
+                format_args!("AD_LOG={v:?} is not a recognized level \
+                              (use error|warn|info|debug|trace); \
+                              logging at info"));
+        }
+    });
+}
+
+thread_local! {
+    static JOB_PREFIX: RefCell<String> =
+        const { RefCell::new(String::new()) };
+}
+
+/// Tag every subsequent log line from *this thread* with `[job=<name>]`
+/// — fleet runner threads call this so interleaved multi-job output
+/// stays attributable. An empty name clears the tag.
+pub fn set_job_prefix(name: &str) {
+    JOB_PREFIX.with(|p| {
+        let mut p = p.borrow_mut();
+        p.clear();
+        if !name.is_empty() {
+            p.push_str("[job=");
+            p.push_str(name);
+            p.push_str("] ");
+        }
     });
 }
 
@@ -54,7 +89,9 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
     };
-    eprintln!("[{h:02}:{m:02}:{s:02}.{:03} {tag}] {args}", t.subsec_millis());
+    let job = JOB_PREFIX.with(|p| p.borrow().clone());
+    eprintln!("[{h:02}:{m:02}:{s:02}.{:03} {tag}] {job}{args}",
+              t.subsec_millis());
 }
 
 #[macro_export]
@@ -94,5 +131,19 @@ mod tests {
         set_level(Level::Info);
         assert!(enabled(Level::Info));
         assert!(!enabled(Level::Debug));
+    }
+
+    #[test]
+    fn job_prefix_is_thread_local_and_clearable() {
+        set_job_prefix("mlp-a");
+        JOB_PREFIX.with(|p| assert_eq!(&*p.borrow(), "[job=mlp-a] "));
+        // Another thread sees no tag.
+        std::thread::spawn(|| {
+            JOB_PREFIX.with(|p| assert!(p.borrow().is_empty()));
+        })
+        .join()
+        .unwrap();
+        set_job_prefix("");
+        JOB_PREFIX.with(|p| assert!(p.borrow().is_empty()));
     }
 }

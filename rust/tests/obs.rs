@@ -1,0 +1,180 @@
+//! Observability contract tests.
+//!
+//! The load-bearing guarantee of the `obs` layer is that it *observes*:
+//! enabling phase tracing must never draw RNG, reorder dispatches, or
+//! change a single trajectory bit — otherwise every "measured" run is a
+//! different experiment from the un-measured one. These tests pin that
+//! on both hermetic backends (reference and sparse), including the
+//! windowed-LSTM configuration whose per-(site, window) prep work the
+//! phase breakdown exists to attribute.
+//!
+//! Hermetic: built-in synthetic manifest, no artifacts, never skips.
+
+use std::path::PathBuf;
+
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  Schedule, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::obs::{self, trace};
+use approx_dropout::runtime::Manifest;
+use approx_dropout::util::json::Json;
+
+/// Everything observable about one short training run, bit-comparable.
+#[derive(Debug, PartialEq)]
+struct Traj {
+    curve: Vec<(u64, u64, u64)>,
+    dispatched: Vec<String>,
+    ckpt_bytes: Vec<u8>,
+}
+
+fn tmp_ckpt(name: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("obs_{}_{}.ckpt", std::process::id(), name))
+}
+
+/// Short MLP run; the curve is captured as raw f64 bits so equality is
+/// bit-identity, not approximate.
+fn run_mlp(cache: &ExecutorCache, name: &str) -> Traj {
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], false).unwrap();
+    let (train, _) = MnistSyn::train_test(256, 64, 42);
+    let mut tr =
+        MlpTrainer::new(cache, "mlpsyn", schedule, train.n, 0.01, 7)
+            .unwrap();
+    tr.warmup().unwrap();
+    for _ in 0..6 {
+        tr.step(&train).unwrap();
+    }
+    let path = tmp_ckpt(name);
+    tr.save_checkpoint(&path).unwrap();
+    let ckpt_bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    Traj {
+        curve: tr.metrics.curve.iter()
+            .map(|p| (p.step, p.loss.to_bits(), p.acc.to_bits()))
+            .collect(),
+        dispatched: tr.metrics.dispatched.clone(),
+        ckpt_bytes,
+    }
+}
+
+/// Short windowed LSTM run (W=10 holds one pattern draw across two
+/// steps of the seq-5 arch — the configuration with a real `prep`
+/// phase to attribute).
+fn run_lstm_windowed(cache: &ExecutorCache, name: &str) -> Traj {
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[2], true).unwrap();
+    let corpus = Corpus::generate(64, 3000, 300, 300, 9);
+    let mut tr = LstmTrainer::new_with_window(cache, "lstmtest", schedule,
+                                              &corpus.train, 0.5, 13,
+                                              Some(10))
+        .unwrap();
+    tr.warmup().unwrap();
+    for _ in 0..4 {
+        tr.step().unwrap();
+    }
+    let path = tmp_ckpt(name);
+    tr.save_checkpoint(&path).unwrap();
+    let ckpt_bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    Traj {
+        curve: tr.metrics.curve.iter()
+            .map(|p| (p.step, p.loss.to_bits(), p.acc.to_bits()))
+            .collect(),
+        dispatched: tr.metrics.dispatched.clone(),
+        ckpt_bytes,
+    }
+}
+
+/// The pinned acceptance invariant: AD_TRACE on vs off is bit-identical
+/// — loss/accuracy curves, dispatch sequences, and final parameter
+/// bytes — on the reference interpreter, the sparse engine, and the
+/// windowed-LSTM sparse configuration. All toggling lives in this one
+/// test so parallel test threads never race the global flag.
+#[test]
+fn trace_on_is_bit_identical_to_trace_off() {
+    let ref_cache = ExecutorCache::reference(Manifest::builtin_test());
+    let sparse_cache = ExecutorCache::sparse(Manifest::builtin_test());
+
+    trace::force_enabled(false);
+    let mlp_ref_off = run_mlp(&ref_cache, "mro");
+    let mlp_sp_off = run_mlp(&sparse_cache, "mso");
+    let lstm_sp_off = run_lstm_windowed(&sparse_cache, "lso");
+
+    trace::force_enabled(true);
+    let _ = trace::take_phases(); // start the on-runs from a clean slate
+    let mlp_ref_on = run_mlp(&ref_cache, "mrn");
+    let mlp_sp_on = run_mlp(&sparse_cache, "msn");
+    let lstm_sp_on = run_lstm_windowed(&sparse_cache, "lsn");
+    let phases = trace::take_phases();
+    trace::force_enabled(false);
+
+    assert_eq!(mlp_ref_off, mlp_ref_on,
+               "reference backend diverged under AD_TRACE");
+    assert_eq!(mlp_sp_off, mlp_sp_on,
+               "sparse backend diverged under AD_TRACE");
+    assert_eq!(lstm_sp_off, lstm_sp_on,
+               "windowed LSTM diverged under AD_TRACE");
+
+    // The spans did fire on the real path: every interpreter phase is
+    // present and scoped to the front that ran it.
+    let have: Vec<(&str, &str)> = phases.iter()
+        .map(|r| (r.scope.as_str(), r.phase))
+        .collect();
+    for phase in ["sample", "assemble", "marshal", "execute", "fwd",
+                  "bptt", "sgd"] {
+        assert!(have.iter().any(|&(s, p)| p == phase
+                                && s.starts_with("mlpsyn/rdp")),
+                "phase '{phase}' missing for mlpsyn/rdp: {have:?}");
+    }
+    for phase in ["prep", "softmax"] {
+        assert!(have.iter().any(|&(s, p)| p == phase
+                                && s.starts_with("lstmtest/rdp")),
+                "phase '{phase}' missing for lstmtest/rdp: {have:?}");
+    }
+    for r in &phases {
+        assert!(r.agg.count > 0 && r.agg.total_s >= 0.0
+                && r.agg.max_s <= r.agg.total_s + 1e-12,
+                "inconsistent aggregate: {r:?}");
+    }
+}
+
+/// The always-on registry reflects real work after a sparse run, and the
+/// export document keeps the checker's invariants (instruments present,
+/// histogram counts sum to total) with live counters behind it.
+#[test]
+fn metrics_export_reflects_sparse_training() {
+    let cache = ExecutorCache::sparse(Manifest::builtin_test());
+    let _ = run_mlp(&cache, "mex");
+    let doc = obs::metrics_report("test").to_json();
+    let rows = doc.get("rows").and_then(Json::as_arr).unwrap();
+    let find = |name: &str| -> &Json {
+        rows.iter()
+            .find(|r| r.get("instrument").and_then(Json::as_str)
+                      == Some(name)
+                  && r.get("label").is_none())
+            .unwrap_or_else(|| panic!("instrument {name} missing"))
+    };
+    // Row-skip training touched and skipped real rows; every dispatch
+    // was counted under a sparse/<artifact> label.
+    assert!(find("sparse_rows_kept").get("value").unwrap().as_f64()
+                .unwrap() > 0.0);
+    assert!(find("sparse_rows_dropped").get("value").unwrap().as_f64()
+                .unwrap() > 0.0);
+    let dispatch = find("dispatch_total");
+    assert!(dispatch.get("value").unwrap().as_f64().unwrap() >= 6.0);
+    assert!(rows.iter().any(|r| {
+        r.get("instrument").and_then(Json::as_str)
+            == Some("dispatch_total")
+            && r.get("label").and_then(Json::as_str)
+                .is_some_and(|l| l.starts_with("sparse/"))
+    }), "no per-label dispatch row");
+    // Histogram rows stay internally consistent while counters are hot.
+    for r in rows.iter().filter(
+        |r| r.get("kind").and_then(Json::as_str) == Some("histogram"))
+    {
+        let counts: f64 = r.get("counts").and_then(Json::as_arr).unwrap()
+            .iter().map(|c| c.as_f64().unwrap()).sum();
+        assert_eq!(Some(counts), r.get("total").unwrap().as_f64());
+    }
+}

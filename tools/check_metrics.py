@@ -1,0 +1,264 @@
+#!/usr/bin/env python3
+"""Validate a METRICS_<run>.json export from the observability layer.
+
+Usage:
+    check_metrics.py METRICS_train-mlp.json [--require-phases]
+    check_metrics.py --self-test
+
+Every `train-mlp` / `train-lstm` / `serve` / `infer` run of the
+`approx-dropout` CLI exports the process metrics registry through
+`rust/src/obs/mod.rs`. This checker pins the document's structural
+invariants, so a refactor of the registry or the export path cannot
+silently produce unparseable or internally inconsistent telemetry:
+
+* the document parses, is `bench == "metrics"`, and names its run kind;
+* every required instrument of the static catalog is present (the
+  registry is always-on, so even an idle run exports a complete
+  catalog with zero values);
+* counters and gauges are finite and non-negative (gauges may be
+  negative only in `value`, never in `peak`; counters never);
+* every histogram row satisfies `sum(counts) == total` (the
+  snapshot-consistency contract of the registry) and has exactly
+  `len(bounds) + 1` buckets (the trailing overflow cell);
+* labeled `dispatch_total` rows sum to the aggregate row's value;
+* `phase_time_s` rows (present with AD_TRACE=on) carry a positive
+  count, non-negative totals, and `max_s <= total_s`; with
+  `--require-phases` at least one phase row must exist — the CI trace
+  leg uses this to prove AD_TRACE actually traced.
+
+Exit 0 on a valid document, 1 with a pointed message otherwise.
+"""
+
+import argparse
+import json
+import math
+import sys
+
+REQUIRED_INSTRUMENTS = (
+    "dispatch_total",
+    "sparse_rows_kept",
+    "sparse_rows_dropped",
+    "sparse_tiles_kept",
+    "sparse_tiles_dropped",
+    "sparse_panel_bytes",
+    "gate_wait_s",
+    "gate_hold_s",
+    "gate_queue_depth",
+    "infer_requests",
+    "infer_batches",
+    "infer_batch_occupancy",
+    "infer_latency_s",
+)
+
+
+def fail(msg):
+    raise SystemExit(f"check_metrics: FAIL: {msg}")
+
+
+def is_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def check_doc(doc):
+    """Validate one parsed metrics document; returns a summary string."""
+    if doc.get("bench") != "metrics":
+        fail(f"bench is {doc.get('bench')!r}, expected 'metrics'")
+    run = doc.get("run")
+    if not isinstance(run, str) or not run:
+        fail("missing/empty 'run' kind")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        fail("no rows")
+
+    seen = set()
+    labeled_sums = {}
+    aggregates = {}
+    n_phases = 0
+    for i, row in enumerate(rows):
+        inst = row.get("instrument")
+        kind = row.get("kind")
+        if not isinstance(inst, str) or not isinstance(kind, str):
+            fail(f"row {i}: missing instrument/kind: {row}")
+        if kind == "counter":
+            v = row.get("value")
+            if not is_num(v) or v < 0:
+                fail(f"row {i}: counter {inst} has bad value {v!r}")
+            if "label" in row:
+                labeled_sums[inst] = labeled_sums.get(inst, 0) + v
+            else:
+                seen.add(inst)
+                aggregates[inst] = v
+        elif kind == "gauge":
+            seen.add(inst)
+            v, peak = row.get("value"), row.get("peak")
+            if not is_num(v) or not is_num(peak):
+                fail(f"row {i}: gauge {inst} has non-finite cells")
+            if peak < 0 or peak < v:
+                fail(f"row {i}: gauge {inst} peak {peak} < value {v}")
+        elif kind == "histogram":
+            seen.add(inst)
+            bounds, counts = row.get("bounds"), row.get("counts")
+            total, s = row.get("total"), row.get("sum")
+            if not isinstance(bounds, list) or not isinstance(counts, list):
+                fail(f"row {i}: histogram {inst} missing bounds/counts")
+            if len(counts) != len(bounds) + 1:
+                fail(f"row {i}: histogram {inst} has {len(counts)} "
+                     f"buckets for {len(bounds)} bounds (want +1 overflow)")
+            if any(not is_num(c) or c < 0 for c in counts):
+                fail(f"row {i}: histogram {inst} has negative/NaN counts")
+            if not is_num(total) or not is_num(s) or s < 0:
+                fail(f"row {i}: histogram {inst} bad total/sum")
+            if sum(counts) != total:
+                fail(f"row {i}: histogram {inst} counts sum to "
+                     f"{sum(counts)}, total says {total}")
+            if list(bounds) != sorted(bounds):
+                fail(f"row {i}: histogram {inst} bounds not ascending")
+        elif kind == "phase":
+            n_phases += 1
+            if not row.get("scope") or not row.get("phase"):
+                fail(f"row {i}: phase row missing scope/phase")
+            c, t, m = row.get("count"), row.get("total_s"), row.get("max_s")
+            if not is_num(c) or c <= 0:
+                fail(f"row {i}: phase {row.get('phase')} count {c!r}")
+            if not is_num(t) or t < 0 or not is_num(m) or m < 0:
+                fail(f"row {i}: phase {row.get('phase')} negative time")
+            if m > t + 1e-9:
+                fail(f"row {i}: phase {row.get('phase')} max_s {m} > "
+                     f"total_s {t}")
+        else:
+            fail(f"row {i}: unknown kind {kind!r}")
+
+    missing = [n for n in REQUIRED_INSTRUMENTS if n not in seen]
+    if missing:
+        fail(f"missing required instruments: {', '.join(missing)}")
+    for inst, label_sum in labeled_sums.items():
+        if inst not in aggregates:
+            fail(f"labeled rows for {inst} but no aggregate row")
+        if label_sum != aggregates[inst]:
+            fail(f"{inst}: labels sum to {label_sum}, aggregate says "
+                 f"{aggregates[inst]}")
+    return (f"run={run} trace={doc.get('trace')} rows={len(rows)} "
+            f"phases={n_phases}")
+
+
+def check_file(path, require_phases):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: {e}")
+    summary = check_doc(doc)
+    if require_phases:
+        n_phases = sum(1 for r in doc["rows"] if r.get("kind") == "phase")
+        if n_phases == 0:
+            fail(f"{path}: --require-phases but no phase_time_s rows "
+                 "(was AD_TRACE actually on?)")
+    print(f"check_metrics: OK {path}: {summary}")
+
+
+# ---------------------------------------------------------------------------
+# Self-test
+
+def _doc(rows, run="train-mlp"):
+    return {"bench": "metrics", "run": run, "trace": True, "rows": rows}
+
+
+def _catalog(**overrides):
+    """A minimal valid catalog, one row per required instrument."""
+    rows = []
+    for name in REQUIRED_INSTRUMENTS:
+        if name.endswith("_s") or name == "infer_batch_occupancy":
+            rows.append({"instrument": name, "kind": "histogram",
+                         "bounds": [1.0, 2.0], "counts": [1, 2, 0],
+                         "total": 3, "sum": 2.5})
+        elif name == "gate_queue_depth":
+            rows.append({"instrument": name, "kind": "gauge",
+                         "value": 0, "peak": 3})
+        else:
+            rows.append({"instrument": name, "kind": "counter",
+                         "value": 7})
+    for row in rows:
+        if row["instrument"] in overrides:
+            row.update(overrides[row["instrument"]])
+    return rows
+
+
+def _expect_fail(rows, needle, label):
+    try:
+        check_doc(_doc(rows))
+    except SystemExit as e:
+        if needle not in str(e):
+            fail(f"self-test: {label}: wrong message: {e}")
+        return
+    fail(f"self-test: {label}: bad document passed")
+
+
+def self_test():
+    # 1. A complete catalog with labels and phases passes.
+    rows = _catalog()
+    rows.append({"instrument": "dispatch_total", "kind": "counter",
+                 "label": "sparse/mlpsyn_rdp_2_2", "value": 4})
+    rows.append({"instrument": "dispatch_total", "kind": "counter",
+                 "label": "sparse/mlpsyn_rdp_1_2", "value": 3})
+    rows.append({"instrument": "phase_time_s", "kind": "phase",
+                 "scope": "mlpsyn/rdp", "phase": "fwd", "count": 12,
+                 "total_s": 0.5, "max_s": 0.1})
+    check_doc(_doc(rows))
+
+    # 2. A histogram whose counts don't sum to total fails.
+    _expect_fail(_catalog(gate_wait_s={"total": 99}),
+                 "counts sum", "sum!=total")
+
+    # 3. Negative counter fails.
+    _expect_fail(_catalog(infer_requests={"value": -1}),
+                 "bad value", "negative counter")
+
+    # 4. Missing required instrument fails.
+    _expect_fail(_catalog()[1:], "missing required", "missing instrument")
+
+    # 5. Wrong bucket count (no overflow cell) fails.
+    _expect_fail(_catalog(gate_hold_s={"counts": [1, 2]}),
+                 "overflow", "bucket count")
+
+    # 6. Labels that don't sum to the aggregate fail.
+    rows = _catalog(dispatch_total={"value": 7})
+    rows.append({"instrument": "dispatch_total", "kind": "counter",
+                 "label": "sparse/x", "value": 3})
+    _expect_fail(rows, "labels sum", "label mismatch")
+
+    # 7. Phase with max_s > total_s fails.
+    rows = _catalog()
+    rows.append({"instrument": "phase_time_s", "kind": "phase",
+                 "scope": "s", "phase": "fwd", "count": 1,
+                 "total_s": 0.1, "max_s": 0.5})
+    _expect_fail(rows, "max_s", "phase max>total")
+
+    # 8. NaN sneaking in (json.load accepts bare NaN) fails.
+    _expect_fail(_catalog(sparse_rows_kept={"value": float("nan")}),
+                 "bad value", "nan counter")
+
+    print("self-test OK (8 scenarios)")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("metrics", nargs="?",
+                    help="METRICS_<run>.json to validate")
+    ap.add_argument("--require-phases", action="store_true",
+                    help="fail unless phase_time_s rows are present "
+                         "(CI AD_TRACE leg)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the built-in scenarios and exit")
+    args = ap.parse_args()
+    if args.self_test:
+        return self_test()
+    if not args.metrics:
+        ap.error("need a METRICS_<run>.json path (or use --self-test)")
+    check_file(args.metrics, args.require_phases)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
