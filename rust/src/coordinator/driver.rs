@@ -25,17 +25,28 @@
 //! is bit-for-bit identical to [`Trainer::step_with`] loops — only
 //! wall-clock changes. Backend values (e.g. XLA literals) are never
 //! created off the main thread.
+//!
+//! Orthogonally, the **data-parallel** path ([`Trainer::sharded`] ->
+//! [`ShardedTrainer`]) splits each global batch into a fixed leaf list,
+//! runs per-leaf forward/backward on `AD_WORKERS` threads through the
+//! step interpreter's `run_grads`, and combines gradients with the
+//! fixed-order reduction tree in [`crate::coordinator::reduce`] before
+//! one SGD-momentum apply — bit-identical trajectories at any worker
+//! count (hermetic backends only).
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::TrainMetrics;
 use crate::coordinator::pool::ExecutorCache;
+use crate::coordinator::reduce::{reduce_grad_pair, tree_reduce};
 use crate::coordinator::schedule::{Schedule, Variant};
 use crate::obs::{registry, trace};
 use crate::patterns::Choice;
-use crate::runtime::{HostTensor, TrainState, Value};
+use crate::runtime::{GradOut, HostTensor, LeafSpec, TrainState, Value};
+use crate::util::log;
 use crate::service::checkpoint::{fnv1a64, Checkpoint, TensorCkpt,
                                  CKPT_VERSION, DISPATCH_TAIL};
 use crate::util::json::Json;
@@ -109,6 +120,18 @@ pub trait ModelFront {
     /// mismatched snapshot is an error, never a silently different
     /// random stream.
     fn restore(&mut self, snap: &Json) -> Result<()>;
+
+    /// Number of gradient *leaves* the sharded trainer cuts each global
+    /// batch into: the largest divisor of `batch` that is at most 8.
+    /// Deliberately a function of the batch geometry only — never of the
+    /// worker count — so the leaf list (and therefore the reduction
+    /// tree's association order, see `coordinator::reduce`) is identical
+    /// at any `--workers N`; workers merely claim contiguous leaf
+    /// ranges. Divisibility keeps every leaf the same height, so no
+    /// shard needs a remainder path.
+    fn shard_leaves(&self, batch: usize) -> usize {
+        (1..=batch.min(8)).rev().find(|s| batch % s == 0).unwrap_or(1)
+    }
 }
 
 /// Params-only eval entry: restore just the parameter tensors of a
@@ -414,6 +437,182 @@ impl<F: ModelFront> Trainer<F> {
         })
     }
 
+    /// Borrow this trainer as a data-parallel view that runs every step
+    /// through [`ShardedTrainer::step_with`]'s fan-out/reduce path with
+    /// `workers` gradient threads. `workers` is capped per step at the
+    /// leaf count ([`ModelFront::shard_leaves`]); it is *elastic* config,
+    /// deliberately excluded from [`Trainer::config_hash`] — a
+    /// checkpoint saved at one N resumes at any other and reproduces the
+    /// identical trajectory (see DESIGN.md §13).
+    pub fn sharded(&mut self, workers: usize)
+                   -> Result<ShardedTrainer<'_, F>> {
+        if workers == 0 {
+            bail!("worker count must be >= 1 (got 0); omit --workers \
+                   for the single-threaded path");
+        }
+        Ok(ShardedTrainer { tr: self, workers })
+    }
+
+    /// One data-parallel training iteration: assemble exactly as the
+    /// plain path does (same RNG draws, same artifact choice), fan the
+    /// fixed leaf list out over `workers` threads through the shared
+    /// executor's `run_grads`, combine per-leaf gradients with the
+    /// fixed-order reduction tree, and apply one host-side SGD-momentum
+    /// update. Bit-identical across worker counts by construction; NOT
+    /// bit-identical to the fused single-graph path (different summation
+    /// association), which is why the N=1 identity baseline in tests and
+    /// CI is always the sharded path itself.
+    fn step_sharded(&mut self, workers: usize, data: &F::Data)
+                    -> Result<(f64, f64)> {
+        if trace::enabled() {
+            trace::set_scope(&self.scope_label());
+        }
+        let timer = Timer::start();
+        let input = {
+            let _sp = trace::span("assemble");
+            self.front.assemble(data)?
+        };
+        let StepInput { name, tail, examples, epoch_boundary } = input;
+        let exe = self.cache.get(&name)?;
+        let batch = exe.meta().batch();
+        let leaves = self.front.shard_leaves(batch);
+        let rows_per = batch / leaves;
+        let nw = workers.min(leaves);
+        // Worker threads inherit this job's log attribution as
+        // `<job>/w<k>`; standalone runs fall back to the model tag.
+        let job = {
+            let j = log::current_job();
+            if j.is_empty() { self.front.tag().to_string() } else { j }
+        };
+        let lr_t = HostTensor::scalar_f32(self.lr);
+        let reduced = {
+            // `host_inputs` immutably borrows the training state; this
+            // block scopes the borrow so the SGD apply below can mutate
+            // the state again.
+            let mut host_inputs: Vec<&HostTensor> = Vec::with_capacity(
+                2 * self.state.params.len() + tail.len() + 1);
+            for v in self.state.params.iter().chain(&self.state.momenta) {
+                host_inputs.push(v.as_host().map_err(|_| {
+                    anyhow!("sharded training requires a hermetic host \
+                             backend (AD_BACKEND=reference|sparse)")
+                })?);
+            }
+            host_inputs.extend(tail.iter());
+            host_inputs.push(&lr_t);
+            let _sp = trace::span("execute");
+            let exe_ref: &dyn crate::runtime::Executor = exe.as_ref();
+            let inputs: &[&HostTensor] = &host_inputs;
+            let mut results: Vec<Option<GradOut>> =
+                (0..leaves).map(|_| None).collect();
+            let mut finish: Vec<Option<Instant>> =
+                (0..nw).map(|_| None).collect();
+            std::thread::scope(|scope| -> Result<()> {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for k in 0..nw {
+                    let tx = tx.clone();
+                    let job = job.clone();
+                    scope.spawn(move || {
+                        log::set_worker_prefix(&job, k);
+                        // Contiguous leaf range for worker k; the leaf
+                        // list itself never depends on nw.
+                        for l in (k * leaves / nw)..((k + 1) * leaves / nw)
+                        {
+                            let out = exe_ref.run_grads(
+                                inputs,
+                                &LeafSpec { lo: l * rows_per,
+                                            rows: rows_per,
+                                            global_rows: batch });
+                            let failed = out.is_err();
+                            if tx.send((k, l, out, Instant::now()))
+                                 .is_err() || failed
+                            {
+                                break;
+                            }
+                        }
+                    });
+                }
+                drop(tx);
+                for _ in 0..leaves {
+                    let (k, l, out, at) = rx.recv().map_err(|_| {
+                        anyhow!("gradient worker exited without \
+                                 reporting")
+                    })?;
+                    results[l] = Some(out.with_context(
+                        || format!("gradient leaf {l} (worker {k})"))?);
+                    finish[k] = Some(at);
+                }
+                Ok(())
+            })?;
+            // Sync-wait per worker: idle time between its last leaf and
+            // the barrier (full collection) completing.
+            let t_done = Instant::now();
+            for f in finish.into_iter().flatten() {
+                registry::WORKER_SYNC_WAIT_S
+                    .observe(t_done.saturating_duration_since(f)
+                             .as_secs_f64());
+            }
+            registry::ALLREDUCE_TOTAL.inc();
+            tree_reduce(results.into_iter()
+                            .map(|r| r.expect("every leaf reported"))
+                            .collect(),
+                        reduce_grad_pair)
+                .ok_or_else(|| anyhow!("batch produced no gradient \
+                                        leaves"))?
+        };
+        if reduced.grads.len() != self.state.metas.len() {
+            bail!("reduction produced {} gradient tensors, model has {}",
+                  reduced.grads.len(), self.state.metas.len());
+        }
+        // Host-side SGD-momentum, identical formula to the fused step:
+        // m' = mu*m + g; p' = p - lr*m'. Two phases so the read borrows
+        // end before the state is overwritten.
+        let mu = self.cache.manifest().momentum as f32;
+        let backend = self.cache.backend().clone();
+        {
+            let _sp = trace::span("sgd");
+            let mut updates = Vec::with_capacity(reduced.grads.len());
+            for (i, g) in reduced.grads.iter().enumerate() {
+                let p = self.state.params[i].as_host()?.as_f32()?;
+                let m = self.state.momenta[i].as_host()?.as_f32()?;
+                if p.len() != g.len() {
+                    bail!("gradient {} has {} elements, parameter {} \
+                           has {}", i, g.len(),
+                          self.state.metas[i].name, p.len());
+                }
+                let mut np = Vec::with_capacity(p.len());
+                let mut nm = Vec::with_capacity(p.len());
+                for j in 0..p.len() {
+                    let mv = mu * m[j] + g[j];
+                    nm.push(mv);
+                    np.push(p[j] - self.lr * mv);
+                }
+                updates.push((np, nm));
+            }
+            for (i, (np, nm)) in updates.into_iter().enumerate() {
+                let shape = self.state.metas[i].shape.clone();
+                self.state.params[i] =
+                    backend.ingest(HostTensor::f32(&shape, np))?;
+                self.state.momenta[i] =
+                    backend.ingest(HostTensor::f32(&shape, nm))?;
+            }
+        }
+        self.state.step += 1;
+        let loss = (reduced.loss_sum / examples as f64) as f32 as f64;
+        let correct = reduced.correct as f64;
+        registry::DISPATCH_TOTAL
+            .inc(&format!("{}/{name}", backend.name()));
+        self.metrics.record(self.state.step, loss, correct, examples,
+                            timer.elapsed_s());
+        self.metrics.dispatched.push(name);
+        if epoch_boundary {
+            self.epochs_done += 1;
+            if self.epochs_done > self.decay_after {
+                self.lr *= self.lr_decay;
+            }
+        }
+        Ok((loss, correct / examples as f64))
+    }
+
     /// FNV-1a hash of the session's canonical fingerprint: the front's
     /// config line plus the driver hyper-parameters and parameter schema.
     /// Stored in checkpoints; `restore` rejects a mismatch.
@@ -565,5 +764,40 @@ impl<F: ModelFront> Trainer<F> {
             n += 1.0;
         }
         Ok((total_loss / n, total_correct / (n * per_batch)))
+    }
+}
+
+/// Borrowed data-parallel view over a [`Trainer`], created by
+/// [`Trainer::sharded`]. Every step fans the fixed leaf partition of the
+/// global batch out across `workers` threads and combines gradients
+/// through the fixed-order reduction tree (`coordinator::reduce`), so
+/// trajectories are bit-identical for any worker count — `workers` tunes
+/// wall-clock only. Checkpoint/resume stays on the underlying trainer:
+/// drop the view, save or restore, and re-borrow at any N (elastic
+/// resume; N is not part of the config hash).
+pub struct ShardedTrainer<'a, F: ModelFront> {
+    tr: &'a mut Trainer<F>,
+    workers: usize,
+}
+
+impl<F: ModelFront> ShardedTrainer<'_, F> {
+    /// Requested worker count (the per-step fan-out additionally caps at
+    /// the batch's leaf count).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// One data-parallel iteration; returns (loss, accuracy in [0,1]).
+    pub fn step_with(&mut self, data: &F::Data) -> Result<(f64, f64)> {
+        self.tr.step_sharded(self.workers, data)
+    }
+
+    /// Run `n` sharded steps; returns mean loss over the window.
+    pub fn train_with(&mut self, data: &F::Data, n: usize) -> Result<f64> {
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += self.step_with(data)?.0;
+        }
+        Ok(sum / n.max(1) as f64)
     }
 }

@@ -22,12 +22,14 @@ pub mod lstm;
 pub mod metrics;
 pub mod mlp;
 pub mod pool;
+pub mod reduce;
 pub mod schedule;
 
-pub use driver::{eval_state_from_checkpoint, ModelFront, StepInput,
-                 Trainer};
+pub use driver::{eval_state_from_checkpoint, ModelFront, ShardedTrainer,
+                 StepInput, Trainer};
 pub use lstm::{LstmFront, LstmTrainer};
 pub use metrics::{perplexity, speedup, TrainMetrics};
 pub use mlp::{MlpFront, MlpTrainer};
 pub use pool::ExecutorCache;
+pub use reduce::{reduce_grad_pair, tree_reduce};
 pub use schedule::{Schedule, Variant};

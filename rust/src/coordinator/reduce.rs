@@ -1,0 +1,155 @@
+//! Deterministic gradient reduction for data-parallel training.
+//!
+//! The sharded trainer cuts every global batch into a fixed list of
+//! *leaves* (contiguous row shards whose count depends only on the batch
+//! geometry — never on the worker count, see `ModelFront::shard_leaves`)
+//! and combines the per-leaf [`GradOut`]s with [`tree_reduce`]: pairwise
+//! adjacent combines in leaf-index order, `(0,1), (2,3), ..` per round,
+//! an odd trailing element carried unchanged, repeated until one result
+//! remains. Because both the leaves and the association order are fixed,
+//! the f32 sums — and therefore the whole training trajectory — are
+//! bit-identical at any worker count. This is the same contract the
+//! sparse kernel pool honors across `AD_THREADS`: parallelism moves
+//! *where* work runs, never *how* results combine.
+
+use crate::runtime::backend::GradOut;
+
+/// Fixed-order binary tree reduction over `leaves`, combining with
+/// `pair` in index order: round 1 combines `(0,1), (2,3), ..`; an odd
+/// last element is carried to the next round unchanged; rounds repeat
+/// until one value remains. `None` on an empty input. The association
+/// order is a pure function of `leaves.len()` — the caller's thread
+/// layout cannot perturb it.
+pub fn tree_reduce<T>(leaves: Vec<T>, mut pair: impl FnMut(T, T) -> T)
+                      -> Option<T> {
+    let mut level = leaves;
+    if level.is_empty() {
+        return None;
+    }
+    while level.len() > 1 {
+        let mut next = Vec::with_capacity(level.len().div_ceil(2));
+        let mut it = level.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(pair(a, b)),
+                None => next.push(a),
+            }
+        }
+        level = next;
+    }
+    level.pop()
+}
+
+/// Combine two leaves' gradient contributions: elementwise f32 adds over
+/// every gradient buffer (in the manifest's parameter order), f64 add of
+/// the loss sums, f32 add of the correct counts. Panics on mismatched
+/// leaf shapes — those only arise from a driver bug, never from data.
+pub fn reduce_grad_pair(mut a: GradOut, b: GradOut) -> GradOut {
+    assert_eq!(a.grads.len(), b.grads.len(),
+               "gradient leaves disagree on parameter count");
+    for (ga, gb) in a.grads.iter_mut().zip(&b.grads) {
+        assert_eq!(ga.len(), gb.len(),
+                   "gradient leaves disagree on a parameter's size");
+        for (x, &y) in ga.iter_mut().zip(gb) {
+            *x += y;
+        }
+    }
+    a.loss_sum += b.loss_sum;
+    a.correct += b.correct;
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn tree_reduce_association_order_is_pinned() {
+        // Strings make the association order observable: 5 leaves must
+        // combine as (((1+2)+(3+4))+5) — pairwise rounds, odd element
+        // carried, NOT left-fold ((((1+2)+3)+4)+5).
+        let leaves: Vec<String> =
+            (1..=5).map(|i| i.to_string()).collect();
+        let out = tree_reduce(leaves, |a, b| format!("({a}+{b})"));
+        assert_eq!(out.unwrap(), "(((1+2)+(3+4))+5)");
+        assert_eq!(tree_reduce(vec!["x".to_string()], |a, _b| a),
+                   Some("x".to_string()));
+        assert_eq!(tree_reduce(Vec::<i32>::new(), |a, b| a + b), None);
+    }
+
+    fn leaf(rng: &mut Rng, nan: bool) -> GradOut {
+        let g0: Vec<f32> =
+            (0..17).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        let mut g1: Vec<f32> =
+            (0..5).map(|_| rng.uniform(-2.0, 2.0) as f32).collect();
+        if nan {
+            g1[2] = f32::NAN;
+        }
+        GradOut {
+            grads: vec![g0, g1],
+            loss_sum: rng.uniform(0.0, 3.0),
+            correct: (rng.uniform(0.0, 8.0) as f32).floor(),
+        }
+    }
+
+    fn bits(g: &GradOut) -> (Vec<Vec<u32>>, u64, u32) {
+        (g.grads.iter()
+            .map(|v| v.iter().map(|x| x.to_bits()).collect())
+            .collect(),
+         g.loss_sum.to_bits(),
+         g.correct.to_bits())
+    }
+
+    #[test]
+    fn reduction_is_bitwise_invariant_to_delivery_order() {
+        // The driver collects leaves from however many workers exist and
+        // slots them by leaf index before reducing. Property: for random
+        // leaf counts and values (including a NaN-poisoned leaf), any
+        // delivery permutation produces bit-identical results, because
+        // reduction is a pure function of the indexed leaf list.
+        let mut rng = Rng::new(0x5eed);
+        for case in 0..50 {
+            let n = 1 + (rng.next_u64() % 9) as usize;
+            let poison = case % 7 == 0;
+            let leaves: Vec<GradOut> = (0..n)
+                .map(|i| leaf(&mut rng, poison && i == n / 2))
+                .collect();
+            let baseline = tree_reduce(leaves.clone(), reduce_grad_pair)
+                .unwrap();
+            // Simulate out-of-order delivery: shuffle, then re-slot by
+            // index exactly as the driver does.
+            let mut order: Vec<usize> = (0..n).collect();
+            for i in (1..n).rev() {
+                let j = (rng.next_u64() % (i as u64 + 1)) as usize;
+                order.swap(i, j);
+            }
+            let mut slots: Vec<Option<GradOut>> =
+                (0..n).map(|_| None).collect();
+            for &i in &order {
+                slots[i] = Some(leaves[i].clone());
+            }
+            let redelivered = tree_reduce(
+                slots.into_iter().map(|s| s.unwrap()).collect(),
+                reduce_grad_pair).unwrap();
+            assert_eq!(bits(&baseline), bits(&redelivered),
+                       "case {case}: n={n} poison={poison}");
+            if poison {
+                assert!(baseline.grads[1][2].is_nan(),
+                        "NaN poison must survive reduction");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_reduction_adds_elementwise() {
+        let a = GradOut { grads: vec![vec![1.0, 2.0]], loss_sum: 0.5,
+                          correct: 3.0 };
+        let b = GradOut { grads: vec![vec![10.0, 20.0]], loss_sum: 0.25,
+                          correct: 1.0 };
+        let c = reduce_grad_pair(a, b);
+        assert_eq!(c.grads, vec![vec![11.0, 22.0]]);
+        assert_eq!(c.loss_sum, 0.75);
+        assert_eq!(c.correct, 4.0);
+    }
+}

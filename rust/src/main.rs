@@ -29,13 +29,19 @@ COMMANDS:
   train-mlp    Train an MLP on synthetic MNIST
                --tag mlp2048x2048 --variant conv|rdp|tdp --rates 0.5,0.5
                --steps 200 --lr 0.01 --seed 42 --n-train 10000
-               --n-test 2000 [--shared-dp] [--pipeline] [--config file.toml]
+               --n-test 2000 [--shared-dp] [--pipeline] [--workers N]
+               [--config file.toml]
   train-lstm   Train an LSTM LM on the synthetic corpus
                --tag lstm2x256v2048b20 --variant rdp --rate 0.5
                --steps 100 --lr 0.5 --seed 42 [--tokens 200000]
-               [--pipeline]
+               [--pipeline] [--workers N]
                (--pipeline: double-buffered step assembly; identical
                 trajectories, assembly overlapped with execution)
+               (--workers: data-parallel gradient threads over a fixed
+                leaf partition of each batch; trajectories, dispatch
+                sequences and checkpoint bits are identical for any N,
+                and checkpoints resume elastically across N — hermetic
+                backends only; see rust/DESIGN.md section 13)
   search       Run the SGD-based pattern search (Algorithm 1)
                --rate 0.7 [--support 1,2,4,8 | --n 10 (paper {1..N})]
   serve        Run a fleet of training jobs from a TOML manifest
@@ -81,6 +87,8 @@ ENV: AD_ARTIFACTS (artifacts dir), AD_LOG (error|warn|info|debug|trace),
      compute engine — both run with no artifacts, e.g. train-mlp
      --tag mlpsyn on the built-in synthetic registry),
      AD_THREADS (sparse backend worker count; default = all cores),
+     AD_WORKERS (data-parallel gradient workers for train-mlp/
+     train-lstm; --workers wins; empty = unset = single-threaded),
      AD_TIME_WINDOW (LSTM pattern window in timesteps; default \"seq\" =
      one draw per step; W dividing seq re-draws the pattern bias within
      the step, W = k*seq holds one draw across k steps — incompatible
@@ -110,6 +118,31 @@ fn main() -> Result<()> {
             Ok(())
         }
         Some(other) => bail!("unknown command '{other}' (try help)"),
+    }
+}
+
+/// Resolve the data-parallel worker count for the train commands:
+/// `--workers` wins over `AD_WORKERS`; an *empty* env value counts as
+/// unset (the CI matrix sets `AD_WORKERS: ""` on non-sharded legs);
+/// `None` keeps the plain single-threaded step path. Zero and negative
+/// counts are rejected loudly — the sharded N=1 path exists (it is the
+/// bit-identity baseline), but "no workers" is spelled by omission.
+fn workers_from_args(args: &Args) -> Result<Option<usize>> {
+    let src = match args.get("workers") {
+        Some(v) => Some(("--workers", v.to_string())),
+        None => match std::env::var("AD_WORKERS") {
+            Ok(v) if !v.is_empty() => Some(("AD_WORKERS", v)),
+            _ => None,
+        },
+    };
+    match src {
+        None => Ok(None),
+        Some((what, v)) => match v.parse::<i64>() {
+            Ok(n) if n >= 1 => Ok(Some(n as usize)),
+            _ => bail!("{what}={v:?}: worker count must be an integer \
+                        >= 1 (omit it entirely for the single-threaded \
+                        path)"),
+        },
     }
 }
 
@@ -166,8 +199,23 @@ fn train_mlp(args: &Args) -> Result<()> {
     }
     info!("compiling {} executable(s)...", tr.executable_names().len());
     tr.warmup()?;
+    let workers = workers_from_args(args)?;
+    if workers.is_some() && args.has_flag("pipeline") {
+        bail!("--pipeline and --workers are mutually exclusive (the \
+               sharded path already spreads each step across threads)");
+    }
     let report_every = (cfg.steps / 10).max(1);
-    if args.has_flag("pipeline") {
+    if let Some(w) = workers {
+        info!("data-parallel: {w} gradient worker(s)");
+        for s in 0..cfg.steps {
+            let (loss, acc) = tr.sharded(w)?.step_with(&train)?;
+            if (s + 1) % report_every == 0 {
+                info!("step {:>5}: loss {loss:.4} acc {acc:.3} \
+                       ({:.1} ms/step)", s + 1,
+                      tr.metrics.steady_mean_step_s(1) * 1e3);
+            }
+        }
+    } else if args.has_flag("pipeline") {
         let mut done = 0;
         while done < cfg.steps {
             let n = report_every.min(cfg.steps - done);
@@ -279,8 +327,23 @@ fn train_lstm(args: &Args) -> Result<()> {
     }
     info!("compiling {} executable(s)...", tr.executable_names().len());
     tr.warmup()?;
+    let workers = workers_from_args(args)?;
+    if workers.is_some() && args.has_flag("pipeline") {
+        bail!("--pipeline and --workers are mutually exclusive (the \
+               sharded path already spreads each step across threads)");
+    }
     let report_every = (cfg.steps / 10).max(1);
-    if args.has_flag("pipeline") {
+    if let Some(w) = workers {
+        info!("data-parallel: {w} gradient worker(s)");
+        for s in 0..cfg.steps {
+            let (loss, acc) = tr.sharded(w)?.step_with(&())?;
+            if (s + 1) % report_every == 0 {
+                info!("step {:>5}: loss {loss:.4} ppl {:.1} acc \
+                       {acc:.3} ({:.0} ms/step)", s + 1, loss.exp(),
+                      tr.metrics.steady_mean_step_s(1) * 1e3);
+            }
+        }
+    } else if args.has_flag("pipeline") {
         let mut done = 0;
         while done < cfg.steps {
             let n = report_every.min(cfg.steps - done);

@@ -13,6 +13,8 @@
 //! | `sparse_panel_bytes`        | sparse `prep` panel packing           |
 //! | `gate_{wait,hold}_s`, depth | `service/scheduler.rs` `SlotGate`     |
 //! | `infer_*`                   | `service/infer.rs` worker loop        |
+//! | `worker_sync_wait_s`        | `coordinator/driver.rs` sharded step  |
+//! | `allreduce_total`           | `coordinator/driver.rs` per reduction |
 //! | `phase_time_s` rows         | `trace` spans (trainer + interpreter) |
 //!
 //! Naming scheme: `snake_case`, `<subsystem>_<what>[_<unit>]`; units in
@@ -136,7 +138,8 @@ mod tests {
         };
         for name in ["dispatch_total", "sparse_rows_kept", "gate_wait_s",
                      "gate_queue_depth", "infer_latency_s",
-                     "infer_batch_occupancy"] {
+                     "infer_batch_occupancy", "worker_sync_wait_s",
+                     "allreduce_total"] {
             assert!(has(name), "missing instrument {name}");
         }
         // Histogram rows: counts sum to total (the checker invariant).

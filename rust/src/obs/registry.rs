@@ -242,6 +242,12 @@ pub static INFER_BATCH_OCCUPANCY: Histogram =
     Histogram::new(&OCCUPANCY_BOUNDS);
 pub static INFER_LATENCY_S: Histogram = Histogram::new(&TIME_BOUNDS_S);
 
+/// Data-parallel training: per-worker time between a worker's last leaf
+/// finishing and the full leaf set being collected (the straggler wait
+/// the reduction barrier imposes), and completed tree reductions.
+pub static WORKER_SYNC_WAIT_S: Histogram = Histogram::new(&TIME_BOUNDS_S);
+pub static ALLREDUCE_TOTAL: Counter = Counter::new();
+
 /// One instrument read, tagged for export (`obs::metrics_report`).
 #[derive(Clone, Debug)]
 pub enum InstrumentSnapshot {
@@ -279,6 +285,10 @@ pub fn snapshot_all() -> Vec<InstrumentSnapshot> {
                        h: INFER_BATCH_OCCUPANCY.snapshot() },
         S::Histogram { name: "infer_latency_s",
                        h: INFER_LATENCY_S.snapshot() },
+        S::Histogram { name: "worker_sync_wait_s",
+                       h: WORKER_SYNC_WAIT_S.snapshot() },
+        S::Counter { name: "allreduce_total",
+                     value: ALLREDUCE_TOTAL.get() },
     ]
 }
 

@@ -163,6 +163,36 @@ impl Value {
     }
 }
 
+/// One contiguous shard of a training batch, in batch-row units: rows
+/// `lo .. lo+rows` of a `global_rows`-row batch. The data-parallel driver
+/// cuts each global batch into a *worker-count-independent* list of these
+/// (see `ModelFront::shard_leaves`), so the gradient reduction tree has
+/// the same leaves — and therefore the same f32 association order — at
+/// any worker count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LeafSpec {
+    /// First batch row this leaf covers.
+    pub lo: usize,
+    /// Rows in this leaf.
+    pub rows: usize,
+    /// Rows in the whole global batch (the loss/gradient denominator:
+    /// per-leaf gradients are scaled by the *global* mean so summing
+    /// leaves reproduces the full-batch gradient).
+    pub global_rows: usize,
+}
+
+/// One leaf's gradient contribution: per-parameter gradient buffers in
+/// manifest parameter order (already scaled by the global-batch mean),
+/// plus the raw f64 loss sum and correct count over the leaf's rows.
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub grads: Vec<Vec<f32>>,
+    /// Sum of per-row nll over the leaf (divide by the global example
+    /// count after reduction).
+    pub loss_sum: f64,
+    pub correct: f32,
+}
+
 /// One compiled (or interpreted) artifact: executes steps with inputs in
 /// manifest order and returns outputs in manifest order.
 ///
@@ -175,6 +205,23 @@ pub trait Executor: Send + Sync {
     /// Execute one step. This is the hot path: inputs are whatever
     /// [`Value`] form the backend keeps resident, outputs likewise.
     fn run_raw(&self, inputs: &[&Value]) -> Result<Vec<Value>>;
+
+    /// Forward/backward over one batch shard, *without* the optimizer
+    /// apply: inputs are the full global-batch list in manifest order
+    /// (`params ++ momenta ++ x, y, extras, lr` — momenta and lr are
+    /// ignored), slicing to `leaf` happens inside. Host tensors only: the
+    /// data-parallel driver fans these out across worker threads, and
+    /// host buffers are the only `Value` form that is `Sync`.
+    ///
+    /// Backends that cannot decompose a step into grad shards keep this
+    /// default and the sharded trainer fails loudly up front.
+    fn run_grads(&self, inputs: &[&HostTensor], leaf: &LeafSpec)
+                 -> Result<GradOut> {
+        let _ = (inputs, leaf);
+        bail!("{}: this backend cannot run gradient shards — \
+               data-parallel training needs a hermetic backend \
+               (AD_BACKEND=reference|sparse)", self.meta().name)
+    }
 }
 
 /// An execution engine: compile-by-name from the manifest plus tensor

@@ -21,7 +21,7 @@ pub mod step;
 
 pub use backend::{backend_from_env, backend_kind_from_env,
                   env_selects_hermetic, Backend, BackendKind, Executor,
-                  HostTensor, Value};
+                  GradOut, HostTensor, LeafSpec, Value};
 #[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable, PjrtBackend};
 pub use manifest::{lstm_artifacts, mlp_artifacts, ArchMeta, ArtifactMeta,

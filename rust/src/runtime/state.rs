@@ -97,6 +97,12 @@ impl TrainState {
     /// Run one train step: inputs are `params ++ momenta ++ tail` (tail =
     /// x, y, variant extras, lr in manifest order). The output values
     /// replace the state in place. Returns (loss, correct).
+    ///
+    /// This is the fused single-thread path: forward, backward, and the
+    /// SGD apply all happen inside the executable. The data-parallel
+    /// path bypasses it — `Executor::run_grads` emits per-shard raw
+    /// gradients against the same input list, and the sharded driver
+    /// owns reduction and the SGD apply (`coordinator::driver`).
     pub fn step(&mut self, exe: &dyn Executor, tail: &[Value])
                 -> Result<(f64, f64)> {
         let n = self.params.len();

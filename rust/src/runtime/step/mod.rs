@@ -36,8 +36,9 @@ use anyhow::{bail, Result};
 
 use crate::obs::trace;
 use crate::patterns::{RowPattern, TilePattern};
-use crate::runtime::backend::{Executor, HostTensor, Value};
-use crate::runtime::manifest::{ArchMeta, ArtifactMeta, Manifest};
+use crate::runtime::backend::{Executor, GradOut, HostTensor, LeafSpec,
+                              Value};
+use crate::runtime::manifest::{ArchMeta, ArtifactMeta, Kind, Manifest};
 
 pub use kernels::{DenseKernels, Kernels, PreppedWeight, Skip};
 
@@ -93,6 +94,57 @@ impl Executor for StepProgram {
                              {m}/{v}"),
         }
     }
+
+    /// Forward/backward over one batch shard (the data-parallel leaf
+    /// path): slice the batch-indexed inputs (x, y, conv masks) down to
+    /// the leaf's rows, run the shared fwd/bwd with the *global* batch as
+    /// gradient denominator, and return the raw per-leaf sums. Shared
+    /// inputs (params, b0 bias scalars/tracks, 1/(1-p) scales) pass
+    /// through unsliced; momenta and lr are ignored — the optimizer apply
+    /// happens once, after reduction, in the driver.
+    fn run_grads(&self, inputs: &[&HostTensor], leaf: &LeafSpec)
+                 -> Result<GradOut> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!("{}: {} inputs given, manifest says {}", self.meta.name,
+                  inputs.len(), self.meta.inputs.len());
+        }
+        for (t, m) in inputs.iter().zip(&self.meta.inputs) {
+            t.check(m)?;
+        }
+        if self.meta.variant == "eval" {
+            bail!("{}: eval graphs have no gradients", self.meta.name);
+        }
+        let batch = self.meta.batch();
+        if leaf.global_rows != batch || leaf.rows == 0
+            || leaf.lo + leaf.rows > batch
+        {
+            bail!("{}: leaf {leaf:?} does not fit batch {batch}",
+                  self.meta.name);
+        }
+        let mut owned: Vec<Option<HostTensor>> =
+            Vec::with_capacity(inputs.len());
+        for (t, m) in inputs.iter().zip(&self.meta.inputs) {
+            owned.push(match m.kind {
+                Kind::X | Kind::Y | Kind::Mask =>
+                    Some(slice_rows(t, leaf.lo, leaf.rows)?),
+                _ => None,
+            });
+        }
+        let sliced: Vec<&HostTensor> = owned.iter().zip(inputs)
+            .map(|(o, &t)| o.as_ref().unwrap_or(t))
+            .collect();
+        let (params, _momenta, xt, y, extras, _lr) =
+            self.split_train(&sliced)?;
+        let (loss_sum, correct, grads) = match self.meta.model.as_str() {
+            "mlp" => self.mlp_fwd_bwd(&params, xt.as_f32()?, y, &extras,
+                                      leaf.rows, leaf.global_rows)?,
+            "lstm" => self.lstm_fwd_bwd(&params, xt.as_i32()?, y, &extras,
+                                        leaf.rows, leaf.global_rows)?,
+            other => bail!("step interpreter: unsupported model \
+                            '{other}'"),
+        };
+        Ok(GradOut { grads, loss_sum, correct })
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -135,16 +187,45 @@ fn scale_vec(a: &[f32], s: f32) -> Vec<f32> {
     a.iter().map(|x| x * s).collect()
 }
 
+/// Slice rows `lo .. lo+rows` of a tensor's leading dimension (the batch
+/// axis of x/y/mask inputs). The row width is the product of the
+/// remaining dims, so `[batch]`, `[batch, n]` and `[batch, seq]` all
+/// slice the same way.
+fn slice_rows(t: &HostTensor, lo: usize, rows: usize)
+              -> Result<HostTensor> {
+    let shape = t.shape();
+    if shape.is_empty() {
+        bail!("cannot row-slice a scalar tensor");
+    }
+    if lo + rows > shape[0] {
+        bail!("row slice {lo}..{} exceeds leading dim {}", lo + rows,
+              shape[0]);
+    }
+    let width: usize = shape[1..].iter().product();
+    let mut ns = shape.to_vec();
+    ns[0] = rows;
+    Ok(match t {
+        HostTensor::F32 { data, .. } => HostTensor::f32(
+            &ns, data[lo * width..(lo + rows) * width].to_vec()),
+        HostTensor::I32 { data, .. } => HostTensor::i32(
+            &ns, data[lo * width..(lo + rows) * width].to_vec()),
+    })
+}
+
 /// Softmax cross-entropy over `rows` rows of `cols` logits against int
-/// targets. Returns (mean nll, correct count, d_logits) with the gradient
-/// already scaled by `1/rows` (the mean). Matches `model.softmax_xent`.
+/// targets. Returns (f64 nll sum, correct count, d_logits) with the
+/// gradient already scaled by `1/denom`. Full-batch callers pass
+/// `denom == rows` (the mean, matching `model.softmax_xent`); batch
+/// *shards* pass the global row count so that summing per-shard gradients
+/// reproduces the full-batch mean gradient exactly.
 fn softmax_xent_grad(logits: &[f32], targets: &[i32], rows: usize,
-                     cols: usize) -> Result<(f32, f32, Vec<f32>)> {
+                     cols: usize, denom: usize)
+                     -> Result<(f64, f32, Vec<f32>)> {
     debug_assert_eq!(logits.len(), rows * cols);
     let mut loss = 0f64;
     let mut correct = 0f32;
     let mut grad = vec![0f32; rows * cols];
-    let inv = 1.0 / rows as f32;
+    let inv = 1.0 / denom as f32;
     for r in 0..rows {
         let y = targets[r];
         if y < 0 || y as usize >= cols {
@@ -174,7 +255,7 @@ fn softmax_xent_grad(logits: &[f32], targets: &[i32], rows: usize,
             *g = (p - if j == y as usize { 1.0 } else { 0.0 }) * inv;
         }
     }
-    Ok(((loss / rows as f64) as f32, correct, grad))
+    Ok((loss, correct, grad))
 }
 
 /// Per-row softmax cross-entropy: one `(nll, correct-flag)` pair per row,
@@ -563,13 +644,33 @@ impl StepProgram {
     }
 
     fn mlp_train(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
-        let kern = self.kern.as_ref();
-        let (n_in, h1, h2, n_out, batch) = self.mlp_dims()?;
+        let (_, _, _, _, batch) = self.mlp_dims()?;
         let (params, momenta, xt, y, extras, lr) = self.split_train(inp)?;
-        let x = xt.as_f32()?;
+        let (loss_sum, correct, grads) =
+            self.mlp_fwd_bwd(&params, xt.as_f32()?, y, &extras, batch,
+                             batch)?;
+        let loss = (loss_sum / batch as f64) as f32;
+        let (new_p, new_m) = {
+            let _sp = trace::span("sgd");
+            self.sgd(&params, &momenta, &grads, lr)
+        };
+        self.pack(new_p, new_m, loss, correct)
+    }
+
+    /// Forward + backward over `batch` rows of x/y/extras, softmax
+    /// gradient scaled by `1/denom`. The full-batch step passes
+    /// `denom == batch`; a gradient shard passes its leaf's rows with
+    /// the *global* batch as denom, so per-leaf grads sum to the
+    /// full-batch mean gradient. Returns the f64 nll sum, the correct
+    /// count, and grads in param order `[dw1, db1, dw2, db2, dw3, db3]`.
+    fn mlp_fwd_bwd(&self, params: &[&[f32]], x: &[f32], y: &[i32],
+                   extras: &[&HostTensor], batch: usize, denom: usize)
+                   -> Result<(f64, f32, Vec<Vec<f32>>)> {
+        let kern = self.kern.as_ref();
+        let (n_in, h1, h2, n_out, _) = self.mlp_dims()?;
         let (w1, b1, w2, b2, w3, b3) = (params[0], params[1], params[2],
                                         params[3], params[4], params[5]);
-        let feeds = self.site_feeds(&extras, 2, &[h1, h2],
+        let feeds = self.site_feeds(extras, 2, &[h1, h2],
                                     &[(n_in, h1), (h1, h2)])?;
         let (sk0, sk1) = (feeds[0].skip(), feeds[1].skip());
         const DENSE: Skip = Skip::Dense;
@@ -634,8 +735,8 @@ impl StepProgram {
         let mut logits =
             kern.gemm(&out1, w3, batch, h2, n_out, &ask1, &DENSE);
         add_row_bias(&mut logits, b3);
-        let (loss, correct, dlogits) =
-            softmax_xent_grad(&logits, y, batch, n_out)?;
+        let (loss_sum, correct, dlogits) =
+            softmax_xent_grad(&logits, y, batch, n_out, denom)?;
         drop(sp_fwd);
 
         // Backward.
@@ -712,12 +813,7 @@ impl StepProgram {
 
         drop(sp_bwd);
 
-        let grads = vec![dw1, db1, dw2, db2, dw3, db3];
-        let (new_p, new_m) = {
-            let _sp = trace::span("sgd");
-            self.sgd(&params, &momenta, &grads, lr)
-        };
-        self.pack(new_p, new_m, loss, correct)
+        Ok((loss_sum, correct, vec![dw1, db1, dw2, db2, dw3, db3]))
     }
 
     fn mlp_eval(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
@@ -766,9 +862,31 @@ impl StepProgram {
     }
 
     fn lstm_train(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
-        let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
+        let (_, _, _, seq, batch) = self.lstm_dims()?;
         let (params, momenta, xt, y, extras, lr) = self.split_train(inp)?;
-        let x = xt.as_i32()?;
+        let (loss_sum, correct, grads) =
+            self.lstm_fwd_bwd(&params, xt.as_i32()?, y, &extras, batch,
+                              batch)?;
+        let loss = (loss_sum / (seq * batch) as f64) as f32;
+        let (new_p, new_m) = {
+            let _sp = trace::span("sgd");
+            self.sgd(&params, &momenta, &grads, lr)
+        };
+        self.pack(new_p, new_m, loss, correct)
+    }
+
+    /// Forward + BPTT over `batch` tracks of x/y/extras, softmax gradient
+    /// scaled by `1/(seq*denom)`. The full-batch step passes
+    /// `denom == batch`; a gradient shard passes its leaf's tracks with
+    /// the global batch as denom. Tracks evolve independently through the
+    /// recurrence, so a contiguous track shard computes exactly the rows
+    /// the full batch would. Returns the f64 nll sum, the correct count,
+    /// and grads in param order (emb, (wx, wh, bg) per layer, wsoft,
+    /// bsoft).
+    fn lstm_fwd_bwd(&self, params: &[&[f32]], x: &[i32], y: &[i32],
+                    extras: &[&HostTensor], batch: usize, denom: usize)
+                    -> Result<(f64, f32, Vec<Vec<f32>>)> {
+        let (vocab, h, layers, seq, _) = self.lstm_dims()?;
         // Sites: site l-1 guards layer l's input for l in 1..L; site L-1
         // guards the softmax input (Zaremba-style non-recurrent dropout).
         let widths = vec![h; layers];
@@ -777,11 +895,11 @@ impl StepProgram {
             wdims.push((h, 4 * h)); // tdp masks wx of the consuming layer
         }
         wdims.push((h, vocab)); // last site masks wsoft
-        let feeds = self.site_feed_runs(&extras, layers, seq, &widths,
+        let feeds = self.site_feed_runs(extras, layers, seq, &widths,
                                         &wdims)?;
 
-        let fwd = self.lstm_forward(&params, x, Some(feeds.as_slice()),
-                                    true)?;
+        let fwd = self.lstm_forward(params, x, batch,
+                                    Some(feeds.as_slice()), true)?;
         let rows = seq * batch;
         let mut targets = vec![0i32; rows];
         for b in 0..batch {
@@ -789,15 +907,12 @@ impl StepProgram {
                 targets[t * batch + b] = y[b * seq + t];
             }
         }
-        let (loss, correct, dlogits) =
-            softmax_xent_grad(&fwd.logits, &targets, rows, vocab)?;
-        let grads = self.lstm_backward(&params, x, &feeds, &fwd,
+        let (loss_sum, correct, dlogits) =
+            softmax_xent_grad(&fwd.logits, &targets, rows, vocab,
+                              seq * denom)?;
+        let grads = self.lstm_backward(params, x, batch, &feeds, &fwd,
                                        &dlogits)?;
-        let (new_p, new_m) = {
-            let _sp = trace::span("sgd");
-            self.sgd(&params, &momenta, &grads, lr)
-        };
-        self.pack(new_p, new_m, loss, correct)
+        Ok((loss_sum, correct, grads))
     }
 
     fn lstm_eval(&self, inp: &[&HostTensor]) -> Result<Vec<Value>> {
@@ -807,7 +922,7 @@ impl StepProgram {
             inp[..np].iter().map(|t| t.as_f32()).collect::<Result<_>>()?;
         let x = inp[np].as_i32()?;
         let y = inp[np + 1].as_i32()?;
-        let fwd = self.lstm_forward(&params, x, None, false)?;
+        let fwd = self.lstm_forward(&params, x, batch, None, false)?;
         let rows = seq * batch;
         let mut targets = vec![0i32; rows];
         for b in 0..batch {
@@ -843,11 +958,11 @@ impl StepProgram {
         ])
     }
 
-    fn lstm_forward(&self, params: &[&[f32]], x: &[i32],
+    fn lstm_forward(&self, params: &[&[f32]], x: &[i32], batch: usize,
                     feeds: Option<&[Vec<FeedRun>]>, keep_caches: bool)
                     -> Result<LstmFwd> {
         let kern = self.kern.as_ref();
-        let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
+        let (vocab, h, layers, seq, _) = self.lstm_dims()?;
         const DENSE: Skip = Skip::Dense;
         let emb = params[0];
         let cells: Vec<(&[f32], &[f32], &[f32])> = (0..layers)
@@ -1052,13 +1167,13 @@ impl StepProgram {
                      logits })
     }
 
-    fn lstm_backward(&self, params: &[&[f32]], x: &[i32],
+    fn lstm_backward(&self, params: &[&[f32]], x: &[i32], batch: usize,
                      feeds: &[Vec<FeedRun>], fwd: &LstmFwd,
                      dlogits: &[f32])
                      -> Result<Vec<Vec<f32>>> {
         let kern = self.kern.as_ref();
         let _sp = trace::span("bptt");
-        let (vocab, h, layers, seq, batch) = self.lstm_dims()?;
+        let (vocab, h, layers, seq, _) = self.lstm_dims()?;
         const DENSE: Skip = Skip::Dense;
         let cells: Vec<(&[f32], &[f32], &[f32])> = (0..layers)
             .map(|l| (params[1 + 3 * l], params[2 + 3 * l],
@@ -1285,23 +1400,57 @@ mod tests {
 
     #[test]
     fn softmax_xent_matches_hand_computation() {
-        // Two rows, 3 classes; uniform logits -> loss = ln 3.
+        // Two rows, 3 classes; uniform logits -> mean loss = ln 3.
         let logits = [0f32; 6];
-        let (loss, correct, grad) =
-            softmax_xent_grad(&logits, &[0, 2], 2, 3).unwrap();
+        let (loss_sum, correct, grad) =
+            softmax_xent_grad(&logits, &[0, 2], 2, 3, 2).unwrap();
+        let loss = (loss_sum / 2.0) as f32;
         assert!((loss - 3f32.ln()).abs() < 1e-6);
         // argmax of a uniform row is index 0 (first max).
         assert_eq!(correct, 1.0);
-        // grad rows sum to zero; target entry is (1/3 - 1)/rows.
+        // grad rows sum to zero; target entry is (1/3 - 1)/denom.
         let s: f32 = grad[..3].iter().sum();
         assert!(s.abs() < 1e-6);
         assert!((grad[0] - (1.0 / 3.0 - 1.0) / 2.0).abs() < 1e-6);
     }
 
     #[test]
+    fn softmax_xent_shards_sum_to_the_full_batch() {
+        // Two single-row shards with the global denom reproduce the
+        // full 2-row call bitwise: per-row work is independent and the
+        // 1/denom scale is identical, so sharding only splits the sums.
+        let logits = [0.3f32, -1.2, 0.7, 2.0, 0.1, -0.4];
+        let (full_sum, full_c, full_g) =
+            softmax_xent_grad(&logits, &[0, 2], 2, 3, 2).unwrap();
+        let (s0, c0, g0) =
+            softmax_xent_grad(&logits[..3], &[0], 1, 3, 2).unwrap();
+        let (s1, c1, g1) =
+            softmax_xent_grad(&logits[3..], &[2], 1, 3, 2).unwrap();
+        assert_eq!((s0 + s1).to_bits(), full_sum.to_bits());
+        assert_eq!(c0 + c1, full_c);
+        let stitched: Vec<f32> =
+            g0.iter().chain(&g1).copied().collect();
+        assert_eq!(stitched, full_g);
+    }
+
+    #[test]
     fn softmax_xent_rejects_bad_labels() {
-        assert!(softmax_xent_grad(&[0f32; 3], &[3], 1, 3).is_err());
-        assert!(softmax_xent_grad(&[0f32; 3], &[-1], 1, 3).is_err());
+        assert!(softmax_xent_grad(&[0f32; 3], &[3], 1, 3, 1).is_err());
+        assert!(softmax_xent_grad(&[0f32; 3], &[-1], 1, 3, 1).is_err());
+    }
+
+    #[test]
+    fn slice_rows_cuts_the_leading_dim() {
+        let t = HostTensor::f32(&[4, 2],
+                                (0..8).map(|v| v as f32).collect());
+        let s = slice_rows(&t, 1, 2).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[2.0, 3.0, 4.0, 5.0]);
+        let y = HostTensor::i32(&[3], vec![7, 8, 9]);
+        let sy = slice_rows(&y, 2, 1).unwrap();
+        assert_eq!(sy.as_i32().unwrap(), &[9]);
+        assert!(slice_rows(&y, 2, 2).is_err());
+        assert!(slice_rows(&HostTensor::scalar_f32(1.0), 0, 1).is_err());
     }
 
     #[test]

@@ -15,7 +15,12 @@
 //! * a **config hash** (FNV-1a 64 over the session's canonical
 //!   fingerprint) — resuming against a different experiment setup is
 //!   rejected up front instead of surfacing as shape errors or, worse, a
-//!   quietly different experiment,
+//!   quietly different experiment. The data-parallel worker count is
+//!   deliberately **excluded** from the fingerprint: it tunes wall-clock
+//!   only (the gradient leaf list and reduction order are fixed by the
+//!   batch geometry, see `coordinator::reduce`), so a checkpoint saved
+//!   at `--workers 1` legally resumes at `--workers 4` — *elastic
+//!   resume* — and reproduces the identical trajectory,
 //! * the dispatch-log tail — the last few artifact names dispatched
 //!   before the checkpoint, for post-mortem cross-checking of resumed
 //!   runs against their originals.

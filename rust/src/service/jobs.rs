@@ -17,6 +17,7 @@
 //! rates = [0.5, 0.5]     # or: rate = 0.5 (expanded to every site)
 //! support = [1, 2]
 //! steps = 40             # absolute target — resume-aware
+//! workers = 2            # data-parallel gradient threads (0 = plain)
 //! lr = 0.01
 //! seed = 7
 //! n_train = 256
@@ -87,6 +88,14 @@ pub struct JobSpec {
     pub n_test: usize,
     /// LSTM corpus size (tokens).
     pub tokens: usize,
+    /// Data-parallel gradient workers for this job; 0 (the default)
+    /// keeps the single-threaded step path. N >= 1 routes every step
+    /// through the sharded trainer, and the SlotGate accounts the extra
+    /// N-1 threads as best-effort additional slot holds. Elastic: not
+    /// part of the checkpoint config hash, so the same job can resume
+    /// at a different N. Distinct from `[service] workers` (backend
+    /// slots).
+    pub workers: usize,
 }
 
 impl JobSpec {
@@ -108,6 +117,7 @@ impl JobSpec {
             n_train: 256,
             n_test: 64,
             tokens: 20_000,
+            workers: 0,
         }
     }
 
@@ -316,6 +326,7 @@ fn job_from_doc(doc: &TomlDoc, name: &str) -> Result<JobSpec> {
     j.n_train = usize_field(doc, &key("n_train"), j.n_train)?;
     j.n_test = usize_field(doc, &key("n_test"), j.n_test)?;
     j.tokens = usize_field(doc, &key("tokens"), j.tokens)?;
+    j.workers = usize_field(doc, &key("workers"), j.workers)?;
     j.validate()?;
     Ok(j)
 }
@@ -346,6 +357,7 @@ rates = [0.25, 0.25]
 support = [1, 2]
 steps = 12
 seed = 5
+workers = 2
 
 [jobs.beta]
 model = \"lstm\"
@@ -371,7 +383,9 @@ tokens = 9000
         assert_eq!(a.rates, vec![0.25, 0.25]);
         assert_eq!(a.steps, 12);
         assert_eq!(a.tag, "mlpsyn", "default tag by model");
+        assert_eq!(a.workers, 2, "per-job data-parallel workers");
         let b = &jobs[1];
+        assert_eq!(b.workers, 0, "workers defaults to the plain path");
         assert_eq!(b.model, ModelKind::Lstm);
         assert_eq!(b.tag, "lstmsyn");
         assert_eq!(b.variant, Variant::Conv);
@@ -398,6 +412,7 @@ tokens = 9000
                     "[jobs.a]\nn_train = -5\n",
                     "[jobs.a]\nseed = -2\n",
                     "[jobs.a]\nsupport = [1, -2]\n",
+                    "[jobs.a]\nworkers = -4\n",
                     "[service]\nworkers = -1\n[jobs.a]\nsteps = 1\n"] {
             let doc = toml::parse(doc).unwrap();
             assert!(jobs_from_doc(&doc).is_err(), "negatives must fail");

@@ -29,7 +29,7 @@
 //! backends are bit-stable under concurrency (disjoint state; the sparse
 //! pool's determinism contract is thread-count independent).
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -118,6 +118,39 @@ impl SlotGate {
             self.cv.notify_all();
         }
         SlotHold { gate: self, held: Timer::start() }
+    }
+
+    /// Take a slot only if one is free *and* nobody is queued (jumping
+    /// the FIFO would starve waiters). Non-blocking; used by
+    /// [`SlotGate::acquire_n`] to account a sharded job's extra gradient
+    /// workers without risking deadlock.
+    pub fn try_acquire(&self) -> Option<SlotHold<'_>> {
+        let mut g = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        if g.available == 0 || !g.queue.is_empty() {
+            return None;
+        }
+        g.available -= 1;
+        g.in_use += 1;
+        g.peak = g.peak.max(g.in_use);
+        Some(SlotHold { gate: self, held: Timer::start() })
+    }
+
+    /// Acquire slots for a job that runs `n` threads: one *blocking*
+    /// acquire (the job's turn in the FIFO) plus up to `n - 1`
+    /// best-effort extras. Deliberately not all-or-nothing — two
+    /// sharded jobs each blocking for N slots on an N-slot gate would
+    /// deadlock; under contention a sharded job simply runs with fewer
+    /// accounted slots (its threads still run; the gate models backend
+    /// occupancy, not a hard thread budget).
+    pub fn acquire_n(&self, n: usize) -> Vec<SlotHold<'_>> {
+        let mut holds = vec![self.acquire()];
+        while holds.len() < n {
+            match self.try_acquire() {
+                Some(h) => holds.push(h),
+                None => break,
+            }
+        }
+        holds
     }
 
     /// Highest concurrent-hold count observed (fairness accounting).
@@ -250,13 +283,26 @@ impl Session {
         }
     }
 
-    fn run(&mut self, n: usize) -> Result<()> {
+    /// Run `n` steps: the plain sequential path when `workers == 0`,
+    /// the data-parallel sharded path otherwise. The split is a config
+    /// fork, not a trajectory fork within each mode — but the two modes
+    /// are NOT bit-identical to each other (different gradient summation
+    /// order), so a job keeps whichever mode it declared.
+    fn run(&mut self, n: usize, workers: usize) -> Result<()> {
         match self {
             Session::Mlp { tr, train, .. } => {
-                tr.train_with(train, n)?;
+                if workers >= 1 {
+                    tr.sharded(workers)?.train_with(train, n)?;
+                } else {
+                    tr.train_with(train, n)?;
+                }
             }
             Session::Lstm { tr, .. } => {
-                tr.train(n)?;
+                if workers >= 1 {
+                    tr.sharded(workers)?.train_with(&(), n)?;
+                } else {
+                    tr.train(n)?;
+                }
             }
         }
         Ok(())
@@ -408,14 +454,19 @@ pub fn run_jobs_with_gate(cache: &ExecutorCache, specs: &[JobSpec],
     let stop = AtomicBool::new(false);
     let done_ct = AtomicUsize::new(0);
     let failed_ct = AtomicUsize::new(0);
+    // Per-job worker occupancy (gradient threads live this instant),
+    // maintained by the runners and read by the heartbeat.
+    let occupancy: Mutex<BTreeMap<String, usize>> =
+        Mutex::new(BTreeMap::new());
     let outcomes: Vec<JobOutcome> = std::thread::scope(|scope| {
         let handles: Vec<_> = specs
             .iter()
             .map(|spec| {
                 let gate = &gate;
+                let occupancy = &occupancy;
                 let (done_ct, failed_ct) = (&done_ct, &failed_ct);
                 scope.spawn(move || {
-                    let o = run_one(cache, spec, cfg, gate);
+                    let o = run_one(cache, spec, cfg, gate, occupancy);
                     let ct = if o.ok() { done_ct } else { failed_ct };
                     ct.fetch_add(1, Ordering::Relaxed);
                     o
@@ -425,7 +476,7 @@ pub fn run_jobs_with_gate(cache: &ExecutorCache, specs: &[JobSpec],
         // Periodic one-line fleet status while runners work; stops (and
         // joins, via the scope) once every outcome is collected.
         scope.spawn(|| heartbeat_loop(&stop, &done_ct, &failed_ct,
-                                      specs.len(), &gate));
+                                      specs.len(), &gate, &occupancy));
         let outs = handles
             .into_iter()
             .zip(specs)
@@ -458,10 +509,12 @@ const HEARTBEAT_EVERY_S: f64 = 5.0;
 
 /// Emit a one-line fleet status every [`HEARTBEAT_EVERY_S`] until `stop`:
 /// jobs running / queued-at-gate / done / quarantined, slot occupancy,
-/// and the dispatch rate (steps/s fleet-wide, from the process registry)
-/// since the previous beat. Pure observer — reads shared counters only.
+/// per-job worker occupancy (sharded jobs currently stepping), and the
+/// dispatch rate (steps/s fleet-wide, from the process registry) since
+/// the previous beat. Pure observer — reads shared counters only.
 fn heartbeat_loop(stop: &AtomicBool, done: &AtomicUsize,
-                  failed: &AtomicUsize, total: usize, gate: &SlotGate) {
+                  failed: &AtomicUsize, total: usize, gate: &SlotGate,
+                  occupancy: &Mutex<BTreeMap<String, usize>>) {
     let mut last_dispatch = registry::DISPATCH_TOTAL.total();
     let mut t = Timer::start();
     loop {
@@ -480,8 +533,20 @@ fn heartbeat_loop(stop: &AtomicBool, done: &AtomicUsize,
         let qps = (dispatch - last_dispatch) as f64 / dt.max(1e-9);
         last_dispatch = dispatch;
         let (in_use, queued) = gate.depth();
+        let workers: Vec<String> = occupancy
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .iter()
+            .map(|(job, w)| format!("{job}={w}"))
+            .collect();
+        let workers = if workers.is_empty() {
+            String::new()
+        } else {
+            format!(", workers: {}", workers.join(" "))
+        };
         info!("fleet: {} running, {queued} queued, {d}/{total} done, \
-               {f} quarantined, {in_use} slot(s) busy, {qps:.1} steps/s",
+               {f} quarantined, {in_use} slot(s) busy, {qps:.1} \
+               steps/s{workers}",
               total - d - f);
     }
 }
@@ -489,7 +554,8 @@ fn heartbeat_loop(stop: &AtomicBool, done: &AtomicUsize,
 /// Drive one job to its terminal state. Never panics: backend work is
 /// wrapped in `catch_unwind`, and a panic quarantines this job only.
 fn run_one(cache: &ExecutorCache, spec: &JobSpec, cfg: &ServiceConfig,
-           gate: &SlotGate) -> JobOutcome {
+           gate: &SlotGate, occupancy: &Mutex<BTreeMap<String, usize>>)
+           -> JobOutcome {
     // Every log line from this runner thread carries the job name; the
     // prefix is thread-local and this thread is pinned to this job.
     crate::util::log::set_job_prefix(&spec.name);
@@ -534,10 +600,18 @@ fn run_one(cache: &ExecutorCache, spec: &JobSpec, cfg: &ServiceConfig,
     let mut last_ckpt_at = session.steps_done();
     while session.steps_done() < spec.steps {
         let n = cfg.tick_steps.min(spec.steps - session.steps_done());
-        let hold = gate.acquire();
-        out.ticks += 1;
-        let r = catch_unwind(AssertUnwindSafe(|| session.run(n)));
-        drop(hold);
+        // A sharded job runs `workers` gradient threads per step: claim
+        // one slot FIFO-fairly plus best-effort extras so the gate's
+        // occupancy accounting sees the real thread pressure.
+        let holds = gate.acquire_n(spec.workers.max(1));
+        out.ticks += holds.len();
+        occupancy.lock().unwrap_or_else(|p| p.into_inner())
+            .insert(spec.name.clone(), spec.workers.max(1));
+        let r = catch_unwind(AssertUnwindSafe(
+            || session.run(n, spec.workers)));
+        occupancy.lock().unwrap_or_else(|p| p.into_inner())
+            .remove(&spec.name);
+        drop(holds);
         match r {
             Ok(Ok(())) => {}
             Ok(Err(e)) => {
@@ -744,6 +818,21 @@ mod tests {
             wall_s: 0.25,
             report_path: None,
         }
+    }
+
+    #[test]
+    fn gate_try_and_multi_acquire_account_slots() {
+        let gate = SlotGate::new(2);
+        // 1 blocking + best-effort extras, capped by free slots.
+        let holds = gate.acquire_n(3);
+        assert_eq!(holds.len(), 2);
+        assert!(gate.try_acquire().is_none(), "gate is full");
+        drop(holds);
+        let h = gate.try_acquire().expect("slot free again");
+        assert_eq!(gate.depth().0, 1);
+        drop(h);
+        assert_eq!(gate.depth().0, 0);
+        assert_eq!(gate.peak(), 2);
     }
 
     #[test]

@@ -46,23 +46,55 @@ pub fn init_from_env() {
 }
 
 thread_local! {
-    static JOB_PREFIX: RefCell<String> =
-        const { RefCell::new(String::new()) };
+    /// This thread's attribution: (job name, optional worker index).
+    /// Stored structurally — not pre-rendered — so the sharded trainer
+    /// can read the owning job back via [`current_job`] when naming its
+    /// gradient worker threads.
+    static JOB_TAG: RefCell<(String, Option<usize>)> =
+        const { RefCell::new((String::new(), None)) };
 }
 
 /// Tag every subsequent log line from *this thread* with `[job=<name>]`
 /// — fleet runner threads call this so interleaved multi-job output
 /// stays attributable. An empty name clears the tag.
 pub fn set_job_prefix(name: &str) {
-    JOB_PREFIX.with(|p| {
+    JOB_TAG.with(|p| {
         let mut p = p.borrow_mut();
-        p.clear();
-        if !name.is_empty() {
-            p.push_str("[job=");
-            p.push_str(name);
-            p.push_str("] ");
-        }
+        p.0.clear();
+        p.0.push_str(name);
+        p.1 = None;
     });
+}
+
+/// Tag every subsequent log line from *this thread* with
+/// `[job=<name>/w<k>]` — gradient worker threads of a sharded trainer
+/// call this so quarantine and kernel messages from worker `k` stay
+/// attributable to both the job and the shard.
+pub fn set_worker_prefix(name: &str, k: usize) {
+    JOB_TAG.with(|p| {
+        let mut p = p.borrow_mut();
+        p.0.clear();
+        p.0.push_str(name);
+        p.1 = Some(k);
+    });
+}
+
+/// The job name this thread is tagged with (empty when untagged). The
+/// sharded trainer reads this to propagate the fleet job's name onto
+/// its worker threads.
+pub fn current_job() -> String {
+    JOB_TAG.with(|p| p.borrow().0.clone())
+}
+
+fn render_prefix() -> String {
+    JOB_TAG.with(|p| {
+        let p = p.borrow();
+        match (&p.0, p.1) {
+            (name, _) if name.is_empty() => String::new(),
+            (name, None) => format!("[job={name}] "),
+            (name, Some(k)) => format!("[job={name}/w{k}] "),
+        }
+    })
 }
 
 pub fn set_level(lvl: Level) {
@@ -89,7 +121,7 @@ pub fn log(lvl: Level, args: std::fmt::Arguments<'_>) {
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
     };
-    let job = JOB_PREFIX.with(|p| p.borrow().clone());
+    let job = render_prefix();
     eprintln!("[{h:02}:{m:02}:{s:02}.{:03} {tag}] {job}{args}",
               t.subsec_millis());
 }
@@ -136,14 +168,28 @@ mod tests {
     #[test]
     fn job_prefix_is_thread_local_and_clearable() {
         set_job_prefix("mlp-a");
-        JOB_PREFIX.with(|p| assert_eq!(&*p.borrow(), "[job=mlp-a] "));
+        assert_eq!(render_prefix(), "[job=mlp-a] ");
+        assert_eq!(current_job(), "mlp-a");
         // Another thread sees no tag.
         std::thread::spawn(|| {
-            JOB_PREFIX.with(|p| assert!(p.borrow().is_empty()));
+            assert!(render_prefix().is_empty());
+            assert!(current_job().is_empty());
         })
         .join()
         .unwrap();
         set_job_prefix("");
-        JOB_PREFIX.with(|p| assert!(p.borrow().is_empty()));
+        assert!(render_prefix().is_empty());
+    }
+
+    #[test]
+    fn worker_prefix_renders_job_slash_w_index() {
+        set_worker_prefix("lstm-b", 3);
+        assert_eq!(render_prefix(), "[job=lstm-b/w3] ");
+        // The owning job stays readable without the worker suffix.
+        assert_eq!(current_job(), "lstm-b");
+        // Re-tagging as a plain job drops the worker suffix.
+        set_job_prefix("lstm-b");
+        assert_eq!(render_prefix(), "[job=lstm-b] ");
+        set_job_prefix("");
     }
 }

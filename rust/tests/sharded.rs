@@ -1,0 +1,185 @@
+//! Data-parallel training invariants (hermetic; no artifacts, no PJRT).
+//!
+//! The contract under test — the tentpole of the sharded trainer: for a
+//! fixed seed and config, runs at `--workers` N ∈ {1, 2, 4} produce
+//! **bit-identical** loss trajectories, dispatch sequences, and final
+//! checkpoint tensors, on both hermetic backends and both
+//! architectures; and a checkpoint saved at one N resumes at another N
+//! (elastic resume) reproducing the uninterrupted trajectory exactly.
+//! The CI worker matrix re-runs this suite under `AD_WORKERS={1,4}` and
+//! an elastic-resume smoke drives the same contract through the CLI.
+
+use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
+                                  ModelFront, Schedule, Variant};
+use approx_dropout::data::{Corpus, MnistSyn};
+use approx_dropout::runtime::Manifest;
+
+fn host_caches() -> [ExecutorCache; 2] {
+    [ExecutorCache::reference(Manifest::builtin_test()),
+     ExecutorCache::sparse(Manifest::builtin_test())]
+}
+
+/// Everything the worker-count-invariance contract covers, in exact
+/// bits: per-step losses, the artifact dispatch sequence, and the final
+/// checkpoint's parameter/momentum payloads.
+#[derive(PartialEq, Debug)]
+struct Trajectory {
+    losses: Vec<u64>,
+    dispatched: Vec<String>,
+    ckpt_bits: Vec<Vec<u32>>,
+    step: u64,
+}
+
+fn ckpt_bits(ckpt: &approx_dropout::service::Checkpoint) -> Vec<Vec<u32>> {
+    ckpt.params
+        .iter()
+        .chain(&ckpt.momenta)
+        .map(|t| t.data.iter().map(|x| x.to_bits()).collect())
+        .collect()
+}
+
+fn fresh_mlp(cache: &ExecutorCache) -> (MlpTrainer, MnistSyn) {
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.25, 0.25], &[1, 2], false).unwrap();
+    let (train, _) = MnistSyn::train_test(256, 64, 42);
+    let tr = MlpTrainer::new(cache, "mlpsyn", schedule, train.n, 0.01, 7)
+        .unwrap();
+    (tr, train)
+}
+
+fn run_mlp_sharded(cache: &ExecutorCache, workers: usize, steps: usize)
+                   -> Trajectory {
+    let (mut tr, train) = fresh_mlp(cache);
+    tr.warmup().unwrap();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (loss, acc) =
+            tr.sharded(workers).unwrap().step_with(&train).unwrap();
+        assert!(loss.is_finite() && (0.0..=1.0).contains(&acc));
+        losses.push(loss.to_bits());
+    }
+    let ckpt = tr.checkpoint().unwrap();
+    Trajectory {
+        losses,
+        dispatched: tr.metrics.dispatched.clone(),
+        ckpt_bits: ckpt_bits(&ckpt),
+        step: ckpt.step,
+    }
+}
+
+fn run_lstm_sharded(cache: &ExecutorCache, workers: usize, steps: usize)
+                    -> Trajectory {
+    let schedule =
+        Schedule::new(Variant::Rdp, &[0.5, 0.5], &[1, 2], true).unwrap();
+    let corpus = Corpus::generate(64, 8000, 800, 800, 9);
+    let mut tr =
+        LstmTrainer::new(cache, "lstmsyn", schedule, &corpus.train, 0.1,
+                         13)
+        .unwrap();
+    tr.warmup().unwrap();
+    let mut losses = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let (loss, _) =
+            tr.sharded(workers).unwrap().step_with(&()).unwrap();
+        assert!(loss.is_finite());
+        losses.push(loss.to_bits());
+    }
+    let ckpt = tr.checkpoint().unwrap();
+    Trajectory {
+        losses,
+        dispatched: tr.metrics.dispatched.clone(),
+        ckpt_bits: ckpt_bits(&ckpt),
+        step: ckpt.step,
+    }
+}
+
+/// The leaf count is a pure function of batch geometry: largest divisor
+/// of the batch that is at most 8. Worker counts never enter — that is
+/// what makes the reduction order (and so the trajectory) elastic.
+#[test]
+fn shard_leaves_is_the_largest_divisor_at_most_eight() {
+    let cache = &host_caches()[0];
+    let (tr, _) = fresh_mlp(cache);
+    for (batch, want) in [(16, 8), (8, 8), (4, 4), (7, 7), (9, 3),
+                          (13, 1), (1, 1), (24, 8), (20, 5)] {
+        assert_eq!(tr.front.shard_leaves(batch), want,
+                   "batch {batch}");
+    }
+}
+
+#[test]
+fn zero_workers_is_rejected() {
+    let cache = &host_caches()[0];
+    let (mut tr, _) = fresh_mlp(cache);
+    let err = tr.sharded(0).unwrap_err().to_string();
+    assert!(err.contains(">= 1"), "pointed message, got: {err}");
+}
+
+/// MLP: N ∈ {1, 2, 4} runs are bit-identical in losses, dispatch
+/// sequence, and checkpoint payload, on both hermetic backends.
+#[test]
+fn mlp_sharded_runs_are_bitwise_identical_across_worker_counts() {
+    for cache in host_caches() {
+        let base = run_mlp_sharded(&cache, 1, 8);
+        assert_eq!(base.dispatched.len(), 8);
+        for n in [2, 4] {
+            let t = run_mlp_sharded(&cache, n, 8);
+            assert_eq!(base, t,
+                       "workers={n} diverged on {}",
+                       cache.backend().name());
+        }
+    }
+}
+
+/// LSTM: same contract (the bias-track variants shard over batch tracks
+/// whose recurrences evolve independently).
+#[test]
+fn lstm_sharded_runs_are_bitwise_identical_across_worker_counts() {
+    for cache in host_caches() {
+        let base = run_lstm_sharded(&cache, 1, 6);
+        for n in [2, 4] {
+            let t = run_lstm_sharded(&cache, n, 6);
+            assert_eq!(base, t,
+                       "workers={n} diverged on {}",
+                       cache.backend().name());
+        }
+    }
+}
+
+/// Elastic resume: train at N=1, checkpoint, resume the SAME config at
+/// N=4 — the combined trajectory and final tensors match an
+/// uninterrupted N=1 run bit for bit. This is why the worker count is
+/// excluded from the checkpoint config hash.
+#[test]
+fn elastic_resume_reshards_onto_more_workers_bitwise() {
+    for cache in host_caches() {
+        // Uninterrupted baseline: 12 sharded steps at N=1.
+        let full = run_mlp_sharded(&cache, 1, 12);
+
+        // First half at N=1 ...
+        let (mut a, train) = fresh_mlp(&cache);
+        a.warmup().unwrap();
+        for _ in 0..6 {
+            a.sharded(1).unwrap().step_with(&train).unwrap();
+        }
+        let mid = a.checkpoint().unwrap();
+
+        // ... resumed at N=4 for the second half.
+        let (mut b, train_b) = fresh_mlp(&cache);
+        b.warmup().unwrap();
+        b.restore(&mid).unwrap();
+        let mut tail_losses = Vec::new();
+        for _ in 0..6 {
+            let (loss, _) =
+                b.sharded(4).unwrap().step_with(&train_b).unwrap();
+            tail_losses.push(loss.to_bits());
+        }
+        let end = b.checkpoint().unwrap();
+
+        assert_eq!(tail_losses, full.losses[6..],
+                   "resumed tail diverged on {}", cache.backend().name());
+        assert_eq!(ckpt_bits(&end), full.ckpt_bits,
+                   "final tensors diverged on {}", cache.backend().name());
+        assert_eq!(end.step, full.step);
+    }
+}

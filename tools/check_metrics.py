@@ -48,6 +48,8 @@ REQUIRED_INSTRUMENTS = (
     "infer_batches",
     "infer_batch_occupancy",
     "infer_latency_s",
+    "worker_sync_wait_s",
+    "allreduce_total",
 )
 
 

@@ -3,6 +3,7 @@
 
 Usage:
     check_resume_smoke.py FIRST.json RESUMED.json FULL.json
+                          [--workers N1,N2]
 
 FIRST   — curve of a run that trained N steps and wrote a checkpoint
 RESUMED — curve of a run that resumed that checkpoint and trained M more
@@ -12,8 +13,15 @@ Asserts the concatenation FIRST + RESUMED equals FULL *exactly* — step
 numbers, losses and accuracies — i.e. resume reproduces the trajectory
 bit-for-bit (curve JSON carries shortest-round-trip f64 decimals, so
 float equality after json.load is bit equality).
+
+--workers N1,N2 labels an *elastic* resume: FIRST ran with N1
+data-parallel workers and RESUMED re-sharded onto N2. The assertion is
+unchanged — worker counts must not perturb the trajectory (that is the
+reduction-tree contract, DESIGN.md §13) — but the labels make a failure
+report say which elasticity leg diverged. FULL is expected at N1.
 """
 
+import argparse
 import json
 import sys
 
@@ -25,12 +33,32 @@ def rows(path):
 
 
 def main():
-    if len(sys.argv) != 4:
-        print(__doc__)
-        return 2
-    first, resumed, full = map(rows, sys.argv[1:4])
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("first")
+    ap.add_argument("resumed")
+    ap.add_argument("full")
+    ap.add_argument("--workers", default=None,
+                    help="N1,N2 — worker counts of the first and "
+                         "resumed runs (elastic-resume labeling)")
+    args = ap.parse_args()
+    label_first, label_resumed = "first", "resumed"
+    if args.workers is not None:
+        try:
+            n1, n2 = (int(x) for x in args.workers.split(","))
+        except ValueError:
+            print(f"bad --workers {args.workers!r} (want N1,N2)")
+            return 2
+        if n1 < 1 or n2 < 1:
+            print(f"bad --workers {args.workers!r} (counts must be >= 1)")
+            return 2
+        label_first = f"first[w{n1}]"
+        label_resumed = f"resumed[w{n2}]"
+    first, resumed, full = map(rows, (args.first, args.resumed, args.full))
     stitched = first + resumed
-    print(f"first: {len(first)} steps, resumed: {len(resumed)} steps, "
+    print(f"{label_first}: {len(first)} steps, "
+          f"{label_resumed}: {len(resumed)} steps, "
           f"full: {len(full)} steps")
     if len(stitched) != len(full):
         print(f"FAIL: stitched has {len(stitched)} steps, full has "
