@@ -16,6 +16,14 @@
 //! knob) against the same dense baseline; larger windows amortize the
 //! cached kept-row weight panels over more timesteps.
 //!
+//! A `dyn-bwd` section re-times the row-skip configurations with the
+//! sparse backend's **dynamic backward sparsity** enabled (`AD_DYN_BWD`;
+//! plan `DynMask` nodes skipping runtime-dead gradient rows), paired
+//! against a static-only run so each row carries both `speedup_vs_dense`
+//! and the isolated `dyn_vs_static` ratio. All other sections pin
+//! dynamic masks OFF, so their rows measure the same static-skip work
+//! they always did.
+//!
 //! When the CPU has SIMD microkernels (AVX2+FMA / NEON; see
 //! `runtime::sparse::simd`), a second section re-times the GEMM-dominated
 //! `mlpsyn` configurations on the scalar microkernels (`<config>@scalar`
@@ -34,6 +42,8 @@
 //! `AD_BENCH_REPS` (timed steps per configuration), `AD_THREADS`
 //! (sparse worker pool size), `AD_SIMD` (microkernel selection).
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use approx_dropout::bench::drivers::env_usize;
@@ -44,7 +54,8 @@ use approx_dropout::coordinator::{ExecutorCache, LstmTrainer, MlpTrainer,
 use approx_dropout::data::{Corpus, MnistSyn};
 use approx_dropout::obs::trace;
 use approx_dropout::runtime::sparse::threads_from_env;
-use approx_dropout::runtime::{ArchMeta, Manifest, SparseKernels};
+use approx_dropout::runtime::{ArchMeta, Manifest, SparseBackend,
+                              SparseKernels};
 use approx_dropout::util::json::Json;
 
 const SUPPORT: &[usize] = &[1, 2, 4];
@@ -152,6 +163,18 @@ fn drain_phases() -> Json {
 
 impl Sink {
     fn push(&mut self, ctx: &RowCtx<'_>, r: &BenchResult, dense_s: f64) {
+        self.push_row(ctx, r, dense_s, None);
+    }
+
+    /// A `dyn-bwd` row: the same schema plus `dyn_vs_static`, the paired
+    /// dyn-enabled-vs-static-only ratio on the identical configuration.
+    fn push_dyn(&mut self, ctx: &RowCtx<'_>, r: &BenchResult,
+                dense_s: f64, static_s: f64) {
+        self.push_row(ctx, r, dense_s, Some(static_s / r.median_s));
+    }
+
+    fn push_row(&mut self, ctx: &RowCtx<'_>, r: &BenchResult,
+                dense_s: f64, dyn_vs_static: Option<f64>) {
         let speedup = dense_s / r.median_s;
         self.table.row(&[ctx.arch.to_string(), format!("{}", ctx.rate),
                          ctx.label.to_string(),
@@ -174,6 +197,9 @@ impl Sink {
         if let Some(w) = ctx.window {
             row.push(("window", Json::num(w as f64)));
         }
+        if let Some(ratio) = dyn_vs_static {
+            row.push(("dyn_vs_static", Json::num(ratio)));
+        }
         row.push(("phase_s", drain_phases()));
         self.report.row(row);
     }
@@ -195,7 +221,15 @@ fn main() -> Result<()> {
         ArchMeta::Lstm { seq, .. } => *seq,
         _ => unreachable!("lstmsyn is an LSTM arch"),
     };
-    let cache = ExecutorCache::sparse(manifest);
+    // Static sections pin dynamic backward sparsity OFF so every
+    // pre-existing row keeps measuring exactly what it always measured
+    // (static structured skips only) regardless of `AD_DYN_BWD`; the
+    // dyn-bwd section below times the dynamic layer against these.
+    let cache = ExecutorCache::new(
+        Arc::new(SparseBackend::with_kernels(
+            SparseKernels::auto().with_dyn(false))),
+        manifest,
+    );
     let (mnist, _) = MnistSyn::train_test(512, 64, 42);
     let bencher = Bencher {
         mnist,
@@ -226,10 +260,11 @@ fn main() -> Result<()> {
                             "median step", "steps/s", "speedup"]),
     };
 
-    // Dense lstmsyn medians per rate, reused as the baseline for the
-    // windowed section (conventional dropout has no time-window axis —
-    // re-timing it per window would only duplicate its gate key).
-    let mut lstm_dense: Vec<(f64, f64)> = Vec::new();
+    // Dense medians per (arch, rate), reused as the baseline for the
+    // windowed and dyn-bwd sections (conventional dropout has no
+    // time-window or dynamic-mask axis — re-timing it per section would
+    // only duplicate its gate key).
+    let mut dense_med: Vec<(&str, f64, f64)> = Vec::new();
     for arch in ["mlpsyn", "lstmsyn"] {
         for &rate in RATES {
             let mut dense_s = f64::NAN;
@@ -237,9 +272,7 @@ fn main() -> Result<()> {
                 let r = bencher.run(&cache, arch, rate, cfg)?;
                 if cfg.label == "dense" {
                     dense_s = r.median_s;
-                    if arch == "lstmsyn" {
-                        lstm_dense.push((rate, dense_s));
-                    }
+                    dense_med.push((arch, rate, dense_s));
                 }
                 let window =
                     (arch == "lstmsyn").then_some(lstm_seq);
@@ -257,12 +290,14 @@ fn main() -> Result<()> {
     // per-(site, window) prepped weight panels amortize over N steps of
     // forward+backward, so speedup should grow with N. W = seq rows are
     // the unannotated `row-skip` / `tile-skip` rows above.
+    let dense_of = |meds: &[(&str, f64, f64)], arch: &str, rate: f64| {
+        meds.iter()
+            .find(|&&(a, r0, _)| a == arch && r0 == rate)
+            .map(|&(_, _, d)| d)
+            .unwrap_or(f64::NAN)
+    };
     for &rate in RATES {
-        let dense_s = lstm_dense
-            .iter()
-            .find(|&&(r0, _)| r0 == rate)
-            .map(|&(_, d)| d)
-            .unwrap_or(f64::NAN);
+        let dense_s = dense_of(&dense_med, "lstmsyn", rate);
         for &w in WINDOWS {
             for cfg in CFGS.iter().filter(|c| c.label != "dense") {
                 let r = bencher.run_lstm(&cache, "lstmsyn", rate, cfg,
@@ -276,12 +311,49 @@ fn main() -> Result<()> {
         }
     }
 
+    // Dynamic-backward section: the first net-new consumer of the
+    // SparsityPlan IR. `dyn-bwd` rows re-time the row-skip (RDP)
+    // configuration with dynamic masks ON — the backward pass skips
+    // runtime-dead gradient rows (ReLU-zero units; the LSTM's zero
+    // initial state at t==0) on top of the static pattern — paired
+    // against a static-only run of the identical configuration.
+    // `speedup_vs_dense` keeps the rows comparable to the rest of the
+    // table; `dyn_vs_static` isolates what the dynamic layer adds.
+    {
+        let dyn_cache = ExecutorCache::new(
+            Arc::new(SparseBackend::with_kernels(
+                SparseKernels::auto().with_dyn(true))),
+            Manifest::builtin_test(),
+        );
+        let rdp = &CFGS[1];
+        debug_assert_eq!(rdp.label, "row-skip");
+        for arch in ["mlpsyn", "lstmsyn"] {
+            for &rate in RATES {
+                let dense_s = dense_of(&dense_med, arch, rate);
+                // Paired back-to-back runs: the static re-measurement
+                // (not the earlier row-skip row) is the denominator, so
+                // machine drift between sections cancels out.
+                let rs = bencher.run(&cache, arch, rate, rdp)?;
+                let rd = bencher.run(&dyn_cache, arch, rate, rdp)?;
+                sink.push_dyn(
+                    &RowCtx { arch, rate, label: "dyn-bwd",
+                              variant: Variant::Rdp, microkernel: mk,
+                              window: (arch == "lstmsyn")
+                                  .then_some(lstm_seq) },
+                    &rd, dense_s, rs.median_s);
+            }
+        }
+    }
+
     // SIMD-vs-scalar section: only meaningful when the active
     // microkernel is actually vectorized. The GEMM-dominated mlpsyn
     // configurations are where the microkernel layer carries the load.
     if mk != "scalar" {
-        let scalar_cache =
-            ExecutorCache::sparse_scalar(Manifest::builtin_test());
+        let scalar_cache = ExecutorCache::new(
+            Arc::new(SparseBackend::with_kernels(
+                SparseKernels::scalar().with_dyn(false))),
+            Manifest::builtin_test(),
+        );
         for &rate in SIMD_CMP_RATES {
             let mut dense_s = f64::NAN;
             for cfg in CFGS {
@@ -311,8 +383,11 @@ fn main() -> Result<()> {
               should track row-skip (fig. 7/8). The @wN rows re-draw the \
               LSTM pattern every N timesteps (AD_TIME_WINDOW equivalent) \
               — larger windows amortize the cached weight panels and \
-              should widen the LSTM speedup. The @scalar rows isolate \
-              the SIMD microkernel contribution on the GEMM-dominated \
-              mlpsyn configs (AD_SIMD=off equivalent).");
+              should widen the LSTM speedup. The dyn-bwd rows re-time \
+              row-skip with dynamic backward masks on (AD_DYN_BWD): the \
+              backward pass additionally skips runtime-dead gradient \
+              rows, so dyn_vs_static should be >= 1.0. The @scalar rows \
+              isolate the SIMD microkernel contribution on the \
+              GEMM-dominated mlpsyn configs (AD_SIMD=off equivalent).");
     Ok(())
 }

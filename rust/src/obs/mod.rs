@@ -11,6 +11,7 @@
 //! | `dispatch_total`            | `coordinator/driver.rs` per step      |
 //! | `sparse_{rows,tiles}_*`     | `runtime/sparse/kernels.rs` per GEMM  |
 //! | `sparse_panel_bytes`        | sparse `prep` panel packing           |
+//! | `sparse_dyn_rows_*`         | sparse dyn-mask node paths (bwd)      |
 //! | `gate_{wait,hold}_s`, depth | `service/scheduler.rs` `SlotGate`     |
 //! | `infer_*`                   | `service/infer.rs` worker loop        |
 //! | `worker_sync_wait_s`        | `coordinator/driver.rs` sharded step  |
@@ -136,7 +137,9 @@ mod tests {
                 r.get("instrument").and_then(|i| i.as_str()) == Some(name)
             })
         };
-        for name in ["dispatch_total", "sparse_rows_kept", "gate_wait_s",
+        for name in ["dispatch_total", "sparse_rows_kept",
+                     "sparse_dyn_rows_kept", "sparse_dyn_rows_dropped",
+                     "gate_wait_s",
                      "gate_queue_depth", "infer_latency_s",
                      "infer_batch_occupancy", "worker_sync_wait_s",
                      "allreduce_total"] {

@@ -227,6 +227,12 @@ pub static SPARSE_TILES_KEPT: Counter = Counter::new();
 pub static SPARSE_TILES_DROPPED: Counter = Counter::new();
 /// Bytes packed into per-(site, window) kept-row weight panels.
 pub static SPARSE_PANEL_BYTES: Counter = Counter::new();
+/// Shared-dimension rows the dynamic backward masks (plan `DynMask`
+/// nodes: ReLU-zero columns, zero LSTM initial state) kept / skipped on
+/// top of the static pattern — separate from the static row counters so
+/// `AD_DYN_BWD=off` runs stay comparable.
+pub static SPARSE_DYN_ROWS_KEPT: Counter = Counter::new();
+pub static SPARSE_DYN_ROWS_DROPPED: Counter = Counter::new();
 
 /// Backend-slot gate: time spent waiting for a slot, time a slot was
 /// held, and the live waiter-queue depth (+peak).
@@ -274,6 +280,10 @@ pub fn snapshot_all() -> Vec<InstrumentSnapshot> {
                      value: SPARSE_TILES_DROPPED.get() },
         S::Counter { name: "sparse_panel_bytes",
                      value: SPARSE_PANEL_BYTES.get() },
+        S::Counter { name: "sparse_dyn_rows_kept",
+                     value: SPARSE_DYN_ROWS_KEPT.get() },
+        S::Counter { name: "sparse_dyn_rows_dropped",
+                     value: SPARSE_DYN_ROWS_DROPPED.get() },
         S::Histogram { name: "gate_wait_s", h: GATE_WAIT_S.snapshot() },
         S::Histogram { name: "gate_hold_s", h: GATE_HOLD_S.snapshot() },
         S::Gauge { name: "gate_queue_depth",

@@ -14,6 +14,7 @@ pub mod backend;
 #[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod manifest;
+pub mod plan;
 pub mod reference;
 pub mod sparse;
 pub mod state;
@@ -27,6 +28,8 @@ pub use engine::{Engine, Executable, PjrtBackend};
 pub use manifest::{lstm_artifacts, mlp_artifacts, ArchMeta, ArtifactMeta,
                    Dtype, Kind, LstmArchSpec, Manifest, MlpArchSpec,
                    TensorMeta};
+pub use plan::{DynMask, Feed, FeedRun, GemmNode, Kept, NtNode,
+               SparsityPlan, TnNode};
 pub use reference::ReferenceBackend;
 pub use sparse::{SparseBackend, SparseKernels};
 pub use state::{InferOut, TrainState};

@@ -1,0 +1,618 @@
+//! The sparsity-plan IR: the single module where "what can this step
+//! skip" is decided. Everything upstream of the kernels that used to
+//! derive structure ad hoc — the per-site [`Skip`] tags, the
+//! activation/weight [`Feed`] transforms, the window/run grouping of
+//! `[seq]` b0 tracks, the dp=1 degeneration, the pattern validation —
+//! lives here, so that the step interpreter *executes* a
+//! [`SparsityPlan`] and the [`Kernels`](crate::runtime::step::Kernels)
+//! implementations *lower* plan nodes, with neither re-deciding
+//! sparsity.
+//!
+//! Three layers of structure, in decreasing order of staticness:
+//!
+//! 1. **Static skips** ([`Skip`]): regular row/tile dropout patterns
+//!    from the coordinator's per-step draw (paper section III). Known
+//!    before the step runs; encoded in the variant extras (b0 bias
+//!    scalars for the MLP, `[seq]` b0 tracks for the LSTM) and decoded
+//!    here by [`SparsityPlan::per_step`] / [`SparsityPlan::windowed`].
+//! 2. **Window/run grouping** ([`FeedRun`]): consecutive timesteps
+//!    sharing one draw (`AD_TIME_WINDOW`), which is what lets weight
+//!    preparation be paid once per (site, window).
+//! 3. **Dynamic masks** ([`DynMask`]): zeros discovered at runtime —
+//!    ReLU-dead activation columns, the architecturally-zero LSTM
+//!    initial state — that the *backward* GEMMs may additionally skip
+//!    (TensorDash-style, arXiv 2009.00748). Dynamic masks ride on the
+//!    plan's GEMM nodes ([`TnNode`], [`NtNode`]) and are advisory: a
+//!    backend that ignores them is still correct, and a backend that
+//!    honors them must not change any observable value (see the
+//!    exactness notes on [`DynMask`]).
+//!
+//! Dynamic masks must never perturb RNG draw order or the dispatch
+//! sequence: they are derived from values the forward pass already
+//! produced, consume no randomness, and only ever *restrict* work
+//! inside a kernel call — the calls themselves (count, order, shapes)
+//! are identical with dynamism on or off. That invariant is what keeps
+//! loss curves, checkpoint bytes, and dispatch traces bit-identical
+//! across `AD_DYN_BWD` settings on the scalar paths.
+
+use anyhow::{bail, Result};
+
+use crate::patterns::{RowPattern, TilePattern};
+use crate::runtime::backend::HostTensor;
+use crate::runtime::manifest::ArtifactMeta;
+use crate::runtime::step::kernels::PreppedWeight;
+
+// ---------------------------------------------------------------------------
+// Static structure: Skip and its kept-set view
+// ---------------------------------------------------------------------------
+
+/// Structural sparsity of one GEMM operand/axis. A `Skip` describes
+/// zeros that are *known before the kernel runs* because they come from
+/// a regular dropout pattern, not from data. See the `Kernels` trait
+/// docs for the exact contract per method.
+#[derive(Clone, Copy, Debug)]
+pub enum Skip {
+    Dense,
+    Rows(RowPattern),
+    Tiles(TilePattern),
+}
+
+/// The kept set of a [`Skip`] along one axis — the structured answer to
+/// "which indices survive": everything, a flat row list, or a tile
+/// pattern (which never flattens to per-index form; tile kernels walk
+/// the grid via [`TilePattern::kept_tiles`]).
+#[derive(Clone, Debug)]
+pub enum Kept {
+    /// No structure: every index of the axis is kept.
+    All,
+    /// Kept indices along the axis, ascending.
+    Rows(Vec<usize>),
+    /// Tile-granular structure over a `[k, n]` weight; per-tile kept
+    /// info, not per-index.
+    Tiles(TilePattern),
+}
+
+impl Skip {
+    /// Kept structure along an axis of width `dim`. Total — `Tiles`
+    /// returns its pattern instead of panicking; callers that need a
+    /// flat index list match on [`Kept::Rows`] and treat the other
+    /// arms explicitly.
+    pub fn kept(&self, dim: usize) -> Kept {
+        match self {
+            Skip::Dense => Kept::All,
+            Skip::Rows(p) => {
+                debug_assert_eq!(p.m, dim, "Rows skip width mismatch");
+                Kept::Rows(p.kept_indices())
+            }
+            Skip::Tiles(t) => Kept::Tiles(*t),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, Skip::Dense)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dropout-site transforms (the masked-dense form of the compact graphs)
+// ---------------------------------------------------------------------------
+
+/// How one dropout site transforms the value it guards. The `skip`
+/// fields carry the *structure* of the mask down to the kernels, which
+/// is what lets the sparse backend never touch dropped coordinates.
+pub enum Feed {
+    /// No dropout at this site (layer-0 inputs, eval graphs).
+    Plain,
+    /// Activation mask + inverted-dropout scale: `conv` (per-element
+    /// Bernoulli matrix, `rows == batch`, `skip == Dense`) and `rdp`
+    /// (row-pattern keep vector, `rows == 1`, broadcast over the batch,
+    /// `skip == Rows`).
+    Act { m: Vec<f32>, rows: usize, s: f32, skip: Skip },
+    /// Weight mask (`tdp` DropConnect at tile granularity): the matmul
+    /// runs against `w ∘ mask` (`skip == Tiles`), the scale applies to
+    /// the product.
+    Weight { s: f32, skip: Skip },
+}
+
+impl Feed {
+    /// Structural skip this site contributes to adjacent matmuls.
+    pub fn skip(&self) -> Skip {
+        match self {
+            Feed::Plain => Skip::Dense,
+            Feed::Act { skip, .. } | Feed::Weight { skip, .. } => *skip,
+        }
+    }
+
+    /// Apply an activation mask to `x [b, h]` (no-op for Plain/Weight).
+    pub fn mask_act(&self, x: &[f32], b: usize, h: usize) -> Vec<f32> {
+        match self {
+            Feed::Act { m, rows, s, .. } => {
+                let mut out = Vec::with_capacity(b * h);
+                for bi in 0..b {
+                    let mrow = if *rows == 1 {
+                        &m[..h]
+                    } else {
+                        let r = bi % rows;
+                        &m[r * h..(r + 1) * h]
+                    };
+                    let xrow = &x[bi * h..(bi + 1) * h];
+                    for (xv, mv) in xrow.iter().zip(mrow) {
+                        out.push(xv * mv * s);
+                    }
+                }
+                out
+            }
+            _ => x.to_vec(),
+        }
+    }
+}
+
+/// One contiguous run of timesteps sharing a single pattern draw — a
+/// *time window* of the unrolled sequence. Timesteps `t0..t1` of the
+/// owning site all use `feed`, so weight preparation for the run is
+/// paid once and reused across the window's forward, backward, and
+/// softmax GEMMs. The per-step default degenerates to one run per site
+/// covering `0..seq`.
+pub struct FeedRun {
+    pub t0: usize,
+    pub t1: usize,
+    pub feed: Feed,
+}
+
+/// Row pattern with input validation (bail, not panic).
+pub fn row_pattern_checked(m: usize, dp: usize, b0: usize)
+                           -> Result<RowPattern> {
+    if dp == 0 || dp > m {
+        bail!("rdp: dp={dp} out of range for layer width {m}");
+    }
+    if b0 >= dp {
+        bail!("rdp: bias b0={b0} must be < dp={dp}");
+    }
+    Ok(RowPattern::new(m, dp, b0))
+}
+
+/// Tile pattern with input validation.
+pub fn tile_pattern_checked(k: usize, n: usize, dp: usize, b0: usize,
+                            tile: usize) -> Result<TilePattern> {
+    if dp == 0 {
+        bail!("tdp: dp must be >= 1");
+    }
+    if b0 >= dp {
+        bail!("tdp: bias b0={b0} must be < dp={dp}");
+    }
+    let (tr, tc) = (crate::patterns::pick_block(k, tile),
+                    crate::patterns::pick_block(n, tile));
+    let (tk, tn) = (k / tr, n / tc);
+    if tn % dp != 0 && tk % dp != 0 {
+        bail!("tdp: dp={dp} must divide one tile-grid edge of {tk}x{tn} \
+               (weight {k}x{n}, tile {tr}x{tc})");
+    }
+    Ok(TilePattern::new(k, n, dp, b0, tile))
+}
+
+// ---------------------------------------------------------------------------
+// The plan: per-step, per-site static structure
+// ---------------------------------------------------------------------------
+
+/// The per-step sparsity plan: for every dropout site, the windowed
+/// [`FeedRun`]s decoded from the variant extras the coordinator front
+/// assembled (`push_bias_scalars` / `push_bias_tracks` /
+/// `push_scale_scalars`). Built once per executed step; the step
+/// interpreter executes it and never re-derives structure.
+pub struct SparsityPlan {
+    sites: Vec<Vec<FeedRun>>,
+}
+
+impl SparsityPlan {
+    /// Decode per-step extras (the MLP convention: one b0 scalar — or
+    /// conv mask — plus one scale per site) into a single-run-per-site
+    /// plan. `widths[i]` is the activation width guarded by site i (for
+    /// rdp masks); `wdims[i]` the weight matrix dims guarded by site i
+    /// (for tdp masks).
+    pub fn per_step(meta: &ArtifactMeta, extras: &[&HostTensor],
+                    widths: &[usize], wdims: &[(usize, usize)])
+                    -> Result<SparsityPlan> {
+        let sites = widths.len();
+        check_extras(meta, extras, sites)?;
+        let mut out = Vec::with_capacity(sites);
+        for i in 0..sites {
+            let s = extras[sites + i].as_f32()?[0];
+            let feed = match meta.variant.as_str() {
+                "conv" => Feed::Act {
+                    m: extras[i].as_f32()?.to_vec(),
+                    rows: extras[i].shape()[0],
+                    s,
+                    skip: Skip::Dense,
+                },
+                "rdp" | "tdp" => {
+                    let b0 = extras[i].as_i32()?[0];
+                    pattern_feed(meta, i, b0, widths[i], wdims[i], s)?
+                }
+                other => bail!("step interpreter: unknown variant \
+                                '{other}'"),
+            };
+            out.push(vec![FeedRun { t0: 0, t1: 1, feed }]);
+        }
+        Ok(SparsityPlan { sites: out })
+    }
+
+    /// Decode windowed extras (the LSTM convention: rdp/tdp extras are
+    /// `[seq]` i32 b0 tracks — entry `t` is the kept residue for
+    /// timestep `t`, constant within each time window — and consecutive
+    /// equal entries group into one [`FeedRun`]). The plan is thus
+    /// entirely data-driven: the per-step default arrives as a constant
+    /// track and produces exactly one run per site, while a windowed
+    /// coordinator produces one run per window with no runtime knob
+    /// involved. Conv masks are per-step: one run covering the
+    /// sequence.
+    pub fn windowed(meta: &ArtifactMeta, extras: &[&HostTensor],
+                    seq: usize, widths: &[usize],
+                    wdims: &[(usize, usize)]) -> Result<SparsityPlan> {
+        let sites = widths.len();
+        check_extras(meta, extras, sites)?;
+        let mut out = Vec::with_capacity(sites);
+        for i in 0..sites {
+            let s = extras[sites + i].as_f32()?[0];
+            match meta.variant.as_str() {
+                "conv" => {
+                    out.push(vec![FeedRun {
+                        t0: 0,
+                        t1: seq,
+                        feed: Feed::Act {
+                            m: extras[i].as_f32()?.to_vec(),
+                            rows: extras[i].shape()[0],
+                            s,
+                            skip: Skip::Dense,
+                        },
+                    }]);
+                }
+                "rdp" | "tdp" => {
+                    let track = extras[i].as_i32()?;
+                    if track.len() != seq {
+                        bail!("{}: b0 track for site {i} has {} entries, \
+                               seq is {seq}", meta.name, track.len());
+                    }
+                    let mut runs = Vec::new();
+                    let mut t0 = 0;
+                    while t0 < seq {
+                        let b0 = track[t0];
+                        let mut t1 = t0 + 1;
+                        while t1 < seq && track[t1] == b0 {
+                            t1 += 1;
+                        }
+                        let feed = pattern_feed(meta, i, b0, widths[i],
+                                                wdims[i], s)?;
+                        runs.push(FeedRun { t0, t1, feed });
+                        t0 = t1;
+                    }
+                    out.push(runs);
+                }
+                other => bail!("step interpreter: unknown variant \
+                                '{other}'"),
+            }
+        }
+        Ok(SparsityPlan { sites: out })
+    }
+
+    /// Number of dropout sites in the plan.
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// The windowed runs of site `i` (contiguous, covering the
+    /// sequence by construction).
+    pub fn runs(&self, i: usize) -> &[FeedRun] {
+        &self.sites[i]
+    }
+
+    /// Single-run accessor for per-step plans (the MLP shape).
+    pub fn feed(&self, i: usize) -> &Feed {
+        debug_assert_eq!(self.sites[i].len(), 1,
+                         "feed() on a multi-run site");
+        &self.sites[i][0].feed
+    }
+
+    /// `out[site][t]` -> index of the run covering timestep `t`.
+    pub fn run_lookup(&self, seq: usize) -> Vec<Vec<usize>> {
+        self.sites
+            .iter()
+            .map(|rs| {
+                let mut v = vec![0usize; seq];
+                for (ri, r) in rs.iter().enumerate() {
+                    for t in r.t0..r.t1 {
+                        v[t] = ri;
+                    }
+                }
+                v
+            })
+            .collect()
+    }
+}
+
+fn check_extras(meta: &ArtifactMeta, extras: &[&HostTensor],
+                sites: usize) -> Result<()> {
+    if extras.len() != 2 * sites {
+        bail!("{}: expected {} variant extras, got {}", meta.name,
+              2 * sites, extras.len());
+    }
+    if meta.variant != "conv" && meta.dp.len() != sites {
+        bail!("{}: manifest dp {:?} does not cover {} sites", meta.name,
+              meta.dp, sites);
+    }
+    Ok(())
+}
+
+/// Build one rdp/tdp [`Feed`] for site `i` from a single `(dp, b0)`
+/// draw — shared by the per-step and windowed decoders.
+fn pattern_feed(meta: &ArtifactMeta, i: usize, b0: i32, width: usize,
+                wdim: (usize, usize), s: f32) -> Result<Feed> {
+    if b0 < 0 {
+        bail!("{}: negative bias {b0}", meta.variant);
+    }
+    let dp = meta.dp[i];
+    match meta.variant.as_str() {
+        "rdp" => {
+            let pat = row_pattern_checked(width, dp, b0 as usize)?;
+            // dp=1 keeps every unit: no structure for the kernels to
+            // exploit (the 1/(1-p) scale still applies through the
+            // mask).
+            let skip = if dp == 1 {
+                Skip::Dense
+            } else {
+                Skip::Rows(pat)
+            };
+            Ok(Feed::Act { m: pat.mask(), rows: 1, s, skip })
+        }
+        "tdp" => {
+            let (k, n) = wdim;
+            let pat = tile_pattern_checked(k, n, dp, b0 as usize,
+                                           meta.tile)?;
+            // dp=1 keeps every tile: skip the mask/tile walks.
+            let skip = if dp == 1 {
+                Skip::Dense
+            } else {
+                Skip::Tiles(pat)
+            };
+            Ok(Feed::Weight { s, skip })
+        }
+        other => bail!("step interpreter: unknown variant '{other}'"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dynamic masks: runtime-discovered zeros for the backward GEMMs
+// ---------------------------------------------------------------------------
+
+/// Units (columns of a `[m, n]` activation or gradient buffer)
+/// discovered *dead at runtime*: every one of the buffer's `m` rows is
+/// exactly zero there. `live` is the intersection of the static kept
+/// set with the non-dead columns; `total` is the static kept count the
+/// mask refined (for touched/skipped accounting).
+///
+/// Exactness: a kernel that honors a `DynMask` restricts its work to
+/// `live`. For TN gradient accumulation this is bitwise exact by
+/// construction — a dead unit contributes only `acc += 0.0 * x` terms,
+/// which both the dense loops and the sparse `axpy_panel` already skip
+/// elementwise — so honoring the mask skips exactly the terms every
+/// backend already skips. For NT input-gradient columns the restriction
+/// leaves the dead columns zero instead of computing them; that is only
+/// value-preserving when the consumer provably zeroes them anyway
+/// (the MLP's ReLU-derivative gate: a unit whose forward activation is
+/// zero for every row gates its entire gradient column to zero). The
+/// step interpreter attaches NT masks only at gated sites; the LSTM
+/// BPTT input gradients have no such gate and never carry one.
+pub struct DynMask {
+    /// Live column indices, ascending (`live ⊆` static kept set).
+    pub live: Vec<usize>,
+    /// Static kept count of the axis before dynamic refinement.
+    pub total: usize,
+}
+
+impl DynMask {
+    /// Scan a `[m, n]` buffer for dead columns under the static `skip`
+    /// of the same axis. Returns `None` for `Tiles` skips (tile
+    /// structure does not flatten to a column list; the tile kernels
+    /// keep their static walks). The scan is one pass over data the
+    /// caller just materialized and consumes no randomness.
+    pub fn scan_cols(x: &[f32], m: usize, n: usize, skip: &Skip)
+                     -> Option<DynMask> {
+        debug_assert_eq!(x.len(), m * n);
+        let mut nonzero = vec![false; n];
+        for row in x.chunks(n) {
+            for (f, &v) in nonzero.iter_mut().zip(row) {
+                *f |= v != 0.0;
+            }
+        }
+        let (live, total) = match skip.kept(n) {
+            Kept::All => {
+                ((0..n).filter(|&j| nonzero[j]).collect::<Vec<_>>(), n)
+            }
+            Kept::Rows(kept) => {
+                let t = kept.len();
+                (kept.into_iter().filter(|&j| nonzero[j]).collect(), t)
+            }
+            Kept::Tiles(_) => return None,
+        };
+        Some(DynMask { live, total })
+    }
+
+    /// The mask of an architecturally-zero operand — the LSTM's initial
+    /// hidden state at `t == 0`, known dead without scanning. Every
+    /// column is dropped.
+    pub fn zero_state(k: usize) -> DynMask {
+        DynMask { live: Vec::new(), total: k }
+    }
+
+    /// Columns the mask newly discovered dead.
+    pub fn dropped(&self) -> usize {
+        self.total - self.live.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM nodes: what the step interpreter hands the kernels
+// ---------------------------------------------------------------------------
+
+/// One forward GEMM site of the plan (`C[m,n] = A[m,k] @ B[k,n]`):
+/// static structure plus an optional prepared-weight handle.
+pub struct GemmNode<'a> {
+    /// Structure along the shared dim (`Rows`: A's dropped columns are
+    /// exactly zero; `Tiles`: B is tile-masked).
+    pub k_skip: Skip,
+    /// `Rows`: output columns outside the kept set may be left exactly
+    /// zero (the caller masks them before any further use).
+    pub out_skip: Skip,
+    /// Per-(site, window) prepared weight, when the site preps one.
+    pub pw: Option<&'a PreppedWeight>,
+}
+
+/// One backward input-gradient GEMM (`C[m,k] = A[m,n] @ B[k,n]^T`).
+pub struct NtNode<'a> {
+    /// `Rows`: output columns (the k axis) outside the kept set may be
+    /// left zero; `Tiles`: B is tile-masked.
+    pub skip: Skip,
+    /// Prepared weight handle, when the site preps one.
+    pub pw: Option<&'a PreppedWeight>,
+    /// Dynamically-dead output columns a backend may additionally leave
+    /// zero. Attached only where a downstream gate makes that exact
+    /// (see [`DynMask`]).
+    pub dyn_cols: Option<&'a DynMask>,
+}
+
+/// One weight-gradient accumulation (`C[k,n] += A[m,k]^T @ B[m,n]`).
+pub struct TnNode<'a> {
+    /// `Rows`: A's columns (C's rows) outside the kept set are exactly
+    /// zero — dropped gradient rows receive no accumulation. `Tiles`:
+    /// only C's kept tiles receive accumulation.
+    pub row_skip: Skip,
+    /// `Rows`: B's columns (C's columns) outside the kept set are
+    /// exactly zero. Never `Tiles`.
+    pub col_skip: Skip,
+    /// Dynamically-dead gradient rows (dead columns of A) a backend may
+    /// skip outright — bitwise exact, see [`DynMask`].
+    pub dyn_rows: Option<&'a DynMask>,
+}
+
+impl<'a> GemmNode<'a> {
+    pub fn new(k_skip: Skip, out_skip: Skip) -> Self {
+        GemmNode { k_skip, out_skip, pw: None }
+    }
+
+    pub fn with_pw(mut self, pw: &'a PreppedWeight) -> Self {
+        self.pw = Some(pw);
+        self
+    }
+}
+
+impl<'a> NtNode<'a> {
+    pub fn new(skip: Skip) -> Self {
+        NtNode { skip, pw: None, dyn_cols: None }
+    }
+
+    pub fn with_pw(mut self, pw: &'a PreppedWeight) -> Self {
+        self.pw = Some(pw);
+        self
+    }
+
+    pub fn with_dyn(mut self, mask: Option<&'a DynMask>) -> Self {
+        self.dyn_cols = mask;
+        self
+    }
+}
+
+impl<'a> TnNode<'a> {
+    pub fn new(row_skip: Skip, col_skip: Skip) -> Self {
+        TnNode { row_skip, col_skip, dyn_rows: None }
+    }
+
+    pub fn with_dyn(mut self, mask: Option<&'a DynMask>) -> Self {
+        self.dyn_rows = mask;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_kept_is_total() {
+        assert!(matches!(Skip::Dense.kept(8), Kept::All));
+        let r = Skip::Rows(RowPattern::new(8, 2, 1));
+        match r.kept(8) {
+            Kept::Rows(v) => assert_eq!(v, vec![1, 3, 5, 7]),
+            other => panic!("expected Rows, got {other:?}"),
+        }
+        assert!(!r.is_dense());
+        assert!(Skip::Dense.is_dense());
+        // Tiles: structured kept-tile info instead of the old panic.
+        let t = Skip::Tiles(TilePattern::new(32, 64, 2, 0, 16));
+        match t.kept(32) {
+            Kept::Tiles(pat) => {
+                assert_eq!(pat.kept_tiles().len(), pat.kept_count());
+            }
+            other => panic!("expected Tiles, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn row_and_tile_pattern_validation() {
+        assert!(row_pattern_checked(8, 2, 1).is_ok());
+        assert!(row_pattern_checked(8, 2, 2).is_err());
+        assert!(row_pattern_checked(8, 0, 0).is_err());
+        assert!(tile_pattern_checked(32, 64, 2, 0, 16).is_ok());
+        assert!(tile_pattern_checked(32, 64, 2, 2, 16).is_err());
+        // dp=3 divides neither 32/16=2 nor 64/16=4.
+        assert!(tile_pattern_checked(32, 64, 3, 0, 16).is_err());
+    }
+
+    #[test]
+    fn act_feed_masks_and_scales() {
+        let f = Feed::Act {
+            m: vec![1.0, 0.0],
+            rows: 1,
+            s: 2.0,
+            skip: Skip::Rows(RowPattern::new(2, 2, 0)),
+        };
+        let out = f.mask_act(&[1.0, 1.0, 3.0, 4.0], 2, 2);
+        assert_eq!(out, vec![2.0, 0.0, 6.0, 0.0]);
+        assert!(matches!(f.skip(), Skip::Rows(_)));
+        let plain = Feed::Plain.mask_act(&[1.0, 2.0], 1, 2);
+        assert_eq!(plain, vec![1.0, 2.0]);
+        assert!(Feed::Plain.skip().is_dense());
+    }
+
+    #[test]
+    fn dyn_mask_scans_dead_columns_under_static_skip() {
+        // [2, 4] buffer: column 1 dead, column 3 dead.
+        let x = [1.0, 0.0, 2.0, 0.0,
+                 3.0, 0.0, 0.5, 0.0f32];
+        let m = DynMask::scan_cols(&x, 2, 4, &Skip::Dense).unwrap();
+        assert_eq!(m.live, vec![0, 2]);
+        assert_eq!((m.total, m.dropped()), (4, 2));
+        // Static Rows skip: live is intersected with the kept set.
+        let sk = Skip::Rows(RowPattern::new(4, 2, 1)); // keeps {1, 3}
+        let m = DynMask::scan_cols(&x, 2, 4, &sk).unwrap();
+        assert!(m.live.is_empty());
+        assert_eq!((m.total, m.dropped()), (2, 2));
+        // Tiles: no flat column view — no mask.
+        let t = Skip::Tiles(TilePattern::new(4, 4, 2, 0, 2));
+        assert!(DynMask::scan_cols(&x, 2, 4, &t).is_none());
+        // Zero-state: everything dropped, nothing scanned.
+        let z = DynMask::zero_state(7);
+        assert_eq!((z.live.len(), z.total, z.dropped()), (0, 7, 7));
+    }
+
+    #[test]
+    fn node_builders_carry_structure() {
+        let sk = Skip::Rows(RowPattern::new(8, 2, 0));
+        let pw = PreppedWeight::dense();
+        let g = GemmNode::new(sk, Skip::Dense).with_pw(&pw);
+        assert!(g.pw.is_some() && !g.k_skip.is_dense());
+        let mask = DynMask::zero_state(8);
+        let nt = NtNode::new(sk).with_dyn(Some(&mask));
+        assert_eq!(nt.dyn_cols.unwrap().dropped(), 8);
+        let tn = TnNode::new(Skip::Dense, sk).with_dyn(None);
+        assert!(tn.dyn_rows.is_none() && tn.col_skip.is_dense());
+    }
+}

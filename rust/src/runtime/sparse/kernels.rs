@@ -42,6 +42,7 @@
 
 use crate::obs::registry;
 use crate::patterns::{RowPattern, TilePattern};
+use crate::runtime::plan::{DynMask, Kept, NtNode, TnNode};
 use crate::runtime::sparse::pool::{self, ThreadPool};
 use crate::runtime::sparse::simd::{self, Microkernel};
 use crate::runtime::step::kernels::{Kernels, PreppedWeight, Skip};
@@ -65,25 +66,49 @@ const MIN_PAR_WORK: usize = 32 * 1024;
 #[derive(Clone, Copy)]
 pub struct SparseKernels {
     mk: &'static Microkernel,
+    /// Honor dynamic masks on plan nodes (`AD_DYN_BWD`, default on).
+    /// When off, every node entry point delegates to the static path —
+    /// bit- and dispatch-identical to pre-dynamic behavior.
+    dyn_bwd: bool,
+}
+
+/// Process-wide `AD_DYN_BWD` default, pinned at first use like the
+/// `AD_SIMD` selection: `off`/`0`/`false` disables dynamic backward
+/// sparsity, anything else (including unset) enables it.
+fn dyn_bwd_default() -> bool {
+    static DYN: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *DYN.get_or_init(|| {
+        !matches!(std::env::var("AD_DYN_BWD").ok().as_deref(),
+                  Some("off") | Some("0") | Some("false"))
+    })
 }
 
 impl SparseKernels {
     /// The process-wide microkernel selection (`AD_SIMD` + CPU feature
     /// detection) — what `SparseBackend::new` uses.
     pub fn auto() -> Self {
-        SparseKernels { mk: simd::active() }
+        SparseKernels { mk: simd::active(), dyn_bwd: dyn_bwd_default() }
     }
 
     /// Force the portable scalar microkernels: the `AD_SIMD=off`
     /// configuration, bit-compatible with `DenseKernels` accumulation.
     pub fn scalar() -> Self {
-        SparseKernels { mk: simd::scalar() }
+        SparseKernels { mk: simd::scalar(), dyn_bwd: dyn_bwd_default() }
     }
 
     /// The detected SIMD microkernels, if this CPU has any — `None`
     /// otherwise (callers print a loud skip, never a silent pass).
     pub fn simd() -> Option<Self> {
-        simd::detected().map(|mk| SparseKernels { mk })
+        simd::detected()
+            .map(|mk| SparseKernels { mk, dyn_bwd: dyn_bwd_default() })
+    }
+
+    /// Pin dynamic backward sparsity on or off for this kernel set,
+    /// overriding the `AD_DYN_BWD` process default (benches compare the
+    /// two configurations side by side).
+    pub fn with_dyn(mut self, on: bool) -> Self {
+        self.dyn_bwd = on;
+        self
     }
 
     /// Name of the pinned microkernel ("avx2" | "neon" | "scalar").
@@ -102,6 +127,7 @@ impl std::fmt::Debug for SparseKernels {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("SparseKernels")
             .field("microkernel", &self.mk.name)
+            .field("dyn_bwd", &self.dyn_bwd)
             .finish()
     }
 }
@@ -137,6 +163,24 @@ fn note_tiles(pat: &TilePattern) {
     let kept = pat.kept_count() as u64;
     registry::SPARSE_TILES_KEPT.add(kept);
     registry::SPARSE_TILES_DROPPED.add((tk * tn) as u64 - kept);
+}
+
+/// Registry note for a dynamic mask at the moment a kernel honors it:
+/// `kept` counts the rows/columns actually walked, `dropped` the
+/// runtime-discovered dead ones the walk skipped.
+#[inline]
+fn note_dyn(mask: &DynMask) {
+    registry::SPARSE_DYN_ROWS_KEPT.add(mask.live.len() as u64);
+    registry::SPARSE_DYN_ROWS_DROPPED.add(mask.dropped() as u64);
+}
+
+/// Flat kept-index list of a non-`Tiles` skip (`Tiles` never reaches
+/// the row-kernel paths — the tile walks handle it upstream).
+fn kept_or_all(skip: &Skip, dim: usize) -> Vec<usize> {
+    match skip.kept(dim) {
+        Kept::Rows(v) => v,
+        _ => all_indices(dim),
+    }
 }
 
 /// Run `task` over `n_chunks` chunks, inline when the call is too small
@@ -195,8 +239,7 @@ impl Kernels for SparseKernels {
             }
             _ => {
                 note_rows(k_skip);
-                let kidx = k_skip.kept(k)
-                    .unwrap_or_else(|| all_indices(k));
+                let kidx = kept_or_all(k_skip, k);
                 match out_skip {
                     // Only worth packing when columns are actually
                     // dropped; a keep-everything pattern (dp=1 draws)
@@ -226,7 +269,7 @@ impl Kernels for SparseKernels {
             }
             _ => {
                 note_rows(skip);
-                let jidx = skip.kept(k).unwrap_or_else(|| all_indices(k));
+                let jidx = kept_or_all(skip, k);
                 nt_rows(p, self.mk, a, b, m, n, k, &jidx, &mut out);
             }
         }
@@ -247,8 +290,7 @@ impl Kernels for SparseKernels {
             }
             _ => {
                 note_rows(row_skip);
-                let pidx =
-                    row_skip.kept(k).unwrap_or_else(|| all_indices(k));
+                let pidx = kept_or_all(row_skip, k);
                 let cidx = match col_skip {
                     Skip::Rows(q) => Some(q.kept_indices()),
                     _ => None,
@@ -327,6 +369,69 @@ impl Kernels for SparseKernels {
             }
         }
         self.gemm_nt(a, pw.weight(w), m, n, k, skip)
+    }
+
+    fn dyn_backward(&self) -> bool {
+        self.dyn_bwd
+    }
+
+    fn gemm_tn_acc_node(&self, a: &[f32], b: &[f32], node: &TnNode,
+                        m: usize, k: usize, n: usize, out: &mut [f32]) {
+        // Dynamic row restriction: the plan marked runtime-dead units
+        // (ReLU-zero columns, zero LSTM initial state) on the shared
+        // dimension. Walking only `mask.live` is bitwise exact — a dead
+        // unit contributes 0.0 coefficients everywhere, and the static
+        // paths skip exact zeros elementwise anyway. Tiles row skips
+        // have no flat index view, so they stay on the tile walk.
+        if self.dyn_bwd && !matches!(node.row_skip, Skip::Tiles(_)) {
+            if let Some(mask) = node.dyn_rows {
+                debug_assert_eq!(a.len(), m * k);
+                debug_assert_eq!(b.len(), m * n);
+                debug_assert_eq!(out.len(), k * n);
+                // `total` is the static kept count of the axis, not k.
+                debug_assert!(mask.live.len() <= mask.total
+                              && mask.total <= k);
+                note_rows(&node.row_skip);
+                note_dyn(mask);
+                let cidx = match &node.col_skip {
+                    Skip::Rows(q) => Some(q.kept_indices()),
+                    _ => None,
+                };
+                tn_rows(pool::global(), self.mk, a, b, m, k, n,
+                        &mask.live, cidx.as_deref(), out);
+                return;
+            }
+        }
+        self.gemm_tn_acc(a, b, m, k, n, &node.row_skip, &node.col_skip,
+                         out);
+    }
+
+    fn gemm_nt_node(&self, a: &[f32], w: &[f32], node: &NtNode,
+                    m: usize, n: usize, k: usize) -> Vec<f32> {
+        // Dynamic column restriction: dead output columns stay zero, a
+        // value the downstream ReLU-derivative gate multiplies by zero
+        // anyway (the plan only attaches masks where that gate exists).
+        // The unpacked walk against raw `w` is bit-identical to the
+        // packed panel path (`nt_rows_packed` docs), so `mask.live` —
+        // a subset of the panel's kept rows — needs no repacking.
+        if self.dyn_bwd && !matches!(node.skip, Skip::Tiles(_)) {
+            if let Some(mask) = node.dyn_cols {
+                debug_assert_eq!(a.len(), m * n);
+                debug_assert_eq!(w.len(), k * n);
+                debug_assert!(mask.live.len() <= mask.total
+                              && mask.total <= k);
+                note_rows(&node.skip);
+                note_dyn(mask);
+                let mut out = vec![0f32; m * k];
+                nt_rows(pool::global(), self.mk, a, w, m, n, k,
+                        &mask.live, &mut out);
+                return out;
+            }
+        }
+        match node.pw {
+            Some(pw) => self.gemm_nt_pw(a, w, pw, m, n, k, &node.skip),
+            None => self.gemm_nt(a, w, m, n, k, &node.skip),
+        }
     }
 }
 

@@ -15,12 +15,14 @@
 //! observe:
 //!
 //! * `Skip::Dense` — no structure; plain dense math.
-//! * `Skip::Rows(p)` — a [`RowPattern`] over one index axis. The meaning
+//! * `Skip::Rows(p)` — a [`crate::patterns::RowPattern`] over one index
+//!   axis. The meaning
 //!   per position is documented on each method; in every case coordinates
 //!   outside the kept set `{b0 + dp*j}` are exactly zero in the operand
 //!   (inputs) or may be left exactly zero (outputs, which callers mask or
 //!   never read downstream).
-//! * `Skip::Tiles(t)` — a [`TilePattern`] over a `[k, n]` weight matrix:
+//! * `Skip::Tiles(t)` — a [`crate::patterns::TilePattern`] over a
+//!   `[k, n]` weight matrix:
 //!   the weight is tile-masked. Kernels that exploit the structure receive
 //!   the **raw** weight and must not touch dropped tiles; kernels that
 //!   don't are given the pre-masked weight by [`Kernels::prep_weight`].
@@ -35,38 +37,11 @@
 //! SIMD microkernels (fused multiply-add, fixed-order lane reductions —
 //! see `runtime::sparse::simd`) stay within that same 1e-5 contract.
 
-use crate::patterns::{RowPattern, TilePattern};
-
-/// Structural sparsity of one GEMM operand/axis. See the module docs for
-/// the exact contract per [`Kernels`] method.
-#[derive(Clone, Copy, Debug)]
-pub enum Skip {
-    Dense,
-    Rows(RowPattern),
-    Tiles(TilePattern),
-}
-
-impl Skip {
-    /// Kept indices along an axis of width `dim` (`None` = all kept).
-    /// Panics on `Tiles` — tile structure never flattens to an index
-    /// list; methods handle it explicitly.
-    pub fn kept(&self, dim: usize) -> Option<Vec<usize>> {
-        match self {
-            Skip::Dense => None,
-            Skip::Rows(p) => {
-                debug_assert_eq!(p.m, dim, "Rows skip width mismatch");
-                Some(p.kept_indices())
-            }
-            Skip::Tiles(_) => {
-                panic!("Skip::Tiles has no flat kept-index list")
-            }
-        }
-    }
-
-    pub fn is_dense(&self) -> bool {
-        matches!(self, Skip::Dense)
-    }
-}
+// `Skip` (and its structured kept-set view `Kept`) moved to the
+// sparsity-plan IR — the one module that decides structure. Re-exported
+// here so the kernel contract's long-standing import path keeps working.
+pub use crate::runtime::plan::{Kept, Skip};
+use crate::runtime::plan::{GemmNode, NtNode, TnNode};
 
 /// The element math of one execution backend. All matrices are row-major
 /// f32; shapes are trusted (`debug_assert`ed, validated upstream by the
@@ -166,6 +141,62 @@ pub trait Kernels: Send + Sync + std::fmt::Debug {
     fn gemm_nt_pw(&self, a: &[f32], w: &[f32], pw: &PreppedWeight,
                   m: usize, n: usize, k: usize, skip: &Skip) -> Vec<f32> {
         self.gemm_nt(a, pw.weight(w), m, n, k, skip)
+    }
+
+    // -- Plan-node entry points -------------------------------------------
+    //
+    // The step interpreter routes every GEMM through these; the node
+    // carries the full static structure plus any dynamic mask. The
+    // defaults dispatch to the raw/prepped methods above and IGNORE the
+    // dynamic fields, so masked-dense implementations (DenseKernels, and
+    // any future backend that opts out) are bit- and dispatch-identical
+    // to the pre-plan code by construction. Structure-exploiting
+    // implementations override these to honor the dynamic masks under
+    // the exactness contract documented on `plan::DynMask`.
+
+    /// Whether this implementation honors dynamic masks on plan nodes.
+    /// When `false` the step interpreter skips building them entirely
+    /// (no scans), keeping the dense/reference path untouched.
+    fn dyn_backward(&self) -> bool {
+        false
+    }
+
+    /// Forward GEMM of a plan node: [`Self::gemm_pw`] when the node
+    /// carries a prepared weight, [`Self::gemm`] otherwise.
+    fn gemm_node(&self, a: &[f32], w: &[f32], node: &GemmNode, m: usize,
+                 k: usize, n: usize) -> Vec<f32> {
+        match node.pw {
+            Some(pw) => self.gemm_pw(a, w, pw, m, k, n, &node.k_skip,
+                                     &node.out_skip),
+            None => self.gemm(a, w, m, k, n, &node.k_skip,
+                              &node.out_skip),
+        }
+    }
+
+    /// Backward input-gradient GEMM of a plan node (`dyn_cols` ignored
+    /// by default).
+    fn gemm_nt_node(&self, a: &[f32], w: &[f32], node: &NtNode, m: usize,
+                    n: usize, k: usize) -> Vec<f32> {
+        match node.pw {
+            Some(pw) => self.gemm_nt_pw(a, w, pw, m, n, k, &node.skip),
+            None => self.gemm_nt(a, w, m, n, k, &node.skip),
+        }
+    }
+
+    /// Weight-gradient accumulation of a plan node (`dyn_rows` ignored
+    /// by default).
+    fn gemm_tn_acc_node(&self, a: &[f32], b: &[f32], node: &TnNode,
+                        m: usize, k: usize, n: usize, out: &mut [f32]) {
+        self.gemm_tn_acc(a, b, m, k, n, &node.row_skip, &node.col_skip,
+                         out);
+    }
+
+    /// Allocating wrapper over [`Self::gemm_tn_acc_node`].
+    fn gemm_tn_node(&self, a: &[f32], b: &[f32], node: &TnNode, m: usize,
+                    k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; k * n];
+        self.gemm_tn_acc_node(a, b, node, m, k, n, &mut out);
+        out
     }
 }
 
@@ -334,6 +365,7 @@ fn dense_tn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize,
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::patterns::{RowPattern, TilePattern};
 
     const D: Skip = Skip::Dense;
 
@@ -421,11 +453,29 @@ mod tests {
     }
 
     #[test]
-    fn skip_kept_lists() {
-        assert!(Skip::Dense.kept(8).is_none());
-        let r = Skip::Rows(RowPattern::new(8, 2, 1));
-        assert_eq!(r.kept(8).unwrap(), vec![1, 3, 5, 7]);
-        assert!(!r.is_dense());
-        assert!(Skip::Dense.is_dense());
+    fn node_defaults_match_raw_dispatch() {
+        let kern = DenseKernels;
+        let a: Vec<f32> = (0..4 * 32).map(|i| (i % 7) as f32).collect();
+        let w: Vec<f32> = (0..32 * 64).map(|i| i as f32 * 0.01).collect();
+        let rows = Skip::Rows(RowPattern::new(32, 2, 1));
+        // gemm_node without pw == gemm; with pw == gemm_pw.
+        let node = GemmNode::new(rows, D);
+        assert_eq!(kern.gemm_node(&a, &w, &node, 4, 32, 64),
+                   kern.gemm(&a, &w, 4, 32, 64, &rows, &D));
+        let tiles = Skip::Tiles(TilePattern::new(32, 64, 2, 0, 16));
+        let pw = kern.prep(&w, 32, 64, &tiles);
+        let node = GemmNode::new(tiles, D).with_pw(&pw);
+        assert_eq!(kern.gemm_node(&a, &w, &node, 4, 32, 64),
+                   kern.gemm_pw(&a, &w, &pw, 4, 32, 64, &tiles, &D));
+        // nt/tn node defaults ignore dynamic masks entirely.
+        let an: Vec<f32> = (0..4 * 64).map(|i| (i % 5) as f32).collect();
+        let mask = crate::runtime::plan::DynMask::zero_state(32);
+        let nt = NtNode::new(rows).with_dyn(Some(&mask));
+        assert_eq!(kern.gemm_nt_node(&an, &w, &nt, 4, 64, 32),
+                   kern.gemm_nt(&an, &w, 4, 64, 32, &rows));
+        let tn = TnNode::new(rows, D).with_dyn(Some(&mask));
+        assert_eq!(kern.gemm_tn_node(&a, &an, &tn, 4, 32, 64),
+                   kern.gemm_tn(&a, &an, 4, 32, 64, &rows, &D));
+        assert!(!kern.dyn_backward());
     }
 }

@@ -35,10 +35,11 @@ use std::sync::Arc;
 use anyhow::{bail, Result};
 
 use crate::obs::trace;
-use crate::patterns::{RowPattern, TilePattern};
 use crate::runtime::backend::{Executor, GradOut, HostTensor, LeafSpec,
                               Value};
 use crate::runtime::manifest::{ArchMeta, ArtifactMeta, Kind, Manifest};
+use crate::runtime::plan::{DynMask, Feed, GemmNode, NtNode, SparsityPlan,
+                           TnNode};
 
 pub use kernels::{DenseKernels, Kernels, PreppedWeight, Skip};
 
@@ -309,121 +310,13 @@ fn xent_aggregate(nll: &[f32], hit: &[f32]) -> (f32, f32) {
 }
 
 // ---------------------------------------------------------------------------
-// Dropout-site transforms (the masked-dense form of the compact graphs)
-// ---------------------------------------------------------------------------
-
-/// How one dropout site transforms the value it guards. The `skip` fields
-/// carry the *structure* of the mask down to the kernels, which is what
-/// lets the sparse backend never touch dropped coordinates.
-enum Feed {
-    /// No dropout at this site (layer-0 inputs, eval graphs).
-    Plain,
-    /// Activation mask + inverted-dropout scale: `conv` (per-element
-    /// Bernoulli matrix, `rows == batch`, `skip == Dense`) and `rdp`
-    /// (row-pattern keep vector, `rows == 1`, broadcast over the batch,
-    /// `skip == Rows`).
-    Act { m: Vec<f32>, rows: usize, s: f32, skip: Skip },
-    /// Weight mask (`tdp` DropConnect at tile granularity): the matmul
-    /// runs against `w ∘ mask` (`skip == Tiles`), the scale applies to
-    /// the product.
-    Weight { s: f32, skip: Skip },
-}
-
-impl Feed {
-    /// Structural skip this site contributes to adjacent matmuls.
-    fn skip(&self) -> Skip {
-        match self {
-            Feed::Plain => Skip::Dense,
-            Feed::Act { skip, .. } | Feed::Weight { skip, .. } => *skip,
-        }
-    }
-
-    /// Apply an activation mask to `x [b, h]` (no-op for Plain/Weight).
-    fn mask_act(&self, x: &[f32], b: usize, h: usize) -> Vec<f32> {
-        match self {
-            Feed::Act { m, rows, s, .. } => {
-                let mut out = Vec::with_capacity(b * h);
-                for bi in 0..b {
-                    let mrow = if *rows == 1 {
-                        &m[..h]
-                    } else {
-                        let r = bi % rows;
-                        &m[r * h..(r + 1) * h]
-                    };
-                    let xrow = &x[bi * h..(bi + 1) * h];
-                    for (xv, mv) in xrow.iter().zip(mrow) {
-                        out.push(xv * mv * s);
-                    }
-                }
-                out
-            }
-            _ => x.to_vec(),
-        }
-    }
-}
-
-/// One contiguous run of timesteps sharing a single pattern draw — a
-/// *time window* of the unrolled sequence. Timesteps `t0..t1` of the
-/// owning site all use `feed`, so weight preparation for the run is paid
-/// once and reused across the window's forward, backward, and softmax
-/// GEMMs. The per-step default degenerates to one run per site covering
-/// `0..seq`.
-struct FeedRun {
-    t0: usize,
-    t1: usize,
-    feed: Feed,
-}
-
-/// `out[site][t]` -> index of the run covering timestep `t` (runs are
-/// contiguous and cover `0..seq` by construction in `site_feed_runs`).
-fn run_lookup(runs: &[Vec<FeedRun>], seq: usize) -> Vec<Vec<usize>> {
-    runs.iter()
-        .map(|rs| {
-            let mut v = vec![0usize; seq];
-            for (ri, r) in rs.iter().enumerate() {
-                for t in r.t0..r.t1 {
-                    v[t] = ri;
-                }
-            }
-            v
-        })
-        .collect()
-}
-
-/// Row pattern with input validation (bail, not panic).
-fn row_pattern_checked(m: usize, dp: usize, b0: usize)
-                       -> Result<RowPattern> {
-    if dp == 0 || dp > m {
-        bail!("rdp: dp={dp} out of range for layer width {m}");
-    }
-    if b0 >= dp {
-        bail!("rdp: bias b0={b0} must be < dp={dp}");
-    }
-    Ok(RowPattern::new(m, dp, b0))
-}
-
-/// Tile pattern with input validation.
-fn tile_pattern_checked(k: usize, n: usize, dp: usize, b0: usize,
-                        tile: usize) -> Result<TilePattern> {
-    if dp == 0 {
-        bail!("tdp: dp must be >= 1");
-    }
-    if b0 >= dp {
-        bail!("tdp: bias b0={b0} must be < dp={dp}");
-    }
-    let (tr, tc) = (crate::patterns::pick_block(k, tile),
-                    crate::patterns::pick_block(n, tile));
-    let (tk, tn) = (k / tr, n / tc);
-    if tn % dp != 0 && tk % dp != 0 {
-        bail!("tdp: dp={dp} must divide one tile-grid edge of {tk}x{tn} \
-               (weight {k}x{n}, tile {tr}x{tc})");
-    }
-    Ok(TilePattern::new(k, n, dp, b0, tile))
-}
-
-// ---------------------------------------------------------------------------
 // Program internals
 // ---------------------------------------------------------------------------
+//
+// Dropout-site structure (Feed, FeedRun, the b0/track decoding, pattern
+// validation) lives in `runtime::plan` — the interpreter receives a
+// `SparsityPlan` and executes it; it never re-derives what can be
+// skipped.
 
 impl StepProgram {
     fn n_params(&self) -> usize {
@@ -448,145 +341,6 @@ impl StepProgram {
             inp[2 * np + 2..inp.len() - 1].to_vec();
         let lr = inp[inp.len() - 1].as_f32()?[0];
         Ok((params, momenta, x, y, extras, lr))
-    }
-
-    /// Per-site feeds from the variant extras. `widths[i]` is the
-    /// activation width guarded by site i (for rdp masks); `wdims[i]` the
-    /// weight matrix dims guarded by site i (for tdp masks).
-    fn site_feeds(&self, extras: &[&HostTensor], sites: usize,
-                  widths: &[usize], wdims: &[(usize, usize)])
-                  -> Result<Vec<Feed>> {
-        if extras.len() != 2 * sites {
-            bail!("{}: expected {} variant extras, got {}", self.meta.name,
-                  2 * sites, extras.len());
-        }
-        if self.meta.variant != "conv" && self.meta.dp.len() != sites {
-            bail!("{}: manifest dp {:?} does not cover {} sites",
-                  self.meta.name, self.meta.dp, sites);
-        }
-        let mut feeds = Vec::with_capacity(sites);
-        for i in 0..sites {
-            let s = extras[sites + i].as_f32()?[0];
-            let feed = match self.meta.variant.as_str() {
-                "conv" => Feed::Act {
-                    m: extras[i].as_f32()?.to_vec(),
-                    rows: extras[i].shape()[0],
-                    s,
-                    skip: Skip::Dense,
-                },
-                "rdp" | "tdp" => {
-                    let b0 = extras[i].as_i32()?[0];
-                    self.pattern_feed(i, b0, widths[i], wdims[i], s)?
-                }
-                other => bail!("step interpreter: unknown variant \
-                                '{other}'"),
-            };
-            feeds.push(feed);
-        }
-        Ok(feeds)
-    }
-
-    /// Build one rdp/tdp [`Feed`] for site `i` from a single `(dp, b0)`
-    /// draw — shared by the MLP's per-step path ([`Self::site_feeds`])
-    /// and the LSTM's per-window path ([`Self::site_feed_runs`]).
-    fn pattern_feed(&self, i: usize, b0: i32, width: usize,
-                    wdim: (usize, usize), s: f32) -> Result<Feed> {
-        if b0 < 0 {
-            bail!("{}: negative bias {b0}", self.meta.variant);
-        }
-        let dp = self.meta.dp[i];
-        match self.meta.variant.as_str() {
-            "rdp" => {
-                let pat = row_pattern_checked(width, dp, b0 as usize)?;
-                // dp=1 keeps every unit: no structure for the kernels to
-                // exploit (the 1/(1-p) scale still applies through the
-                // mask).
-                let skip = if dp == 1 {
-                    Skip::Dense
-                } else {
-                    Skip::Rows(pat)
-                };
-                Ok(Feed::Act { m: pat.mask(), rows: 1, s, skip })
-            }
-            "tdp" => {
-                let (k, n) = wdim;
-                let pat = tile_pattern_checked(k, n, dp, b0 as usize,
-                                               self.meta.tile)?;
-                // dp=1 keeps every tile: skip the mask/tile walks.
-                let skip = if dp == 1 {
-                    Skip::Dense
-                } else {
-                    Skip::Tiles(pat)
-                };
-                Ok(Feed::Weight { s, skip })
-            }
-            other => bail!("step interpreter: unknown variant '{other}'"),
-        }
-    }
-
-    /// Per-site windowed feeds for the LSTM. rdp/tdp extras are `[seq]`
-    /// i32 b0 tracks — entry `t` is the kept residue for timestep `t`,
-    /// constant within each time window — and consecutive equal entries
-    /// group into one [`FeedRun`]. The interpreter is thus entirely
-    /// data-driven: the per-step default arrives as a constant track and
-    /// produces exactly one run per site (today's behavior), while a
-    /// windowed coordinator produces one run per window with no runtime
-    /// knob involved. Conv masks are per-step: one run covering the
-    /// sequence.
-    fn site_feed_runs(&self, extras: &[&HostTensor], sites: usize,
-                      seq: usize, widths: &[usize],
-                      wdims: &[(usize, usize)])
-                      -> Result<Vec<Vec<FeedRun>>> {
-        if extras.len() != 2 * sites {
-            bail!("{}: expected {} variant extras, got {}", self.meta.name,
-                  2 * sites, extras.len());
-        }
-        if self.meta.variant != "conv" && self.meta.dp.len() != sites {
-            bail!("{}: manifest dp {:?} does not cover {} sites",
-                  self.meta.name, self.meta.dp, sites);
-        }
-        let mut out = Vec::with_capacity(sites);
-        for i in 0..sites {
-            let s = extras[sites + i].as_f32()?[0];
-            match self.meta.variant.as_str() {
-                "conv" => {
-                    out.push(vec![FeedRun {
-                        t0: 0,
-                        t1: seq,
-                        feed: Feed::Act {
-                            m: extras[i].as_f32()?.to_vec(),
-                            rows: extras[i].shape()[0],
-                            s,
-                            skip: Skip::Dense,
-                        },
-                    }]);
-                }
-                "rdp" | "tdp" => {
-                    let track = extras[i].as_i32()?;
-                    if track.len() != seq {
-                        bail!("{}: b0 track for site {i} has {} entries, \
-                               seq is {seq}", self.meta.name, track.len());
-                    }
-                    let mut runs = Vec::new();
-                    let mut t0 = 0;
-                    while t0 < seq {
-                        let b0 = track[t0];
-                        let mut t1 = t0 + 1;
-                        while t1 < seq && track[t1] == b0 {
-                            t1 += 1;
-                        }
-                        let feed = self.pattern_feed(i, b0, widths[i],
-                                                     wdims[i], s)?;
-                        runs.push(FeedRun { t0, t1, feed });
-                        t0 = t1;
-                    }
-                    out.push(runs);
-                }
-                other => bail!("step interpreter: unknown variant \
-                                '{other}'"),
-            }
-        }
-        Ok(out)
     }
 
     /// Pack `(new params, new momenta, loss, correct)` in manifest output
@@ -670,16 +424,17 @@ impl StepProgram {
         let (n_in, h1, h2, n_out, _) = self.mlp_dims()?;
         let (w1, b1, w2, b2, w3, b3) = (params[0], params[1], params[2],
                                         params[3], params[4], params[5]);
-        let feeds = self.site_feeds(extras, 2, &[h1, h2],
-                                    &[(n_in, h1), (h1, h2)])?;
-        let (sk0, sk1) = (feeds[0].skip(), feeds[1].skip());
+        let plan = SparsityPlan::per_step(&self.meta, extras, &[h1, h2],
+                                          &[(n_in, h1), (h1, h2)])?;
+        let (feed0, feed1) = (plan.feed(0), plan.feed(1));
+        let (sk0, sk1) = (feed0.skip(), feed1.skip());
         const DENSE: Skip = Skip::Dense;
 
         // Forward. Two shapes: activation-masked (conv/rdp) applies the
         // site mask after relu; weight-masked (tdp) masks w and scales the
         // product before the bias (mirrors _mlp_logits_tdp).
         let sp_fwd = trace::span("fwd");
-        let weight_masked = matches!(feeds[0], Feed::Weight { .. });
+        let weight_masked = matches!(feed0, Feed::Weight { .. });
         // Activation-space structure per site: for weight-masked (tdp)
         // sites the activations are dense — only the w1/w2 matmuls carry
         // the (tile) skip, while the w3 layer and the relu-gradient hops
@@ -689,30 +444,34 @@ impl StepProgram {
         } else {
             (sk0, sk1)
         };
-        // `w2p` is the prepared (possibly masked) w2 for the tdp path;
-        // `None` means "use the raw weight" (sparse kernels skip tiles
-        // themselves). It outlives the forward because the backward's
-        // input-gradient matmul runs against the same prepared weight.
+        // `w2p` is the prepared w2 for the tdp path (masked copy on
+        // dense backends, no-op handle on structure-exploiting ones). It
+        // outlives the forward because the backward's input-gradient
+        // matmul runs against the same prepared weight.
         let (out0, out1, w2p);
         if weight_masked {
-            let s1 = match &feeds[0] {
+            let s1 = match feed0 {
                 Feed::Weight { s, .. } => *s,
                 _ => unreachable!(),
             };
-            let s2 = match &feeds[1] {
+            let s2 = match feed1 {
                 Feed::Weight { s, .. } => *s,
                 _ => unreachable!(),
             };
-            let w1p = kern.prep_weight(w1, n_in, h1, &sk0);
-            w2p = kern.prep_weight(w2, h1, h2, &sk1);
-            let w1v: &[f32] = w1p.as_deref().unwrap_or(w1);
-            let w2v: &[f32] = w2p.as_deref().unwrap_or(w2);
+            let w1p = kern.prep(w1, n_in, h1, &sk0);
+            w2p = kern.prep(w2, h1, h2, &sk1);
             let mut z1 = scale_vec(
-                &kern.gemm(x, w1v, batch, n_in, h1, &sk0, &DENSE), s1);
+                &kern.gemm_node(x, w1,
+                                &GemmNode::new(sk0, DENSE).with_pw(&w1p),
+                                batch, n_in, h1),
+                s1);
             add_row_bias(&mut z1, b1);
             relu_inplace(&mut z1);
             let mut z2 = scale_vec(
-                &kern.gemm(&z1, w2v, batch, h1, h2, &sk1, &DENSE), s2);
+                &kern.gemm_node(&z1, w2,
+                                &GemmNode::new(sk1, DENSE).with_pw(&w2p),
+                                batch, h1, h2),
+                s2);
             add_row_bias(&mut z2, b2);
             relu_inplace(&mut z2);
             out0 = z1;
@@ -720,40 +479,59 @@ impl StepProgram {
         } else {
             // Dropped output columns of z1/z2 are masked to zero right
             // below, so the kernels may skip computing them (`out_skip`).
-            let mut z1 = kern.gemm(x, w1, batch, n_in, h1, &DENSE, &sk0);
+            let mut z1 = kern.gemm_node(x, w1, &GemmNode::new(DENSE, sk0),
+                                        batch, n_in, h1);
             add_row_bias(&mut z1, b1);
             relu_inplace(&mut z1);
-            let o0 = feeds[0].mask_act(&z1, batch, h1);
-            let mut z2 = kern.gemm(&o0, w2, batch, h1, h2, &sk0, &sk1);
+            let o0 = feed0.mask_act(&z1, batch, h1);
+            let mut z2 = kern.gemm_node(&o0, w2,
+                                        &GemmNode::new(sk0, sk1), batch,
+                                        h1, h2);
             add_row_bias(&mut z2, b2);
             relu_inplace(&mut z2);
-            let o1 = feeds[1].mask_act(&z2, batch, h2);
+            let o1 = feed1.mask_act(&z2, batch, h2);
             out0 = o0;
             out1 = o1;
-            w2p = None;
+            w2p = PreppedWeight::dense();
         }
-        let mut logits =
-            kern.gemm(&out1, w3, batch, h2, n_out, &ask1, &DENSE);
+        let mut logits = kern.gemm_node(&out1, w3,
+                                        &GemmNode::new(ask1, DENSE),
+                                        batch, h2, n_out);
         add_row_bias(&mut logits, b3);
         let (loss_sum, correct, dlogits) =
             softmax_xent_grad(&logits, y, batch, n_out, denom)?;
         drop(sp_fwd);
 
-        // Backward.
+        // Backward. Dynamic masks: units whose forward activation is
+        // zero on every batch row carry exactly-zero gradient — their
+        // weight-gradient rows accumulate nothing (bitwise, on every
+        // backend) and their input-gradient columns are annihilated by
+        // the relu-derivative gate right below. Scanning happens only
+        // when the kernels opt in; the masks never change which kernel
+        // calls run, only what a call may skip internally.
         let sp_bwd = trace::span("bptt");
-        let dw3 = kern.gemm_tn(&out1, &dlogits, batch, h2, n_out, &ask1,
-                               &DENSE);
+        let dyn1 = if kern.dyn_backward() {
+            DynMask::scan_cols(&out1, batch, h2, &ask1)
+        } else {
+            None
+        };
+        let dw3 = kern.gemm_tn_node(
+            &out1, &dlogits,
+            &TnNode::new(ask1, DENSE).with_dyn(dyn1.as_ref()), batch, h2,
+            n_out);
         let mut db3 = vec![0f32; n_out];
         colsum_acc(&dlogits, n_out, &mut db3);
-        let dout1 = kern.gemm_nt(&dlogits, w3, batch, n_out, h2, &ask1);
+        let dout1 = kern.gemm_nt_node(
+            &dlogits, w3, &NtNode::new(ask1).with_dyn(dyn1.as_ref()),
+            batch, n_out, h2);
 
         let (dw1, db1, dw2, db2);
         if weight_masked {
-            let s1 = match &feeds[0] {
+            let s1 = match feed0 {
                 Feed::Weight { s, .. } => *s,
                 _ => unreachable!(),
             };
-            let s2 = match &feeds[1] {
+            let s2 = match feed1 {
                 Feed::Weight { s, .. } => *s,
                 _ => unreachable!(),
             };
@@ -764,18 +542,24 @@ impl StepProgram {
             let mut db2v = vec![0f32; h2];
             colsum_acc(&dz2, h2, &mut db2v);
             let du2 = scale_vec(&dz2, s2);
-            let dw2v = kern.gemm_tn(&out0, &du2, batch, h1, h2, &sk1,
-                                    &DENSE);
-            let w2v: &[f32] = w2p.as_deref().unwrap_or(w2);
-            let dout0 = kern.gemm_nt(&du2, w2v, batch, h2, h1, &sk1);
+            // Tile-skipped gradients carry no dynamic mask (tile
+            // structure has no flat column view — `DynMask::scan_cols`
+            // is `None` for `Tiles` by contract).
+            let dw2v = kern.gemm_tn_node(&out0, &du2,
+                                         &TnNode::new(sk1, DENSE), batch,
+                                         h1, h2);
+            let dout0 = kern.gemm_nt_node(&du2, w2,
+                                          &NtNode::new(sk1).with_pw(&w2p),
+                                          batch, h2, h1);
             let dz1: Vec<f32> = dout0.iter().zip(&out0)
                 .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
                 .collect();
             let mut db1v = vec![0f32; h1];
             colsum_acc(&dz1, h1, &mut db1v);
             let du1 = scale_vec(&dz1, s1);
-            let dw1v = kern.gemm_tn(x, &du1, batch, n_in, h1, &sk0,
-                                    &DENSE);
+            let dw1v = kern.gemm_tn_node(x, &du1,
+                                         &TnNode::new(sk0, DENSE), batch,
+                                         n_in, h1);
             dw1 = dw1v;
             db1 = db1v;
             dw2 = dw2v;
@@ -785,7 +569,7 @@ impl StepProgram {
             // tests the *pre-mask* activation; recover it from out1 only
             // where the mask keeps (dropped units have zero upstream grad
             // after the mask anyway).
-            let da1 = feeds[1].mask_act(&dout1, batch, h2);
+            let da1 = feed1.mask_act(&dout1, batch, h2);
             // a2 > 0 wherever out1 > 0 OR (masked-out unit): for masked-out
             // units da1 is already zero, so using out1's sign is exact on
             // every coordinate that can carry gradient.
@@ -794,17 +578,27 @@ impl StepProgram {
                 .collect();
             let mut db2v = vec![0f32; h2];
             colsum_acc(&dz2, h2, &mut db2v);
-            let dw2v = kern.gemm_tn(&out0, &dz2, batch, h1, h2, &sk0,
-                                    &sk1);
-            let dout0 = kern.gemm_nt(&dz2, w2, batch, h2, h1, &sk0);
-            let da0 = feeds[0].mask_act(&dout0, batch, h1);
+            let dyn0 = if kern.dyn_backward() {
+                DynMask::scan_cols(&out0, batch, h1, &sk0)
+            } else {
+                None
+            };
+            let dw2v = kern.gemm_tn_node(
+                &out0, &dz2,
+                &TnNode::new(sk0, sk1).with_dyn(dyn0.as_ref()), batch, h1,
+                h2);
+            let dout0 = kern.gemm_nt_node(
+                &dz2, w2, &NtNode::new(sk0).with_dyn(dyn0.as_ref()),
+                batch, h2, h1);
+            let da0 = feed0.mask_act(&dout0, batch, h1);
             let dz1: Vec<f32> = da0.iter().zip(&out0)
                 .map(|(&g, &a)| if a > 0.0 { g } else { 0.0 })
                 .collect();
             let mut db1v = vec![0f32; h1];
             colsum_acc(&dz1, h1, &mut db1v);
-            let dw1v = kern.gemm_tn(x, &dz1, batch, n_in, h1, &DENSE,
-                                    &sk0);
+            let dw1v = kern.gemm_tn_node(x, &dz1,
+                                         &TnNode::new(DENSE, sk0), batch,
+                                         n_in, h1);
             dw1 = dw1v;
             db1 = db1v;
             dw2 = dw2v;
@@ -895,11 +689,10 @@ impl StepProgram {
             wdims.push((h, 4 * h)); // tdp masks wx of the consuming layer
         }
         wdims.push((h, vocab)); // last site masks wsoft
-        let feeds = self.site_feed_runs(extras, layers, seq, &widths,
-                                        &wdims)?;
+        let plan = SparsityPlan::windowed(&self.meta, extras, seq,
+                                          &widths, &wdims)?;
 
-        let fwd = self.lstm_forward(params, x, batch,
-                                    Some(feeds.as_slice()), true)?;
+        let fwd = self.lstm_forward(params, x, batch, Some(&plan), true)?;
         let rows = seq * batch;
         let mut targets = vec![0i32; rows];
         for b in 0..batch {
@@ -910,7 +703,7 @@ impl StepProgram {
         let (loss_sum, correct, dlogits) =
             softmax_xent_grad(&fwd.logits, &targets, rows, vocab,
                               seq * denom)?;
-        let grads = self.lstm_backward(params, x, batch, &feeds, &fwd,
+        let grads = self.lstm_backward(params, x, batch, &plan, &fwd,
                                        &dlogits)?;
         Ok((loss_sum, correct, grads))
     }
@@ -959,7 +752,7 @@ impl StepProgram {
     }
 
     fn lstm_forward(&self, params: &[&[f32]], x: &[i32], batch: usize,
-                    feeds: Option<&[Vec<FeedRun>]>, keep_caches: bool)
+                    plan: Option<&SparsityPlan>, keep_caches: bool)
                     -> Result<LstmFwd> {
         let kern = self.kern.as_ref();
         let (vocab, h, layers, seq, _) = self.lstm_dims()?;
@@ -979,14 +772,13 @@ impl StepProgram {
         // rdp, and `Skip::Dense` prep is an allocation-free no-op.
         // prepped_wx[l][ri] guards layer l's input (l >= 1) during run
         // ri of site l-1; the handles are reused by the backward pass.
-        let run_of = feeds.map(|fs| run_lookup(fs, seq))
-            .unwrap_or_default();
+        let run_of = plan.map(|p| p.run_lookup(seq)).unwrap_or_default();
         let mut prepped_wx: Vec<Vec<PreppedWeight>> =
             (0..layers).map(|_| Vec::new()).collect();
-        if let Some(fs) = feeds {
+        if let Some(p) = plan {
             let _sp = trace::span("prep");
             for l in 1..layers {
-                prepped_wx[l] = fs[l - 1].iter()
+                prepped_wx[l] = p.runs(l - 1).iter()
                     .map(|r| kern.prep(cells[l].0, h, 4 * h,
                                        &r.feed.skip()))
                     .collect();
@@ -1018,22 +810,25 @@ impl StepProgram {
                                       &DENSE);
                     (inp.clone(), g)
                 } else {
-                    let site = feeds.map(|fs| {
+                    let site = plan.map(|p| {
                         let ri = run_of[l - 1][t];
-                        (&fs[l - 1][ri].feed, &prepped_wx[l][ri])
+                        (&p.runs(l - 1)[ri].feed, &prepped_wx[l][ri])
                     });
                     match site {
                         Some((f @ Feed::Act { .. }, pw)) => {
                             let mi = f.mask_act(&inp, batch, h);
-                            let sk = f.skip();
-                            let g = kern.gemm_pw(&mi, wx, pw, batch, h,
-                                                 4 * h, &sk, &DENSE);
+                            let node = GemmNode::new(f.skip(), DENSE)
+                                .with_pw(pw);
+                            let g = kern.gemm_node(&mi, wx, &node, batch,
+                                                   h, 4 * h);
                             (mi, g)
                         }
                         Some((Feed::Weight { s, skip }, pw)) => {
+                            let node = GemmNode::new(*skip, DENSE)
+                                .with_pw(pw);
                             let g = scale_vec(
-                                &kern.gemm_pw(&inp, wx, pw, batch, h,
-                                              4 * h, skip, &DENSE),
+                                &kern.gemm_node(&inp, wx, &node, batch,
+                                                h, 4 * h),
                                 *s);
                             (inp.clone(), g)
                         }
@@ -1110,7 +905,7 @@ impl StepProgram {
         let _sp_soft = trace::span("softmax");
         let rows = seq * batch;
         let (mflat, logits, prepped_wsoft);
-        match feeds.map(|fs| &fs[layers - 1]) {
+        match plan.map(|p| p.runs(layers - 1)) {
             Some(runs) => {
                 let pws: Vec<PreppedWeight> = runs.iter()
                     .map(|r| kern.prep(wsoft, h, vocab, &r.feed.skip()))
@@ -1132,19 +927,23 @@ impl StepProgram {
                     let seg = match &r.feed {
                         f @ Feed::Act { .. } => {
                             let mf = f.mask_act(fslice, nrows, h);
-                            let sk = f.skip();
-                            let g = kern.gemm_pw(&mf, wsoft, &pws[ri],
-                                                 nrows, h, vocab, &sk,
-                                                 &DENSE);
+                            let node = GemmNode::new(f.skip(), DENSE)
+                                .with_pw(&pws[ri]);
+                            let g = kern.gemm_node(&mf, wsoft, &node,
+                                                   nrows, h, vocab);
                             mf_buf.as_mut().expect("act run set")
                                 [r0 * h..r1 * h]
                                 .copy_from_slice(&mf);
                             g
                         }
-                        Feed::Weight { s, skip } => scale_vec(
-                            &kern.gemm_pw(fslice, wsoft, &pws[ri], nrows,
-                                          h, vocab, skip, &DENSE),
-                            *s),
+                        Feed::Weight { s, skip } => {
+                            let node = GemmNode::new(*skip, DENSE)
+                                .with_pw(&pws[ri]);
+                            scale_vec(&kern.gemm_node(fslice, wsoft,
+                                                      &node, nrows, h,
+                                                      vocab),
+                                      *s)
+                        }
                         Feed::Plain => kern.gemm(fslice, wsoft, nrows, h,
                                                  vocab, &DENSE, &DENSE),
                     };
@@ -1168,7 +967,7 @@ impl StepProgram {
     }
 
     fn lstm_backward(&self, params: &[&[f32]], x: &[i32], batch: usize,
-                     feeds: &[Vec<FeedRun>], fwd: &LstmFwd,
+                     plan: &SparsityPlan, fwd: &LstmFwd,
                      dlogits: &[f32])
                      -> Result<Vec<Vec<f32>>> {
         let kern = self.kern.as_ref();
@@ -1181,7 +980,7 @@ impl StepProgram {
             .collect();
         let wsoft = params[params.len() - 2];
         let rows = seq * batch;
-        let run_of = run_lookup(feeds, seq);
+        let run_of = plan.run_lookup(seq);
 
         let mut demb = vec![0f32; vocab * h];
         let mut dwx: Vec<Vec<f32>> =
@@ -1201,41 +1000,60 @@ impl StepProgram {
         // (gemm_tn is zero-init + gemm_tn_acc).
         let mut dwsoft = vec![0f32; h * vocab];
         let mut dflat = vec![0f32; rows * h];
-        for (ri, r) in feeds[layers - 1].iter().enumerate() {
+        for (ri, r) in plan.runs(layers - 1).iter().enumerate() {
             let (r0, r1) = (r.t0 * batch, r.t1 * batch);
             let nrows = r1 - r0;
             let dl = &dlogits[r0 * vocab..r1 * vocab];
+            // No dynamic masks here or anywhere in the LSTM backward
+            // except the t==0 warmup below: the input-gradient columns
+            // (dflat, dinp) feed additive recurrence sums with no
+            // zeroing gate, so leaving dynamically-dead columns
+            // uncomputed would not be value-preserving.
             let seg = match &r.feed {
                 f @ Feed::Act { .. } => {
                     let mf = &fwd.mflat.as_ref().expect("mflat cached")
                         [r0 * h..r1 * h];
                     let sk = f.skip();
-                    kern.gemm_tn_acc(mf, dl, nrows, h, vocab, &sk,
-                                     &DENSE, &mut dwsoft);
-                    let df_pre = kern.gemm_nt_pw(
-                        dl, wsoft, &fwd.prepped_wsoft[ri], nrows, vocab,
-                        h, &sk);
+                    kern.gemm_tn_acc_node(mf, dl,
+                                          &TnNode::new(sk, DENSE), nrows,
+                                          h, vocab, &mut dwsoft);
+                    let nt = NtNode::new(sk)
+                        .with_pw(&fwd.prepped_wsoft[ri]);
+                    let df_pre = kern.gemm_nt_node(dl, wsoft, &nt, nrows,
+                                                   vocab, h);
                     f.mask_act(&df_pre, nrows, h)
                 }
                 Feed::Weight { s, skip } => {
                     let ds = scale_vec(dl, *s);
-                    kern.gemm_tn_acc(&fwd.flat[r0 * h..r1 * h], &ds,
-                                     nrows, h, vocab, skip, &DENSE,
-                                     &mut dwsoft);
-                    kern.gemm_nt_pw(&ds, wsoft, &fwd.prepped_wsoft[ri],
-                                    nrows, vocab, h, skip)
+                    kern.gemm_tn_acc_node(&fwd.flat[r0 * h..r1 * h], &ds,
+                                          &TnNode::new(*skip, DENSE),
+                                          nrows, h, vocab, &mut dwsoft);
+                    let nt = NtNode::new(*skip)
+                        .with_pw(&fwd.prepped_wsoft[ri]);
+                    kern.gemm_nt_node(&ds, wsoft, &nt, nrows, vocab, h)
                 }
                 Feed::Plain => {
-                    kern.gemm_tn_acc(&fwd.flat[r0 * h..r1 * h], dl,
-                                     nrows, h, vocab, &DENSE, &DENSE,
-                                     &mut dwsoft);
-                    kern.gemm_nt(dl, wsoft, nrows, vocab, h, &DENSE)
+                    kern.gemm_tn_acc_node(&fwd.flat[r0 * h..r1 * h], dl,
+                                          &TnNode::new(DENSE, DENSE),
+                                          nrows, h, vocab, &mut dwsoft);
+                    kern.gemm_nt_node(dl, wsoft, &NtNode::new(DENSE),
+                                      nrows, vocab, h)
                 }
             };
             dflat[r0 * h..r1 * h].copy_from_slice(&seg);
         }
 
-        // BPTT over the cached cells.
+        // BPTT over the cached cells. The one dynamic mask the LSTM
+        // carries is plan-known rather than scanned: at t == 0 every
+        // layer's previous hidden state is the architectural zero init,
+        // so the recurrent weight gradient accumulates nothing there —
+        // a backend honoring the mask skips the whole `dwh` walk for
+        // that timestep, bitwise exactly (every coefficient is zero).
+        let warm = if kern.dyn_backward() {
+            Some(DynMask::zero_state(h))
+        } else {
+            None
+        };
         let mut dh_next = vec![vec![0f32; batch * h]; layers];
         let mut dc_next = vec![vec![0f32; batch * h]; layers];
         for t in (0..seq).rev() {
@@ -1277,18 +1095,23 @@ impl StepProgram {
                     }
                 }
                 colsum_acc(&da, 4 * h, &mut dbg[l]);
-                kern.gemm_tn_acc(&cache.h_prev, &da, batch, h, 4 * h,
-                                 &DENSE, &DENSE, &mut dwh[l]);
-                dh_next[l] = kern.gemm_nt(&da, wh, batch, 4 * h, h,
-                                          &DENSE);
+                let dwh_node = TnNode::new(DENSE, DENSE)
+                    .with_dyn(if t == 0 { warm.as_ref() } else { None });
+                kern.gemm_tn_acc_node(&cache.h_prev, &da, &dwh_node,
+                                      batch, h, 4 * h, &mut dwh[l]);
+                dh_next[l] = kern.gemm_nt_node(&da, wh,
+                                               &NtNode::new(DENSE), batch,
+                                               4 * h, h);
                 dc_next[l] = dc_prev;
 
                 // Input path.
                 if l == 0 {
-                    kern.gemm_tn_acc(&cache.minp, &da, batch, h, 4 * h,
-                                     &DENSE, &DENSE, &mut dwx[0]);
-                    let de = kern.gemm_nt(&da, wx, batch, 4 * h, h,
-                                          &DENSE);
+                    kern.gemm_tn_acc_node(&cache.minp, &da,
+                                          &TnNode::new(DENSE, DENSE),
+                                          batch, h, 4 * h, &mut dwx[0]);
+                    let de = kern.gemm_nt_node(&da, wx,
+                                               &NtNode::new(DENSE), batch,
+                                               4 * h, h);
                     for b in 0..batch {
                         let tok = x[b * seq + t] as usize;
                         let dst = &mut demb[tok * h..(tok + 1) * h];
@@ -1300,14 +1123,16 @@ impl StepProgram {
                 } else {
                     let ri = run_of[l - 1][t];
                     let pw = &fwd.prepped_wx[l][ri];
-                    match &feeds[l - 1][ri].feed {
+                    match &plan.runs(l - 1)[ri].feed {
                         f @ Feed::Act { .. } => {
                             let sk = f.skip();
-                            kern.gemm_tn_acc(&cache.minp, &da, batch, h,
-                                             4 * h, &sk, &DENSE,
-                                             &mut dwx[l]);
-                            let dmi = kern.gemm_nt_pw(&da, wx, pw, batch,
-                                                      4 * h, h, &sk);
+                            kern.gemm_tn_acc_node(
+                                &cache.minp, &da,
+                                &TnNode::new(sk, DENSE), batch, h, 4 * h,
+                                &mut dwx[l]);
+                            let dmi = kern.gemm_nt_node(
+                                &da, wx, &NtNode::new(sk).with_pw(pw),
+                                batch, 4 * h, h);
                             let dinp = f.mask_act(&dmi, batch, h);
                             for (d, &s) in
                                 dh_cur[l - 1].iter_mut().zip(&dinp)
@@ -1317,12 +1142,14 @@ impl StepProgram {
                         }
                         Feed::Weight { s, skip } => {
                             let dgs = scale_vec(&da, *s);
-                            kern.gemm_tn_acc(&cache.minp, &dgs, batch, h,
-                                             4 * h, skip, &DENSE,
-                                             &mut dwx[l]);
-                            let dinp = kern.gemm_nt_pw(&dgs, wx, pw,
-                                                       batch, 4 * h, h,
-                                                       skip);
+                            kern.gemm_tn_acc_node(
+                                &cache.minp, &dgs,
+                                &TnNode::new(*skip, DENSE), batch, h,
+                                4 * h, &mut dwx[l]);
+                            let dinp = kern.gemm_nt_node(
+                                &dgs, wx,
+                                &NtNode::new(*skip).with_pw(pw), batch,
+                                4 * h, h);
                             for (d, &s2) in
                                 dh_cur[l - 1].iter_mut().zip(&dinp)
                             {
@@ -1330,11 +1157,13 @@ impl StepProgram {
                             }
                         }
                         Feed::Plain => {
-                            kern.gemm_tn_acc(&cache.minp, &da, batch, h,
-                                             4 * h, &DENSE, &DENSE,
-                                             &mut dwx[l]);
-                            let dinp = kern.gemm_nt(&da, wx, batch, 4 * h,
-                                                    h, &DENSE);
+                            kern.gemm_tn_acc_node(
+                                &cache.minp, &da,
+                                &TnNode::new(DENSE, DENSE), batch, h,
+                                4 * h, &mut dwx[l]);
+                            let dinp = kern.gemm_nt_node(
+                                &da, wx, &NtNode::new(DENSE), batch,
+                                4 * h, h);
                             for (d, &s2) in
                                 dh_cur[l - 1].iter_mut().zip(&dinp)
                             {
@@ -1451,32 +1280,5 @@ mod tests {
         assert_eq!(sy.as_i32().unwrap(), &[9]);
         assert!(slice_rows(&y, 2, 2).is_err());
         assert!(slice_rows(&HostTensor::scalar_f32(1.0), 0, 1).is_err());
-    }
-
-    #[test]
-    fn row_and_tile_pattern_validation() {
-        assert!(row_pattern_checked(8, 2, 1).is_ok());
-        assert!(row_pattern_checked(8, 2, 2).is_err());
-        assert!(row_pattern_checked(8, 0, 0).is_err());
-        assert!(tile_pattern_checked(32, 64, 2, 0, 16).is_ok());
-        assert!(tile_pattern_checked(32, 64, 2, 2, 16).is_err());
-        // dp=3 divides neither 32/16=2 nor 64/16=4.
-        assert!(tile_pattern_checked(32, 64, 3, 0, 16).is_err());
-    }
-
-    #[test]
-    fn act_feed_masks_and_scales() {
-        let f = Feed::Act {
-            m: vec![1.0, 0.0],
-            rows: 1,
-            s: 2.0,
-            skip: Skip::Rows(RowPattern::new(2, 2, 0)),
-        };
-        let out = f.mask_act(&[1.0, 1.0, 3.0, 4.0], 2, 2);
-        assert_eq!(out, vec![2.0, 0.0, 6.0, 0.0]);
-        assert!(matches!(f.skip(), Skip::Rows(_)));
-        let plain = Feed::Plain.mask_act(&[1.0, 2.0], 1, 2);
-        assert_eq!(plain, vec![1.0, 2.0]);
-        assert!(Feed::Plain.skip().is_dense());
     }
 }

@@ -13,8 +13,13 @@ checked-in value. Gated rows are the paper-relevant operating points:
 rate in {0.5, 0.7} for the row-skip and tile-skip configs — including
 their time-windowed `<config>@wN` variants — on every arch present in
 the baseline. Dense rows (speedup 1.0 by construction), low-rate smoke
-points, and `<config>@scalar` rows are reported but not gated against
-the baseline.
+points, `<config>@scalar` rows, and `dyn-bwd` rows are reported but
+not gated against the baseline. `dyn-bwd` rows (dynamic backward
+sparsity from the SparsityPlan's masks) do get a *structural*
+check: present rows must carry finite positive `dyn_vs_static` and
+`speedup_vs_dense` fields — their magnitudes stay advisory because the
+dyn-vs-static delta is within shared-runner noise, but a malformed row
+means the paired measurement path regressed and fails.
 
 The windowed LSTM rows additionally carry an *absolute* floor: the
 time-window feature exists to close the paper's LSTM speedup gap, so
@@ -223,6 +228,46 @@ def check_windowed_floor(native_doc, native, checked_doc, checked):
     return failures, lines
 
 
+def check_dyn_bwd_rows(native):
+    """Advisory structural validation of the dynamic-backward rows.
+
+    `dyn-bwd` rows (row-skip with the plan's dynamic backward masks ON)
+    are never baseline-gated: the dyn-vs-static delta is small enough
+    that a shared runner's noise would make a relative gate flap. But a
+    *malformed* row — missing or non-finite `dyn_vs_static` or
+    `speedup_vs_dense` — means the paired measurement path itself
+    regressed, and that fails. A report with no dyn-bwd rows at all
+    gets an advisory note only, so reports predating dynamic backward
+    sparsity stay green.
+    """
+    failures, lines = [], []
+    rows = [(k, v) for k, v in sorted(native.items(), key=lambda kv:
+            str(kv[0])) if k[2] == "dyn-bwd"]
+    if not rows:
+        lines.append("(no dyn-bwd rows in candidate report; advisory — "
+                     "report predates dynamic backward sparsity)")
+        return failures, lines
+    for (arch, rate, _), row in rows:
+        bad = []
+        for field in ("dyn_vs_static", "speedup_vs_dense"):
+            v = row.get(field)
+            if (not isinstance(v, (int, float)) or not math.isfinite(v)
+                    or v <= 0):
+                bad.append(f"{field} is {v!r}")
+        if bad:
+            failures.append(f"('{arch}', {rate}, 'dyn-bwd'): "
+                            + "; ".join(bad))
+            verdict = "MALFORMED"
+            dvs = "-"
+        else:
+            dvs = f"{row['dyn_vs_static']:.2f}"
+            verdict = ("advisory ok" if row["dyn_vs_static"] >= 1.0
+                       else "advisory: dyn slower than static")
+        lines.append(f"{arch:8} {rate:5} {'dyn-bwd':>16} "
+                     f"dyn_vs_static={dvs:>5}  {verdict}")
+    return failures, lines
+
+
 def run_gate(native_path, checked_path, tolerance):
     native_doc = load_doc(native_path)
     checked_doc = load_doc(checked_path)
@@ -251,6 +296,11 @@ def run_gate(native_path, checked_path, tolerance):
     for ln in lines:
         print(ln)
     failures += win_failures
+    print("\ndyn-bwd rows (structural, advisory):")
+    dyn_failures, lines = check_dyn_bwd_rows(native)
+    for ln in lines:
+        print(ln)
+    failures += dyn_failures
 
     if failures:
         print(f"\nFAIL: {len(failures)} gated check(s) failed:")
@@ -493,7 +543,37 @@ def self_test():
     assert not is_gated_config("row-skip@scalar")
     assert not is_gated_config("dense")
 
-    # 7. --infer-advisory: well-formed reports pass (numbers advisory),
+    # 7. dyn-bwd rows: never gated, but structurally validated. A report
+    #    missing them entirely is advisory-green (predates the feature);
+    #    a malformed row fails.
+    rc, out = gate_with(native_doc, checked_doc)
+    assert rc == 0 and "predates dynamic backward" in out, \
+        "report with no dyn-bwd rows stays green with an advisory note"
+    dyn_rows = list(base_rows) + [
+        dict(_row("mlpsyn", 0.5, "dyn-bwd", 2.0), dyn_vs_static=1.01),
+        dict(_row("lstmsyn", 0.5, "dyn-bwd", 1.2), dyn_vs_static=1.03),
+    ]
+    dyn_native = _doc("native: bench", [dict(r) for r in dyn_rows])
+    rc, out = gate_with(dyn_native, checked_doc)
+    assert rc == 0 and "advisory ok" in out, "healthy dyn-bwd rows pass"
+    # A sub-1.0 dyn_vs_static is advisory, not fatal…
+    slow_dyn = _doc("native: bench", [dict(r) for r in dyn_rows])
+    slow_dyn["rows"][-1] = dict(_row("lstmsyn", 0.5, "dyn-bwd", 1.2),
+                                dyn_vs_static=0.97)
+    rc, out = gate_with(slow_dyn, checked_doc)
+    assert rc == 0 and "dyn slower than static" in out, \
+        "slow dyn-bwd is advisory"
+    # …but a missing/NaN dyn_vs_static field is a broken measurement
+    # path and fails.
+    broken_dyn = _doc("native: bench", [dict(r) for r in dyn_rows])
+    del broken_dyn["rows"][-1]["dyn_vs_static"]
+    rc, out = gate_with(broken_dyn, checked_doc)
+    assert rc == 1 and "MALFORMED" in out, "missing dyn_vs_static fails"
+    broken_dyn["rows"][-1]["dyn_vs_static"] = float("nan")
+    rc, _ = gate_with(broken_dyn, checked_doc)
+    assert rc == 1, "NaN dyn_vs_static fails"
+
+    # 8. --infer-advisory: well-formed reports pass (numbers advisory),
     #    structural damage fails.
     def advisory_with(doc):
         with tempfile.TemporaryDirectory() as d:
@@ -538,7 +618,7 @@ def self_test():
             tempfile.gettempdir(), "ad-no-such-report.json"))
     assert rc == 1, "missing report file fails"
 
-    # 8. refresh-baseline installs native reports and refuses junk.
+    # 9. refresh-baseline installs native reports and refuses junk.
     with tempfile.TemporaryDirectory() as d:
         np, cp = os.path.join(d, "n.json"), os.path.join(d, "c.json")
         with open(cp, "w") as f:
@@ -560,7 +640,7 @@ def self_test():
         with contextlib.redirect_stdout(out):
             assert refresh_baseline(np, cp) == 1
 
-    print("self-test OK (8 scenarios)")
+    print("self-test OK (9 scenarios)")
     return 0
 
 

@@ -41,6 +41,8 @@ REQUIRED_INSTRUMENTS = (
     "sparse_tiles_kept",
     "sparse_tiles_dropped",
     "sparse_panel_bytes",
+    "sparse_dyn_rows_kept",
+    "sparse_dyn_rows_dropped",
     "gate_wait_s",
     "gate_hold_s",
     "gate_queue_depth",
